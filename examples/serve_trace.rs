@@ -1,0 +1,312 @@
+//! **End-to-end driver** (the repo's headline validation): serve a synthetic
+//! multi-turn trace through a real disaggregated prefill/decode deployment
+//! of the AOT-compiled model, and report latency + throughput.
+//!
+//!   make artifacts && cargo run --release --offline --example serve_trace
+//!       [--int8] [--requests N] [--mtp]
+//!
+//! Architecture (a laptop-scale PDC instance, §4.1):
+//!   * a *prefill engine thread* owning its own PJRT runtime (the "prefill
+//!     cluster"), consuming queued requests FCFS;
+//!   * a *decode engine thread* owning a second PJRT runtime (the "decode
+//!     cluster") running continuous batching over the decode graph's lanes;
+//!   * KV caches move prefill→decode as lane loads (the RDMA-plane transfer
+//!     of §4.3.3 — here a memcpy, costed for real in the simulator);
+//!   * channels + the main thread play the stateless P2P router.
+//!
+//! With `--mtp` the decode thread uses the MTP graph and *measures* the
+//! speculative head's draft-vs-model agreement online (the paper's
+//! acceptance rate); tokens are committed one per step (see DESIGN.md —
+//! multi-token commit needs a 2-token verify graph, modeled in the
+//! simulator benches).
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+use cm_infer::metrics::Histogram;
+use cm_infer::runtime::{DecodeState, ModelRuntime, PrefillOut, Variant};
+use cm_infer::workload::{generate, WorkloadSpec};
+
+struct PrefilledReq {
+    id: u64,
+    prompt_len: usize,
+    output_tokens: usize,
+    first_token: i32,
+    pf: PrefillOut,
+    t_arrival: Instant,
+    t_prefill_done: Instant,
+}
+
+struct Done {
+    id: u64,
+    prompt_len: usize,
+    generated: usize,
+    ttft_us: f64,
+    tpot_us: Vec<f64>,
+    draft_checks: (u64, u64), // (agreed, total)
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn flag_val(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dir = std::env::var("CM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let variant = if flag(&args, "--int8") { Variant::Int8 } else { Variant::Fp };
+    let use_mtp = flag(&args, "--mtp");
+    let n_requests: usize =
+        flag_val(&args, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(24);
+
+    println!("== serve_trace: PDC-disaggregated E2E over the real model ==");
+    println!("variant={} mtp={use_mtp} requests={n_requests}", variant.tag());
+
+    // --- model dims from the manifest (runtimes load inside the engine
+    // threads: a PJRT client is not Send, and each disaggregated cluster
+    // owns its own runtime anyway) ----------------------------------------
+    let dims = cm_infer::runtime::Manifest::load(&dir)?.model;
+    println!("model {:.1}M params; compiling runtimes in engine threads...", dims.n_params as f64 / 1e6);
+
+    // --- trace ------------------------------------------------------------
+    let spec = WorkloadSpec::e2e_small(7, dims.prefill_seq, dims.vocab_size);
+    let trace = generate(&spec, n_requests);
+    let total_prompt: usize = trace.iter().map(|r| r.prompt.len().min(dims.prefill_seq)).collect::<Vec<_>>().iter().sum();
+
+    // --- channels: router → prefill → decode → report ---------------------
+    let (tx_req, rx_req) = mpsc::channel::<(u64, Vec<i32>, usize, Instant)>();
+    let (tx_pf, rx_pf) = mpsc::channel::<PrefilledReq>();
+    let (tx_done, rx_done) = mpsc::channel::<Done>();
+    let (tx_ready_p, rx_ready) = mpsc::channel::<&'static str>();
+    let tx_ready_d = tx_ready_p.clone();
+
+    // prefill engine thread ("prefill cluster")
+    let dir_p = dir.clone();
+    let prefill_thread = std::thread::spawn(move || -> Result<()> {
+        let rt_prefill = ModelRuntime::load(&dir_p, variant)?;
+        tx_ready_p.send("prefill").ok();
+        while let Ok((id, prompt, output_tokens, t_arrival)) = rx_req.recv() {
+            let pf = rt_prefill.prefill(&prompt)?;
+            let first = argmax(&pf.logits);
+            tx_pf
+                .send(PrefilledReq {
+                    id,
+                    prompt_len: prompt.len().min(rt_prefill.manifest.model.prefill_seq),
+                    output_tokens,
+                    first_token: first,
+                    pf,
+                    t_arrival,
+                    t_prefill_done: Instant::now(),
+                })
+                .ok();
+        }
+        Ok(())
+    });
+
+    // decode engine thread ("decode cluster"): continuous batching
+    let dir_d = dir.clone();
+    let decode_thread = std::thread::spawn(move || -> Result<()> {
+        let rt_decode = ModelRuntime::load(&dir_d, variant)?;
+        tx_ready_d.send("decode").ok();
+        struct Lane {
+            id: u64,
+            prompt_len: usize,
+            remaining: usize,
+            generated: usize,
+            ttft_us: f64,
+            t_last: Instant,
+            tpot_us: Vec<f64>,
+            pending_draft: Option<i32>,
+            draft_agree: u64,
+            draft_total: u64,
+        }
+        let mut st = DecodeState::new(&rt_decode.manifest);
+        let max_pos = rt_decode.manifest.model.max_seq - 2;
+        let mut lanes: Vec<Option<Lane>> = (0..st.batch).map(|_| None).collect();
+        let mut active = 0usize;
+        loop {
+            // admit: fill free lanes (blocking only when idle)
+            loop {
+                let free = lanes.iter().position(|l| l.is_none());
+                let Some(slot) = free else { break };
+                let msg = if active == 0 {
+                    match rx_pf.recv() {
+                        Ok(m) => m,
+                        Err(_) => {
+                            if active == 0 {
+                                return Ok(());
+                            }
+                            break;
+                        }
+                    }
+                } else {
+                    match rx_pf.try_recv() {
+                        Ok(m) => m,
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => break,
+                    }
+                };
+                let now = Instant::now();
+                st.load_lane(slot, &msg.pf, msg.first_token, msg.prompt_len);
+                lanes[slot] = Some(Lane {
+                    id: msg.id,
+                    prompt_len: msg.prompt_len,
+                    remaining: msg.output_tokens.saturating_sub(1).max(1),
+                    generated: 1,
+                    ttft_us: msg.t_prefill_done.duration_since(msg.t_arrival).as_micros() as f64,
+                    t_last: now,
+                    tpot_us: Vec::new(),
+                    pending_draft: None,
+                    draft_agree: 0,
+                    draft_total: 0,
+                });
+                active += 1;
+            }
+            if active == 0 {
+                // channel closed and nothing active
+                if rx_pf.recv().is_err() {
+                    return Ok(());
+                }
+                continue;
+            }
+
+            // one decode step over all lanes
+            let out = if use_mtp {
+                rt_decode.decode_step_mtp(&mut st)?
+            } else {
+                rt_decode.decode_step(&mut st)?
+            };
+            let now = Instant::now();
+            for slot in 0..lanes.len() {
+                let finished = {
+                    let Some(lane) = lanes[slot].as_mut() else { continue };
+                    // draft validation: did last step's draft match the
+                    // model's actual token?
+                    if let Some(draft) = lane.pending_draft.take() {
+                        lane.draft_total += 1;
+                        if draft == out.next_tokens[slot] {
+                            lane.draft_agree += 1;
+                        }
+                    }
+                    if use_mtp {
+                        lane.pending_draft = Some(out.spec_tokens[slot]);
+                    }
+                    lane.tpot_us.push(now.duration_since(lane.t_last).as_micros() as f64);
+                    lane.t_last = now;
+                    lane.generated += 1;
+                    lane.remaining -= 1;
+                    lane.remaining == 0
+                        || st.positions[slot] as usize >= max_pos
+                };
+                if finished {
+                    let lane = lanes[slot].take().unwrap();
+                    st.clear_lane(slot);
+                    active -= 1;
+                    tx_done
+                        .send(Done {
+                            id: lane.id,
+                            prompt_len: lane.prompt_len,
+                            generated: lane.generated,
+                            ttft_us: lane.ttft_us,
+                            tpot_us: lane.tpot_us,
+                            draft_checks: (lane.draft_agree, lane.draft_total),
+                        })
+                        .ok();
+                }
+            }
+        }
+    });
+
+    // wait for both engines to finish compiling before starting the clock
+    for _ in 0..2 {
+        let who = rx_ready.recv().expect("engine failed to start");
+        println!("  engine ready: {who}");
+    }
+    let run_start = Instant::now();
+
+    // router: feed the trace (arrival order; P2P stateless — single
+    // prefill instance here, the sim benches scale this out)
+    for r in &trace {
+        let mut prompt = r.prompt.clone();
+        prompt.truncate(dims.prefill_seq);
+        tx_req.send((r.id, prompt, r.output_tokens, Instant::now()))?;
+    }
+    drop(tx_req);
+
+    // collect
+    let mut ttft = Histogram::new();
+    let mut tpot = Histogram::new();
+    let mut total_generated = 0usize;
+    let mut agree = 0u64;
+    let mut total_drafts = 0u64;
+    let mut completed = 0usize;
+    for done in rx_done.iter() {
+        ttft.record(done.ttft_us);
+        for t in &done.tpot_us {
+            tpot.record(*t);
+        }
+        total_generated += done.generated;
+        agree += done.draft_checks.0;
+        total_drafts += done.draft_checks.1;
+        completed += 1;
+        println!(
+            "  req {:3} done: prompt {:3} gen {:3} ttft {:7.1} ms",
+            done.id,
+            done.prompt_len,
+            done.generated,
+            done.ttft_us / 1000.0
+        );
+        if completed == n_requests {
+            break;
+        }
+    }
+    prefill_thread.join().unwrap()?;
+    decode_thread.join().unwrap()?;
+    let wall = run_start.elapsed().as_secs_f64();
+
+    println!("\n== E2E report ==");
+    println!("requests: {completed}/{n_requests} completed in {wall:.1}s wall");
+    println!("prompt tokens: {total_prompt}, generated tokens: {total_generated}");
+    println!(
+        "prefill throughput: {:.1} tokens/s | decode throughput: {:.1} tokens/s",
+        total_prompt as f64 / wall,
+        total_generated as f64 / wall
+    );
+    println!(
+        "TTFT ms: mean {:.1} p50 {:.1} p99 {:.1}",
+        ttft.mean() / 1000.0,
+        ttft.p50() / 1000.0,
+        ttft.p99() / 1000.0
+    );
+    println!(
+        "TPOT ms: mean {:.1} p50 {:.1} p99 {:.1}",
+        tpot.mean() / 1000.0,
+        tpot.p50() / 1000.0,
+        tpot.p99() / 1000.0
+    );
+    if use_mtp && total_drafts > 0 {
+        println!(
+            "MTP draft acceptance (online, {} checks): {:.3}",
+            total_drafts,
+            agree as f64 / total_drafts as f64
+        );
+    }
+    println!("serve_trace OK");
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}

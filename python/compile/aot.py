@@ -1,0 +1,248 @@
+"""AOT pipeline: train -> quantize -> lower -> artifacts/ (build-time only).
+
+Emits HLO **text** (never `.serialize()`): jax >= 0.5 writes HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+Rust `xla` crate) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+**Weights are graph *arguments*, not embedded constants.** HLO text elides
+large constants (`constant({...})`), so weight-constant graphs cannot
+round-trip through the text format. Passing them as parameters is also the
+architecturally faithful choice: the paper's Model Caching (§4.4.3) treats
+weights as blocks that the serving runtime loads from the disaggregated
+memory pool and pins device-side — our Rust runtime uploads each blob to a
+PJRT device buffer once and reuses it across every call (`execute_b`).
+
+Artifacts produced (consumed by rust/src/runtime/):
+
+  {prefill,decode,decode_mtp}_{fp,int8}.hlo.txt
+  weights_fp.bin          float pytree, raw little-endian, manifest order
+  weights_int8.bin        quantized pytree (int8 tensors + f32 scales)
+  manifest.json           per-artifact input layout (weight args in exact
+                          parameter order + dynamic args), model config,
+                          quantization fidelity report, training log,
+                          measured MTP acceptance rate
+  train_log.json
+
+Run: cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def flatten_named(tree) -> tuple[list[str], list[jax.Array]]:
+    """Flatten a pytree into (names, leaves) in jax's deterministic order."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names, vals = [], []
+    for path, v in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        names.append(name)
+        vals.append(v)
+    return names, vals
+
+
+def write_blob(path: str, names: list[str], vals: list[jax.Array]
+               ) -> list[dict]:
+    """Raw little-endian concatenation; returns manifest entries in order."""
+    entries = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, v in zip(names, vals):
+            arr = np.asarray(v)
+            raw = np.ascontiguousarray(arr).tobytes()
+            entries.append({
+                "name": name,
+                "dtype": str(arr.dtype),
+                "shape": list(arr.shape),
+                "offset": offset,
+                "nbytes": len(raw),
+            })
+            f.write(raw)
+            offset += len(raw)
+    return entries
+
+
+def _dyn(shape, dtype) -> dict:
+    return {"shape": list(shape), "dtype": str(np.dtype(dtype))}
+
+
+def lower_graphs(params: M.Params, cfg: M.ModelConfig, quantized,
+                 out_dir: str, tag: str, weight_blobs: list[str]) -> dict:
+    """Lower prefill/decode/decode_mtp for one weight variant.
+
+    Weight pytrees are leading arguments; the manifest records the exact
+    flattened parameter order the Rust runtime must reproduce.
+    """
+    b = cfg.decode_batch
+    tok_p = jax.ShapeDtypeStruct((1, cfg.prefill_seq), jnp.int32)
+    tok_d = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos_d = jax.ShapeDtypeStruct((b,), jnp.int32)
+    c_cache = jax.ShapeDtypeStruct((cfg.n_layers, b, cfg.max_seq, cfg.d_c),
+                                   jnp.float32)
+    r_cache = jax.ShapeDtypeStruct((cfg.n_layers, b, cfg.max_seq,
+                                    cfg.d_rope), jnp.float32)
+
+    entries = {}
+    if quantized is None:
+        weight_trees = (params,)
+    else:
+        weight_trees = (params, quantized)
+
+    def emit(name: str, fn, dyn_specs: list, dyn_names: list[str],
+             outputs: list[str]):
+        t0 = time.time()
+        # keep_unused: every weight tensor stays an HLO parameter even if a
+        # given graph doesn't touch it (e.g. MTP head in plain decode), so
+        # the Rust runtime can feed one uniform argument list to all graphs.
+        lowered = jax.jit(fn, keep_unused=True).lower(*weight_trees, *dyn_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{tag}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        print(f"  lowered {fname}: {len(text) / 1e6:.2f} MB "
+              f"({time.time() - t0:.1f}s)")
+        entries[f"{name}_{tag}"] = {
+            "file": fname,
+            "weight_blobs": weight_blobs,
+            "dyn_inputs": [
+                {"name": n, **_dyn(s.shape, s.dtype)}
+                for n, s in zip(dyn_names, dyn_specs)],
+            "outputs": outputs,
+        }
+
+    if quantized is None:
+        def pf(p, t):
+            return M.prefill(p, cfg, t, None)
+
+        def dc(p, t, pos, c, r):
+            return M.decode_step(p, cfg, t, pos, c, r, None)
+
+        def dm(p, t, pos, c, r):
+            return M.decode_step_mtp(p, cfg, t, pos, c, r, None)
+    else:
+        def pf(p, q, t):
+            return M.prefill(p, cfg, t, q)
+
+        def dc(p, q, t, pos, c, r):
+            return M.decode_step(p, cfg, t, pos, c, r, q)
+
+        def dm(p, q, t, pos, c, r):
+            return M.decode_step_mtp(p, cfg, t, pos, c, r, q)
+
+    emit("prefill", pf, [tok_p], ["tokens"],
+         ["logits", "c_cache", "r_cache"])
+    emit("decode", dc, [tok_d, pos_d, c_cache, r_cache],
+         ["tokens", "positions", "c_cache", "r_cache"],
+         ["next_tokens", "logits", "c_cache", "r_cache"])
+    emit("decode_mtp", dm, [tok_d, pos_d, c_cache, r_cache],
+         ["tokens", "positions", "c_cache", "r_cache"],
+         ["next_tokens", "spec_tokens", "logits", "c_cache", "r_cache"])
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=150)
+    ap.add_argument("--train-batch", type=int, default=16)
+    ap.add_argument("--train-seq", type=int, default=64)
+    ap.add_argument("--branching", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-int8", action="store_true",
+                    help="skip INT8 variants (faster dev builds)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = M.ModelConfig()
+    print(f"[aot] model config: {cfg}")
+    params = M.init_params(cfg, seed=args.seed)
+    n_params = cfg.param_count(params)
+    print(f"[aot] params: {n_params / 1e6:.2f}M")
+
+    # --- train (gives the served model real structure; logs loss curve) ---
+    print(f"[aot] training {args.train_steps} steps on Markov corpus "
+          f"(branching={args.branching}, floor={np.log(args.branching):.3f})")
+    params, train_log = T.train(
+        params, cfg, steps=args.train_steps, batch=args.train_batch,
+        seq=args.train_seq, branching=args.branching, seed=args.seed)
+    accept = T.eval_speculative_acceptance(params, cfg,
+                                           branching=args.branching)
+    print(f"[aot] MTP speculative acceptance on held-out data: {accept:.3f}")
+
+    # --- quantize (§4.5) ---------------------------------------------------
+    print("[aot] INT8 quantization (adaptive scale search + block clipping)")
+    t0 = time.time()
+    quantized, fidelity = M.quantize_model(params, cfg, seed=args.seed + 7)
+    rel_errs = [v["rel_error"] for v in fidelity.values()]
+    print(f"[aot] quantized {len(quantized)} linears in "
+          f"{time.time() - t0:.1f}s; median rel err "
+          f"{float(np.median(rel_errs)):.4f}")
+
+    # --- export weight blobs (manifest order == HLO parameter order) ------
+    fp_names, fp_vals = flatten_named(params)
+    fp_entries = write_blob(os.path.join(args.out, "weights_fp.bin"),
+                            fp_names, fp_vals)
+    int8_names, int8_vals = flatten_named(quantized)
+    int8_entries = write_blob(os.path.join(args.out, "weights_int8.bin"),
+                              int8_names, int8_vals)
+    print(f"[aot] weights_fp.bin: "
+          f"{sum(e['nbytes'] for e in fp_entries) / 1e6:.1f} MB, "
+          f"weights_int8.bin: "
+          f"{sum(e['nbytes'] for e in int8_entries) / 1e6:.1f} MB")
+
+    # --- lower -------------------------------------------------------------
+    entries = {}
+    print("[aot] lowering float graphs")
+    entries.update(lower_graphs(params, cfg, None, args.out, "fp",
+                                ["weights_fp"]))
+    if not args.skip_int8:
+        print("[aot] lowering INT8 graphs")
+        entries.update(lower_graphs(params, cfg, quantized, args.out,
+                                    "int8", ["weights_fp", "weights_int8"]))
+
+    manifest = {
+        "model": dataclasses.asdict(cfg),
+        "n_params": n_params,
+        "artifacts": entries,
+        "blobs": {
+            "weights_fp": {"file": "weights_fp.bin", "tensors": fp_entries},
+            "weights_int8": {"file": "weights_int8.bin",
+                             "tensors": int8_entries},
+        },
+        "train_log": train_log,
+        "mtp_acceptance": accept,
+        "quant_fidelity": fidelity,
+        "generated_unix": time.time(),
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump(train_log, f, indent=1)
+    print(f"[aot] wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Pallas INT8 GEMM kernel (paper §4.5, Table 10).
+
+Implements the paper's mixed-granularity quantized matmul: int8 activations
+with per-token (per-row) scales x int8 weights with per-channel (per-column)
+scales, int32-exact MAC accumulation, and a fused dequantization epilogue —
+the Ascend AIC "cube" GEMM re-expressed for the TPU MXU model:
+
+  * Tiles are (BM, BN, BK) blocks staged HBM->VMEM by BlockSpec; BM/BN default
+    to 128 to match the MXU systolic-array tile (the 910C cube core's NZ-tile
+    analogue — choosing MXU-aligned blocks plays the same role as the paper's
+    "native NZ storage": no relayout between memory and the matrix unit).
+  * The accumulator lives in the revisited output block across the K grid
+    axis, so partial sums never round-trip to HBM between K steps.
+  * The dequant epilogue (x_scale * w_scale rescale) is fused into the final
+    K step — the paper's "fused dequant on AIV" epilogue.
+
+Run under interpret=True everywhere (CPU PJRT cannot execute Mosaic
+custom-calls); see DESIGN.md §2 Hardware adaptation. int8 products and
+BK-length partial sums are exactly representable in f32, so interpret-mode
+f32 accumulation matches int32 accumulation bit-for-bit for BK <= 2^15.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _int8_gemm_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, *, k_steps: int,
+                      k_total: int, bk: int):
+    """One (BM, BN) output tile; grid axis 2 walks the K dimension."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_blk = x_ref[...].astype(jnp.float32)
+    w_blk = w_ref[...].astype(jnp.float32)
+    # K-tail mask: when K % BK != 0, the out-of-range slice is clamped (not
+    # zero-filled) by the pipeline, which would double-count tail columns.
+    valid = k_total - k_step * bk
+    lane = jax.lax.iota(jnp.int32, bk)
+    mask = (lane < valid).astype(jnp.float32)
+    x_blk = x_blk * mask[None, :]
+    o_ref[...] += jnp.dot(x_blk, w_blk, preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == k_steps - 1)
+    def _epilogue():
+        # Fused dequant: per-row activation scale x per-col weight scale.
+        xs = xs_ref[...].reshape(-1, 1)          # [BM, 1]
+        ws = ws_ref[...].reshape(1, -1)          # [1, BN]
+        o_ref[...] = o_ref[...] * xs * ws
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def int8_gemm(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+              w_scale: jax.Array, *, bm: int = 128, bn: int = 128,
+              bk: int = 128) -> jax.Array:
+    """Quantized GEMM: returns f32 [M, N] = (x_q @ w_q) * x_scale * w_scale.
+
+    Args:
+      x_q: int8 [M, K]; w_q: int8 [K, N].
+      x_scale: f32 [M] or [M, 1] per-row scales.
+      w_scale: f32 [N] or [1, N] per-column scales.
+      bm, bn, bk: VMEM tile sizes (perf knobs; see EXPERIMENTS.md §Perf).
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    x_scale = x_scale.reshape(m).astype(jnp.float32)
+    w_scale = w_scale.reshape(n).astype(jnp.float32)
+
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    k_steps = pl.cdiv(k, bk)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), k_steps)
+
+    return pl.pallas_call(
+        functools.partial(_int8_gemm_kernel, k_steps=k_steps, k_total=k,
+                          bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bm,), lambda i, j, s: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, s: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x_q, w_q, x_scale, w_scale)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int) -> int:
+    """Estimated VMEM residency of one grid step (perf model, DESIGN.md §6).
+
+    x tile (int8) + w tile (int8) + out/acc tile (f32) + scale vectors (f32),
+    double-buffered inputs (x2) per the standard Pallas pipeline.
+    """
+    return 2 * (bm * bk + bk * bn) + 4 * bm * bn + 4 * (bm + bn)
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, bm: int, bn: int,
+                             bk: int, mxu: int = 128) -> float:
+    """Fraction of MXU tiles doing useful work (edge-padding overhead)."""
+    def eff(dim: int, blk: int) -> float:
+        blk = min(blk, dim)
+        return dim / (math.ceil(dim / blk) * blk)
+    align = min(bm, mxu) / mxu * min(bn, mxu) / mxu
+    return eff(m, bm) * eff(n, bn) * eff(k, bk) * min(1.0, align)

@@ -1,0 +1,209 @@
+"""Pallas MLA attention kernels (paper §4.2.2: MLAProlog + FA operators).
+
+Two kernels mirroring the paper's split between decode and prefill attention:
+
+* ``mla_decode_attention`` — the *absorbed* decode form. Queries arrive
+  pre-projected into the compressed latent space (q_abs = q_nope @ W_uk), so
+  scores are taken directly against the latent KV cache plus the shared RoPE
+  key cache, and the output is a latent vector (caller up-projects with
+  W_uv). Per-head K/V are never materialized — this is what makes MLA's KV
+  cache 93% smaller. The kernel runs an online-softmax (FlashAttention-style)
+  sweep over cache blocks, with the paper's "NZ-native" layout mapped to
+  MXU-aligned VMEM blocks.
+
+* ``mha_prefill_attention`` — prefill runs *without* absorption (§4.3.1):
+  MLA degenerates to standard causal MHA over materialized per-head q/k/v.
+  Implemented as a causal flash kernel blocked over query tiles.
+
+Both run under interpret=True (CPU PJRT); see DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Decode: absorbed-MLA attention over the latent cache
+# ---------------------------------------------------------------------------
+
+def _mla_decode_kernel(len_ref, q_abs_ref, q_rope_ref, c_kv_ref, k_rope_ref,
+                       o_ref, *, block_s: int, s_max: int, scale: float):
+    """One batch element: online-softmax sweep over latent-cache blocks.
+
+    Refs (per grid step b):
+      len_ref:    [1]        valid cache length for this sequence.
+      q_abs_ref:  [H, Dc]    absorbed no-PE query.
+      q_rope_ref: [H, Dr]    RoPE query part.
+      c_kv_ref:   [S, Dc]    latent KV cache (shared across heads).
+      k_rope_ref: [S, Dr]    RoPE key cache (MQA-style, shared across heads).
+      o_ref:      [H, Dc]    latent attention output.
+    """
+    _, h, dc = q_abs_ref.shape
+    dr = q_rope_ref.shape[-1]
+    seq_len = len_ref[0]
+    del dr  # scale is supplied by the caller (see wrapper docstring)
+
+    q_abs = q_abs_ref[0].astype(jnp.float32)       # [H, Dc]
+    q_rope = q_rope_ref[0].astype(jnp.float32)     # [H, Dr]
+
+    n_blocks = pl.cdiv(s_max, block_s)
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = i * block_s
+        c_blk = c_kv_ref[0, pl.ds(start, block_s), :].astype(jnp.float32)
+        r_blk = k_rope_ref[0, pl.ds(start, block_s), :].astype(jnp.float32)
+        # scores[h, s] = q_abs . c + q_rope . k_rope  (absorbed MLA form)
+        scores = (jnp.dot(q_abs, c_blk.T) + jnp.dot(q_rope, r_blk.T)) * scale
+        pos = start + jax.lax.iota(jnp.int32, block_s)
+        valid = pos < seq_len
+        scores = jnp.where(valid[None, :], scores, _NEG_INF)
+        # online softmax update
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)                       # [H, BS]
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc_prev * alpha + jnp.dot(p, c_blk)    # [H, Dc]
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((h, 1), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((h, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((h, dc), dtype=jnp.float32)
+    _, l_fin, acc_fin = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[...] = (acc_fin / jnp.maximum(l_fin, 1e-30)).reshape(1, h, dc)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "scale"))
+def mla_decode_attention(q_abs: jax.Array, q_rope: jax.Array,
+                         c_kv: jax.Array, k_rope: jax.Array,
+                         seq_len: jax.Array, *, block_s: int = 128,
+                         scale: float | None = None) -> jax.Array:
+    """Absorbed-MLA decode attention.
+
+    Args:
+      q_abs:   [B, H, Dc] absorbed query.
+      q_rope:  [B, H, Dr] RoPE query.
+      c_kv:    [B, S, Dc] latent KV cache.
+      k_rope:  [B, S, Dr] RoPE key cache.
+      seq_len: [B] int32 valid lengths.
+      scale: softmax temperature — must be 1/sqrt(d_nope + d_rope) to match
+        the non-absorbed prefill attention (absorption changes the basis of
+        the dot product, not its value). Defaults to 1/sqrt(Dc + Dr) for
+        standalone use.
+
+    Returns: [B, H, Dc] f32 latent outputs.
+    """
+    b, h, dc = q_abs.shape
+    s = c_kv.shape[1]
+    dr = q_rope.shape[-1]
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(dc + dr))
+    block_s = min(block_s, s)
+    seq_len = seq_len.astype(jnp.int32).reshape(b)
+
+    return pl.pallas_call(
+        functools.partial(_mla_decode_kernel, block_s=block_s, s_max=s,
+                          scale=scale),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, h, dc), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h, dr), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dc), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dr), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dc), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dc), jnp.float32),
+        interpret=True,
+    )(seq_len, _sq(q_abs), _sq(q_rope), _sq(c_kv), _sq(k_rope))
+
+
+def _sq(x: jax.Array) -> jax.Array:
+    """Identity helper kept for symmetry; BlockSpec carries the batch dim."""
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Prefill: causal flash MHA (no absorption)
+# ---------------------------------------------------------------------------
+
+def _mha_prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int,
+                        block_k: int, s_max: int):
+    """One (batch*head, q-block) tile: causal online-softmax over k blocks."""
+    d = q_ref.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qi = pl.program_id(1)
+    q = q_ref[...].reshape(block_q, d).astype(jnp.float32) * scale
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    # Causal frontier: only k blocks with start <= last q position matter.
+    n_kblocks = pl.cdiv(s_max, block_k)
+    last_q = (qi + 1) * block_q - 1
+    needed = jnp.minimum((last_q // block_k) + 1, n_kblocks)
+
+    def body(j, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = j * block_k
+        k_blk = k_ref[0, pl.ds(start, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.ds(start, block_k), :].astype(jnp.float32)
+        scores = jnp.dot(q, k_blk.T)                      # [BQ, BK]
+        k_pos = start + jax.lax.iota(jnp.int32, block_k)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        scores = jnp.where(causal, scores, _NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc_prev * alpha + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q, 1), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    _, l_fin, acc_fin = jax.lax.fori_loop(0, needed, body, (m0, l0, acc0))
+    out = acc_fin / jnp.maximum(l_fin, 1e-30)
+    o_ref[...] = out.reshape(1, block_q, d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def mha_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          block_q: int = 128, block_k: int = 128
+                          ) -> jax.Array:
+    """Causal flash MHA for prefill. q, k, v: [B, H, S, D] -> [B, H, S, D]."""
+    b, h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    out = pl.pallas_call(
+        functools.partial(_mha_prefill_kernel, block_q=block_q,
+                          block_k=block_k, s_max=s),
+        grid=(b * h, pl.cdiv(s, block_q)),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+def decode_vmem_bytes(h: int, dc: int, dr: int, block_s: int) -> int:
+    """VMEM residency estimate for one decode grid step (perf model)."""
+    q = 4 * h * (dc + dr)
+    kv = 2 * (block_s * (dc + dr))          # bf16 cache blocks, dbl-buffered
+    state = 4 * (h * (dc + 2))              # acc + m + l
+    return q + 2 * kv + state + 4 * h * dc  # + output tile

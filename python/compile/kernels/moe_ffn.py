@@ -1,0 +1,94 @@
+"""Pallas grouped expert FFN kernel (paper §4.2.1, FFN stage of the MoE layer).
+
+After FusedDispatch, each expert rank holds a dense [C, D] bucket of tokens
+(C = expert capacity; the paper pre-allocates these buffers to keep shapes
+static — Opt. 3 "Static Execution via Shared-Memory Pre-allocation"). The
+grid walks experts; each step computes a SwiGLU FFN for one expert's bucket:
+
+    out = (silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+Static shapes (every expert processes exactly C rows, padding rows are
+zeroed by the dispatcher) are what make this kernel a single static graph —
+the same property the paper relies on to avoid dynamic-shape recompilation.
+
+The F (hidden) dimension is blocked with an inner loop so the [C, F]
+intermediate never exceeds one VMEM tile: this mirrors the paper's pipelined
+MLP which keeps the expert weight streaming while the cube unit works.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, block_f: int,
+                    f_total: int):
+    """One expert: SwiGLU FFN with the hidden dim streamed in BF blocks."""
+    c, d = x_ref.shape[-2:]
+    x = x_ref[...].reshape(c, d).astype(jnp.float32)
+    n_blocks = pl.cdiv(f_total, block_f)
+
+    def body(i, acc):
+        start = i * block_f
+        wg = wg_ref[0, :, pl.ds(start, block_f)].astype(jnp.float32)  # [D,BF]
+        wu = wu_ref[0, :, pl.ds(start, block_f)].astype(jnp.float32)
+        wd = wd_ref[0, pl.ds(start, block_f), :].astype(jnp.float32)  # [BF,D]
+        g = jnp.dot(x, wg)
+        u = jnp.dot(x, wu)
+        h = jax.nn.silu(g) * u                                        # [C,BF]
+        return acc + jnp.dot(h, wd)
+
+    acc0 = jnp.zeros((c, d), dtype=jnp.float32)
+    out = jax.lax.fori_loop(0, n_blocks, body, acc0)
+    o_ref[...] = out.reshape(1, c, d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f",))
+def grouped_expert_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                       w_down: jax.Array, *, block_f: int = 256) -> jax.Array:
+    """Grouped SwiGLU expert FFN.
+
+    Args:
+      x:      [E, C, D] per-expert token buckets (padding rows = 0).
+      w_gate: [E, D, F]; w_up: [E, D, F]; w_down: [E, F, D].
+
+    Returns: [E, C, D] f32.
+    """
+    e, c, d = x.shape
+    f = w_gate.shape[-1]
+    block_f = min(block_f, f)
+    # Pad F to a block multiple: in-kernel dynamic slices clamp their start
+    # when they would run past the array, silently shifting data. Zero
+    # padding is exact here: silu(0) * 0 @ 0 contributes nothing.
+    if f % block_f != 0:
+        f_pad = (f // block_f + 1) * block_f - f
+        w_gate = jnp.pad(w_gate, ((0, 0), (0, 0), (0, f_pad)))
+        w_up = jnp.pad(w_up, ((0, 0), (0, 0), (0, f_pad)))
+        w_down = jnp.pad(w_down, ((0, 0), (0, f_pad), (0, 0)))
+        f += f_pad
+
+    return pl.pallas_call(
+        functools.partial(_moe_ffn_kernel, block_f=block_f, f_total=f),
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, f, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), jnp.float32),
+        interpret=True,
+    )(x, w_gate, w_up, w_down)
+
+
+def vmem_bytes(c: int, d: int, f: int, block_f: int) -> int:
+    """VMEM residency estimate per grid step (perf model, DESIGN.md §6)."""
+    x = 4 * c * d
+    weights = 2 * (2 * d * block_f + block_f * d)   # bf16 streamed blocks
+    inter = 4 * c * block_f * 2                     # g and u tiles
+    return x + 2 * weights + inter + 4 * c * d

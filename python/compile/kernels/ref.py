@@ -1,0 +1,145 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+straight-line jax.numpy with no Pallas, no tiling and no fused epilogues.
+pytest (python/tests/) asserts allclose between kernel and oracle across a
+hypothesis-driven sweep of shapes and dtypes; these oracles are therefore the
+single source of numerical truth for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# INT8 GEMM (paper §4.5: per-token activation scales x per-channel weight
+# scales, int8 x int8 -> int32 accumulate, fused dequant epilogue)
+# ---------------------------------------------------------------------------
+
+def int8_gemm(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+              w_scale: jax.Array) -> jax.Array:
+    """Dequantizing GEMM oracle.
+
+    Args:
+      x_q: int8 activations, shape [M, K] (quantized per token/row).
+      w_q: int8 weights, shape [K, N] (quantized per output channel/col).
+      x_scale: float32 per-row scales, shape [M] or [M, 1].
+      w_scale: float32 per-column scales, shape [N] or [1, N].
+
+    Returns:
+      float32 [M, N]: (x_q @ w_q) * x_scale[:, None] * w_scale[None, :].
+    """
+    acc = jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    xs = x_scale.reshape(-1)[:, None].astype(jnp.float32)
+    ws = w_scale.reshape(-1)[None, :].astype(jnp.float32)
+    return acc.astype(jnp.float32) * xs * ws
+
+
+def quantize_per_row(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization (paper's per-token dynamic quant)."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_per_col(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-column int8 quantization (per-output-channel weights)."""
+    amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (paper §4.2.2)
+#
+# Decode-phase "absorbed" form: queries are pre-projected into the latent
+# space (q_abs = q_nope @ W_uk), so attention scores are taken directly
+# against the compressed latent KV cache concat the RoPE key cache, and the
+# attention *output* is a latent vector that the caller up-projects with
+# W_uv. This is exactly DeepSeek MLA's weight-absorption trick; the kernel
+# never materializes per-head K/V.
+# ---------------------------------------------------------------------------
+
+def mla_decode_attention(q_abs: jax.Array, q_rope: jax.Array,
+                         c_kv: jax.Array, k_rope: jax.Array,
+                         seq_len: jax.Array | int,
+                         scale: float | None = None) -> jax.Array:
+    """MLA decode attention oracle (single query position per sequence).
+
+    Args:
+      q_abs:  [B, H, Dc]   absorbed no-PE query (latent space).
+      q_rope: [B, H, Dr]   RoPE-carrying query part.
+      c_kv:   [B, S, Dc]   compressed latent KV cache (shared across heads).
+      k_rope: [B, S, Dr]   RoPE key cache (shared across heads, MQA-style).
+      seq_len: [B] or scalar: number of valid cache positions per sequence.
+      scale: softmax temperature. The absorbed form computes the SAME scores
+        as non-absorbed MHA, so this must be 1/sqrt(d_nope + d_rope) — the
+        per-head qk dim, NOT the latent dim. Defaults to 1/sqrt(Dc + Dr)
+        only for standalone use.
+
+    Returns:
+      [B, H, Dc] latent attention output (caller applies W_uv up-projection).
+    """
+    b, s, dc = c_kv.shape
+    dr = k_rope.shape[-1]
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(dc + dr))
+    # scores[b,h,s] = q_abs . c_kv + q_rope . k_rope
+    s_nope = jnp.einsum("bhd,bsd->bhs", q_abs.astype(jnp.float32),
+                        c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scores = (s_nope + s_rope) * scale
+    if isinstance(seq_len, int):
+        seq_len = jnp.full((b,), seq_len, dtype=jnp.int32)
+    mask = jnp.arange(s)[None, None, :] < seq_len[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bsd->bhd", probs, c_kv.astype(jnp.float32))
+
+
+def mha_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal multi-head attention oracle for the prefill phase.
+
+    The paper runs prefill MLA *without* weight absorption (treated as a
+    standard 128-head MHA, §4.3.1); we mirror that: per-head q/k/v are
+    materialized by the L2 model and this oracle/kernel does causal MHA.
+
+    Args: q, k, v: [B, H, S, D]. Returns [B, H, S, D] float32.
+    """
+    b, h, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Grouped expert FFN (paper §4.2.1 FFN stage of the MoE layer)
+# ---------------------------------------------------------------------------
+
+def grouped_expert_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                       w_down: jax.Array) -> jax.Array:
+    """SwiGLU expert FFN applied per expert group.
+
+    Args:
+      x:      [E, C, D]  tokens pre-sorted into per-expert capacity buckets.
+      w_gate: [E, D, F]
+      w_up:   [E, D, F]
+      w_down: [E, F, D]
+
+    Returns: [E, C, D] float32.
+    """
+    xf = x.astype(jnp.float32)
+    g = jnp.einsum("ecd,edf->ecf", xf, w_gate.astype(jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", xf, w_up.astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, w_down.astype(jnp.float32))

@@ -1,0 +1,576 @@
+"""Layer-2 JAX model: a scaled-down DeepSeek-style MoE transformer.
+
+Architecturally faithful to the serving-relevant pieces of DeepSeek-V3/R1
+(paper §3.5.1): multi-head latent attention (MLA) with a compressed latent KV
+cache and decode-time weight absorption, a fine-grained MoE FFN with shared +
+routed experts and top-k gating, and a multi-token-prediction (MTP) head for
+speculative decoding — all at a size that runs on CPU PJRT.
+
+The model is written functionally (params = pytree of arrays) and exposes
+exactly the graphs the Rust coordinator consumes after AOT lowering:
+
+  * ``prefill``      — process a full prompt, return last-position logits +
+                       the latent KV caches (the paper's prefill instance).
+  * ``decode_step``  — one autoregressive step over a fixed batch of slots,
+                       with in-graph greedy sampling (paper §4.2.4's
+                       "CPU-free in-NPU sampling").
+  * ``decode_step_mtp`` — decode + one speculative MTP token per step.
+
+Hot-spot compute goes through the Layer-1 Pallas kernels
+(python/compile/kernels/): absorbed-MLA decode attention, causal flash MHA
+for prefill, grouped expert FFN, and INT8 GEMM when quantized.
+
+Python (and this file) never runs at serving time: `aot.py` lowers these
+functions once to HLO text in artifacts/.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .kernels import ref
+from .kernels.mla_attention import mha_prefill_attention, mla_decode_attention
+from .kernels.moe_ffn import grouped_expert_ffn
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Scaled-down DeepSeek-R1-style configuration.
+
+    Ratios (latent dim vs model dim, experts vs active experts, rope split)
+    follow DeepSeek-V3; absolute sizes are laptop-scale.
+    """
+    vocab_size: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    # MLA dims
+    d_c: int = 64            # latent (compressed) KV dim — the small cache
+    d_rope: int = 16         # shared RoPE key dim (MQA-style)
+    d_nope: int = 32         # per-head no-PE q/k dim
+    d_v: int = 32            # per-head value dim
+    # MoE
+    n_routed_experts: int = 8
+    n_shared_experts: int = 1
+    top_k: int = 2
+    d_expert: int = 192      # routed expert hidden dim
+    d_shared: int = 384      # shared expert hidden dim
+    first_dense: int = 1     # first N layers use a dense FFN (DeepSeek-style)
+    capacity_factor: float = 1.5
+    # serving shapes (static for AOT)
+    max_seq: int = 256
+    prefill_seq: int = 128
+    decode_batch: int = 8
+    rope_base: float = 10000.0
+    # True: Pallas kernels (serving artifacts). False: pure-jnp oracles —
+    # identical math (proven by python/tests), used for the fast training
+    # loop where interpret-mode Pallas would dominate step time.
+    use_kernels: bool = True
+    # Kernel block shapes (Perf pass, EXPERIMENTS.md §Perf): swept on the
+    # serving artifact's decode step. block_s=256 puts the whole latent
+    # cache in one sweep (max_seq=256); block_f=64 keeps the expert-FFN
+    # intermediate small enough to stay cache-resident under interpret.
+    mla_block_s: int = 256
+    moe_block_f: int = 64
+
+    @property
+    def expert_capacity(self) -> int:
+        per = self.prefill_seq * self.top_k / self.n_routed_experts
+        cap = int(np.ceil(per * self.capacity_factor))
+        # decode batch is smaller; one capacity covers both graphs.
+        return max(cap, self.decode_batch * self.top_k)
+
+    def param_count(self, params: Params) -> int:
+        return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Deterministic init. Names matter: quant.classify uses substrings."""
+    rng = np.random.default_rng(seed)
+
+    def dense(k: int, n: int, scale: float | None = None) -> np.ndarray:
+        s = scale if scale is not None else (1.0 / np.sqrt(k))
+        return (rng.standard_normal((k, n)) * s).astype(np.float32)
+
+    p: Params = {
+        "embed": (rng.standard_normal((cfg.vocab_size, cfg.d_model)) * 0.02
+                  ).astype(np.float32),
+        "final_norm": np.ones(cfg.d_model, dtype=np.float32),
+        "lm_head": dense(cfg.d_model, cfg.vocab_size, 0.02),
+    }
+    h, dn, dr, dv, dc = (cfg.n_heads, cfg.d_nope, cfg.d_rope, cfg.d_v,
+                         cfg.d_c)
+    for layer in range(cfg.n_layers):
+        lp: Params = {
+            "attn_norm": np.ones(cfg.d_model, dtype=np.float32),
+            "ffn_norm": np.ones(cfg.d_model, dtype=np.float32),
+            # MLA projections
+            "wq": dense(cfg.d_model, h * (dn + dr)),
+            "wdkv": dense(cfg.d_model, dc),          # down-proj to latent
+            "wkr": dense(cfg.d_model, dr),           # shared rope key
+            "wuk": (rng.standard_normal((h, dc, dn)) / np.sqrt(dc)
+                    ).astype(np.float32),            # latent -> k_nope
+            "wuv": (rng.standard_normal((h, dc, dv)) / np.sqrt(dc)
+                    ).astype(np.float32),            # latent -> v
+            "wo": dense(h * dv, cfg.d_model),
+        }
+        if layer < cfg.first_dense:
+            lp["dense_gate"] = dense(cfg.d_model, cfg.d_shared)
+            lp["dense_up"] = dense(cfg.d_model, cfg.d_shared)
+            lp["dense_down"] = dense(cfg.d_shared, cfg.d_model)
+        else:
+            e, f = cfg.n_routed_experts, cfg.d_expert
+            lp["router"] = dense(cfg.d_model, e, 0.02)
+            lp["exp_gate"] = (rng.standard_normal((e, cfg.d_model, f))
+                              / np.sqrt(cfg.d_model)).astype(np.float32)
+            lp["exp_up"] = (rng.standard_normal((e, cfg.d_model, f))
+                            / np.sqrt(cfg.d_model)).astype(np.float32)
+            lp["exp_down"] = (rng.standard_normal((e, f, cfg.d_model))
+                              / np.sqrt(f)).astype(np.float32)
+            lp["shared_gate"] = dense(cfg.d_model, cfg.d_shared)
+            lp["shared_up"] = dense(cfg.d_model, cfg.d_shared)
+            lp["shared_down"] = dense(cfg.d_shared, cfg.d_model)
+        p[f"layer_{layer}"] = lp  # noqa: filled below with jnp conversion
+    # MTP speculative head (paper §4.2.4): one lightweight transformer-ish
+    # block combining the last hidden state with the predicted token's
+    # embedding to predict the *next* token.
+    p["mtp"] = {
+        "norm_h": np.ones(cfg.d_model, dtype=np.float32),
+        "norm_e": np.ones(cfg.d_model, dtype=np.float32),
+        "proj": dense(2 * cfg.d_model, cfg.d_model),
+        "ffn_gate": dense(cfg.d_model, cfg.d_shared),
+        "ffn_up": dense(cfg.d_model, cfg.d_shared),
+        "ffn_down": dense(cfg.d_shared, cfg.d_model),
+    }
+    # Device arrays throughout: tracers index into these during jit tracing.
+    return jax.tree.map(jnp.asarray, p)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def rope_tables(cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """RoPE cos/sin tables: [max_seq, d_rope].
+
+    Built from jnp ops (not numpy) so AOT lowering emits computable
+    instructions rather than large array constants — HLO *text* elides big
+    constants (`constant({...})`), which would not round-trip to the Rust
+    loader. XLA constant-folds these at compile time anyway.
+    """
+    half = cfg.d_rope // 2
+    inv_freq = 1.0 / (cfg.rope_base
+                      ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(cfg.max_seq, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv_freq)                    # [S, half]
+    emb = jnp.concatenate([freqs, freqs], axis=-1)    # [S, d_rope]
+    return jnp.cos(emb), jnp.sin(emb)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., d_rope]; cos/sin broadcastable [..., d_rope]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    rotated = jnp.concatenate([-x2, x1], axis=-1)
+    return x * cos + rotated * sin
+
+
+def _linear(x: jax.Array, w: jax.Array | quant.QuantizedLinear,
+            name: str, quantized: Params | None) -> jax.Array:
+    """Dispatch a matmul to fp32 or the INT8 kernel path (§4.5)."""
+    if quantized is not None and name in quantized:
+        q = quantized[name]
+        return quant.int8_linear_apply(
+            x, q["w_q"], q["w_scale"], q["smooth"], q["bias_correction"])
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MoE layer
+# ---------------------------------------------------------------------------
+
+def moe_route(router_logits: jax.Array, top_k: int
+              ) -> tuple[jax.Array, jax.Array]:
+    """Top-k routing: returns (indices [T,K], weights [T,K] softmaxed).
+
+    Implemented as iterative argmax+mask rather than jax.lax.top_k: recent
+    jax lowers top_k to the native HLO `topk(..., largest=true)` op, which
+    the xla_extension 0.5.1 text parser behind the Rust loader does not
+    know. k is tiny (2–8), so the unrolled form is equally efficient and
+    lowers to plain reduce/select ops that round-trip cleanly.
+    """
+    e = router_logits.shape[-1]
+    x = router_logits
+    idxs, vals = [], []
+    for _ in range(top_k):
+        i = jnp.argmax(x, axis=-1)
+        v = jnp.max(x, axis=-1)
+        idxs.append(i)
+        vals.append(v)
+        x = x - jax.nn.one_hot(i, e, dtype=x.dtype) * 1e30
+    idx = jnp.stack(idxs, axis=-1)
+    weights = jax.nn.softmax(jnp.stack(vals, axis=-1), axis=-1)
+    return idx, weights
+
+
+def moe_dispatch_combine(x: jax.Array, lp: Params, cfg: ModelConfig,
+                         quantized: Params | None, prefix: str) -> jax.Array:
+    """Full MoE layer: route -> dispatch to capacity buckets -> grouped
+    expert FFN (Pallas) -> weighted combine -> + shared expert.
+
+    x: [T, D] flattened tokens. Static shapes throughout (paper Opt.3).
+    """
+    t, d = x.shape
+    e, k = cfg.n_routed_experts, cfg.top_k
+    # Capacity scales with the token count of *this* graph (prefill, decode
+    # and training batches differ); shapes stay static per lowered graph.
+    cap = max(int(np.ceil(t * k / e * cfg.capacity_factor)), min(t * k, 8))
+
+    logits = x @ lp["router"].astype(jnp.float32)          # [T, E]
+    idx, wts = moe_route(logits, k)                        # [T, K]
+
+    # position-in-expert via cumsum over the flattened (token, k) choices;
+    # tokens beyond an expert's capacity are dropped (standard capacity
+    # routing; the paper instead sizes buffers for the worst case, which at
+    # laptop scale is the same thing with capacity_factor >= top_k*E/T).
+    flat_idx = idx.reshape(-1)                             # [T*K]
+    onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)  # [T*K, E]
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot - 1     # [T*K, E]
+    pos = jnp.max(pos_in_e, axis=-1)                       # [T*K]
+    keep = pos < cap
+
+    # scatter tokens into [E, C, D] buckets
+    buckets = jnp.zeros((e, cap, d), dtype=jnp.float32)
+    src_tok = jnp.repeat(jnp.arange(t), k)                 # [T*K]
+    safe_pos = jnp.where(keep, pos, 0)
+    buckets = buckets.at[flat_idx, safe_pos].add(
+        jnp.where(keep[:, None], x[src_tok], 0.0))
+
+    if cfg.use_kernels:
+        out_buckets = grouped_expert_ffn(buckets, lp["exp_gate"],
+                                         lp["exp_up"], lp["exp_down"],
+                                         block_f=cfg.moe_block_f)
+    else:
+        out_buckets = ref.grouped_expert_ffn(buckets, lp["exp_gate"],
+                                             lp["exp_up"], lp["exp_down"])
+
+    # gather back with routing weights
+    gathered = out_buckets[flat_idx, safe_pos]             # [T*K, D]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    weighted = gathered * wts.reshape(-1)[:, None]
+    routed_out = jnp.zeros((t, d), dtype=jnp.float32).at[src_tok].add(weighted)
+
+    # shared expert (always-on dense SwiGLU)
+    g = _linear(x, lp["shared_gate"], f"{prefix}.shared_gate", quantized)
+    u = _linear(x, lp["shared_up"], f"{prefix}.shared_up", quantized)
+    shared = _linear(jax.nn.silu(g) * u, lp["shared_down"],
+                     f"{prefix}.shared_down", quantized)
+    return routed_out + shared
+
+
+def dense_ffn(x: jax.Array, lp: Params, quantized: Params | None,
+              prefix: str) -> jax.Array:
+    g = _linear(x, lp["dense_gate"], f"{prefix}.dense_gate", quantized)
+    u = _linear(x, lp["dense_up"], f"{prefix}.dense_up", quantized)
+    return _linear(jax.nn.silu(g) * u, lp["dense_down"],
+                   f"{prefix}.dense_down", quantized)
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def _encode(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            quantized: Params | None
+            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared prompt-processing layer stack.
+
+    Returns (hidden [B, S, D], c_kv_cache [L,B,max_seq,d_c],
+    k_rope_cache [L,B,max_seq,d_rope]).
+    """
+    b, s = tokens.shape
+    h, dn, dr, dv, dc = (cfg.n_heads, cfg.d_nope, cfg.d_rope, cfg.d_v,
+                         cfg.d_c)
+    cos_t, sin_t = rope_tables(cfg)
+    cos, sin = cos_t[:s], sin_t[:s]                       # [S, dr]
+
+    x = params["embed"][tokens].astype(jnp.float32)       # [B, S, D]
+    c_caches, r_caches = [], []
+    for layer in range(cfg.n_layers):
+        lp = params[f"layer_{layer}"]
+        pfx = f"layer_{layer}"
+        xin = rmsnorm(x, lp["attn_norm"])
+
+        q = _linear(xin, lp["wq"], f"{pfx}.wq", quantized)
+        q = q.reshape(b, s, h, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = apply_rope(q_rope, cos[None, :, None, :],
+                            sin[None, :, None, :])
+
+        c_kv = _linear(xin, lp["wdkv"], f"{pfx}.wdkv", quantized)  # [B,S,dc]
+        k_rope = _linear(xin, lp["wkr"], f"{pfx}.wkr", quantized)  # [B,S,dr]
+        k_rope = apply_rope(k_rope, cos[None], sin[None])
+
+        # prefill: NO weight absorption (paper §4.3.1) — materialize per-head
+        # k/v from the latent and run standard causal MHA via the flash
+        # kernel.
+        k_nope = jnp.einsum("bsc,hcn->bshn", c_kv, lp["wuk"])
+        v = jnp.einsum("bsc,hcn->bshn", c_kv, lp["wuv"])     # [B,S,H,dv]
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)  # [B,S,H,dn+dr]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))],
+            axis=-1)
+        # pad v to qk dim for the kernel (same head dim requirement), then
+        # slice back — cheaper than a second kernel variant at this scale.
+        dqk = dn + dr
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - dv)))
+        attn_fn = (mha_prefill_attention if cfg.use_kernels
+                   else ref.mha_prefill_attention)
+        attn = attn_fn(
+            q_full.transpose(0, 2, 1, 3), k_full.transpose(0, 2, 1, 3),
+            v_pad.transpose(0, 2, 1, 3))
+        attn = attn.transpose(0, 2, 1, 3)[..., :dv]          # [B,S,H,dv]
+        attn_out = _linear(attn.reshape(b, s, h * dv), lp["wo"],
+                           f"{pfx}.wo", quantized)
+        x = x + attn_out
+
+        xffn = rmsnorm(x, lp["ffn_norm"])
+        if layer < cfg.first_dense:
+            ffn_out = dense_ffn(xffn.reshape(b * s, -1), lp, quantized, pfx)
+        else:
+            ffn_out = moe_dispatch_combine(xffn.reshape(b * s, -1), lp, cfg,
+                                           quantized, pfx)
+        x = x + ffn_out.reshape(b, s, -1)
+
+        pad = cfg.max_seq - s
+        c_caches.append(jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))))
+        r_caches.append(jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))))
+
+    return x, jnp.stack(c_caches), jnp.stack(r_caches)
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            quantized: Params | None = None
+            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Process a prompt batch (the paper's prefill instance graph).
+
+    Args:
+      tokens: int32 [B, S] (S = cfg.prefill_seq).
+
+    Returns:
+      logits: [B, vocab] at the last position.
+      c_kv_cache:  [L, B, max_seq, d_c]   (padded to max_seq)
+      k_rope_cache: [L, B, max_seq, d_rope]
+    """
+    x, c_caches, r_caches = _encode(params, cfg, tokens, quantized)
+    hfin = rmsnorm(x[:, -1], params["final_norm"])          # [B, D]
+    logits = _linear(hfin, params["lm_head"], "lm_head", quantized)
+    return logits, c_caches, r_caches
+
+
+def forward_all(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                quantized: Params | None = None) -> jax.Array:
+    """All-position logits [B, S, V] — training / perplexity evaluation."""
+    x, _, _ = _encode(params, cfg, tokens, quantized)
+    hfin = rmsnorm(x, params["final_norm"])
+    return _linear(hfin, params["lm_head"], "lm_head", quantized)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def _decode_core(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                 positions: jax.Array, c_cache: jax.Array,
+                 r_cache: jax.Array, quantized: Params | None
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step for [B] tokens at [B] positions.
+
+    c_cache: [L, B, max_seq, d_c]; r_cache: [L, B, max_seq, d_rope].
+    Returns (last_hidden [B, D], new_c_cache, new_r_cache).
+    """
+    b = tokens.shape[0]
+    h, dn, dr, dv, dc = (cfg.n_heads, cfg.d_nope, cfg.d_rope, cfg.d_v,
+                         cfg.d_c)
+    cos_t, sin_t = rope_tables(cfg)
+    cos = cos_t[positions]                                  # [B, dr]
+    sin = sin_t[positions]
+
+    x = params["embed"][tokens].astype(jnp.float32)         # [B, D]
+    new_c, new_r = [], []
+    for layer in range(cfg.n_layers):
+        lp = params[f"layer_{layer}"]
+        pfx = f"layer_{layer}"
+        xin = rmsnorm(x, lp["attn_norm"])
+
+        q = _linear(xin, lp["wq"], f"{pfx}.wq", quantized)
+        q = q.reshape(b, h, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = apply_rope(q_rope, cos[:, None, :], sin[:, None, :])
+
+        c_kv_new = _linear(xin, lp["wdkv"], f"{pfx}.wdkv", quantized)
+        k_rope_new = apply_rope(
+            _linear(xin, lp["wkr"], f"{pfx}.wkr", quantized), cos, sin)
+
+        # append to cache at `positions` (per-sequence scatter)
+        ci = c_cache[layer]
+        ri = r_cache[layer]
+        ci = ci.at[jnp.arange(b), positions].set(c_kv_new)
+        ri = ri.at[jnp.arange(b), positions].set(k_rope_new)
+        new_c.append(ci)
+        new_r.append(ri)
+
+        # decode: absorbed MLA (paper §4.2.2) — q_abs = q_nope @ W_uk
+        q_abs = jnp.einsum("bhn,hcn->bhc", q_nope, lp["wuk"])
+        # scale = 1/sqrt(per-head qk dim): the absorbed form computes the
+        # same scores as prefill's non-absorbed MHA (same temperature).
+        attn_scale = 1.0 / float(np.sqrt(dn + dr))
+        if cfg.use_kernels:
+            o_lat = mla_decode_attention(q_abs, q_rope, ci, ri,
+                                         positions + 1, scale=attn_scale,
+                                         block_s=cfg.mla_block_s)
+        else:
+            o_lat = ref.mla_decode_attention(q_abs, q_rope, ci, ri,
+                                             positions + 1, scale=attn_scale)
+        # up-project latent output per head: o[h] = o_lat[h] @ W_uv[h]
+        attn = jnp.einsum("bhc,hcv->bhv", o_lat, lp["wuv"])
+        attn_out = _linear(attn.reshape(b, h * dv), lp["wo"],
+                           f"{pfx}.wo", quantized)
+        x = x + attn_out
+
+        xffn = rmsnorm(x, lp["ffn_norm"])
+        if layer < cfg.first_dense:
+            ffn_out = dense_ffn(xffn, lp, quantized, pfx)
+        else:
+            ffn_out = moe_dispatch_combine(xffn, lp, cfg, quantized, pfx)
+        x = x + ffn_out
+
+    return x, jnp.stack(new_c), jnp.stack(new_r)
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                positions: jax.Array, c_cache: jax.Array, r_cache: jax.Array,
+                quantized: Params | None = None
+                ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One decode step. Returns (next_tokens, logits, new_c, new_r).
+
+    Sampling (greedy argmax) runs in-graph — the paper's CPU-free in-NPU
+    sampling (§4.2.4): no host round-trip between steps.
+    """
+    hid, new_c, new_r = _decode_core(params, cfg, tokens, positions, c_cache,
+                                     r_cache, quantized)
+    hfin = rmsnorm(hid, params["final_norm"])
+    logits = _linear(hfin, params["lm_head"], "lm_head", quantized)
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, logits, new_c, new_r
+
+
+def mtp_head(params: Params, cfg: ModelConfig, hidden: jax.Array,
+             tok_emb: jax.Array, quantized: Params | None) -> jax.Array:
+    """MTP speculative head: h, emb(next_tok) -> logits for tok+2 (§4.2.4)."""
+    mp = params["mtp"]
+    hn = rmsnorm(hidden, mp["norm_h"])
+    en = rmsnorm(tok_emb, mp["norm_e"])
+    z = _linear(jnp.concatenate([hn, en], axis=-1), mp["proj"],
+                "mtp.proj", quantized)
+    g = _linear(z, mp["ffn_gate"], "mtp.ffn_gate", quantized)
+    u = _linear(z, mp["ffn_up"], "mtp.ffn_up", quantized)
+    z = z + _linear(jax.nn.silu(g) * u, mp["ffn_down"], "mtp.ffn_down",
+                    quantized)
+    return _linear(rmsnorm(z, params["final_norm"]), params["lm_head"],
+                   "lm_head", quantized)
+
+
+def decode_step_mtp(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                    positions: jax.Array, c_cache: jax.Array,
+                    r_cache: jax.Array, quantized: Params | None = None
+                    ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                               jax.Array]:
+    """Decode step + 1 speculative MTP token.
+
+    Returns (next_tokens [B], spec_tokens [B], logits [B,V], new_c, new_r).
+    The coordinator validates spec_tokens on the *next* step (paper's MTP
+    validation): metadata for both graphs is precomputed NPU-side, so the
+    two predictions cost one graph dispatch.
+    """
+    hid, new_c, new_r = _decode_core(params, cfg, tokens, positions, c_cache,
+                                     r_cache, quantized)
+    hfin = rmsnorm(hid, params["final_norm"])
+    logits = _linear(hfin, params["lm_head"], "lm_head", quantized)
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    tok_emb = params["embed"][next_tokens].astype(jnp.float32)
+    spec_logits = mtp_head(params, cfg, hid, tok_emb, quantized)
+    spec_tokens = jnp.argmax(spec_logits, axis=-1).astype(jnp.int32)
+    return next_tokens, spec_tokens, logits, new_c, new_r
+
+
+# ---------------------------------------------------------------------------
+# Quantization of a trained/initialized model (§4.5 applied to the pytree)
+# ---------------------------------------------------------------------------
+
+def quantize_model(params: Params, cfg: ModelConfig, seed: int = 7,
+                   cal_tokens: int = 64) -> tuple[Params, dict]:
+    """Quantize all INT8-classified 2-D linears. Returns (quantized, report).
+
+    Calibration activations are collected by running the float prefill on a
+    random calibration batch and capturing each linear's input — we
+    approximate with layer-appropriate random projections of real embedding
+    activations, which at this scale gives the same scale statistics.
+    """
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, size=(1, cfg.prefill_seq))
+    emb = np.asarray(params["embed"])[toks.reshape(-1)]
+    x_cal = emb[:cal_tokens].astype(np.float32)
+
+    quantized: Params = {}
+    report: dict[str, dict] = {}
+
+    def maybe_quant(name: str, w: np.ndarray, x: np.ndarray):
+        if not quant.is_int8_param(name):
+            return
+        if w.ndim != 2:
+            return
+        if x.shape[1] != w.shape[0]:
+            x = rng.standard_normal((cal_tokens, w.shape[0])).astype(
+                np.float32) * float(np.std(x))
+        ql = quant.quantize_linear(np.asarray(w), x)
+        quantized[name] = {
+            "w_q": jnp.asarray(ql.w_q),
+            "w_scale": jnp.asarray(ql.w_scale),
+            "smooth": jnp.asarray(ql.smooth),
+            "bias_correction": jnp.asarray(ql.bias_correction),
+        }
+        report[name] = quant.fidelity_report(np.asarray(w), ql, x)
+
+    for lname, lp in params.items():
+        if lname.startswith("layer_"):
+            for pname, w in lp.items():
+                maybe_quant(f"{lname}.{pname}", w, x_cal)
+        elif lname == "mtp":
+            for pname, w in lp.items():
+                x = x_cal
+                if pname == "proj":
+                    x = np.concatenate([x_cal, x_cal], axis=1)
+                maybe_quant(f"mtp.{pname}", w, x)
+        elif lname == "lm_head":
+            maybe_quant("lm_head", lp, x_cal)
+    return quantized, report

@@ -1,0 +1,62 @@
+"""L1 perf analysis: VMEM footprint + MXU-alignment estimates per kernel
+block configuration (DESIGN.md §6 L1 targets).
+
+interpret=True wallclock is CPU-numpy time, NOT a TPU proxy — so the TPU-
+facing analysis here is structural: does each block configuration fit VMEM
+(~16 MB/core budget) and keep MXU tiles aligned? The serving-artifact block
+choice (cfg.mla_block_s / cfg.moe_block_f) is tuned on the *CPU artifact's*
+measured step time (EXPERIMENTS.md §Perf); this report shows both choices
+are also VMEM-feasible on the TPU model.
+
+Run: cd python && python -m compile.perf_l1
+"""
+
+from __future__ import annotations
+
+from .kernels import int8_gemm as g
+from .kernels import mla_attention as mla
+from .kernels import moe_ffn as moe
+from .model import ModelConfig
+
+VMEM_BUDGET = 16 << 20  # bytes/core, TPU-class scratchpad
+
+
+def row(name: str, vmem: int, note: str) -> None:
+    ok = "fits" if vmem <= VMEM_BUDGET else "EXCEEDS"
+    print(f"  {name:<42} {vmem / 1024:10.1f} KiB  {ok:>7}  {note}")
+
+
+def main() -> None:
+    cfg = ModelConfig()
+    print("== L1 VMEM / alignment analysis ==")
+    print(f"VMEM budget assumed: {VMEM_BUDGET >> 20} MiB/core\n")
+
+    print("int8_gemm (BM, BN, BK):")
+    for bm, bn, bk in [(128, 128, 128), (256, 256, 128), (64, 128, 256), (8, 256, 256)]:
+        vm = g.vmem_bytes(bm, bn, bk)
+        util = g.mxu_utilization_estimate(2048, 2048, 2048, bm, bn, bk)
+        row(f"bm={bm} bn={bn} bk={bk}", vm, f"MXU align {util:.2f}")
+
+    print("\nmla_decode_attention (H, Dc, Dr fixed by model):")
+    for bs in [64, 128, 256]:
+        vm = mla.decode_vmem_bytes(cfg.n_heads, cfg.d_c, cfg.d_rope, bs)
+        mark = " <- serving artifact" if bs == cfg.mla_block_s else ""
+        row(f"block_s={bs}", vm, f"sweep steps {max(1, cfg.max_seq // bs)}{mark}")
+
+    print("\ngrouped_expert_ffn (C = expert capacity, BF blocked):")
+    cap = cfg.expert_capacity
+    for bf in [32, 64, 192, 256]:
+        vm = moe.vmem_bytes(cap, cfg.d_model, cfg.d_expert, bf)
+        mark = " <- serving artifact" if bf == cfg.moe_block_f else ""
+        row(f"block_f={bf}", vm, f"f-steps {max(1, -(-cfg.d_expert // bf))}{mark}")
+
+    print(
+        "\nConclusion: every configuration (including the CPU-tuned serving\n"
+        "choice block_s=256 / block_f=64) is far inside the VMEM budget at\n"
+        "this model scale; at DeepSeek-R1 dims the same formulas bound\n"
+        "block_s <= 512 latents per sweep step (576 B/latent x dbl-buffer)."
+    )
+
+
+if __name__ == "__main__":
+    main()

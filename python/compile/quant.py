@@ -1,0 +1,259 @@
+"""Training-free hierarchical INT8 quantization (paper §4.5).
+
+Implements the five components of the paper's quantization framework for the
+L2 model's weights and activations:
+
+1. **Mixed-precision strategy** — `classify_params` labels every parameter as
+   INT8 (large matmuls on the critical path: attention projections, expert
+   FFNs, LM head) or high-precision (norm gains, router gates, RoPE tables,
+   embeddings), mirroring the paper's performance-vs-sensitivity trade-off.
+
+2. **Adaptive scale search** (Eq. 3) — per weight tensor, a grid search over
+   scale multipliers alpha minimizing || Q(W*s)(s^-1 X) - W X || on a random
+   calibration batch. Offline only; no runtime overhead.
+
+3. **Outlier suppression / structural transformation** — a diagonal
+   "smoothing" transform (SmoothQuant-style, the paper's 'absorbing scaling
+   factors into preceding/succeeding layers'): per-input-channel factors
+   t_j = (amax_x_j)^alpha / (amax_w_j)^(1-alpha) move activation outliers
+   into the weights, where per-channel scales absorb them. The transform is
+   folded into the stored weights and the paired activation scale vector so
+   the layer function is unchanged.
+
+4. **Efficient INT8 GEMM** — mixed granularity: per-token dynamic activation
+   scales x per-output-channel static weight scales, executed by the Pallas
+   `int8_gemm` kernel (python/compile/kernels/int8_gemm.py).
+
+5. **Block-level clipping + error compensation** (Eq. 4) — weights are split
+   into row blocks; per block, a clipping factor alpha* minimizing the
+   block's output error is searched; a rank-0 additive bias correction term
+   (E[quant error] @ mean activation) compensates systematic bias.
+
+All search routines run on a small synthetic calibration set at AOT time
+(`aot.py`), matching the paper's "offline post-quantization calibration".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Parameter-name substrings that stay in high precision (component 1).
+_HIGH_PRECISION_MARKERS = (
+    "norm",        # RMSNorm gains: tiny, numerically sensitive
+    "router",      # MoE gating: paper keeps gating in high precision
+    "embed",       # token embeddings: memory-bound gather, not a GEMM
+    "rope",        # rotary tables
+    "bias",
+)
+
+
+def is_int8_param(name: str) -> bool:
+    """Mixed-precision classification: True if `name` should be INT8."""
+    lname = name.lower()
+    if any(m in lname for m in _HIGH_PRECISION_MARKERS):
+        return False
+    return True
+
+
+@dataclasses.dataclass
+class QuantizedLinear:
+    """An INT8-quantized weight ready for the int8_gemm kernel."""
+    w_q: np.ndarray          # int8 [K, N]
+    w_scale: np.ndarray      # f32 [N] per-output-channel scales
+    smooth: np.ndarray       # f32 [K] activation pre-scale (outlier transform)
+    bias_correction: np.ndarray  # f32 [N] additive error compensation
+    clip_alpha: np.ndarray   # f32 [n_blocks] chosen block clipping factors
+
+    def dequantized(self) -> np.ndarray:
+        """Float reconstruction of the stored weight (for fidelity checks)."""
+        return self.w_q.astype(np.float32) * self.w_scale[None, :]
+
+
+def _per_channel_scale(w: np.ndarray, clip: np.ndarray | float = 1.0
+                       ) -> np.ndarray:
+    """Symmetric per-output-channel scale with optional clipping factor."""
+    amax = np.max(np.abs(w), axis=0)
+    amax = np.maximum(amax * clip, 1e-8)
+    return (amax / 127.0).astype(np.float32)
+
+
+def _quantize(w: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    q = np.clip(np.round(w / scale[None, :]), -127, 127)
+    return q.astype(np.int8)
+
+
+def smooth_factors(x_cal: np.ndarray, w: np.ndarray, alpha: float = 0.5
+                   ) -> np.ndarray:
+    """Outlier-suppression diagonal transform (component 3).
+
+    Returns t [K] such that the layer computes (x / t) @ (t[:, None] * w);
+    activation outliers in channel j are divided away and absorbed into the
+    weight's per-channel scale.
+    """
+    x_amax = np.maximum(np.max(np.abs(x_cal), axis=0), 1e-5)
+    w_amax = np.maximum(np.max(np.abs(w), axis=1), 1e-5)
+    t = np.power(x_amax, alpha) / np.power(w_amax, 1.0 - alpha)
+    # Guard degenerate channels; keep the transform well-conditioned.
+    t = np.clip(t, 1e-3, 1e3)
+    return t.astype(np.float32)
+
+
+def _quantize_activations(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-token (per-row) symmetric int8 quantization."""
+    amax = np.maximum(np.max(np.abs(x), axis=1, keepdims=True), 1e-8)
+    scale = amax / 127.0
+    q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+    return q, scale.astype(np.float32)
+
+
+def _layer_error(x_cal: np.ndarray, w: np.ndarray, w_q: np.ndarray,
+                 w_scale: np.ndarray) -> float:
+    """|| Q(W s)(s^-1 X) - W X ||_F on the calibration batch (Eq. 3)."""
+    x_q, x_scale = _quantize_activations(x_cal)
+    y_q = (x_q.astype(np.float32) @ w_q.astype(np.float32))
+    y_q = y_q * x_scale * w_scale[None, :]
+    y = x_cal @ w
+    return float(np.linalg.norm(y_q - y))
+
+
+def adaptive_scale_search(x_cal: np.ndarray, w: np.ndarray,
+                          grid: Iterable[float] = (1.0, 0.95, 0.9, 0.85, 0.8,
+                                                   0.75, 0.7)) -> float:
+    """Component 2: find the clipping multiplier minimizing layer error."""
+    best_alpha, best_err = 1.0, float("inf")
+    for alpha in grid:
+        scale = _per_channel_scale(w, alpha)
+        w_q = _quantize(w, scale)
+        err = _layer_error(x_cal, w, w_q, scale)
+        if err < best_err:
+            best_alpha, best_err = alpha, err
+    return best_alpha
+
+
+def block_clip_search(x_cal: np.ndarray, w: np.ndarray, n_blocks: int = 4,
+                      grid: Iterable[float] = (1.0, 0.9, 0.8, 0.7)
+                      ) -> np.ndarray:
+    """Component 5: per-row-block clipping factors alpha* (Eq. 4).
+
+    Rows of W (input channels) are partitioned into `n_blocks` contiguous
+    blocks. Each block's contribution to the output is x_blk @ w_blk; its
+    clipping factor is chosen to minimize that partial product's error.
+    """
+    k = w.shape[0]
+    bounds = np.linspace(0, k, n_blocks + 1).astype(int)
+    alphas = np.ones(n_blocks, dtype=np.float32)
+    for b in range(n_blocks):
+        lo, hi = bounds[b], bounds[b + 1]
+        if hi <= lo:
+            continue
+        w_blk = w[lo:hi]
+        x_blk = x_cal[:, lo:hi]
+        best_alpha, best_err = 1.0, float("inf")
+        for alpha in grid:
+            scale = _per_channel_scale(w_blk, alpha)
+            w_q = _quantize(w_blk, scale)
+            err = _layer_error(x_blk, w_blk, w_q, scale)
+            if err < best_err:
+                best_alpha, best_err = alpha, err
+        alphas[b] = best_alpha
+    return alphas
+
+
+def quantize_linear(w: np.ndarray, x_cal: np.ndarray, *,
+                    use_smoothing: bool = True, n_clip_blocks: int = 4
+                    ) -> QuantizedLinear:
+    """Full §4.5 pipeline for one weight matrix.
+
+    Args:
+      w: f32 [K, N] weight.
+      x_cal: f32 [T, K] calibration activations for this layer input.
+
+    Returns a QuantizedLinear whose effective function approximates x @ w
+    when evaluated as int8_gemm(quant(x / smooth), w_q, x_scale, w_scale)
+    + bias_correction.
+    """
+    w = np.asarray(w, dtype=np.float32)
+    x_cal = np.asarray(x_cal, dtype=np.float32)
+
+    # (3) outlier suppression: fold diagonal transform into the weight.
+    if use_smoothing:
+        t = smooth_factors(x_cal, w)
+    else:
+        t = np.ones(w.shape[0], dtype=np.float32)
+    w_t = w * t[:, None]
+    x_t = x_cal / t[None, :]
+
+    # (5) block-level clipping factors, then (2) a global scale refinement.
+    clip_alphas = block_clip_search(x_t, w_t, n_blocks=n_clip_blocks)
+    k = w.shape[0]
+    bounds = np.linspace(0, k, n_clip_blocks + 1).astype(int)
+    row_clip = np.ones(k, dtype=np.float32)
+    for b in range(n_clip_blocks):
+        row_clip[bounds[b]:bounds[b + 1]] = clip_alphas[b]
+    # Clip each row block to alpha_b x the per-channel amax (Eq. 4).
+    amax = np.abs(w_t).max(axis=0, keepdims=True)       # [1, N]
+    limit = amax * row_clip[:, None]                    # [K, N]
+    w_clipped = np.clip(w_t, -limit, limit)
+
+    global_alpha = adaptive_scale_search(x_t, w_clipped)
+    w_scale = _per_channel_scale(w_clipped, global_alpha)
+    w_q = _quantize(w_clipped, w_scale)
+
+    # (5b) error compensation: additive correction for the systematic part
+    # of the quantization error, measured on the calibration batch.
+    x_q, x_scale = _quantize_activations(x_t)
+    y_q = (x_q.astype(np.float32) @ w_q.astype(np.float32)) * x_scale \
+        * w_scale[None, :]
+    y = x_t @ w_t
+    bias_correction = np.mean(y - y_q, axis=0).astype(np.float32)
+
+    return QuantizedLinear(w_q=w_q, w_scale=w_scale, smooth=t,
+                           bias_correction=bias_correction,
+                           clip_alpha=clip_alphas)
+
+
+def fidelity_report(w: np.ndarray, ql: QuantizedLinear, x_eval: np.ndarray
+                    ) -> dict:
+    """Quantization fidelity metrics for one layer (Table 6 analogue)."""
+    x_eval = np.asarray(x_eval, dtype=np.float32)
+    y = x_eval @ np.asarray(w, dtype=np.float32)
+    x_t = x_eval / ql.smooth[None, :]
+    x_q, x_scale = _quantize_activations(x_t)
+    y_q = (x_q.astype(np.float32) @ ql.w_q.astype(np.float32)) * x_scale \
+        * ql.w_scale[None, :] + ql.bias_correction[None, :]
+    num = float(np.linalg.norm(y - y_q))
+    den = float(np.linalg.norm(y)) or 1.0
+    return {
+        "rel_error": num / den,
+        "max_abs_error": float(np.max(np.abs(y - y_q))),
+        "snr_db": 20.0 * np.log10(den / max(num, 1e-12)),
+    }
+
+
+def int8_linear_apply(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                      smooth: jax.Array, bias_correction: jax.Array,
+                      *, use_kernel: bool = True) -> jax.Array:
+    """Runtime INT8 linear: dynamic per-token quant + Pallas int8 GEMM.
+
+    This is the op that the L2 model emits into the AOT graph for every
+    INT8-classified matmul. `use_kernel=False` falls back to the jnp oracle
+    (used by tests to isolate kernel vs graph issues).
+    """
+    from .kernels import ref
+    from .kernels.int8_gemm import int8_gemm
+
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1]).astype(jnp.float32)
+    x2 = x2 / smooth[None, :]
+    x_q, x_scale = ref.quantize_per_row(x2)
+    if use_kernel:
+        y = int8_gemm(x_q, w_q, x_scale.reshape(-1), w_scale)
+    else:
+        y = ref.int8_gemm(x_q, w_q, x_scale, w_scale)
+    y = y + bias_correction[None, :]
+    return y.reshape(*orig_shape[:-1], w_q.shape[-1])

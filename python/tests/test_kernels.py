@@ -1,0 +1,234 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes per the repro contract: these tests are the
+numerical ground truth for everything the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.int8_gemm import int8_gemm, mxu_utilization_estimate, vmem_bytes
+from compile.kernels.mla_attention import mha_prefill_attention, mla_decode_attention
+from compile.kernels.moe_ffn import grouped_expert_ffn
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# INT8 GEMM
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 300),
+    n=st.integers(1, 200),
+    bm=st.sampled_from([16, 32, 128]),
+    bk=st.sampled_from([32, 64, 128]),
+    bn=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_int8_gemm_matches_ref(m, k, n, bm, bk, bn, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k)
+    w = rand(rng, k, n)
+    xq, xs = ref.quantize_per_row(x)
+    wq, ws = ref.quantize_per_col(w)
+    out = int8_gemm(xq, wq, xs, ws, bm=bm, bn=bn, bk=bk)
+    expected = ref.int8_gemm(xq, wq, xs, ws)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_int8_gemm_exact_integer_accumulation():
+    # int8 x int8 partial sums are exactly representable: result must be
+    # bit-identical to the int32 reference
+    rng = np.random.default_rng(0)
+    xq = jnp.asarray(rng.integers(-127, 128, (64, 512)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, (512, 96)), jnp.int8)
+    ones_x = jnp.ones(64, jnp.float32)
+    ones_w = jnp.ones(96, jnp.float32)
+    out = int8_gemm(xq, wq, ones_x, ones_w, bm=32, bn=32, bk=128)
+    expected = ref.int8_gemm(xq, wq, ones_x, ones_w)
+    assert jnp.array_equal(out, expected)
+
+
+def test_int8_gemm_zero_activation_row():
+    xq = jnp.zeros((4, 64), jnp.int8)
+    wq = jnp.asarray(np.random.default_rng(1).integers(-127, 128, (64, 8)), jnp.int8)
+    out = int8_gemm(xq, wq, jnp.ones(4), jnp.ones(8))
+    assert jnp.all(out == 0.0)
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(2)
+    x = rand(rng, 32, 128, scale=3.0)
+    xq, xs = ref.quantize_per_row(x)
+    recon = xq.astype(jnp.float32) * xs
+    # symmetric int8: error <= scale/2 per element
+    assert float(jnp.max(jnp.abs(recon - x) / xs)) <= 0.5 + 1e-6
+
+
+def test_vmem_model_monotone():
+    assert vmem_bytes(128, 128, 128) < vmem_bytes(256, 128, 128)
+    assert 0.0 < mxu_utilization_estimate(100, 100, 100, 128, 128, 128) <= 1.0
+    # aligned shapes waste nothing
+    assert mxu_utilization_estimate(256, 256, 256, 128, 128, 128) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# MLA decode attention
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 6),
+    h=st.sampled_from([1, 4, 8]),
+    s=st.sampled_from([16, 64, 256]),
+    dc=st.sampled_from([16, 64]),
+    dr=st.sampled_from([8, 16]),
+    block_s=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_mla_decode_matches_ref(b, h, s, dc, dr, block_s, seed):
+    rng = np.random.default_rng(seed)
+    q_abs = rand(rng, b, h, dc)
+    q_rope = rand(rng, b, h, dr)
+    c_kv = rand(rng, b, s, dc)
+    k_rope = rand(rng, b, s, dr)
+    lens = jnp.asarray(rng.integers(1, s + 1, b), jnp.int32)
+    out = mla_decode_attention(q_abs, q_rope, c_kv, k_rope, lens, block_s=block_s)
+    expected = ref.mla_decode_attention(q_abs, q_rope, c_kv, k_rope, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mla_decode_len_one_attends_single_position():
+    rng = np.random.default_rng(3)
+    b, h, s, dc, dr = 2, 4, 32, 16, 8
+    q_abs = rand(rng, b, h, dc)
+    q_rope = rand(rng, b, h, dr)
+    c_kv = rand(rng, b, s, dc)
+    k_rope = rand(rng, b, s, dr)
+    lens = jnp.ones(b, jnp.int32)
+    out = mla_decode_attention(q_abs, q_rope, c_kv, k_rope, lens)
+    # with one valid position, output == that position's latent
+    np.testing.assert_allclose(np.asarray(out),
+                               np.broadcast_to(np.asarray(c_kv[:, :1]), (b, h, dc)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mla_decode_ignores_positions_beyond_len():
+    rng = np.random.default_rng(4)
+    b, h, s, dc, dr = 1, 2, 64, 16, 8
+    q_abs = rand(rng, b, h, dc)
+    q_rope = rand(rng, b, h, dr)
+    c_kv = rand(rng, b, s, dc)
+    k_rope = rand(rng, b, s, dr)
+    lens = jnp.asarray([20], jnp.int32)
+    out1 = mla_decode_attention(q_abs, q_rope, c_kv, k_rope, lens)
+    # corrupt the cache beyond position 20: result must not change
+    c_kv2 = c_kv.at[:, 20:].set(1e3)
+    k_rope2 = k_rope.at[:, 20:].set(-1e3)
+    out2 = mla_decode_attention(q_abs, q_rope, c_kv2, k_rope2, lens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Prefill causal flash MHA
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 4]),
+    s=st.sampled_from([16, 64, 128]),
+    d=st.sampled_from([16, 48]),
+    bq=st.sampled_from([16, 32, 64]),
+    bk=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_mha_prefill_matches_ref(b, h, s, d, bq, bk, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, b, h, s, d)
+    k = rand(rng, b, h, s, d)
+    v = rand(rng, b, h, s, d)
+    out = mha_prefill_attention(q, k, v, block_q=bq, block_k=bk)
+    expected = ref.mha_prefill_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mha_prefill_is_causal():
+    rng = np.random.default_rng(5)
+    b, h, s, d = 1, 2, 64, 16
+    q = rand(rng, b, h, s, d)
+    k = rand(rng, b, h, s, d)
+    v = rand(rng, b, h, s, d)
+    out1 = mha_prefill_attention(q, k, v)
+    # changing FUTURE keys/values must not affect earlier positions
+    k2 = k.at[:, :, 32:].set(7.0)
+    v2 = v.at[:, :, 32:].set(-7.0)
+    out2 = mha_prefill_attention(q, k2, v2)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :32]),
+                               np.asarray(out2[:, :, :32]), atol=1e-5)
+    assert not np.allclose(np.asarray(out1[:, :, 40:]), np.asarray(out2[:, :, 40:]))
+
+
+# ---------------------------------------------------------------------------
+# Grouped expert FFN
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    e=st.integers(1, 8),
+    c=st.sampled_from([4, 16, 33]),
+    d=st.sampled_from([32, 64]),
+    f=st.sampled_from([48, 96]),
+    block_f=st.sampled_from([16, 32, 96]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_moe_ffn_matches_ref(e, c, d, f, block_f, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, e, c, d)
+    wg = rand(rng, e, d, f, scale=0.1)
+    wu = rand(rng, e, d, f, scale=0.1)
+    wd = rand(rng, e, f, d, scale=0.1)
+    out = grouped_expert_ffn(x, wg, wu, wd, block_f=block_f)
+    expected = ref.grouped_expert_ffn(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_ffn_experts_independent():
+    rng = np.random.default_rng(6)
+    e, c, d, f = 4, 8, 32, 48
+    x = rand(rng, e, c, d)
+    wg = rand(rng, e, d, f, scale=0.1)
+    wu = rand(rng, e, d, f, scale=0.1)
+    wd = rand(rng, e, f, d, scale=0.1)
+    out1 = grouped_expert_ffn(x, wg, wu, wd)
+    # perturbing expert 3's input must not change expert 0's output
+    x2 = x.at[3].set(9.0)
+    out2 = grouped_expert_ffn(x2, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(out1[0]), np.asarray(out2[0]), atol=1e-6)
+    assert not np.allclose(np.asarray(out1[3]), np.asarray(out2[3]))
+
+
+def test_moe_ffn_zero_padding_rows_stay_zero():
+    rng = np.random.default_rng(7)
+    e, c, d, f = 2, 8, 32, 48
+    x = rand(rng, e, c, d).at[:, 4:].set(0.0)  # padding rows
+    wg = rand(rng, e, d, f, scale=0.1)
+    wu = rand(rng, e, d, f, scale=0.1)
+    wd = rand(rng, e, f, d, scale=0.1)
+    out = grouped_expert_ffn(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(out[:, 4:]), 0.0, atol=1e-6)

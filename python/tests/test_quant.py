@@ -1,0 +1,115 @@
+"""§4.5 INT8 quantization framework tests (python/compile/quant.py)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def make_layer(rng, t=64, k=96, n=48, outliers=False):
+    x = rng.standard_normal((t, k)).astype(np.float32)
+    w = (rng.standard_normal((k, n)) / np.sqrt(k)).astype(np.float32)
+    if outliers:
+        # a few hot input channels — the SmoothQuant scenario
+        hot = rng.choice(k, size=3, replace=False)
+        x[:, hot] *= 40.0
+    return x, w
+
+
+def test_classification_matches_paper_policy():
+    assert quant.is_int8_param("layer_0.wq")
+    assert quant.is_int8_param("layer_3.exp_gate")
+    assert quant.is_int8_param("lm_head")
+    # high-precision survivors (§4.5 mixed-precision strategy)
+    assert not quant.is_int8_param("layer_0.attn_norm")
+    assert not quant.is_int8_param("layer_2.router")
+    assert not quant.is_int8_param("embed")
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantized_layer_close_to_float(seed):
+    rng = np.random.default_rng(seed)
+    x, w = make_layer(rng)
+    ql = quant.quantize_linear(w, x)
+    rep = quant.fidelity_report(w, ql, x)
+    assert rep["rel_error"] < 0.05, rep
+    assert rep["snr_db"] > 25.0, rep
+
+
+def test_smoothing_helps_with_outliers():
+    rng = np.random.default_rng(11)
+    x, w = make_layer(rng, outliers=True)
+    with_s = quant.quantize_linear(w, x, use_smoothing=True)
+    without = quant.quantize_linear(w, x, use_smoothing=False)
+    e_with = quant.fidelity_report(w, with_s, x)["rel_error"]
+    e_without = quant.fidelity_report(w, without, x)["rel_error"]
+    assert e_with < e_without, (e_with, e_without)
+
+
+def test_adaptive_scale_search_no_worse_than_naive():
+    rng = np.random.default_rng(12)
+    x, w = make_layer(rng)
+    alpha = quant.adaptive_scale_search(x, w)
+    assert 0.5 <= alpha <= 1.0
+    # the chosen alpha's layer error must be <= alpha=1.0's error
+    def err(a):
+        scale = quant._per_channel_scale(w, a)
+        wq = quant._quantize(w, scale)
+        return quant._layer_error(x, w, wq, scale)
+    assert err(alpha) <= err(1.0) + 1e-6
+
+
+def test_block_clip_factors_in_grid():
+    rng = np.random.default_rng(13)
+    x, w = make_layer(rng, k=128)
+    alphas = quant.block_clip_search(x, w, n_blocks=4)
+    assert alphas.shape == (4,)
+    assert all(a in (1.0, 0.9, 0.8, 0.7) for a in alphas)
+
+
+def test_quantized_weights_within_int8_range():
+    rng = np.random.default_rng(14)
+    x, w = make_layer(rng)
+    ql = quant.quantize_linear(w, x)
+    assert ql.w_q.dtype == np.int8
+    assert ql.w_q.min() >= -127 and ql.w_q.max() <= 127
+    assert np.all(ql.w_scale > 0)
+    assert np.all(np.isfinite(ql.smooth)) and np.all(ql.smooth > 0)
+
+
+def test_int8_linear_apply_matches_offline_math():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(15)
+    x, w = make_layer(rng, t=16)
+    ql = quant.quantize_linear(w, x)
+    y_kernel = quant.int8_linear_apply(
+        jnp.asarray(x), jnp.asarray(ql.w_q), jnp.asarray(ql.w_scale),
+        jnp.asarray(ql.smooth), jnp.asarray(ql.bias_correction),
+        use_kernel=True)
+    y_ref = quant.int8_linear_apply(
+        jnp.asarray(x), jnp.asarray(ql.w_q), jnp.asarray(ql.w_scale),
+        jnp.asarray(ql.smooth), jnp.asarray(ql.bias_correction),
+        use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-4)
+    # and both approximate the float layer
+    y_f = x @ w
+    rel = np.linalg.norm(np.asarray(y_kernel) - y_f) / np.linalg.norm(y_f)
+    assert rel < 0.05
+
+
+def test_error_compensation_reduces_bias():
+    rng = np.random.default_rng(16)
+    x, w = make_layer(rng, t=256)
+    ql = quant.quantize_linear(w, x)
+    x_t = x / ql.smooth[None, :]
+    xq, xs = quant._quantize_activations(x_t)
+    y_q = (xq.astype(np.float32) @ ql.w_q.astype(np.float32)) * xs * ql.w_scale[None, :]
+    y = x @ w
+    bias_before = np.abs(np.mean(y - y_q, axis=0))
+    bias_after = np.abs(np.mean(y - (y_q + ql.bias_correction[None, :]), axis=0))
+    assert np.mean(bias_after) <= np.mean(bias_before) + 1e-7

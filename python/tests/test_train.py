@@ -1,0 +1,91 @@
+"""Training-loop and corpus tests (python/compile/train.py)."""
+
+import dataclasses
+
+import numpy as np
+
+from compile import model as M
+from compile import train as T
+
+CFG = dataclasses.replace(
+    M.ModelConfig(),
+    vocab_size=64,
+    d_model=32,
+    n_layers=2,
+    n_heads=2,
+    d_c=16,
+    d_rope=8,
+    d_nope=8,
+    d_v=8,
+    n_routed_experts=4,
+    top_k=2,
+    d_expert=24,
+    d_shared=48,
+    max_seq=32,
+    prefill_seq=16,
+    decode_batch=2,
+)
+
+
+def test_successor_table_deterministic_and_valid():
+    a = T.successor_table(64, branching=4)
+    b = T.successor_table(64, branching=4)
+    assert np.array_equal(a, b)
+    assert a.shape == (64, 4)
+    assert a.min() >= 0 and a.max() < 64
+
+
+def test_corpus_follows_markov_structure():
+    succ = T.successor_table(64, branching=4)
+    corpus = T.sample_corpus(64, 8, 32, branching=4, seed=5)
+    assert corpus.shape == (8, 32)
+    for row in corpus:
+        for t in range(len(row) - 1):
+            assert row[t + 1] in succ[row[t]], "transition outside successor set"
+
+
+def test_corpus_deterministic_per_seed():
+    a = T.sample_corpus(64, 4, 16, seed=1)
+    b = T.sample_corpus(64, 4, 16, seed=1)
+    c = T.sample_corpus(64, 4, 16, seed=2)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_adam_decreases_simple_loss():
+    import jax
+    import jax.numpy as jnp
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = T.adam_init(params)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2)
+
+    losses = []
+    for _ in range(50):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = T.adam_update(opt, grads, params, lr=0.1)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.1
+
+
+def test_short_training_reduces_model_loss():
+    params = M.init_params(CFG, seed=0)
+    loss_fn = T.make_loss_fn(dataclasses.replace(CFG, use_kernels=False))
+    import jax
+    toks = T.sample_corpus(CFG.vocab_size, 4, 16, seed=3)
+    import jax.numpy as jnp
+    toks = jnp.asarray(toks)
+    initial = float(loss_fn(params, toks))
+    trained, log = T.train(params, CFG, steps=25, batch=4, seq=16, seed=3,
+                           log_every=5, lr=1e-2)
+    final = float(loss_fn(trained, toks))
+    assert final < initial, (initial, final)
+    assert len(log) >= 2
+    assert log[0]["loss"] >= log[-1]["loss"]
+
+
+def test_speculative_acceptance_in_unit_interval():
+    params = M.init_params(CFG, seed=0)
+    acc = T.eval_speculative_acceptance(params, CFG, n_seqs=2, seq=12)
+    assert 0.0 <= acc <= 1.0

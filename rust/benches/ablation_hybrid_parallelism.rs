@@ -1,0 +1,43 @@
+//! Ablation (§4.3.1): staged hybrid parallelism (SP→TP→SP) vs pure DP for
+//! prefill MLA under sequence-length skew.
+
+use cm_infer::benchlib::{finding, Table};
+use cm_infer::config::{Ascend910cDie, DeepSeekDims};
+use cm_infer::simnpu::pipeline::{prefill_model, PrefillPoint};
+use cm_infer::util::Rng;
+
+fn main() {
+    let die = Ascend910cDie::default();
+    let m = DeepSeekDims::deepseek_r1();
+
+    // measure realistic length skew from the workload generator
+    let mut rng = Rng::new(1);
+    let mut skews = Vec::new();
+    for _ in 0..200 {
+        let lens: Vec<f64> = (0..32).map(|_| rng.lognormal(8.1, 0.6).clamp(64.0, 16384.0)).collect();
+        let mean = lens.iter().sum::<f64>() / lens.len() as f64;
+        let max = lens.iter().cloned().fold(0.0f64, f64::max);
+        skews.push(max / mean);
+    }
+    let mean_skew = skews.iter().sum::<f64>() / skews.len() as f64;
+    println!("measured DP32 straggler skew on log-normal prompts: {mean_skew:.2}x\n");
+
+    let mut t = Table::new(
+        "Ablation — hybrid parallelism vs pure DP for prefill MLA",
+        &["Length skew", "pure DP tok/s/NPU", "hybrid tok/s/NPU", "hybrid gain"],
+    );
+    for skew in [1.0, 1.2, mean_skew, 2.0, 3.0] {
+        let base = PrefillPoint { length_skew: skew, ..PrefillPoint::paper_reference(false) };
+        let hybrid = prefill_model(&die, &m, &base);
+        let dp = prefill_model(&die, &m, &PrefillPoint { hybrid_parallelism: false, ..base });
+        t.row(&[
+            format!("{skew:.2}x"),
+            format!("{:.0}", dp.tokens_per_s_per_npu),
+            format!("{:.0}", hybrid.tokens_per_s_per_npu),
+            format!("+{:.0}%", (hybrid.tokens_per_s_per_npu / dp.tokens_per_s_per_npu - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+    finding("SP packing spreads tokens uniformly regardless of request lengths, so the hybrid scheme's advantage grows with skew — the §4.3.1 motivation");
+    finding("at skew 1.0 (uniform lengths) the two schemes tie: the hybrid's extra collectives are cheap on UB");
+}

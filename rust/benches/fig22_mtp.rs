@@ -1,0 +1,67 @@
+//! Fig. 22: decode throughput and per-layer latency with and without MTP
+//! (§4.2.4), plus the naive-vs-pipelined MTP dispatch comparison (Fig 15).
+
+use cm_infer::benchlib::{finding, Table};
+use cm_infer::config::{Ascend910cDie, DeepSeekDims};
+use cm_infer::simnpu::pipeline::{decode_layer, decode_step, DecodePoint};
+
+fn main() {
+    let die = Ascend910cDie::default();
+    let m = DeepSeekDims::deepseek_r1();
+
+    let mut t = Table::new(
+        "Fig 22a — decode throughput w/ and w/o MTP (4K KV, accept 0.70)",
+        &["Batch/NPU", "tok/s/NPU (off)", "tok/s/NPU (on)", "gain"],
+    );
+    for batch in [16usize, 32, 64, 96, 128] {
+        let on = decode_step(&die, &m, &DecodePoint {
+            batch_per_npu: batch, ..DecodePoint::paper_reference()
+        });
+        let off = decode_step(&die, &m, &DecodePoint {
+            batch_per_npu: batch, mtp: false, ..DecodePoint::paper_reference()
+        });
+        t.row(&[
+            format!("{batch}"),
+            format!("{:.0}", off.tokens_per_s_per_npu),
+            format!("{:.0}", on.tokens_per_s_per_npu),
+            format!("+{:.0}%", (on.tokens_per_s_per_npu / off.tokens_per_s_per_npu - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+    finding("paper shape: +6–49% throughput, larger at small batch (fixed overheads amortize); model reproduces the monotone-decreasing gain");
+
+    let on = decode_layer(&die, &m, &DecodePoint::paper_reference());
+    let off = decode_layer(&die, &m, &DecodePoint { mtp: false, ..DecodePoint::paper_reference() });
+    println!(
+        "\nFig 22b — per-layer latency at batch 96: {:.0} µs (no MTP) → {:.0} µs (MTP, +{:.0}%)",
+        off.layer,
+        on.layer,
+        (on.layer / off.layer - 1.0) * 100.0
+    );
+    finding("paper: 874 → 1,260 µs (+44%) — each MTP step processes 2 tokens/request, but 1.7 accepted tokens/step outweigh the longer iteration");
+
+    // Fig 15: naive MTP pays (k+1) graph dispatches of 0.6–0.8 ms per step
+    let k = 1.0;
+    let naive_overhead_us = (k + 1.0) * die.graph_dispatch_us;
+    let step = decode_step(&die, &m, &DecodePoint::paper_reference());
+    let naive_step = step.step_us + naive_overhead_us;
+    let mut t = Table::new(
+        "Fig 15 — naive vs pipelined MTP execution (batch 96)",
+        &["Variant", "step µs", "TPOT ms", "tok/s/NPU"],
+    );
+    let accepted = 1.7;
+    t.row(&[
+        "naive (CPU-dispatched graphs)".into(),
+        format!("{:.0}", naive_step),
+        format!("{:.1}", naive_step / accepted / 1000.0),
+        format!("{:.0}", 96.0 * accepted / (naive_step / 1e6)),
+    ]);
+    t.row(&[
+        "pipelined (aggregated metadata + in-NPU sampling)".into(),
+        format!("{:.0}", step.step_us),
+        format!("{:.1}", step.tpot_ms),
+        format!("{:.0}", step.tokens_per_s_per_npu),
+    ]);
+    t.print();
+    finding("paper shape: removing per-graph CPU dispatch (0.6–0.8 ms x k+1 graphs) keeps the NPU busy end-to-end (§4.2.4)");
+}

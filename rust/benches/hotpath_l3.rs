@@ -1,0 +1,80 @@
+//! L3 hot-path microbenchmarks (the §Perf deliverable): the operations the
+//! coordinator executes per request/step — routing, batch formation,
+//! admission, mempool put/get, context-cache key chaining, decode-step
+//! bookkeeping — plus the end-to-end sim event rate.
+
+use cm_infer::benchlib::{bench, iters, Table};
+use cm_infer::cache::ContextCache;
+use cm_infer::config::Config;
+use cm_infer::coordinator::decode::DecodeInstance;
+use cm_infer::coordinator::router::{Router, RouterKind};
+use cm_infer::coordinator::sim::{ServeSim, SimOptions};
+use cm_infer::mempool::{Key, MemPool};
+use cm_infer::workload::{generate, WorkloadSpec};
+
+fn main() {
+    let mut t = Table::new(
+        "L3 hot paths",
+        &["Operation", "mean µs", "p99 µs", "ops/s"],
+    );
+
+    // router decision
+    let mut router = Router::new(RouterKind::PeerToPeer, 6);
+    let mut s = 0u64;
+    let st = bench(1000, iters(1_000_000), || {
+        s = s.wrapping_add(1);
+        let d = router.route(s % 512, 4096);
+        router.complete(d.instance, 4096);
+    });
+    t.row(&["router route+complete".into(), format!("{:.3}", st.mean_us),
+            format!("{:.3}", st.p99_us), format!("{:.2e}", 1e6 / st.mean_us)]);
+
+    // mempool put/get
+    let mut pool = MemPool::new(8, 4 << 30, 16 << 30);
+    let ns = pool.controller.create_namespace("bench");
+    let mut i = 0u64;
+    let st = bench(1000, iters(300_000), || {
+        i = i.wrapping_add(1);
+        let k = Key::of_bytes(&i.to_le_bytes());
+        pool.put(ns, k, 128 * 1024);
+        cm_infer::benchlib::black_box(pool.get(ns, k, true));
+    });
+    t.row(&["mempool put+get (128 KiB)".into(), format!("{:.3}", st.mean_us),
+            format!("{:.3}", st.p99_us), format!("{:.2e}", 1e6 / st.mean_us)]);
+
+    // context-cache key chaining (per 4K-token prompt)
+    let mut pool2 = MemPool::new(8, 4 << 30, 16 << 30);
+    let cc = ContextCache::new(&mut pool2, 256, 1280, true);
+    let prompt: Vec<i32> = (0..4096).collect();
+    let st = bench(100, iters(50_000), || {
+        cm_infer::benchlib::black_box(cc.block_keys(&prompt));
+    });
+    t.row(&["context-cache keys (4K prompt)".into(), format!("{:.3}", st.mean_us),
+            format!("{:.3}", st.p99_us), format!("{:.2e}", 1e6 / st.mean_us)]);
+
+    // decode-step bookkeeping at full occupancy (slot updates only)
+    let cfg = Config::default();
+    let mut inst = DecodeInstance::new(160, 160 * 96, 3);
+    for r in 0..160 * 96 {
+        inst.admit(r as u64, 4096, 1_000_000);
+    }
+    let st = bench(5, iters(2_000), || {
+        cm_infer::benchlib::black_box(inst.step(&cfg.serving));
+    });
+    t.row(&[format!("decode step bookkeeping ({} slots)", 160 * 96),
+            format!("{:.1}", st.mean_us), format!("{:.1}", st.p99_us),
+            format!("{:.2e}", 1e6 / st.mean_us)]);
+
+    t.print();
+
+    // end-to-end sim throughput (events/s)
+    let trace = generate(&WorkloadSpec::paper_default(2), 400);
+    let st = bench(1, iters(10), || {
+        let mut sim = ServeSim::new(Config::default(), SimOptions::default(), trace.clone());
+        cm_infer::benchlib::black_box(sim.run());
+    });
+    println!(
+        "\nfull PDC sim (400 requests): mean {:.1} ms/run",
+        st.mean_us / 1000.0
+    );
+}

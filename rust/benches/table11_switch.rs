@@ -1,0 +1,34 @@
+//! Table 11: UB switch utilization across supernode scales (§6.1.2's
+//! "nearly constant amortized network cost").
+
+use cm_infer::benchlib::{finding, Table};
+use cm_infer::config::CloudMatrixTopo;
+use cm_infer::topology::switches::{chips_per_npu, switch_plan};
+
+fn main() {
+    let topo = CloudMatrixTopo::default();
+    let paper = [(384usize, 48usize, 56usize, 100.0),
+                 (352, 44, 56, 92.0),
+                 (288, 36, 42, 100.0),
+                 (256, 32, 42, 89.0),
+                 (192, 24, 28, 100.0)];
+
+    let mut t = Table::new(
+        "Table 11 — switch utilization vs supernode scale",
+        &["NPUs", "Nodes", "Switches [model/paper]", "Utilization [model/paper]",
+          "chips/NPU (amortized)"],
+    );
+    for (npus, p_nodes, p_sw, p_util) in paper {
+        let p = switch_plan(&topo, npus);
+        assert_eq!(p.nodes, p_nodes);
+        t.row(&[
+            format!("{npus}"),
+            format!("{}", p.nodes),
+            format!("{} / {}", p.switches, p_sw),
+            format!("{:.0}% / {:.0}%", p.utilization * 100.0, p_util),
+            format!("{:.3}", chips_per_npu(&p)),
+        ]);
+    }
+    t.print();
+    finding("paper shape: 100% port utilization at 192/288/384 NPUs (full tiers), dips between; amortized chips/NPU constant at the full-utilization points → scaling supernodes costs nothing extra in network (§6.1.2)");
+}

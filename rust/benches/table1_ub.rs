@@ -1,0 +1,48 @@
+//! Table 1: UB intra- vs inter-node bandwidth/latency (NPU-NPU / NPU-CPU,
+//! read/write). Regenerates the paper's table from the netsim parameters
+//! and times the cost-model evaluation itself.
+
+use cm_infer::benchlib::{bench, finding, iters, Table};
+use cm_infer::netsim::{Locality, NetSim, OpKind, PathKind};
+
+fn main() {
+    let net = NetSim::default();
+    let mut t = Table::new(
+        "Table 1 — UB plane: intra vs inter-node (per die)",
+        &["Path", "Op", "BW inter (GB/s)", "BW intra (GB/s)", "Ratio",
+          "Lat inter (µs, 512B)", "Lat intra (µs, 512B)", "Ratio"],
+    );
+    for (path, pname) in [(PathKind::NpuToNpu, "NPU-NPU"), (PathKind::NpuToCpu, "NPU-CPU")] {
+        for (op, oname) in [(OpKind::Read, "Read"), (OpKind::Write, "Write")] {
+            let inter = net.ub_params(path, op, Locality::InterNode);
+            let intra = net.ub_params(path, op, Locality::IntraNode);
+            let lat_inter = inter.transfer_us(512) - 512.0 / (inter.bandwidth_gbps * 1e3);
+            let lat_intra = intra.transfer_us(512) - 512.0 / (intra.bandwidth_gbps * 1e3);
+            t.row(&[
+                pname.into(),
+                oname.into(),
+                format!("{:.0}", inter.bandwidth_gbps),
+                format!("{:.0}", intra.bandwidth_gbps),
+                format!("{:.2}", inter.bandwidth_gbps / intra.bandwidth_gbps),
+                format!("{:.1}", lat_inter),
+                format!("{:.1}", lat_intra),
+                format!("{:.2}", lat_inter / lat_intra),
+            ]);
+        }
+    }
+    t.print();
+    finding("paper shape: inter-node bandwidth within 3% of intra; latency +<1 µs (§3.2)");
+
+    // Cost-model hot path timing (used in every sim event)
+    let st = bench(100, iters(100_000), || {
+        let v = net.transfer_us(
+            cm_infer::netsim::Plane::Ub,
+            PathKind::NpuToNpu,
+            OpKind::Read,
+            Locality::InterNode,
+            1 << 20,
+        );
+        cm_infer::benchlib::black_box(v);
+    });
+    println!("\ncost-model eval: mean {:.3} µs p99 {:.3} µs", st.mean_us, st.p99_us);
+}

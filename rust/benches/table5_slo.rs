@@ -1,0 +1,46 @@
+//! Table 5: decode throughput under different TPOT SLOs and prompt/output
+//! lengths — the SLO-adaptive batching result.
+
+use cm_infer::benchlib::{finding, Table};
+use cm_infer::config::{Ascend910cDie, DeepSeekDims, SloConfig};
+use cm_infer::coordinator::batcher::plan_for_slo;
+use cm_infer::simnpu::pipeline::DecodePoint;
+
+fn main() {
+    let die = Ascend910cDie::default();
+    let m = DeepSeekDims::deepseek_r1();
+
+    // (slo_ms, prompt, output) rows from the paper
+    let rows = [
+        (50.0, 1024usize, 1024usize),
+        (50.0, 2048, 256),
+        (50.0, 4096, 256),
+        (30.0, 4096, 256),
+        (15.0, 4096, 256),
+    ];
+    let paper = [(128usize, 46.8, 2733.0), (112, 47.4, 2360.0), (96, 49.4, 1943.0),
+                 (24, 24.6, 974.0), (8, 14.9, 538.0)];
+
+    let mut t = Table::new(
+        "Table 5 — decode throughput vs TPOT SLO and lengths",
+        &["SLO (ms)", "Prompt", "Output", "Batch [model/paper]",
+          "TPOT ms [model/paper]", "tok/s/NPU [model/paper]"],
+    );
+    for ((slo, prompt, output), (p_batch, p_tpot, p_tput)) in rows.iter().zip(paper) {
+        // mean KV length over the decode = prompt + output/2
+        let kv = prompt + output / 2;
+        let base = DecodePoint { kv_len: kv, ..DecodePoint::paper_reference() };
+        let plan = plan_for_slo(&die, &m, &base, &SloConfig { tpot_ms: *slo, ttft_ms: 1e9 }, 160);
+        t.row(&[
+            format!("{slo:.0}"),
+            format!("{prompt}"),
+            format!("{output}"),
+            format!("{} / {}", plan.batch_per_npu, p_batch),
+            format!("{:.1} / {:.1}", plan.predicted_tpot_ms, p_tpot),
+            format!("{:.0} / {:.0}", plan.predicted_tput, p_tput),
+        ]);
+    }
+    t.print();
+    finding("paper shape: shorter contexts → bigger batches → higher throughput; tightening the SLO 50→15 ms trades throughput 1,943→538 tok/s/NPU");
+    finding("model reproduces the monotone frontier; absolute numbers at small batch are conservative (scheduling-gap model, see EXPERIMENTS.md)");
+}

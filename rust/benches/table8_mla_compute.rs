@@ -1,0 +1,35 @@
+//! Table 8: MLA operator TFLOPS utilization, compute-bound regime —
+//! CANN MLA on Ascend 910C vs DeepSeek FlashMLA on H800.
+
+use cm_infer::benchlib::{finding, Table};
+use cm_infer::config::{Ascend910cDie, DeepSeekDims};
+use cm_infer::simnpu::ops::mla;
+
+fn main() {
+    let die = Ascend910cDie::default();
+
+    let mut t = Table::new(
+        "Table 8 — MLA TFLOPS utilization (compute-intensive, BF16)",
+        &["Implementation", "Achieved TFLOPS", "Peak TFLOPS", "Utilization"],
+    );
+    t.row(&[
+        "DeepSeek FlashMLA on H800".into(),
+        format!("{:.0}", mla::h800::ACHIEVED_TFLOPS),
+        format!("{:.0}", mla::h800::PEAK_TFLOPS_BF16),
+        format!("{:.1}%", mla::h800::compute_util() * 100.0),
+    ]);
+    t.row(&[
+        "CANN MLA on Ascend 910C die [model]".into(),
+        format!("{:.0}", mla::compute_bound_tflops(&die)),
+        format!("{:.0}", die.bf16_tflops),
+        format!("{:.1}%", die.mla_compute_util * 100.0),
+    ]);
+    t.print();
+    finding("paper shape: comparable utilization (66.7% vs 65.4%) despite 2.6x peak-rate difference — MLA efficiency ports across architectures");
+
+    // derived: a compute-bound prefill-style MLA call through the op model
+    let m = DeepSeekDims::deepseek_r1();
+    let shape = mla::MlaDecodeShape { batch: 256, q_tokens: 1, kv_len: 8192 };
+    let (p, c, o) = mla::decode_mla_us(&die, &m, &shape, 1.0, true);
+    println!("\nop-model sanity (batch 256, 8K KV): prolog {p:.0} µs, core {c:.0} µs, out {o:.0} µs");
+}

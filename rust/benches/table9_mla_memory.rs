@@ -1,0 +1,38 @@
+//! Table 9: MLA operator memory-bandwidth utilization, memory-bound regime.
+
+use cm_infer::benchlib::{finding, Table};
+use cm_infer::config::{Ascend910cDie, DeepSeekDims};
+use cm_infer::simnpu::ops::mla;
+
+fn main() {
+    let die = Ascend910cDie::default();
+
+    let mut t = Table::new(
+        "Table 9 — MLA memory bandwidth utilization (memory-intensive)",
+        &["Implementation", "Achieved GB/s", "Peak GB/s", "Utilization"],
+    );
+    t.row(&[
+        "DeepSeek FlashMLA on H800".into(),
+        format!("{:.0}", mla::h800::ACHIEVED_GBPS),
+        format!("{:.0}", mla::h800::PEAK_GBPS),
+        format!("{:.1}%", mla::h800::memory_util() * 100.0),
+    ]);
+    t.row(&[
+        "CANN MLA on Ascend 910C die [model]".into(),
+        format!("{:.0}", mla::memory_bound_gbps(&die)),
+        format!("{:.0}", die.hbm_gbps),
+        format!("{:.1}%", die.mla_memory_util * 100.0),
+    ]);
+    t.print();
+    finding("paper shape: both implementations run close to their HBM roofline (89.6% vs 84.1%) — decode MLA is fundamentally a cache-streaming workload");
+
+    // derived: decode-style memory-bound MLA sweep over KV length
+    let m = DeepSeekDims::deepseek_r1();
+    println!("\ndecode MLA core time vs KV length (batch 48/die):");
+    for kv in [1024usize, 2048, 4096, 8192, 16384] {
+        let shape = mla::MlaDecodeShape { batch: 48, q_tokens: 1, kv_len: kv };
+        let (_p, core, _o) = mla::decode_mla_us(&die, &m, &shape, 1.0, true);
+        let bytes = mla::attn_core_bytes(&m, &shape) / 1e6;
+        println!("  kv {kv:6}: core {core:7.0} µs  ({bytes:.0} MB latent cache read)");
+    }
+}

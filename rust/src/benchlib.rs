@@ -1,0 +1,149 @@
+//! Bench harness (criterion is not vendored in this image — DESIGN.md §1).
+//!
+//! Every `rust/benches/*.rs` target declares `harness = false` and uses
+//! this module: warmup, N timed iterations, mean/p50/p99, plus paper-style
+//! table printing so `cargo bench` regenerates each table/figure. Benches
+//! accept `--quick` (fewer iterations) via env `CM_BENCH_QUICK=1`.
+
+use std::time::Instant;
+
+/// Timing statistics from [`bench`].
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+}
+
+/// Run `f` with warmup and timed iterations; returns stats in µs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    BenchStats {
+        iters: n,
+        mean_us: samples.iter().sum::<f64>() / n as f64,
+        p50_us: samples[n / 2],
+        p99_us: samples[(n * 99 / 100).min(n - 1)],
+        min_us: samples[0],
+        max_us: samples[n - 1],
+    }
+}
+
+/// Whether benches should run in quick mode.
+pub fn quick() -> bool {
+    std::env::var("CM_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Iteration count helper honoring quick mode.
+pub fn iters(full: usize) -> usize {
+    if quick() {
+        (full / 10).max(3)
+    } else {
+        full
+    }
+}
+
+/// Opaque value sink preventing the optimizer from deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+// ---------------------------------------------------------------------------
+// Paper-style table printing
+// ---------------------------------------------------------------------------
+
+/// Fixed-width table printer used by all paper-table benches.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: format heterogeneous cells.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells);
+    }
+
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let line: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&self.widths)
+            .map(|(h, w)| format!("{h:<w$}"))
+            .collect();
+        println!("| {} |", line.join(" | "));
+        let sep: Vec<String> = self.widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&self.widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            println!("| {} |", line.join(" | "));
+        }
+    }
+}
+
+/// Print a key finding line benches use to state the paper-shape check.
+pub fn finding(s: &str) {
+    println!("  -> {s}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let st = bench(2, 20, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(st.iters, 20);
+        assert!(st.min_us <= st.p50_us && st.p50_us <= st.max_us);
+        assert!(st.mean_us > 0.0);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.rowf(&[&3, &4.5]);
+        assert_eq!(t.rows.len(), 2);
+        t.print(); // visual smoke; no panic = pass
+    }
+}

@@ -1,0 +1,208 @@
+//! Context Caching (paper §4.4.2): store + reuse historical KV-cache blocks.
+//!
+//! KV caches are organized into paged blocks of `block_tokens` tokens. Each
+//! block's key is a *chain hash*: hash(parent_key, content_hash(tokens)) —
+//! content-addressable prefix indexing, so identical prefixes dedup across
+//! requests and any shared prefix is discoverable block by block.
+
+use crate::mempool::{Key, MemPool, NamespaceId};
+use crate::Micros;
+
+/// Result of a prefix lookup for a new request.
+#[derive(Debug, Clone)]
+pub struct LookupResult {
+    /// Number of leading tokens covered by cached blocks.
+    pub reused_tokens: usize,
+    /// Keys of the matched blocks, in order.
+    pub hit_keys: Vec<Key>,
+    /// Modeled time to fetch the matched blocks into NPU memory.
+    pub fetch_us: Micros,
+}
+
+/// The context-caching service facade.
+pub struct ContextCache {
+    pub ns: NamespaceId,
+    /// Tokens per KV block (paper: 128–512).
+    pub block_tokens: usize,
+    /// KV-cache bytes per token (model-dependent).
+    pub kv_bytes_per_token: u64,
+    /// Access network: UB (true) or VPC fallback (Fig. 23 ablation).
+    pub over_ub: bool,
+    // running stats
+    pub lookups: u64,
+    pub block_hits: u64,
+    pub block_misses: u64,
+}
+
+impl ContextCache {
+    pub fn new(
+        pool: &mut MemPool,
+        block_tokens: usize,
+        kv_bytes_per_token: u64,
+        over_ub: bool,
+    ) -> ContextCache {
+        let ns = pool.controller.create_namespace("context-cache");
+        ContextCache {
+            ns,
+            block_tokens,
+            kv_bytes_per_token,
+            over_ub,
+            lookups: 0,
+            block_hits: 0,
+            block_misses: 0,
+        }
+    }
+
+    fn block_bytes(&self) -> u64 {
+        self.block_tokens as u64 * self.kv_bytes_per_token
+    }
+
+    /// Chain-hashed keys for a token prefix, one per full block.
+    pub fn block_keys(&self, tokens: &[i32]) -> Vec<Key> {
+        let mut keys = Vec::with_capacity(tokens.len() / self.block_tokens);
+        let mut parent = Key(0);
+        for chunk in tokens.chunks(self.block_tokens) {
+            if chunk.len() < self.block_tokens {
+                break; // only full blocks are cached
+            }
+            // allocation-free word-wise hash (Perf pass, EXPERIMENTS §Perf)
+            let content = Key::of_tokens(chunk);
+            parent = Key::chain(parent, content);
+            keys.push(parent);
+        }
+        keys
+    }
+
+    /// Longest-prefix lookup: walk blocks until the first miss (§4.4.2
+    /// "prefill engine queries EMS with a hash of the input prefix").
+    pub fn lookup(&mut self, pool: &mut MemPool, tokens: &[i32]) -> LookupResult {
+        self.lookups += 1;
+        let keys = self.block_keys(tokens);
+        let mut hit_keys = Vec::new();
+        let mut fetch_us = 0.0;
+        for key in keys {
+            let got = pool.get(self.ns, key, self.over_ub);
+            if got.hit {
+                self.block_hits += 1;
+                hit_keys.push(key);
+                fetch_us += got.latency_us;
+            } else {
+                self.block_misses += 1;
+                break;
+            }
+        }
+        LookupResult { reused_tokens: hit_keys.len() * self.block_tokens, hit_keys, fetch_us }
+    }
+
+    /// Store the KV blocks computed by a prefill (asynchronously in the
+    /// real system — cost is charged but does not stall prefill).
+    /// Returns the modeled store time.
+    pub fn store(&mut self, pool: &mut MemPool, tokens: &[i32]) -> Micros {
+        let mut total = 0.0;
+        for key in self.block_keys(tokens) {
+            total += pool.put(self.ns, key, self.block_bytes()).latency_us;
+        }
+        total
+    }
+
+    /// Block hit rate so far.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.block_hits + self.block_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.block_hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (MemPool, ContextCache) {
+        let mut pool = MemPool::new(4, 64 << 20, 256 << 20);
+        let cc = ContextCache::new(&mut pool, 128, 512, true);
+        (pool, cc)
+    }
+
+    fn toks(n: usize, salt: i32) -> Vec<i32> {
+        (0..n as i32).map(|i| i * 31 + salt).collect()
+    }
+
+    #[test]
+    fn store_then_full_reuse() {
+        let (mut pool, mut cc) = setup();
+        let prompt = toks(512, 0);
+        cc.store(&mut pool, &prompt);
+        let hit = cc.lookup(&mut pool, &prompt);
+        assert_eq!(hit.reused_tokens, 512);
+        assert_eq!(hit.hit_keys.len(), 4);
+    }
+
+    #[test]
+    fn shared_prefix_partial_reuse() {
+        let (mut pool, mut cc) = setup();
+        let a = toks(512, 0);
+        cc.store(&mut pool, &a);
+        // request shares the first 256 tokens, then diverges
+        let mut b = a[..256].to_vec();
+        b.extend(toks(256, 999));
+        let hit = cc.lookup(&mut pool, &b);
+        assert_eq!(hit.reused_tokens, 256);
+    }
+
+    #[test]
+    fn different_history_no_false_hits() {
+        let (mut pool, mut cc) = setup();
+        // same 2nd block content but a different 1st block must not match
+        // (chain hashing is position/prefix sensitive)
+        let mut a = toks(128, 0);
+        a.extend(toks(128, 7));
+        cc.store(&mut pool, &a);
+        let mut b = toks(128, 1);
+        b.extend(toks(128, 7));
+        let hit = cc.lookup(&mut pool, &b);
+        assert_eq!(hit.reused_tokens, 0);
+    }
+
+    #[test]
+    fn partial_blocks_not_cached() {
+        let (mut pool, mut cc) = setup();
+        let prompt = toks(100, 0); // less than one block
+        cc.store(&mut pool, &prompt);
+        let hit = cc.lookup(&mut pool, &prompt);
+        assert_eq!(hit.reused_tokens, 0);
+    }
+
+    #[test]
+    fn dedup_across_requests() {
+        let (mut pool, mut cc) = setup();
+        let prompt = toks(256, 0);
+        cc.store(&mut pool, &prompt);
+        cc.store(&mut pool, &prompt); // identical system prompt again
+        assert_eq!(pool.stats().dedup_hits, 2);
+    }
+
+    #[test]
+    fn ub_fetch_faster_than_vpc() {
+        let mut pool = MemPool::new(4, 64 << 20, 256 << 20);
+        let mut ub = ContextCache::new(&mut pool, 128, 512, true);
+        let prompt = toks(1024, 3);
+        ub.store(&mut pool, &prompt);
+        let t_ub = ub.lookup(&mut pool, &prompt).fetch_us;
+        ub.over_ub = false;
+        let t_vpc = ub.lookup(&mut pool, &prompt).fetch_us;
+        assert!(t_vpc > t_ub * 3.0, "ub {t_ub} vpc {t_vpc}");
+    }
+
+    #[test]
+    fn hit_rate_tracks() {
+        let (mut pool, mut cc) = setup();
+        let a = toks(256, 0);
+        cc.store(&mut pool, &a);
+        cc.lookup(&mut pool, &a); // 2 hits
+        cc.lookup(&mut pool, &toks(256, 5)); // 1 miss (stops at first)
+        assert!((cc.hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

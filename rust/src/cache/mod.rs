@@ -1,0 +1,9 @@
+//! EMS caching services over the disaggregated memory pool (§4.4.2–§4.4.3):
+//! context caching (historical KV blocks, prefix-addressed) and model
+//! caching (weight blocks, versioned).
+
+pub mod context;
+pub mod model;
+
+pub use context::{ContextCache, LookupResult};
+pub use model::{LoadStrategy, ModelCache, ModelLoadReport};

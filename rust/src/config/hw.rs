@@ -1,0 +1,335 @@
+//! Hardware constants, calibrated from the paper.
+//!
+//! Sources: §3.3.1 (Ascend 910C chip), §3.3.2 (node), §3.3.3 (UB switch
+//! system), Table 1 (plane bandwidth/latency), §5.5 (operator utilizations).
+//! Note the paper's abstract quotes 1,054 INT8 TFLOPS/NPU but Tables 3–4 use
+//! 1,504 TFLOPS/NPU (752/die); we follow the tables (DESIGN.md §5).
+
+/// One Ascend 910C *die* (each NPU packages two).
+#[derive(Debug, Clone)]
+pub struct Ascend910cDie {
+    /// Dense BF16/FP16 throughput, TFLOPS (§3.3.1: ~376/die).
+    pub bf16_tflops: f64,
+    /// INT8 throughput, TOPS (752/die — Tables 3/4/10).
+    pub int8_tops: f64,
+    /// HBM bandwidth per die, GB/s (1.6 TB/s).
+    pub hbm_gbps: f64,
+    /// HBM capacity per die, GB (64 GB).
+    pub hbm_gb: f64,
+    /// AI cube (matrix) cores per die (§3.3.1: 24).
+    pub aic_cores: usize,
+    /// AI vector cores per die (§3.3.1: 48).
+    pub aiv_cores: usize,
+    /// UB plane unidirectional bandwidth per die, GB/s (196).
+    pub ub_gbps: f64,
+    /// RDMA plane unidirectional bandwidth per die, GB/s (200 Gbps = 25).
+    pub rdma_gbps: f64,
+    /// Cross-die on-package bandwidth, GB/s per direction (270).
+    pub cross_die_gbps: f64,
+    /// SDMA transfer-engine startup latency, µs (§4.2.1: the bottleneck
+    /// AIV-direct removes; calibrated so Table 7 shapes reproduce).
+    pub sdma_startup_us: f64,
+    /// AIV-direct write startup latency, µs.
+    pub aiv_direct_startup_us: f64,
+    /// Per-operator NPU launch overhead, µs (§4.2.2 bottleneck (1)).
+    pub op_launch_us: f64,
+    /// Graph (compute-graph) dispatch startup, ms 0.6–0.8 (§4.2.4).
+    pub graph_dispatch_us: f64,
+    /// GEMM sustained efficiency vs peak (Table 10: 0.77–0.83).
+    pub gemm_efficiency: f64,
+    /// MLA compute-bound utilization (Table 8: 0.654).
+    pub mla_compute_util: f64,
+    /// MLA memory-bound bandwidth utilization (Table 9: 0.841).
+    pub mla_memory_util: f64,
+}
+
+impl Default for Ascend910cDie {
+    fn default() -> Self {
+        Ascend910cDie {
+            bf16_tflops: 376.0,
+            int8_tops: 752.0,
+            hbm_gbps: 1600.0,
+            hbm_gb: 64.0,
+            aic_cores: 24,
+            aiv_cores: 48,
+            ub_gbps: 196.0,
+            rdma_gbps: 25.0,
+            cross_die_gbps: 270.0,
+            sdma_startup_us: 25.0,
+            aiv_direct_startup_us: 4.0,
+            op_launch_us: 2.0,
+            graph_dispatch_us: 700.0,
+            gemm_efficiency: 0.80,
+            mla_compute_util: 0.654,
+            mla_memory_util: 0.841,
+        }
+    }
+}
+
+impl Ascend910cDie {
+    /// Effective INT8 ops/µs at sustained GEMM efficiency.
+    pub fn int8_ops_per_us(&self) -> f64 {
+        self.int8_tops * 1e12 * self.gemm_efficiency / 1e6
+    }
+
+    /// Effective BF16 flops/µs at sustained GEMM efficiency.
+    pub fn bf16_flops_per_us(&self) -> f64 {
+        self.bf16_tflops * 1e12 * self.gemm_efficiency / 1e6
+    }
+
+    /// Effective HBM bytes/µs at MLA memory utilization.
+    pub fn hbm_bytes_per_us(&self) -> f64 {
+        self.hbm_gbps * 1e9 * self.mla_memory_util / 1e6
+    }
+}
+
+/// Number of UB switch sub-planes (§3.3.3: 7, one per on-board L1 chip).
+pub const UB_PLANES: usize = 7;
+
+/// CloudMatrix384 supernode topology (§3.2–§3.3).
+#[derive(Debug, Clone)]
+pub struct CloudMatrixTopo {
+    /// Compute nodes in the supernode (48).
+    pub nodes: usize,
+    /// Ascend 910C NPUs per node (8).
+    pub npus_per_node: usize,
+    /// Kunpeng CPUs per node (4).
+    pub cpus_per_node: usize,
+    /// Dies per NPU package (2).
+    pub dies_per_npu: usize,
+    /// L1 UB switch chips on each node board (7).
+    pub l1_switches_per_node: usize,
+    /// L2 switch chips per sub-plane (16).
+    pub l2_switches_per_plane: usize,
+    /// Ports per L2 switch chip (48 × 28 GB/s).
+    pub ports_per_l2_chip: usize,
+    /// Port bandwidth, GB/s (28).
+    pub port_gbps: f64,
+    /// L1 uplink capacity per switch chip, GB/s (448).
+    pub l1_uplink_gbps: f64,
+    /// CPU socket UB bandwidth, GB/s (~160).
+    pub cpu_ub_gbps: f64,
+    /// DRAM per CPU socket usable for pooling, GB.
+    pub dram_per_cpu_gb: f64,
+    /// VPC (Qingtian) per-node bandwidth, GB/s (400 Gbps = 50).
+    pub vpc_gbps_per_node: f64,
+}
+
+impl Default for CloudMatrixTopo {
+    fn default() -> Self {
+        CloudMatrixTopo {
+            nodes: 48,
+            npus_per_node: 8,
+            cpus_per_node: 4,
+            dies_per_npu: 2,
+            l1_switches_per_node: UB_PLANES,
+            l2_switches_per_plane: 16,
+            ports_per_l2_chip: 48,
+            port_gbps: 28.0,
+            l1_uplink_gbps: 448.0,
+            cpu_ub_gbps: 160.0,
+            dram_per_cpu_gb: 768.0,
+            vpc_gbps_per_node: 50.0,
+        }
+    }
+}
+
+impl CloudMatrixTopo {
+    pub fn total_npus(&self) -> usize {
+        self.nodes * self.npus_per_node
+    }
+
+    pub fn total_dies(&self) -> usize {
+        self.total_npus() * self.dies_per_npu
+    }
+
+    pub fn total_cpus(&self) -> usize {
+        self.nodes * self.cpus_per_node
+    }
+
+    /// Pooled DRAM across the supernode, GB (the disaggregated memory pool).
+    pub fn pooled_dram_gb(&self) -> f64 {
+        self.total_cpus() as f64 * self.dram_per_cpu_gb
+    }
+
+    /// A scaled-down topology with the same ratios (tests / fast sims).
+    pub fn scaled(nodes: usize) -> Self {
+        CloudMatrixTopo { nodes, ..Default::default() }
+    }
+}
+
+/// Network-plane cost-model parameters (α + size/β), from Table 1.
+#[derive(Debug, Clone, Copy)]
+pub struct NetPlaneParams {
+    /// Startup/propagation latency, µs (512-byte latency from Table 1).
+    pub base_latency_us: f64,
+    /// Achievable unidirectional bandwidth, GB/s.
+    pub bandwidth_gbps: f64,
+}
+
+impl NetPlaneParams {
+    /// Transfer time for `bytes`, µs.
+    pub fn transfer_us(&self, bytes: u64) -> f64 {
+        self.base_latency_us + bytes as f64 / (self.bandwidth_gbps * 1e3)
+    }
+}
+
+/// DeepSeek-R1 dimensions (§3.5.1) — drives the simulator's FLOP/byte math.
+#[derive(Debug, Clone)]
+pub struct DeepSeekDims {
+    pub d_model: usize,
+    pub n_layers: usize,
+    /// Leading dense (non-MoE) layers.
+    pub n_dense_layers: usize,
+    pub n_heads: usize,
+    /// Latent (compressed KV) dim.
+    pub d_c: usize,
+    /// Shared RoPE key dim.
+    pub d_rope: usize,
+    /// Per-head no-PE q/k dim.
+    pub d_nope: usize,
+    /// Per-head value dim.
+    pub d_v: usize,
+    /// Query LoRA rank (DeepSeek-V3: 1536).
+    pub q_lora_rank: usize,
+    pub n_routed_experts: usize,
+    pub n_shared_experts: usize,
+    pub top_k: usize,
+    /// Routed expert hidden dim.
+    pub d_expert: usize,
+    /// Dense/shared FFN hidden dim.
+    pub d_ffn: usize,
+    pub vocab_size: usize,
+}
+
+impl DeepSeekDims {
+    /// DeepSeek-R1 / V3 (671B total, 37B active).
+    pub fn deepseek_r1() -> Self {
+        DeepSeekDims {
+            d_model: 7168,
+            n_layers: 61,
+            n_dense_layers: 3,
+            n_heads: 128,
+            d_c: 512,
+            d_rope: 64,
+            d_nope: 128,
+            d_v: 128,
+            q_lora_rank: 1536,
+            n_routed_experts: 256,
+            n_shared_experts: 1,
+            top_k: 8,
+            d_expert: 2048,
+            d_ffn: 18432,
+            vocab_size: 129280,
+        }
+    }
+
+    /// Hidden-state bytes per token (BF16) — the dispatch payload before
+    /// early quantization (§4.2.1: 7168 dims → 14 KB BF16, 7.5 KB INT8).
+    pub fn token_bf16_bytes(&self) -> u64 {
+        (self.d_model * 2) as u64
+    }
+
+    /// INT8 dispatch message bytes/token: 7 KB payload + 512 B scale slot.
+    pub fn token_int8_msg_bytes(&self) -> u64 {
+        self.d_model as u64 + 512
+    }
+
+    /// Combine message bytes/token (unquantized BF16 + alignment).
+    pub fn token_combine_msg_bytes(&self) -> u64 {
+        self.d_model as u64 * 2
+    }
+
+    /// Latent KV-cache bytes per token per layer (BF16 latents + rope).
+    pub fn kv_bytes_per_token_layer(&self) -> u64 {
+        ((self.d_c + self.d_rope) * 2) as u64
+    }
+
+    /// Full KV-cache bytes per token across layers.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        self.kv_bytes_per_token_layer() * self.n_layers as u64
+    }
+
+    /// FLOPs for one token of decode attention+proj (absorbed MLA),
+    /// per layer. 2·MAC convention.
+    pub fn decode_attn_flops_per_token_layer(&self, kv_len: usize) -> f64 {
+        let h = self.n_heads as f64;
+        let (dc, dr, dn, dv) = (self.d_c as f64, self.d_rope as f64, self.d_nope as f64, self.d_v as f64);
+        let d = self.d_model as f64;
+        // q proj (via lora), kv down-proj, rope key
+        let proj = 2.0 * d * (self.q_lora_rank as f64)
+            + 2.0 * (self.q_lora_rank as f64) * h * (dn + dr)
+            + 2.0 * d * (dc + dr);
+        // absorption: q_abs = q_nope @ W_uk per head
+        let absorb = 2.0 * h * dn * dc;
+        // scores + weighted sum over kv_len latents
+        let attn = 2.0 * h * (kv_len as f64) * (dc + dr) + 2.0 * h * (kv_len as f64) * dc;
+        // output up-proj + o_proj
+        let out = 2.0 * h * dc * dv + 2.0 * h * dv * d;
+        proj + absorb + attn + out
+    }
+
+    /// FLOPs for one token of MoE FFN per layer (top-k + shared experts).
+    pub fn moe_flops_per_token_layer(&self) -> f64 {
+        let d = self.d_model as f64;
+        let active = (self.top_k + self.n_shared_experts) as f64;
+        // SwiGLU: 3 matmuls (gate, up, down)
+        active * 3.0 * 2.0 * d * self.d_expert as f64
+    }
+
+    /// Total decode FLOPs per token across layers (attention + MoE).
+    pub fn decode_flops_per_token(&self, kv_len: usize) -> f64 {
+        let moe_layers = (self.n_layers - self.n_dense_layers) as f64;
+        let dense_layers = self.n_dense_layers as f64;
+        let attn: f64 = self.decode_attn_flops_per_token_layer(kv_len) * self.n_layers as f64;
+        let dense = dense_layers * 3.0 * 2.0 * self.d_model as f64 * self.d_ffn as f64;
+        let moe = moe_layers * self.moe_flops_per_token_layer();
+        attn + dense + moe + 2.0 * self.d_model as f64 * self.vocab_size as f64
+    }
+
+    /// Prefill FLOPs per token (quadratic attention term at prompt_len).
+    pub fn prefill_flops_per_token(&self, prompt_len: usize) -> f64 {
+        // non-absorbed MHA: qk^T + av over the causal half
+        let h = self.n_heads as f64;
+        let dqk = (self.d_nope + self.d_rope) as f64;
+        let dv = self.d_v as f64;
+        let l = self.n_layers as f64;
+        let causal = prompt_len as f64 / 2.0;
+        let attn_quad = l * (2.0 * h * causal * dqk + 2.0 * h * causal * dv);
+        self.decode_flops_per_token(0) + attn_quad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r1_sanity() {
+        let m = DeepSeekDims::deepseek_r1();
+        // dispatch message ≈ 7.5 KB (paper §4.2.1)
+        assert_eq!(m.token_int8_msg_bytes(), 7168 + 512);
+        // combine ≈ 14 KB
+        assert_eq!(m.token_combine_msg_bytes(), 14336);
+        // MLA cache per token should be ~93% smaller than naive MHA cache:
+        let naive = (m.n_heads * (m.d_nope + m.d_v) * 2) as u64; // per layer
+        let mla = m.kv_bytes_per_token_layer();
+        let reduction = 1.0 - mla as f64 / naive as f64;
+        assert!(reduction > 0.90, "MLA reduction {reduction}");
+    }
+
+    #[test]
+    fn die_effective_rates() {
+        let d = Ascend910cDie::default();
+        assert!(d.int8_ops_per_us() > 0.0);
+        assert!(d.hbm_bytes_per_us() > 1e6); // > 1 GB/ms
+    }
+
+    #[test]
+    fn decode_flops_order_of_magnitude() {
+        let m = DeepSeekDims::deepseek_r1();
+        let f = m.decode_flops_per_token(4096);
+        // ~37B active params → ~70-90 GFLOPs/token + attention reads
+        assert!(f > 3e10 && f < 3e11, "decode flops {f}");
+    }
+}

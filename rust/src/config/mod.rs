@@ -1,0 +1,125 @@
+//! Configuration system: hardware constants of the CloudMatrix384 supernode
+//! and the Ascend 910C (calibrated from the paper, §3.2–§3.3 and Tables
+//! 1/7/8/9/10), DeepSeek-R1 model dimensions used by the simulator, serving
+//! deployment presets (§5.1), and a minimal TOML loader for user overrides.
+
+mod hw;
+mod serving;
+pub mod toml;
+
+pub use hw::{Ascend910cDie, CloudMatrixTopo, DeepSeekDims, NetPlaneParams, UB_PLANES};
+pub use serving::{DeploymentPreset, ServingConfig, SloConfig};
+
+use anyhow::Result;
+use std::path::Path;
+
+/// Root config: hardware + model + serving.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub die: Ascend910cDie,
+    pub topo: CloudMatrixTopo,
+    pub model: DeepSeekDims,
+    pub serving: ServingConfig,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            die: Ascend910cDie::default(),
+            topo: CloudMatrixTopo::default(),
+            model: DeepSeekDims::deepseek_r1(),
+            serving: ServingConfig::paper_default(),
+        }
+    }
+}
+
+impl Config {
+    /// Load overrides from a TOML file on top of defaults.
+    ///
+    /// Recognized tables: `[die]`, `[topo]`, `[model]`, `[serving]`,
+    /// `[serving.slo]` with keys matching the struct fields.
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<Config> {
+        let doc = toml::parse(text)?;
+        let mut cfg = Config::default();
+
+        if let Some(t) = doc.table("die") {
+            t.set_f64("bf16_tflops", &mut cfg.die.bf16_tflops);
+            t.set_f64("int8_tops", &mut cfg.die.int8_tops);
+            t.set_f64("hbm_gbps", &mut cfg.die.hbm_gbps);
+            t.set_usize("aic_cores", &mut cfg.die.aic_cores);
+            t.set_usize("aiv_cores", &mut cfg.die.aiv_cores);
+            t.set_f64("ub_gbps", &mut cfg.die.ub_gbps);
+            t.set_f64("rdma_gbps", &mut cfg.die.rdma_gbps);
+            t.set_f64("sdma_startup_us", &mut cfg.die.sdma_startup_us);
+            t.set_f64("aiv_direct_startup_us", &mut cfg.die.aiv_direct_startup_us);
+        }
+        if let Some(t) = doc.table("topo") {
+            t.set_usize("nodes", &mut cfg.topo.nodes);
+            t.set_usize("npus_per_node", &mut cfg.topo.npus_per_node);
+            t.set_usize("cpus_per_node", &mut cfg.topo.cpus_per_node);
+            t.set_usize("dies_per_npu", &mut cfg.topo.dies_per_npu);
+            t.set_usize("l2_switches_per_plane", &mut cfg.topo.l2_switches_per_plane);
+            t.set_usize("ports_per_l2_chip", &mut cfg.topo.ports_per_l2_chip);
+        }
+        if let Some(t) = doc.table("model") {
+            t.set_usize("d_model", &mut cfg.model.d_model);
+            t.set_usize("n_layers", &mut cfg.model.n_layers);
+            t.set_usize("n_dense_layers", &mut cfg.model.n_dense_layers);
+            t.set_usize("n_heads", &mut cfg.model.n_heads);
+            t.set_usize("n_routed_experts", &mut cfg.model.n_routed_experts);
+            t.set_usize("top_k", &mut cfg.model.top_k);
+            t.set_usize("d_expert", &mut cfg.model.d_expert);
+            t.set_usize("d_c", &mut cfg.model.d_c);
+            t.set_usize("d_rope", &mut cfg.model.d_rope);
+        }
+        if let Some(t) = doc.table("serving") {
+            t.set_usize("prefill_instances", &mut cfg.serving.prefill_instances);
+            t.set_usize("npus_per_prefill", &mut cfg.serving.npus_per_prefill);
+            t.set_usize("decode_npus", &mut cfg.serving.decode_npus);
+            t.set_usize("decode_batch_per_die", &mut cfg.serving.decode_batch_per_die);
+            t.set_bool("microbatch", &mut cfg.serving.microbatch);
+            t.set_bool("mtp", &mut cfg.serving.mtp);
+            t.set_f64("mtp_acceptance", &mut cfg.serving.mtp_acceptance);
+        }
+        if let Some(t) = doc.table("serving.slo") {
+            t.set_f64("tpot_ms", &mut cfg.serving.slo.tpot_ms);
+            t.set_f64("ttft_ms", &mut cfg.serving.slo.ttft_ms);
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::default();
+        assert_eq!(c.topo.total_npus(), 384);
+        assert_eq!(c.topo.total_dies(), 768);
+        assert_eq!(c.topo.total_cpus(), 192);
+        assert!((c.die.bf16_tflops - 376.0).abs() < 1e-9);
+        assert_eq!(c.model.n_routed_experts, 256);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let cfg = Config::from_toml(
+            "[die]\nbf16_tflops = 400.0\n[serving]\nmtp = false\ndecode_npus = 32\n\
+             [serving.slo]\ntpot_ms = 15.0\n",
+        )
+        .unwrap();
+        assert!((cfg.die.bf16_tflops - 400.0).abs() < 1e-9);
+        assert!(!cfg.serving.mtp);
+        assert_eq!(cfg.serving.decode_npus, 32);
+        assert!((cfg.serving.slo.tpot_ms - 15.0).abs() < 1e-9);
+        // untouched defaults survive
+        assert_eq!(cfg.topo.nodes, 48);
+    }
+}

@@ -1,0 +1,132 @@
+//! Serving deployment configuration (paper §4.1 / §5.1).
+
+/// Latency service-level objectives (paper Table 5).
+#[derive(Debug, Clone, Copy)]
+pub struct SloConfig {
+    /// Time-per-output-token target, ms.
+    pub tpot_ms: f64,
+    /// Time-to-first-token target, ms.
+    pub ttft_ms: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig { tpot_ms: 50.0, ttft_ms: 3000.0 }
+    }
+}
+
+/// Named deployment presets from the paper's evaluation (§5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeploymentPreset {
+    /// §5.1: 6 prefill instances x 16 NPUs (EP32) + 1 decode instance x
+    /// 160 NPUs (EP320), 256-NPU slice of a CloudMatrix384.
+    Paper256,
+    /// Whole-supernode variant: 8 prefill instances + 1 decode EP320.
+    Full384,
+    /// Small test deployment for unit/integration tests.
+    Tiny,
+}
+
+/// Serving-system configuration: the PDC deployment shape plus feature
+/// toggles for every ablation in §5.4.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Number of prefill instances.
+    pub prefill_instances: usize,
+    /// NPUs per prefill instance (16 → 32 dies → EP32).
+    pub npus_per_prefill: usize,
+    /// NPUs in the decode instance (160 → 320 dies → EP320).
+    pub decode_npus: usize,
+    /// Max decode batch per die (96 in Table 4).
+    pub decode_batch_per_die: usize,
+    /// Experts per prefill rank: 1 shared + 8 router + 1 redundant (§5.1).
+    pub prefill_experts_per_rank: usize,
+    /// Redundant router-expert replicas for EPLB (decode: 32).
+    pub decode_redundant_experts: usize,
+    /// Microbatch-based pipelining (§4.2.3 / §4.3.2; Figs 20–21 ablate).
+    pub microbatch: bool,
+    /// Multi-token prediction (§4.2.4; Fig 22 ablates).
+    pub mtp: bool,
+    /// MTP speculative-token acceptance rate (paper assumes 0.70).
+    pub mtp_acceptance: f64,
+    /// Staged hybrid parallelism for prefill MLA (§4.3.1; pure DP if false).
+    pub hybrid_parallelism: bool,
+    /// Use AIV-direct (vs SDMA) for dispatch/combine (§4.2.1 Opt.1).
+    pub aiv_direct: bool,
+    /// Early (pre-send) INT8 quantization of dispatch payloads (Opt.2).
+    pub early_quant: bool,
+    /// Context caching via EMS (§4.4.2; Fig 23 ablates).
+    pub context_caching: bool,
+    /// Route cache accesses over UB (true) or fall back to VPC (Fig 23).
+    pub cache_over_ub: bool,
+    /// Latency SLOs.
+    pub slo: SloConfig,
+}
+
+impl ServingConfig {
+    /// The paper's §5.1 evaluation deployment.
+    pub fn paper_default() -> Self {
+        ServingConfig {
+            prefill_instances: 6,
+            npus_per_prefill: 16,
+            decode_npus: 160,
+            decode_batch_per_die: 96,
+            prefill_experts_per_rank: 10,
+            decode_redundant_experts: 32,
+            microbatch: true,
+            mtp: true,
+            mtp_acceptance: 0.70,
+            hybrid_parallelism: true,
+            aiv_direct: true,
+            early_quant: true,
+            context_caching: true,
+            cache_over_ub: true,
+            slo: SloConfig::default(),
+        }
+    }
+
+    pub fn preset(p: DeploymentPreset) -> Self {
+        match p {
+            DeploymentPreset::Paper256 => Self::paper_default(),
+            DeploymentPreset::Full384 => ServingConfig {
+                prefill_instances: 8,
+                ..Self::paper_default()
+            },
+            DeploymentPreset::Tiny => ServingConfig {
+                prefill_instances: 1,
+                npus_per_prefill: 2,
+                decode_npus: 4,
+                decode_batch_per_die: 8,
+                ..Self::paper_default()
+            },
+        }
+    }
+
+    /// Dies in the decode instance (EP degree for MoE layers).
+    pub fn decode_ep_degree(&self) -> usize {
+        self.decode_npus * 2
+    }
+
+    /// Dies per prefill instance (EP degree inside one instance).
+    pub fn prefill_ep_degree(&self) -> usize {
+        self.npus_per_prefill * 2
+    }
+
+    /// Total NPUs provisioned.
+    pub fn total_npus(&self) -> usize {
+        self.prefill_instances * self.npus_per_prefill + self.decode_npus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_deployment_shape() {
+        let s = ServingConfig::paper_default();
+        assert_eq!(s.decode_ep_degree(), 320);
+        assert_eq!(s.prefill_ep_degree(), 32);
+        assert_eq!(s.total_npus(), 6 * 16 + 160); // 256-NPU slice (§5.1)
+    }
+}

@@ -1,0 +1,193 @@
+//! Minimal TOML subset parser (the `toml` crate is not vendored; DESIGN.md
+//! §1). Supports: `[table]` / `[dotted.table]` headers, `key = value` with
+//! string / integer / float / boolean values, comments, blank lines. This
+//! covers every config file this project reads; arrays and inline tables are
+//! intentionally rejected with a clear error.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A scalar TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+/// A parsed document: table name → key → value. Root keys go in "".
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    tables: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+/// One table view with typed setters used by config loading.
+pub struct TableView<'a> {
+    map: &'a BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn table(&self, name: &str) -> Option<TableView<'_>> {
+        self.tables.get(name).map(|map| TableView { map })
+    }
+
+    pub fn tables(&self) -> impl Iterator<Item = &String> {
+        self.tables.keys()
+    }
+}
+
+impl<'a> TableView<'a> {
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.map.get(key)
+    }
+
+    /// Overwrite `dst` if the key is present and numeric.
+    pub fn set_f64(&self, key: &str, dst: &mut f64) {
+        if let Some(TomlValue::Num(n)) = self.map.get(key) {
+            *dst = *n;
+        }
+    }
+
+    pub fn set_usize(&self, key: &str, dst: &mut usize) {
+        if let Some(TomlValue::Num(n)) = self.map.get(key) {
+            *dst = *n as usize;
+        }
+    }
+
+    pub fn set_bool(&self, key: &str, dst: &mut bool) {
+        if let Some(TomlValue::Bool(b)) = self.map.get(key) {
+            *dst = *b;
+        }
+    }
+
+    pub fn set_string(&self, key: &str, dst: &mut String) {
+        if let Some(TomlValue::Str(s)) = self.map.get(key) {
+            *dst = s.clone();
+        }
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut current = String::new();
+    doc.tables.entry(current.clone()).or_default();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated table header", lineno + 1);
+            };
+            let name = name.trim();
+            if name.is_empty() || name.starts_with('[') {
+                bail!("line {}: array-of-tables not supported", lineno + 1);
+            }
+            current = name.to_string();
+            doc.tables.entry(current.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected `key = value`", lineno + 1);
+        };
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.tables.get_mut(&current).unwrap().insert(key, val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: don't strip '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(inner) = inner.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') || s.starts_with('{') {
+        bail!("arrays / inline tables not supported by this TOML subset");
+    }
+    let cleaned: String = s.chars().filter(|c| *c != '_').collect();
+    match cleaned.parse::<f64>() {
+        Ok(n) => Ok(TomlValue::Num(n)),
+        Err(_) => bail!("cannot parse value `{s}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_scalars() {
+        let doc = parse(
+            "top = 1\n\
+             [a]\n\
+             x = 1.5   # comment\n\
+             s = \"hi # there\"\n\
+             flag = true\n\
+             [a.b]\n\
+             y = 1_000\n",
+        )
+        .unwrap();
+        assert_eq!(doc.table("").unwrap().get("top"), Some(&TomlValue::Num(1.0)));
+        let a = doc.table("a").unwrap();
+        assert_eq!(a.get("x"), Some(&TomlValue::Num(1.5)));
+        assert_eq!(a.get("s"), Some(&TomlValue::Str("hi # there".into())));
+        assert_eq!(a.get("flag"), Some(&TomlValue::Bool(true)));
+        assert_eq!(doc.table("a.b").unwrap().get("y"), Some(&TomlValue::Num(1000.0)));
+    }
+
+    #[test]
+    fn rejects_arrays() {
+        assert!(parse("x = [1, 2]").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("just a line").is_err());
+        assert!(parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn setters() {
+        let doc = parse("[t]\na = 2\nb = true\nc = \"s\"\n").unwrap();
+        let t = doc.table("t").unwrap();
+        let mut f = 0.0;
+        let mut u = 0usize;
+        let mut b = false;
+        let mut s = String::new();
+        t.set_f64("a", &mut f);
+        t.set_usize("a", &mut u);
+        t.set_bool("b", &mut b);
+        t.set_string("c", &mut s);
+        assert_eq!((f, u, b, s.as_str()), (2.0, 2, true, "s"));
+    }
+}

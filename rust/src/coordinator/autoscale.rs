@@ -1,0 +1,307 @@
+//! Dynamic PDC resource adjustment (paper §4.1 "Dynamic Adjustment for
+//! Asynchronous Real-World Workloads" + §6.2.2 adaptive deployment).
+//!
+//! The PDC architecture's selling point is that prefill, decode and caching
+//! pools scale *independently*. This controller closes the loop: it watches
+//! workload statistics (prompt/output token rates) and engine pressure
+//! (queue depths, slot occupancy) and recommends a new NPU split, keeping
+//! the prefill:decode capacity ratio matched to the observed
+//! prompt:output demand ratio.
+//!
+//! The same controller drives the §6.2.1 *attention offloading* extension
+//! ([`offload`]): when decode is memory-bound and prefill has idle compute,
+//! a fraction of decode-attention work can migrate to prefill instances
+//! (the Adrenaline design the paper cites as future work).
+
+use crate::config::{Ascend910cDie, DeepSeekDims, ServingConfig};
+use crate::simnpu::pipeline::{decode_step, prefill_model, DecodePoint, PrefillPoint};
+
+/// Windowed workload statistics fed to the controller.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkloadStats {
+    /// Prompt tokens that arrived in the window.
+    pub prompt_tokens: u64,
+    /// Output tokens generated in the window.
+    pub output_tokens: u64,
+    /// Mean prefill queue depth (tokens) over the window.
+    pub prefill_queue_tokens: f64,
+    /// Mean decode slot occupancy in [0, 1].
+    pub decode_occupancy: f64,
+    /// Window length, µs.
+    pub window_us: f64,
+}
+
+/// A recommended deployment split.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SplitPlan {
+    pub prefill_npus: usize,
+    pub decode_npus: usize,
+    /// Predicted prefill capacity at this split, tokens/s.
+    pub prefill_capacity: f64,
+    /// Predicted decode capacity at this split, tokens/s.
+    pub decode_capacity: f64,
+}
+
+/// The PD-ratio controller.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    /// Total NPUs available to split between prefill and decode.
+    pub total_npus: usize,
+    /// NPUs per prefill instance (instances are the allocation quantum).
+    pub prefill_quantum: usize,
+    /// Minimum NPUs that must stay in each pool.
+    pub min_prefill: usize,
+    pub min_decode: usize,
+    /// Hysteresis: don't move unless the imbalance exceeds this factor.
+    pub hysteresis: f64,
+}
+
+impl Autoscaler {
+    pub fn paper_default() -> Self {
+        Autoscaler {
+            total_npus: 256,
+            prefill_quantum: 16,
+            min_prefill: 16,
+            min_decode: 64,
+            hysteresis: 1.15,
+        }
+    }
+
+    /// Per-NPU capacities from the calibrated engine models.
+    fn capacities(
+        &self,
+        die: &Ascend910cDie,
+        model: &DeepSeekDims,
+        serving: &ServingConfig,
+    ) -> (f64, f64) {
+        let pf = prefill_model(die, model, &PrefillPoint::paper_reference(false));
+        let dc = decode_step(
+            die,
+            model,
+            &DecodePoint {
+                batch_per_npu: serving.decode_batch_per_die,
+                mtp: serving.mtp,
+                microbatch: serving.microbatch,
+                ..DecodePoint::paper_reference()
+            },
+        );
+        (pf.tokens_per_s_per_npu, dc.tokens_per_s_per_npu)
+    }
+
+    /// Recommend a split for the observed workload. Returns `None` when the
+    /// current split is within hysteresis of the ideal (no migration).
+    pub fn recommend(
+        &self,
+        die: &Ascend910cDie,
+        model: &DeepSeekDims,
+        serving: &ServingConfig,
+        stats: &WorkloadStats,
+        current_prefill_npus: usize,
+    ) -> Option<SplitPlan> {
+        if stats.window_us <= 0.0 || stats.prompt_tokens + stats.output_tokens == 0 {
+            return None;
+        }
+        let (pf_per_npu, dc_per_npu) = self.capacities(die, model, serving);
+        let prompt_rate = stats.prompt_tokens as f64 / (stats.window_us / 1e6);
+        let output_rate = stats.output_tokens as f64 / (stats.window_us / 1e6);
+
+        // NPUs needed per pool at observed demand; split the total in that
+        // proportion, quantized to prefill instances.
+        let need_pf = prompt_rate / pf_per_npu;
+        let need_dc = output_rate / dc_per_npu;
+        if need_pf + need_dc <= 0.0 {
+            return None;
+        }
+        let ideal_pf = self.total_npus as f64 * need_pf / (need_pf + need_dc);
+        let quantized = ((ideal_pf / self.prefill_quantum as f64).round() as usize
+            * self.prefill_quantum)
+            .clamp(self.min_prefill, self.total_npus - self.min_decode);
+
+        // hysteresis on the *ratio* between current and ideal
+        let cur = current_prefill_npus.max(1) as f64;
+        let ratio = (quantized as f64 / cur).max(cur / quantized.max(1) as f64);
+        if ratio < self.hysteresis {
+            return None;
+        }
+        let decode_npus = self.total_npus - quantized;
+        Some(SplitPlan {
+            prefill_npus: quantized,
+            decode_npus,
+            prefill_capacity: quantized as f64 * pf_per_npu,
+            decode_capacity: decode_npus as f64 * dc_per_npu,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §6.2.1 attention offloading (Adrenaline-style decode-attention migration)
+// ---------------------------------------------------------------------------
+
+/// Offload model: what happens to decode TPOT and prefill throughput when a
+/// fraction of decode-attention (the memory-bound FA core) moves to
+/// underutilized prefill NPUs.
+pub mod offload {
+    use super::*;
+    use crate::simnpu::ops::mla;
+    use crate::Micros;
+
+    /// Result of offloading `frac` of decode attention to prefill NPUs.
+    #[derive(Debug, Clone, Copy)]
+    pub struct OffloadModel {
+        pub frac: f64,
+        /// Decode per-layer latency with the offloaded core, µs.
+        pub decode_layer_us: Micros,
+        /// TPOT with offloading, ms.
+        pub tpot_ms: f64,
+        /// Decode throughput, tokens/s/NPU.
+        pub tokens_per_s_per_npu: f64,
+        /// Prefill throughput retained (fraction of baseline) after
+        /// donating memory bandwidth to the offloaded attention.
+        pub prefill_retained: f64,
+    }
+
+    /// Model offloading a fraction of the decode FA core (paper §6.2.1).
+    ///
+    /// The offloaded share runs on prefill NPUs *concurrently* with the
+    /// remaining local share; the decode stream's core time shrinks to the
+    /// max of (local share, remote share + sync). Prefill donates HBM
+    /// bandwidth: its throughput scales by (1 - frac x core-BW share).
+    pub fn model_offload(
+        die: &Ascend910cDie,
+        m: &DeepSeekDims,
+        p: &DecodePoint,
+        frac: f64,
+    ) -> OffloadModel {
+        let base = crate::simnpu::pipeline::decode_layer(die, m, p);
+        // the attention core's latency splits; remote side pays a UB
+        // round-trip for query/latent-output exchange per microbatch
+        let lanes = (p.batch_per_npu / 2).max(1);
+        let lanes_ub = if p.microbatch { lanes.div_ceil(2) } else { lanes };
+        let q_tokens = if p.mtp { 2 } else { 1 };
+        let shape = mla::MlaDecodeShape { batch: lanes_ub, q_tokens, kv_len: p.kv_len };
+        // query + latent-output payload per microbatch (BF16)
+        let payload = (lanes_ub * q_tokens * m.n_heads * (m.d_c + m.d_rope) * 2) as u64;
+        let sync_us = crate::netsim::NetSim::default().transfer_us(
+            crate::netsim::Plane::Ub,
+            crate::netsim::PathKind::NpuToNpu,
+            crate::netsim::OpKind::Write,
+            crate::netsim::Locality::InterNode,
+            payload,
+        ) * 2.0;
+        let local = base.attn_core * (1.0 - frac);
+        let remote = base.attn_core * frac + sync_us;
+        let new_core = local.max(remote);
+        let stream0 = base.mla_prolog + new_core + base.o_proj;
+        let layer = stream0 + base.stream1;
+        let step_us = layer * m.n_layers as f64 + crate::simnpu::pipeline::STEP_OVERHEAD_US;
+        let accepted = if p.mtp { 1.0 + p.mtp_acceptance } else { 1.0 };
+
+        // prefill donates HBM bandwidth proportional to the offloaded core
+        let core_bytes = mla::attn_core_bytes(m, &shape) * q_tokens as f64;
+        let prefill_hbm_share =
+            (core_bytes * frac) / (die.hbm_gbps * 1e9 * (base.attn_core / 1e6)).max(1.0);
+
+        OffloadModel {
+            frac,
+            decode_layer_us: layer,
+            tpot_ms: step_us / accepted / 1000.0,
+            tokens_per_s_per_npu: p.batch_per_npu as f64 * accepted / (step_us / 1e6),
+            prefill_retained: (1.0 - prefill_hbm_share.min(0.5)).max(0.5),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> (Ascend910cDie, DeepSeekDims, ServingConfig) {
+        (Ascend910cDie::default(), DeepSeekDims::deepseek_r1(), ServingConfig::paper_default())
+    }
+
+    fn stats(prompt: u64, output: u64) -> WorkloadStats {
+        WorkloadStats {
+            prompt_tokens: prompt,
+            output_tokens: output,
+            prefill_queue_tokens: 0.0,
+            decode_occupancy: 0.8,
+            window_us: 1e6,
+        }
+    }
+
+    #[test]
+    fn prompt_heavy_workload_grows_prefill() {
+        let (die, m, s) = env();
+        let a = Autoscaler::paper_default();
+        // long prompts, short outputs → more prefill NPUs (paper §4.1)
+        let plan = a.recommend(&die, &m, &s, &stats(4_000_000, 100_000), 96).unwrap();
+        assert!(plan.prefill_npus > 96, "{plan:?}");
+        assert_eq!(plan.prefill_npus % a.prefill_quantum, 0);
+        assert_eq!(plan.prefill_npus + plan.decode_npus, a.total_npus);
+    }
+
+    #[test]
+    fn output_heavy_workload_grows_decode() {
+        let (die, m, s) = env();
+        let a = Autoscaler::paper_default();
+        let plan = a.recommend(&die, &m, &s, &stats(200_000, 400_000), 96).unwrap();
+        assert!(plan.decode_npus > a.total_npus - 96, "{plan:?}");
+    }
+
+    #[test]
+    fn hysteresis_suppresses_small_moves() {
+        let (die, m, s) = env();
+        let a = Autoscaler::paper_default();
+        // find the ideal split, then ask again from that split: no move
+        let plan = a.recommend(&die, &m, &s, &stats(1_000_000, 300_000), 96);
+        if let Some(p) = plan {
+            let again = a.recommend(&die, &m, &s, &stats(1_000_000, 300_000), p.prefill_npus);
+            assert!(again.is_none(), "controller should settle: {again:?}");
+        }
+    }
+
+    #[test]
+    fn respects_minimums() {
+        let (die, m, s) = env();
+        let a = Autoscaler::paper_default();
+        let plan = a.recommend(&die, &m, &s, &stats(10, 10_000_000), 96).unwrap();
+        assert!(plan.prefill_npus >= a.min_prefill);
+        let plan = a.recommend(&die, &m, &s, &stats(10_000_000, 10), 96).unwrap();
+        assert!(plan.decode_npus >= a.min_decode);
+    }
+
+    #[test]
+    fn empty_window_no_recommendation() {
+        let (die, m, s) = env();
+        let a = Autoscaler::paper_default();
+        assert!(a.recommend(&die, &m, &s, &WorkloadStats::default(), 96).is_none());
+    }
+
+    #[test]
+    fn offload_helps_memory_bound_decode() {
+        let (die, m, _) = env();
+        let p = DecodePoint::paper_reference();
+        let base = offload::model_offload(&die, &m, &p, 0.0);
+        let off = offload::model_offload(&die, &m, &p, 0.4);
+        assert!(
+            off.tokens_per_s_per_npu > base.tokens_per_s_per_npu,
+            "offload should raise decode throughput: {} vs {}",
+            off.tokens_per_s_per_npu,
+            base.tokens_per_s_per_npu
+        );
+        assert!(off.prefill_retained < 1.0 && off.prefill_retained >= 0.5);
+    }
+
+    #[test]
+    fn full_offload_hits_sync_wall() {
+        let (die, m, _) = env();
+        let p = DecodePoint::paper_reference();
+        // offloading everything puts the whole core + sync on the remote
+        // side; beyond the balance point gains vanish
+        let best = (0..=10)
+            .map(|i| offload::model_offload(&die, &m, &p, i as f64 / 10.0))
+            .max_by(|a, b| a.tokens_per_s_per_npu.partial_cmp(&b.tokens_per_s_per_npu).unwrap())
+            .unwrap();
+        assert!(best.frac > 0.0 && best.frac < 1.0, "optimum interior: {}", best.frac);
+    }
+}

@@ -1,0 +1,144 @@
+//! Continuous batching with TPOT-SLO-adaptive batch sizing (paper §4.1
+//! "Dynamic Adjustment", Table 5).
+//!
+//! The decode engine runs pseudo-synchronous steps over a slot array;
+//! the batcher decides (a) the max concurrent batch honoring the TPOT SLO
+//! (inverting the decode latency model) and (b) which waiting requests to
+//! admit at each step boundary (FCFS — the P2P architecture removes
+//! locality constraints, so no affinity logic is needed).
+
+use crate::config::{Ascend910cDie, DeepSeekDims, SloConfig};
+use crate::simnpu::pipeline::{decode_step, max_batch_for_slo, DecodePoint};
+
+/// SLO-derived batch plan for a decode instance.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPlan {
+    /// Max batch per NPU meeting the TPOT SLO.
+    pub batch_per_npu: usize,
+    /// Max concurrent requests for the whole instance.
+    pub max_concurrent: usize,
+    /// Predicted TPOT at that batch, ms.
+    pub predicted_tpot_ms: f64,
+    /// Predicted throughput, tokens/s/NPU.
+    pub predicted_tput: f64,
+}
+
+/// Compute the SLO-adaptive batch plan (Table 5's mechanism).
+pub fn plan_for_slo(
+    die: &Ascend910cDie,
+    model: &DeepSeekDims,
+    base: &DecodePoint,
+    slo: &SloConfig,
+    decode_npus: usize,
+) -> BatchPlan {
+    let (batch_per_npu, step) = max_batch_for_slo(die, model, base, slo.tpot_ms);
+    BatchPlan {
+        batch_per_npu,
+        max_concurrent: batch_per_npu * decode_npus,
+        predicted_tpot_ms: step.tpot_ms,
+        predicted_tput: step.tokens_per_s_per_npu,
+    }
+}
+
+/// FCFS admission queue for decode slots.
+#[derive(Debug, Default)]
+pub struct AdmissionQueue {
+    waiting: std::collections::VecDeque<u64>,
+}
+
+impl AdmissionQueue {
+    pub fn push(&mut self, req: u64) {
+        self.waiting.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.waiting.is_empty()
+    }
+
+    /// Admit up to `free_slots` requests, FCFS.
+    pub fn admit(&mut self, free_slots: usize) -> Vec<u64> {
+        let n = free_slots.min(self.waiting.len());
+        self.waiting.drain(..n).collect()
+    }
+}
+
+/// Re-plan the batch when KV lengths drift (the paper adjusts stream
+/// resources and batch size to workload changes, §4.2.3): returns a new
+/// plan if the predicted TPOT at the current point violates the SLO.
+pub fn replan_if_needed(
+    die: &Ascend910cDie,
+    model: &DeepSeekDims,
+    current: &BatchPlan,
+    observed_kv_len: usize,
+    base: &DecodePoint,
+    slo: &SloConfig,
+    decode_npus: usize,
+) -> Option<BatchPlan> {
+    let point = DecodePoint {
+        batch_per_npu: current.batch_per_npu,
+        kv_len: observed_kv_len,
+        ..*base
+    };
+    let m = decode_step(die, model, &point);
+    if m.tpot_ms > slo.tpot_ms * 1.02 {
+        let adjusted_base = DecodePoint { kv_len: observed_kv_len, ..*base };
+        Some(plan_for_slo(die, model, &adjusted_base, slo, decode_npus))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> (Ascend910cDie, DeepSeekDims, DecodePoint) {
+        (
+            Ascend910cDie::default(),
+            DeepSeekDims::deepseek_r1(),
+            DecodePoint::paper_reference(),
+        )
+    }
+
+    #[test]
+    fn tighter_slo_smaller_plan() {
+        let (die, m, base) = env();
+        let loose = plan_for_slo(&die, &m, &base, &SloConfig { tpot_ms: 50.0, ttft_ms: 1e9 }, 160);
+        let tight = plan_for_slo(&die, &m, &base, &SloConfig { tpot_ms: 15.0, ttft_ms: 1e9 }, 160);
+        assert!(loose.batch_per_npu > tight.batch_per_npu);
+        assert!(loose.predicted_tput > tight.predicted_tput);
+        assert!(tight.predicted_tpot_ms <= 15.0);
+        assert_eq!(loose.max_concurrent, loose.batch_per_npu * 160);
+    }
+
+    #[test]
+    fn admission_is_fcfs() {
+        let mut q = AdmissionQueue::default();
+        for i in 0..10 {
+            q.push(i);
+        }
+        assert_eq!(q.admit(3), vec![0, 1, 2]);
+        assert_eq!(q.admit(100), (3..10).collect::<Vec<u64>>());
+        assert!(q.is_empty());
+        assert_eq!(q.admit(4), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn replan_triggers_on_kv_growth() {
+        let (die, m, base) = env();
+        let slo = SloConfig { tpot_ms: 50.0, ttft_ms: 1e9 };
+        let plan = plan_for_slo(&die, &m, &base, &slo, 160);
+        // same KV → no replan needed
+        assert!(replan_if_needed(&die, &m, &plan, base.kv_len, &base, &slo, 160).is_none());
+        // much longer KV → violation → smaller batch
+        let new = replan_if_needed(&die, &m, &plan, 32 * 1024, &base, &slo, 160);
+        if let Some(new) = new {
+            assert!(new.batch_per_npu <= plan.batch_per_npu);
+            assert!(new.predicted_tpot_ms <= slo.tpot_ms);
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Decode engine (paper §4.2): the LEP EP320 decode instance as a slotted
+//! continuous-batching stepper with the two-stream microbatch pipeline and
+//! pipelined MTP.
+
+use crate::config::{Ascend910cDie, DeepSeekDims, ServingConfig};
+use crate::simnpu::pipeline::{decode_step, DecodePoint, DecodeStepModel};
+use crate::util::Rng;
+
+/// One active decode slot.
+#[derive(Debug, Clone, Copy)]
+pub struct Slot {
+    pub request: u64,
+    /// Current context length (prompt + generated so far).
+    pub kv_len: usize,
+    pub remaining_tokens: usize,
+}
+
+/// The decode instance: slot array + step dynamics.
+#[derive(Debug)]
+pub struct DecodeInstance {
+    pub npus: usize,
+    pub slots: Vec<Slot>,
+    pub max_concurrent: usize,
+    pub steps: u64,
+    pub tokens_emitted: u64,
+    rng: Rng,
+}
+
+/// Tokens emitted for one request in one step.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotEmit {
+    pub request: u64,
+    pub tokens: usize,
+    pub finished: bool,
+}
+
+impl DecodeInstance {
+    pub fn new(npus: usize, max_concurrent: usize, seed: u64) -> Self {
+        DecodeInstance {
+            npus,
+            slots: Vec::new(),
+            max_concurrent,
+            steps: 0,
+            tokens_emitted: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.max_concurrent.saturating_sub(self.slots.len())
+    }
+
+    pub fn admit(&mut self, request: u64, prompt_len: usize, output_tokens: usize) {
+        assert!(self.free_slots() > 0, "admitting into a full instance");
+        self.slots.push(Slot {
+            request,
+            kv_len: prompt_len,
+            remaining_tokens: output_tokens,
+        });
+    }
+
+    /// Batch per NPU implied by current occupancy.
+    pub fn batch_per_npu(&self) -> usize {
+        self.slots.len().div_ceil(self.npus).max(1)
+    }
+
+    /// Mean KV length across active slots.
+    pub fn mean_kv_len(&self) -> usize {
+        if self.slots.is_empty() {
+            return 0;
+        }
+        self.slots.iter().map(|s| s.kv_len).sum::<usize>() / self.slots.len()
+    }
+
+    /// Model the latency of the next step at current occupancy.
+    pub fn step_model(
+        &self,
+        die: &Ascend910cDie,
+        model: &DeepSeekDims,
+        serving: &ServingConfig,
+        eplb_imbalance: f64,
+    ) -> DecodeStepModel {
+        let point = DecodePoint {
+            batch_per_npu: self.batch_per_npu(),
+            kv_len: self.mean_kv_len().max(1),
+            ep: serving.decode_ep_degree(),
+            microbatch: serving.microbatch,
+            mtp: serving.mtp,
+            mtp_acceptance: serving.mtp_acceptance,
+            eplb_imbalance,
+        };
+        decode_step(die, model, &point)
+    }
+
+    /// Execute one decode step: every slot emits 1 token, plus a second
+    /// speculative token accepted with probability `mtp_acceptance`
+    /// (§4.2.4 validation). Finished slots are removed.
+    ///
+    /// Returns per-slot emissions (the sim layer assigns timestamps).
+    pub fn step(&mut self, serving: &ServingConfig) -> Vec<SlotEmit> {
+        self.steps += 1;
+        let mut emits = Vec::with_capacity(self.slots.len());
+        let mut i = 0;
+        while i < self.slots.len() {
+            let slot = &mut self.slots[i];
+            let mut produced = 1usize;
+            if serving.mtp
+                && slot.remaining_tokens > 1
+                && self.rng.f64() < serving.mtp_acceptance
+            {
+                produced = 2;
+            }
+            let produced = produced.min(slot.remaining_tokens);
+            slot.remaining_tokens -= produced;
+            slot.kv_len += produced;
+            let finished = slot.remaining_tokens == 0;
+            emits.push(SlotEmit { request: slot.request, tokens: produced, finished });
+            self.tokens_emitted += produced as u64;
+            if finished {
+                self.slots.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        emits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> (Ascend910cDie, DeepSeekDims, ServingConfig) {
+        (Ascend910cDie::default(), DeepSeekDims::deepseek_r1(), ServingConfig::paper_default())
+    }
+
+    #[test]
+    fn admit_and_capacity() {
+        let mut d = DecodeInstance::new(4, 8, 1);
+        assert_eq!(d.free_slots(), 8);
+        d.admit(1, 100, 10);
+        d.admit(2, 200, 10);
+        assert_eq!(d.free_slots(), 6);
+        assert_eq!(d.batch_per_npu(), 1);
+        assert_eq!(d.mean_kv_len(), 150);
+    }
+
+    #[test]
+    fn step_emits_and_finishes() {
+        let (_, _, mut s) = env();
+        s.mtp = false;
+        let mut d = DecodeInstance::new(1, 4, 2);
+        d.admit(7, 10, 2);
+        let e1 = d.step(&s);
+        assert_eq!(e1.len(), 1);
+        assert_eq!(e1[0].tokens, 1);
+        assert!(!e1[0].finished);
+        let e2 = d.step(&s);
+        assert!(e2[0].finished);
+        assert!(d.slots.is_empty());
+        assert_eq!(d.tokens_emitted, 2);
+    }
+
+    #[test]
+    fn mtp_emits_extra_tokens_at_acceptance_rate() {
+        let (_, _, mut s) = env();
+        s.mtp = true;
+        s.mtp_acceptance = 0.7;
+        let mut d = DecodeInstance::new(1, 512, 3);
+        for i in 0..500 {
+            d.admit(i, 100, 1_000_000);
+        }
+        let mut total = 0usize;
+        for _ in 0..20 {
+            total += d.step(&s).iter().map(|e| e.tokens).sum::<usize>();
+        }
+        let per_step = total as f64 / 20.0 / 500.0;
+        assert!((per_step - 1.7).abs() < 0.05, "tokens/slot/step {per_step}");
+    }
+
+    #[test]
+    fn kv_grows_with_generation() {
+        let (_, _, mut s) = env();
+        s.mtp = false;
+        let mut d = DecodeInstance::new(1, 4, 4);
+        d.admit(1, 100, 50);
+        for _ in 0..10 {
+            d.step(&s);
+        }
+        assert_eq!(d.slots[0].kv_len, 110);
+        assert_eq!(d.slots[0].remaining_tokens, 40);
+    }
+
+    #[test]
+    fn step_model_slows_with_occupancy() {
+        let (die, m, s) = env();
+        let mut small = DecodeInstance::new(160, 20_000, 5);
+        let mut big = DecodeInstance::new(160, 20_000, 5);
+        for i in 0..160 * 8 {
+            small.admit(i, 4096, 100);
+        }
+        for i in 0..160 * 96 {
+            big.admit(i, 4096, 100);
+        }
+        let t_small = small.step_model(&die, &m, &s, 1.05).step_us;
+        let t_big = big.step_model(&die, &m, &s, 1.05).step_us;
+        assert!(t_big > t_small, "{t_small} vs {t_big}");
+    }
+
+    #[test]
+    #[should_panic(expected = "admitting into a full instance")]
+    fn overadmission_panics() {
+        let mut d = DecodeInstance::new(1, 1, 6);
+        d.admit(1, 10, 10);
+        d.admit(2, 10, 10);
+    }
+}

@@ -1,0 +1,169 @@
+//! Expert-parallelism load balancing (EPLB; §4.1, §5.1).
+//!
+//! The decode deployment hosts 256 router experts + 32 redundant replicas +
+//! 32 shared-expert copies across 320 ranks (one expert per die). EPLB
+//! decides which experts get replicas and how token load spreads across
+//! replicas; its output — the residual imbalance factor — feeds the decode
+//! pipeline model (`eplb_imbalance`), connecting skewed activations to the
+//! Table 3/4 "Default vs Perfect EPLB" gap.
+
+/// Placement of experts (with replicas) onto EP ranks.
+#[derive(Debug, Clone)]
+pub struct ExpertPlacement {
+    pub n_experts: usize,
+    pub n_ranks: usize,
+    /// replicas[e] = number of ranks hosting expert e (>= 1).
+    pub replicas: Vec<usize>,
+}
+
+/// Greedy EPLB: give every expert one rank, then hand the `redundant`
+/// extra ranks to the experts with the highest per-replica load.
+pub fn place_experts(load: &[u64], n_ranks: usize, redundant: usize) -> ExpertPlacement {
+    let n_experts = load.len();
+    assert!(n_ranks >= n_experts + redundant, "not enough ranks");
+    let mut replicas = vec![1usize; n_experts];
+    for _ in 0..redundant {
+        // expert with max load-per-replica gets another replica
+        let (best, _) = load
+            .iter()
+            .enumerate()
+            .map(|(e, &l)| (e, l as f64 / replicas[e] as f64))
+            .fold((0usize, -1.0f64), |acc, (e, v)| if v > acc.1 { (e, v) } else { acc });
+        replicas[best] += 1;
+    }
+    ExpertPlacement { n_experts, n_ranks, replicas }
+}
+
+impl ExpertPlacement {
+    /// Residual imbalance: max rank load / mean rank load, assuming each
+    /// expert's tokens split evenly across its replicas.
+    pub fn imbalance(&self, load: &[u64]) -> f64 {
+        let total: f64 = load.iter().map(|&l| l as f64).sum();
+        if total == 0.0 {
+            return 1.0;
+        }
+        let used_ranks: usize = self.replicas.iter().sum();
+        let mean = total / used_ranks as f64;
+        let max = load
+            .iter()
+            .zip(&self.replicas)
+            .map(|(&l, &r)| l as f64 / r as f64)
+            .fold(0.0f64, f64::max);
+        (max / mean).max(1.0)
+    }
+}
+
+/// Multi-expert-per-rank packing for small deployments (ranks < experts):
+/// longest-processing-time (LPT) greedy assignment; returns the residual
+/// imbalance (max rank load / mean rank load).
+pub fn lpt_imbalance(load: &[u64], n_ranks: usize) -> f64 {
+    let total: f64 = load.iter().map(|&l| l as f64).sum();
+    if total == 0.0 || n_ranks == 0 {
+        return 1.0;
+    }
+    let mut order: Vec<usize> = (0..load.len()).collect();
+    order.sort_unstable_by_key(|&e| std::cmp::Reverse(load[e]));
+    let mut rank_load = vec![0f64; n_ranks];
+    for e in order {
+        let (idx, _) = rank_load
+            .iter()
+            .enumerate()
+            .fold((0usize, f64::INFINITY), |acc, (i, &l)| if l < acc.1 { (i, l) } else { acc });
+        rank_load[idx] += load[e] as f64;
+    }
+    let mean = total / n_ranks as f64;
+    let max = rank_load.iter().cloned().fold(0.0, f64::max);
+    (max / mean).max(1.0)
+}
+
+/// Residual imbalance for any deployment size: replica placement when the
+/// rank budget allows one-expert-per-rank (+redundancy), LPT packing
+/// otherwise.
+pub fn deployment_imbalance(load: &[u64], n_ranks: usize, redundant: usize) -> f64 {
+    if n_ranks >= load.len() + redundant {
+        place_experts(load, n_ranks, redundant).imbalance(load)
+    } else {
+        lpt_imbalance(load, n_ranks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ExpertActivation;
+
+    #[test]
+    fn uniform_load_is_balanced() {
+        let load = vec![100u64; 16];
+        let p = place_experts(&load, 20, 4);
+        assert!((p.imbalance(&load) - 1.25).abs() < 0.3); // replicas skew mean a bit
+        assert_eq!(p.replicas.iter().sum::<usize>(), 20);
+    }
+
+    #[test]
+    fn redundancy_goes_to_hot_experts() {
+        let mut load = vec![10u64; 8];
+        load[0] = 1000;
+        load[1] = 500;
+        let p = place_experts(&load, 12, 4);
+        assert!(p.replicas[0] >= 2, "hottest expert should be replicated: {:?}", p.replicas);
+        assert!(p.replicas[0] >= p.replicas[2]);
+    }
+
+    #[test]
+    fn redundancy_reduces_imbalance() {
+        let mut ea = ExpertActivation::new(11, 256, 1.1);
+        let load = ea.batch_histogram(30_720, 8);
+        let none = place_experts(&load, 256, 0);
+        let some = place_experts(&load, 320, 64);
+        let i_none = none.imbalance(&load);
+        let i_some = some.imbalance(&load);
+        assert!(
+            i_some < i_none,
+            "redundant replicas should cut imbalance: {i_none:.2} -> {i_some:.2}"
+        );
+        assert!(i_none > 1.5, "skewed load should start imbalanced: {i_none:.2}");
+    }
+
+    #[test]
+    #[should_panic(expected = "not enough ranks")]
+    fn rejects_undersized_deployment() {
+        place_experts(&[1, 2, 3], 3, 1);
+    }
+
+    #[test]
+    fn lpt_balances_uniform_load() {
+        let load = vec![10u64; 16];
+        let i = lpt_imbalance(&load, 4);
+        assert!((i - 1.0).abs() < 1e-9, "{i}");
+    }
+
+    #[test]
+    fn lpt_handles_skew_better_than_random() {
+        let mut load = vec![1u64; 16];
+        load[0] = 100;
+        // 4 ranks; LPT puts the hot expert alone-ish: max rank ≈ 100+...
+        let i = lpt_imbalance(&load, 4);
+        let mean = 115.0 / 4.0;
+        assert!(i >= 100.0 / mean - 1e-9);
+        assert!(i < 110.0 / mean, "{i}");
+    }
+
+    #[test]
+    fn deployment_imbalance_dispatches_both_regimes() {
+        let load = vec![5u64; 8];
+        // big deployment → replica path
+        let big = deployment_imbalance(&load, 12, 4);
+        // tiny deployment → LPT path
+        let tiny = deployment_imbalance(&load, 4, 0);
+        assert!(big >= 1.0 && tiny >= 1.0);
+        assert!((tiny - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lpt_degenerate_inputs() {
+        assert_eq!(lpt_imbalance(&[], 4), 1.0);
+        assert_eq!(lpt_imbalance(&[0, 0], 4), 1.0);
+        assert_eq!(lpt_imbalance(&[5], 0), 1.0);
+    }
+}

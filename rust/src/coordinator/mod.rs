@@ -1,0 +1,32 @@
+//! The CloudMatrix-Infer serving coordinator (paper §4) — the system
+//! contribution: a peer-to-peer serving architecture with
+//! prefill–decode–caching (PDC) disaggregation.
+//!
+//! * [`router`]   — stateless peer-to-peer request routing (§4.1) and the
+//!   KVCache-centric baseline it is contrasted against (Dynamo/Mooncake
+//!   style cache-affinity scheduling).
+//! * [`batcher`]  — continuous batching with TPOT-SLO-adaptive batch sizing
+//!   (Table 5).
+//! * [`eplb`]     — expert-parallel load balancing with redundant experts
+//!   (§4.1, §5.1).
+//! * [`prefill`]  — prefill engine: staged hybrid parallelism + microbatch
+//!   pipeline (§4.3).
+//! * [`decode`]   — decode engine: LEP, two-stream microbatch pipeline,
+//!   MTP (§4.2).
+//! * [`transfer`] — prefill→decode KV transfer over the RDMA plane with the
+//!   deterministic group-connection mapping (§4.3.3).
+//! * [`sim`]      — the discrete-event serving simulation tying PDC
+//!   together over the netsim/simnpu substrates.
+
+pub mod autoscale;
+pub mod batcher;
+pub mod decode;
+pub mod eplb;
+pub mod prefill;
+pub mod request;
+pub mod router;
+pub mod sim;
+pub mod transfer;
+
+pub use request::{RequestId, RequestPhase, RequestState};
+pub use sim::{ServeSim, SimOptions};

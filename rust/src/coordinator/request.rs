@@ -1,0 +1,114 @@
+//! Request lifecycle state machine for the PDC pipeline.
+
+use crate::workload::Request;
+use crate::Micros;
+
+pub type RequestId = u64;
+
+/// Where a request currently is in the PDC pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestPhase {
+    /// Waiting in a prefill instance's queue.
+    QueuedPrefill,
+    /// Being prefetched/prefilled.
+    Prefilling,
+    /// KV cache in flight over the RDMA plane.
+    Transferring,
+    /// Waiting for a decode slot.
+    QueuedDecode,
+    /// Generating tokens.
+    Decoding,
+    Finished,
+}
+
+/// Full per-request tracking state.
+#[derive(Debug, Clone)]
+pub struct RequestState {
+    pub spec: Request,
+    pub phase: RequestPhase,
+    /// Prefill instance handling this request.
+    pub prefill_instance: Option<usize>,
+    /// Tokens whose KV came from the context cache (skipped compute).
+    pub reused_tokens: usize,
+    pub t_prefill_start: Option<Micros>,
+    pub t_first_token: Option<Micros>,
+    pub t_finished: Option<Micros>,
+    /// Output tokens produced so far.
+    pub generated: usize,
+    /// Virtual time the previous token was emitted (TPOT tracking).
+    pub t_last_token: Option<Micros>,
+}
+
+impl RequestState {
+    pub fn new(spec: Request) -> Self {
+        RequestState {
+            spec,
+            phase: RequestPhase::QueuedPrefill,
+            prefill_instance: None,
+            reused_tokens: 0,
+            t_prefill_start: None,
+            t_first_token: None,
+            t_finished: None,
+            generated: 0,
+            t_last_token: None,
+        }
+    }
+
+    /// Tokens the prefill engine must actually compute (after cache reuse).
+    pub fn compute_tokens(&self) -> usize {
+        self.spec.prompt_tokens.saturating_sub(self.reused_tokens).max(1)
+    }
+
+    /// TTFT in µs, if the first token has been produced.
+    pub fn ttft_us(&self) -> Option<Micros> {
+        self.t_first_token.map(|t| t - self.spec.arrival_us)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.generated >= self.spec.output_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt: usize, output: usize) -> Request {
+        Request {
+            id: 1,
+            arrival_us: 100.0,
+            prompt_tokens: prompt,
+            output_tokens: output,
+            prompt: vec![],
+            session: 0,
+            turn: 0,
+        }
+    }
+
+    #[test]
+    fn compute_tokens_respects_reuse() {
+        let mut st = RequestState::new(req(4096, 10));
+        assert_eq!(st.compute_tokens(), 4096);
+        st.reused_tokens = 1024;
+        assert_eq!(st.compute_tokens(), 3072);
+        st.reused_tokens = 5000; // over-reuse clamps to 1 (suffix token)
+        assert_eq!(st.compute_tokens(), 1);
+    }
+
+    #[test]
+    fn ttft_math() {
+        let mut st = RequestState::new(req(16, 4));
+        assert!(st.ttft_us().is_none());
+        st.t_first_token = Some(600.0);
+        assert_eq!(st.ttft_us(), Some(500.0));
+    }
+
+    #[test]
+    fn done_condition() {
+        let mut st = RequestState::new(req(16, 3));
+        st.generated = 2;
+        assert!(!st.is_done());
+        st.generated = 3;
+        assert!(st.is_done());
+    }
+}

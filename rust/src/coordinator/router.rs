@@ -1,0 +1,169 @@
+//! Request routing (paper §4.1): the peer-to-peer stateless scheduler vs
+//! the KVCache-centric baseline.
+//!
+//! * **Peer-to-peer** (this paper): KV blocks live in the shared
+//!   disaggregated pool, uniformly accessible over UB — so the router is
+//!   *stateless* and free to pick the least-loaded prefill instance. Cache
+//!   hits do not depend on placement.
+//!
+//! * **KVCache-centric** (Dynamo/Mooncake style): cached KV lives in a
+//!   specific instance's local DRAM. The router must send a session back
+//!   to its *home* instance to reuse cache; rerouting for load balance
+//!   forfeits the cached prefix (recompute). This coupling is exactly the
+//!   scheduling-complexity/load-balance tension §4.1 argues against.
+
+use std::collections::BTreeMap;
+
+/// Routing decision for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub instance: usize,
+    /// Whether locally-held cache remains usable after this routing.
+    pub cache_usable: bool,
+}
+
+/// Router behavior under comparison.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RouterKind {
+    PeerToPeer,
+    KvCentric {
+        /// Queue-depth ratio (vs least-loaded) beyond which the KV-centric
+        /// router abandons affinity and reroutes (losing the cache).
+        overload_factor: f64,
+    },
+}
+
+/// The router: tracks per-instance queued compute tokens.
+#[derive(Debug)]
+pub struct Router {
+    pub kind: RouterKind,
+    /// Outstanding queued tokens per prefill instance.
+    pub queued_tokens: Vec<u64>,
+    /// session → home instance (KV-centric affinity state; the P2P router
+    /// keeps NO such state — that is the point).
+    home: BTreeMap<u64, usize>,
+}
+
+impl Router {
+    pub fn new(kind: RouterKind, n_instances: usize) -> Router {
+        Router { kind, queued_tokens: vec![0; n_instances], home: BTreeMap::new() }
+    }
+
+    fn least_loaded(&self) -> usize {
+        self.queued_tokens
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &q)| q)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Route a request; caller charges `tokens` of prefill work.
+    pub fn route(&mut self, session: u64, tokens: u64) -> RouteDecision {
+        let decision = match self.kind {
+            RouterKind::PeerToPeer => {
+                // stateless least-loaded; cache is in the shared pool, so
+                // it survives any placement.
+                RouteDecision { instance: self.least_loaded(), cache_usable: true }
+            }
+            RouterKind::KvCentric { overload_factor } => {
+                let least = self.least_loaded();
+                match self.home.get(&session) {
+                    Some(&home) => {
+                        let home_q = self.queued_tokens[home] as f64;
+                        let least_q = self.queued_tokens[least] as f64;
+                        if home_q <= (least_q + tokens as f64) * overload_factor {
+                            RouteDecision { instance: home, cache_usable: true }
+                        } else {
+                            // overload: reroute and lose the local cache
+                            RouteDecision { instance: least, cache_usable: false }
+                        }
+                    }
+                    None => RouteDecision { instance: least, cache_usable: true },
+                }
+            }
+        };
+        if let RouterKind::KvCentric { .. } = self.kind {
+            self.home.insert(session, decision.instance);
+        }
+        self.queued_tokens[decision.instance] += tokens;
+        decision
+    }
+
+    /// Work completed on an instance.
+    pub fn complete(&mut self, instance: usize, tokens: u64) {
+        self.queued_tokens[instance] = self.queued_tokens[instance].saturating_sub(tokens);
+    }
+
+    /// Load imbalance across instances: max/mean queued tokens.
+    pub fn imbalance(&self) -> f64 {
+        let total: u64 = self.queued_tokens.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.queued_tokens.len() as f64;
+        let max = *self.queued_tokens.iter().max().unwrap() as f64;
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_balances_load() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 4);
+        for s in 0..100u64 {
+            r.route(s % 5, 1000); // 5 hot sessions
+        }
+        assert!(r.imbalance() < 1.1, "imbalance {}", r.imbalance());
+    }
+
+    #[test]
+    fn kv_centric_hotspots_on_hot_sessions() {
+        let mut r = Router::new(RouterKind::KvCentric { overload_factor: 8.0 }, 4);
+        for s in 0..100u64 {
+            r.route(s % 2, 1000); // 2 hot sessions pin 2 instances
+        }
+        assert!(r.imbalance() > 1.5, "imbalance {}", r.imbalance());
+    }
+
+    #[test]
+    fn kv_centric_keeps_affinity_when_feasible() {
+        let mut r = Router::new(RouterKind::KvCentric { overload_factor: 4.0 }, 2);
+        let first = r.route(7, 100);
+        assert!(first.cache_usable);
+        let again = r.route(7, 100);
+        assert_eq!(again.instance, first.instance);
+        assert!(again.cache_usable);
+    }
+
+    #[test]
+    fn kv_centric_reroute_loses_cache() {
+        let mut r = Router::new(RouterKind::KvCentric { overload_factor: 1.0 }, 2);
+        let first = r.route(7, 1_000_000);
+        // other instance empty → overload triggers reroute
+        let again = r.route(7, 100);
+        assert_ne!(again.instance, first.instance);
+        assert!(!again.cache_usable, "reroute must forfeit local cache");
+    }
+
+    #[test]
+    fn p2p_cache_always_usable() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 2);
+        r.route(1, 1_000_000);
+        let d = r.route(1, 100);
+        assert!(d.cache_usable);
+    }
+
+    #[test]
+    fn completion_reduces_queue() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 2);
+        let d = r.route(0, 500);
+        r.complete(d.instance, 500);
+        assert_eq!(r.queued_tokens[d.instance], 0);
+        r.complete(d.instance, 10_000); // saturating
+        assert_eq!(r.queued_tokens[d.instance], 0);
+    }
+}

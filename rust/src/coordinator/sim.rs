@@ -1,0 +1,520 @@
+//! Discrete-event PDC serving simulation (paper §4.1 end-to-end).
+//!
+//! Glues the coordinator components over the substrate models: requests
+//! arrive (workload), are routed (router) to prefill instances (prefill),
+//! reuse cached prefixes (cache::context over mempool), transfer KV over
+//! the RDMA plane (transfer), and decode in the LEP instance (decode) under
+//! SLO-adaptive batching (batcher). Time is virtual (µs); engine latencies
+//! come from the calibrated simnpu/netsim models.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::cache::ContextCache;
+use crate::config::Config;
+use crate::coordinator::batcher::{plan_for_slo, AdmissionQueue};
+use crate::coordinator::decode::DecodeInstance;
+use crate::coordinator::eplb;
+use crate::coordinator::prefill::{batch_latency_us, PrefillInstance};
+use crate::coordinator::request::{RequestPhase, RequestState};
+use crate::coordinator::router::{Router, RouterKind};
+use crate::coordinator::transfer::{kv_transfer, TransferScheduler};
+use crate::mempool::MemPool;
+use crate::metrics::{Histogram, ServingReport};
+use crate::simnpu::pipeline::DecodePoint;
+use crate::workload::{ExpertActivation, Request};
+use crate::Micros;
+
+/// Simulation options beyond the base [`Config`].
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    pub router: RouterKind,
+    /// Prefill batch budget, tokens per NPU (paper: 16 K).
+    pub prefill_tokens_per_npu: usize,
+    /// Hard cap on simulated events (runaway guard).
+    pub max_events: usize,
+    pub seed: u64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            router: RouterKind::PeerToPeer,
+            prefill_tokens_per_npu: 16384,
+            max_events: 2_000_000,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Event {
+    Arrival(usize),
+    PrefillKick(usize),
+    PrefillDone(usize),
+    TransferDone(u64),
+    DecodeStep,
+}
+
+/// Heap entry ordered by virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Timed {
+    t: Micros,
+    seq: u64,
+    ev: Event,
+}
+
+impl Eq for Timed {}
+
+impl Ord for Timed {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for Timed {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The assembled serving simulation.
+pub struct ServeSim {
+    pub cfg: Config,
+    pub opts: SimOptions,
+    pub requests: Vec<RequestState>,
+    router: Router,
+    prefills: Vec<PrefillInstance>,
+    decode: DecodeInstance,
+    admission: AdmissionQueue,
+    transfers: TransferScheduler,
+    pool: MemPool,
+    context_cache: Option<ContextCache>,
+    /// Per-prefill-instance batch in flight: (requests, completion handled
+    /// at PrefillDone).
+    inflight_batches: Vec<Option<crate::coordinator::prefill::PrefillBatch>>,
+    eplb_imbalance: f64,
+    heap: BinaryHeap<Reverse<Timed>>,
+    seq: u64,
+    now: Micros,
+    decode_step_pending: bool,
+    // metrics
+    ttft: Histogram,
+    tpot: Histogram,
+    pub cache_fetch_us_total: f64,
+    pub finished: usize,
+    /// Peak prefill-queue imbalance observed across arrivals.
+    pub peak_router_imbalance: f64,
+    /// Prompt tokens recomputed because a KV-centric reroute forfeited
+    /// the locally-cached prefix.
+    pub recomputed_tokens: u64,
+}
+
+impl ServeSim {
+    pub fn new(cfg: Config, opts: SimOptions, trace: Vec<Request>) -> ServeSim {
+        let s = &cfg.serving;
+        let n_pf = s.prefill_instances;
+        let prefills = (0..n_pf).map(|i| PrefillInstance::new(i, s.npus_per_prefill)).collect();
+
+        // memory pool across all host CPUs of the deployment's nodes
+        let pool_nodes = (s.total_npus() / cfg.topo.npus_per_node).max(2);
+        let dram_per_server = 64u64 << 30;
+        let ssd_per_server = 256u64 << 30;
+        let mut pool = MemPool::new(pool_nodes, dram_per_server, ssd_per_server);
+
+        let context_cache = if s.context_caching {
+            Some(ContextCache::new(
+                &mut pool,
+                256,
+                cfg.model.kv_bytes_per_token(),
+                s.cache_over_ub,
+            ))
+        } else {
+            None
+        };
+
+        // EPLB: measure skewed activation, place experts, derive imbalance
+        let mut ea = ExpertActivation::new(opts.seed ^ 0xE9, cfg.model.n_routed_experts, 1.05);
+        let hist = ea.batch_histogram(8192, cfg.model.top_k);
+        let redundant = s
+            .decode_redundant_experts
+            .min(s.decode_ep_degree().saturating_sub(cfg.model.n_routed_experts));
+        let eplb_imbalance =
+            eplb::deployment_imbalance(&hist, s.decode_ep_degree(), redundant).min(1.6);
+
+        let plan = plan_for_slo(
+            &cfg.die,
+            &cfg.model,
+            &DecodePoint {
+                kv_len: 4096,
+                ep: s.decode_ep_degree(),
+                microbatch: s.microbatch,
+                mtp: s.mtp,
+                mtp_acceptance: s.mtp_acceptance,
+                eplb_imbalance,
+                batch_per_npu: 1,
+            },
+            &s.slo,
+            s.decode_npus,
+        );
+        let decode = DecodeInstance::new(s.decode_npus, plan.max_concurrent, opts.seed ^ 0xD);
+
+        let mut sim = ServeSim {
+            router: Router::new(opts.router, n_pf),
+            prefills,
+            decode,
+            admission: AdmissionQueue::default(),
+            transfers: TransferScheduler::default(),
+            pool,
+            context_cache,
+            inflight_batches: vec![None; n_pf],
+            eplb_imbalance,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            decode_step_pending: false,
+            ttft: Histogram::new(),
+            tpot: Histogram::new(),
+            cache_fetch_us_total: 0.0,
+            finished: 0,
+            peak_router_imbalance: 1.0,
+            recomputed_tokens: 0,
+            requests: trace.into_iter().map(RequestState::new).collect(),
+            cfg,
+            opts,
+        };
+        for i in 0..sim.requests.len() {
+            let t = sim.requests[i].spec.arrival_us;
+            sim.push(t, Event::Arrival(i));
+        }
+        sim
+    }
+
+    fn push(&mut self, t: Micros, ev: Event) {
+        self.seq += 1;
+        self.heap.push(Reverse(Timed { t, seq: self.seq, ev }));
+    }
+
+    /// Run to completion (or the event cap). Returns the serving report.
+    pub fn run(&mut self) -> ServingReport {
+        let mut events = 0usize;
+        while let Some(Reverse(Timed { t, ev, .. })) = self.heap.pop() {
+            self.now = t;
+            events += 1;
+            if events > self.opts.max_events {
+                log::warn!("event cap reached at t={t}");
+                break;
+            }
+            match ev {
+                Event::Arrival(idx) => self.on_arrival(idx),
+                Event::PrefillKick(inst) => self.kick_prefill(inst),
+                Event::PrefillDone(inst) => self.on_prefill_done(inst),
+                Event::TransferDone(req) => self.on_transfer_done(req),
+                Event::DecodeStep => self.on_decode_step(),
+            }
+        }
+        self.report()
+    }
+
+    fn on_arrival(&mut self, idx: usize) {
+        // context-cache lookup (prefix reuse) before routing: the P2P
+        // architecture lets ANY instance use the shared cache.
+        let prompt = self.requests[idx].spec.prompt.clone();
+        let prompt_tokens = self.requests[idx].spec.prompt_tokens;
+        let session = self.requests[idx].spec.session;
+
+        let mut reused = 0usize;
+        let mut fetch_us = 0.0;
+        if let Some(cc) = self.context_cache.as_mut() {
+            if !prompt.is_empty() {
+                let hit = cc.lookup(&mut self.pool, &prompt);
+                reused = hit.reused_tokens.min(prompt_tokens.saturating_sub(1));
+                fetch_us = hit.fetch_us;
+            } else {
+                // length-only trace: model reuse via session turns (each
+                // prior turn's prompt prefix is cached)
+                let turn = self.requests[idx].spec.turn;
+                if turn > 0 {
+                    reused = (prompt_tokens * 3 / 4).min(prompt_tokens - 1);
+                    let bytes = reused as u64 * self.cfg.model.kv_bytes_per_token();
+                    let over_ub = cc.over_ub;
+                    let got = self.pool.net.transfer_us(
+                        if over_ub {
+                            crate::netsim::Plane::Ub
+                        } else {
+                            crate::netsim::Plane::Vpc
+                        },
+                        crate::netsim::PathKind::NpuToCpu,
+                        crate::netsim::OpKind::Read,
+                        crate::netsim::Locality::InterNode,
+                        bytes,
+                    );
+                    fetch_us = got;
+                    cc.block_hits += (reused / cc.block_tokens) as u64;
+                    cc.block_misses += 1;
+                }
+            }
+        }
+
+        let compute = prompt_tokens - reused;
+        let decision = self.router.route(session, compute as u64);
+        if !decision.cache_usable {
+            // KV-centric reroute: the local cache is on the wrong node
+            self.recomputed_tokens += reused as u64;
+            reused = 0;
+            fetch_us = 0.0;
+        }
+        self.cache_fetch_us_total += fetch_us;
+        self.peak_router_imbalance = self.peak_router_imbalance.max(self.router.imbalance());
+
+        let st = &mut self.requests[idx];
+        st.reused_tokens = reused;
+        st.prefill_instance = Some(decision.instance);
+        st.phase = RequestPhase::QueuedPrefill;
+        let ct = st.compute_tokens();
+        let pl = st.spec.prompt_tokens;
+        self.prefills[decision.instance].enqueue(idx as u64, ct, pl);
+        self.push(self.now + fetch_us, Event::PrefillKick(decision.instance));
+    }
+
+    fn kick_prefill(&mut self, inst: usize) {
+        if self.inflight_batches[inst].is_some() {
+            return; // busy; PrefillDone will re-kick
+        }
+        let Some(batch) = self.prefills[inst].form_batch(self.opts.prefill_tokens_per_npu) else {
+            return;
+        };
+        let lat = batch_latency_us(
+            &self.cfg.die,
+            &self.cfg.model,
+            &self.cfg.serving,
+            &batch,
+            self.cfg.serving.npus_per_prefill,
+            self.eplb_imbalance,
+        );
+        for &rid in &batch.requests {
+            let st = &mut self.requests[rid as usize];
+            st.phase = RequestPhase::Prefilling;
+            st.t_prefill_start = Some(self.now);
+        }
+        self.inflight_batches[inst] = Some(batch);
+        self.prefills[inst].busy_until = self.now + lat;
+        self.push(self.now + lat, Event::PrefillDone(inst));
+    }
+
+    fn on_prefill_done(&mut self, inst: usize) {
+        let Some(batch) = self.inflight_batches[inst].take() else {
+            return;
+        };
+        self.router.complete(inst, batch.compute_tokens as u64);
+        // store the new KV blocks back to the context cache (async; cost
+        // charged to the pool but does not extend the critical path)
+        if let Some(cc) = self.context_cache.as_mut() {
+            for &rid in &batch.requests {
+                let prompt = self.requests[rid as usize].spec.prompt.clone();
+                if !prompt.is_empty() {
+                    cc.store(&mut self.pool, &prompt);
+                }
+            }
+        }
+        for &rid in &batch.requests {
+            let st = &mut self.requests[rid as usize];
+            // prefill emits the request's first output token
+            st.t_first_token = Some(self.now);
+            st.t_last_token = Some(self.now);
+            st.generated = 1;
+            self.ttft.record(st.ttft_us().unwrap());
+            if st.is_done() {
+                st.phase = RequestPhase::Finished;
+                st.t_finished = Some(self.now);
+                self.finished += 1;
+                continue;
+            }
+            st.phase = RequestPhase::Transferring;
+            let cost = kv_transfer(&self.pool.net, &self.cfg.model, st.spec.prompt_tokens);
+            let done = self.transfers.begin(rid, self.now, &cost);
+            self.push(done, Event::TransferDone(rid));
+        }
+        // more work queued?
+        self.push(self.now, Event::PrefillKick(inst));
+    }
+
+    fn on_transfer_done(&mut self, rid: u64) {
+        self.transfers.poll(self.now);
+        let st = &mut self.requests[rid as usize];
+        st.phase = RequestPhase::QueuedDecode;
+        self.admission.push(rid);
+        if !self.decode_step_pending {
+            self.decode_step_pending = true;
+            self.push(self.now, Event::DecodeStep);
+        }
+    }
+
+    fn on_decode_step(&mut self) {
+        // admit waiting requests into free slots (continuous batching)
+        let free = self.decode.free_slots();
+        for rid in self.admission.admit(free) {
+            let st = &mut self.requests[rid as usize];
+            st.phase = RequestPhase::Decoding;
+            let remaining = st.spec.output_tokens.saturating_sub(st.generated).max(1);
+            self.decode.admit(rid, st.spec.prompt_tokens + st.generated, remaining);
+        }
+        if self.decode.slots.is_empty() {
+            self.decode_step_pending = false;
+            return;
+        }
+        let model = self.decode.step_model(
+            &self.cfg.die,
+            &self.cfg.model,
+            &self.cfg.serving,
+            self.eplb_imbalance,
+        );
+        let step_end = self.now + model.step_us;
+        let emits = self.decode.step(&self.cfg.serving);
+        for e in emits {
+            let st = &mut self.requests[e.request as usize];
+            let last = st.t_last_token.unwrap_or(self.now);
+            let per_tok = (step_end - last) / e.tokens as f64;
+            for _ in 0..e.tokens {
+                self.tpot.record(per_tok);
+            }
+            st.generated += e.tokens;
+            st.t_last_token = Some(step_end);
+            if e.finished {
+                st.phase = RequestPhase::Finished;
+                st.t_finished = Some(step_end);
+                self.finished += 1;
+            }
+        }
+        self.push(step_end, Event::DecodeStep);
+    }
+
+    fn report(&self) -> ServingReport {
+        let duration = self
+            .requests
+            .iter()
+            .filter_map(|r| r.t_finished)
+            .fold(0.0f64, f64::max)
+            .max(self.now);
+        let prompt_tokens: u64 =
+            self.requests.iter().filter(|r| r.t_first_token.is_some()).map(|r| r.spec.prompt_tokens as u64).sum();
+        let output_tokens: u64 = self.requests.iter().map(|r| r.generated as u64).sum();
+        ServingReport {
+            duration_us: duration,
+            requests_completed: self.finished as u64,
+            prompt_tokens,
+            output_tokens,
+            ttft_us: (&self.ttft).into(),
+            tpot_us: (&self.tpot).into(),
+            prefill_npus: self.cfg.serving.prefill_instances * self.cfg.serving.npus_per_prefill,
+            decode_npus: self.cfg.serving.decode_npus,
+        }
+    }
+
+    /// Context-cache hit rate observed during the run.
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.context_cache.as_ref().map(|c| c.hit_rate()).unwrap_or(0.0)
+    }
+
+    /// Router queue imbalance at end of run.
+    pub fn router_imbalance(&self) -> f64 {
+        self.router.imbalance()
+    }
+
+    /// Measured EPLB residual imbalance used by the engine models.
+    pub fn eplb_imbalance(&self) -> f64 {
+        self.eplb_imbalance
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeploymentPreset;
+    use crate::config::ServingConfig;
+    use crate::workload::{generate, WorkloadSpec};
+
+    fn small_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.serving = ServingConfig::preset(DeploymentPreset::Paper256);
+        cfg
+    }
+
+    fn run_with(n: usize, opts: SimOptions) -> (ServingReport, ServeSim) {
+        let cfg = small_cfg();
+        let trace = generate(&WorkloadSpec::paper_default(opts.seed + 1), n);
+        let mut sim = ServeSim::new(cfg, opts, trace);
+        let report = sim.run();
+        (report, sim)
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let (report, _) = run_with(200, SimOptions::default());
+        assert_eq!(report.requests_completed, 200);
+        assert!(report.output_tokens > 0);
+        assert!(report.duration_us > 0.0);
+    }
+
+    #[test]
+    fn every_request_monotone_lifecycle() {
+        let (_, sim) = run_with(100, SimOptions::default());
+        for r in &sim.requests {
+            let first = r.t_first_token.expect("all requests got a first token");
+            assert!(first >= r.spec.arrival_us);
+            let done = r.t_finished.expect("all finished");
+            assert!(done >= first);
+            assert_eq!(r.generated, r.spec.output_tokens.max(1));
+        }
+    }
+
+    #[test]
+    fn tpot_respects_slo_roughly() {
+        let (report, _) = run_with(300, SimOptions::default());
+        // mean TPOT should be under ~1.5x the 50 ms SLO even under load
+        assert!(
+            report.tpot_us.mean < 75_000.0,
+            "mean TPOT {:.1} ms",
+            report.tpot_us.mean / 1000.0
+        );
+    }
+
+    #[test]
+    fn p2p_beats_kv_centric_on_balance() {
+        let p2p = run_with(400, SimOptions { seed: 5, ..SimOptions::default() });
+        let kvc = run_with(
+            400,
+            SimOptions {
+                seed: 5,
+                router: RouterKind::KvCentric { overload_factor: 3.0 },
+                ..SimOptions::default()
+            },
+        );
+        // KV-centric must not *beat* P2P on TTFT; typically it is worse
+        assert!(
+            kvc.0.ttft_us.p99 >= p2p.0.ttft_us.p99 * 0.9,
+            "p2p p99 {:.0} kvc p99 {:.0}",
+            p2p.0.ttft_us.p99,
+            kvc.0.ttft_us.p99
+        );
+    }
+
+    #[test]
+    fn context_cache_reduces_prefill_work() {
+        let mut with = small_cfg();
+        with.serving.context_caching = true;
+        let mut without = small_cfg();
+        without.serving.context_caching = false;
+        let trace = generate(&WorkloadSpec::paper_default(9), 300);
+        let r_with = ServeSim::new(with, SimOptions::default(), trace.clone()).run();
+        let r_without = ServeSim::new(without, SimOptions::default(), trace).run();
+        // same completed tokens, faster (or equal) end-to-end with caching
+        assert_eq!(r_with.requests_completed, r_without.requests_completed);
+        assert!(
+            r_with.ttft_us.mean <= r_without.ttft_us.mean * 1.02,
+            "cache should not hurt TTFT: {} vs {}",
+            r_with.ttft_us.mean,
+            r_without.ttft_us.mean
+        );
+    }
+}

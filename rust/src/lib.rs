@@ -1,0 +1,38 @@
+//! # cm-infer — CloudMatrix-Infer reproduction
+//!
+//! A three-layer reproduction of *"Serving Large Language Models on Huawei
+//! CloudMatrix384"* (Zuo et al., 2025):
+//!
+//! * **Layer 3 (this crate)** — the paper's serving system: a peer-to-peer
+//!   prefill–decode–caching (PDC) disaggregated coordinator, large-scale
+//!   expert parallelism (LEP), microbatch pipelines, MTP speculative
+//!   decoding, a UB-driven disaggregated memory pool with context/model
+//!   caching, and a calibrated discrete simulation of the CloudMatrix384
+//!   supernode substrate (topology, network planes, Ascend 910C dies).
+//! * **Layer 2/1 (python/, build-time only)** — a JAX MoE transformer with
+//!   MLA attention and Pallas kernels, AOT-lowered to HLO text artifacts
+//!   that [`runtime`] loads and executes through PJRT. Python never runs on
+//!   the request path.
+//!
+//! See DESIGN.md for the full system inventory and the per-experiment index
+//! mapping every paper table/figure to a module and bench target.
+
+pub mod benchlib;
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod mempool;
+pub mod metrics;
+pub mod netsim;
+pub mod proptest;
+pub mod runtime;
+pub mod simnpu;
+pub mod topology;
+pub mod util;
+pub mod workload;
+
+/// Microseconds as the simulation's native time unit (paper reports µs).
+pub type Micros = f64;
+
+/// Bytes.
+pub type Bytes = u64;

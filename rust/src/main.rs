@@ -1,0 +1,218 @@
+//! cm-infer CLI: serve / simulate / inspect entry points.
+//!
+//! Subcommands (hand-rolled parsing; clap is not vendored — DESIGN.md §1):
+//!   info                         — load artifacts, print model + runtime info
+//!   generate [--int8] [--prompt-len N] [--steps N]
+//!                                — run real prefill+decode through PJRT
+//!   simulate [--preset NAME]     — run the PDC serving simulation
+//!   tables                       — regenerate all paper tables (also via
+//!                                  `cargo bench`)
+
+use anyhow::{bail, Result};
+
+use cm_infer::runtime::{DecodeState, ModelRuntime, Variant};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => info(&args[1..]),
+        "generate" => generate(&args[1..]),
+        "simulate" => simulate(&args[1..]),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "cm-infer — CloudMatrix-Infer reproduction\n\
+         \n\
+         USAGE: cm-infer <subcommand> [flags]\n\
+         \n\
+         SUBCOMMANDS:\n\
+         \x20 info                      load artifacts, print model info\n\
+         \x20 generate [--int8] [--steps N] [--prompt-len N]\n\
+         \x20                           real prefill+decode through PJRT\n\
+         \x20 simulate [--npus N] [--requests N] [--seed N]\n\
+         \x20                           PDC serving simulation (CloudMatrix384)\n\
+         \n\
+         Run `make artifacts` first; benches: `cargo bench` (paper tables)."
+    );
+}
+
+fn flag_val(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn artifacts_dir() -> String {
+    std::env::var("CM_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn info(_args: &[String]) -> Result<()> {
+    let m = cm_infer::runtime::Manifest::load(artifacts_dir())?;
+    println!("model: {} params", m.model.n_params);
+    println!(
+        "  d_model={} layers={} heads={} d_c={} d_rope={} vocab={}",
+        m.model.d_model, m.model.n_layers, m.model.n_heads, m.model.d_c,
+        m.model.d_rope, m.model.vocab_size
+    );
+    println!(
+        "  prefill_seq={} max_seq={} decode_batch={}",
+        m.model.prefill_seq, m.model.max_seq, m.model.decode_batch
+    );
+    println!("  kv bytes/token = {}", m.model.kv_bytes_per_token());
+    println!("  MTP acceptance (measured at AOT time) = {:.3}", m.mtp_acceptance);
+    println!("artifacts:");
+    for (name, a) in &m.artifacts {
+        println!("  {name}: {}", a.file);
+    }
+    Ok(())
+}
+
+fn generate(args: &[String]) -> Result<()> {
+    let variant = if has_flag(args, "--int8") { Variant::Int8 } else { Variant::Fp };
+    let steps: usize = flag_val(args, "--steps").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let prompt_len: usize =
+        flag_val(args, "--prompt-len").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let mtp = has_flag(args, "--mtp");
+
+    println!("[generate] loading + compiling artifacts ({})...", variant.tag());
+    let rt = ModelRuntime::load(artifacts_dir(), variant)?;
+    println!(
+        "[generate] platform={} compile={}ms weights={:.1}MB",
+        rt.platform(),
+        rt.compile_ms,
+        rt.weight_bytes() as f64 / 1e6
+    );
+
+    // synthetic prompt from the training corpus distribution
+    let prompt: Vec<i32> =
+        (0..prompt_len).map(|i| ((i * 997 + 13) % rt.manifest.model.vocab_size) as i32).collect();
+
+    let pf = rt.prefill(&prompt)?;
+    let first = argmax(&pf.logits);
+    println!("[generate] prefill: {}us, first token {first}", pf.latency_us);
+
+    let mut st = DecodeState::new(&rt.manifest);
+    for lane in 0..st.batch {
+        st.load_lane(lane, &pf, first, prompt_len);
+    }
+
+    let mut tokens = vec![first];
+    for step in 0..steps {
+        let out =
+            if mtp { rt.decode_step_mtp(&mut st)? } else { rt.decode_step(&mut st)? };
+        tokens.push(out.next_tokens[0]);
+        if step < 3 || step == steps - 1 {
+            println!(
+                "[generate] step {step}: {}us tokens={:?}{}",
+                out.latency_us,
+                &out.next_tokens[..2.min(out.next_tokens.len())],
+                if out.spec_tokens.is_empty() {
+                    String::new()
+                } else {
+                    format!(" spec={:?}", &out.spec_tokens[..2.min(out.spec_tokens.len())])
+                }
+            );
+        }
+    }
+    println!("[generate] sequence: {tokens:?}");
+    Ok(())
+}
+
+fn simulate(args: &[String]) -> Result<()> {
+    use cm_infer::config::Config;
+    use cm_infer::coordinator::router::RouterKind;
+    use cm_infer::coordinator::sim::{ServeSim, SimOptions};
+    use cm_infer::workload::{generate, WorkloadSpec};
+
+    let n: usize = flag_val(args, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(500);
+    let seed: u64 = flag_val(args, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let kv_centric = has_flag(args, "--kv-centric");
+
+    let mut cfg = Config::default();
+    if let Some(path) = flag_val(args, "--config") {
+        cfg = Config::from_toml_file(path)?;
+    }
+    if let Some(npus) = flag_val(args, "--decode-npus") {
+        cfg.serving.decode_npus = npus.parse()?;
+    }
+    if let Some(slo) = flag_val(args, "--tpot-ms") {
+        cfg.serving.slo.tpot_ms = slo.parse()?;
+    }
+    if has_flag(args, "--no-mtp") {
+        cfg.serving.mtp = false;
+    }
+    if has_flag(args, "--no-microbatch") {
+        cfg.serving.microbatch = false;
+    }
+
+    println!(
+        "[simulate] CloudMatrix384 PDC deployment: {} prefill NPUs ({} x {}), {} decode NPUs (EP{}), TPOT SLO {} ms",
+        cfg.serving.prefill_instances * cfg.serving.npus_per_prefill,
+        cfg.serving.prefill_instances,
+        cfg.serving.npus_per_prefill,
+        cfg.serving.decode_npus,
+        cfg.serving.decode_ep_degree(),
+        cfg.serving.slo.tpot_ms
+    );
+    let trace = generate(&WorkloadSpec::paper_default(seed), n);
+    let opts = SimOptions {
+        router: if kv_centric {
+            RouterKind::KvCentric { overload_factor: 3.0 }
+        } else {
+            RouterKind::PeerToPeer
+        },
+        seed,
+        ..SimOptions::default()
+    };
+    let mut sim = ServeSim::new(cfg, opts, trace);
+    let r = sim.run();
+    println!("[simulate] {} requests in {:.2} s virtual", r.requests_completed, r.duration_us / 1e6);
+    println!(
+        "  prompt tokens {}  output tokens {}",
+        r.prompt_tokens, r.output_tokens
+    );
+    println!(
+        "  prefill: {:.0} tok/s/NPU   decode: {:.0} tok/s/NPU",
+        r.prefill_tokens_per_s_per_npu(),
+        r.decode_tokens_per_s_per_npu()
+    );
+    println!(
+        "  TTFT ms: mean {:.1} p50 {:.1} p99 {:.1}",
+        r.ttft_us.mean / 1e3,
+        r.ttft_us.p50 / 1e3,
+        r.ttft_us.p99 / 1e3
+    );
+    println!(
+        "  TPOT ms: mean {:.1} p50 {:.1} p99 {:.1}",
+        r.tpot_us.mean / 1e3,
+        r.tpot_us.p50 / 1e3,
+        r.tpot_us.p99 / 1e3
+    );
+    println!(
+        "  cache hit rate {:.2}  peak queue imbalance {:.2}  EPLB imbalance {:.2}",
+        sim.cache_hit_rate(),
+        sim.peak_router_imbalance,
+        sim.eplb_imbalance()
+    );
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}

@@ -1,0 +1,183 @@
+//! MP Controller (paper §4.4.1): the centralized control plane holding the
+//! DHT view (consistent hashing with virtual nodes), namespace metadata and
+//! membership. Placement is *computed* by SDK clients from the view — the
+//! controller is not on the data path, matching the paper's design.
+
+use std::collections::BTreeMap;
+
+use super::Key;
+
+/// Namespace identity (Context Caching vs Model Caching instances, tenants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NamespaceId(pub u32);
+
+/// Namespace metadata.
+#[derive(Debug, Clone)]
+pub struct Namespace {
+    pub id: NamespaceId,
+    pub name: String,
+    /// Optional byte quota ("capacity usage limitation", §4.4.1).
+    pub quota_bytes: Option<u64>,
+}
+
+/// Consistent-hash ring view distributed to SDK clients.
+#[derive(Debug, Clone)]
+pub struct DhtView {
+    /// (ring position, server id), sorted by position.
+    ring: Vec<(u64, usize)>,
+    pub epoch: u64,
+}
+
+const VNODES_PER_SERVER: usize = 64;
+
+fn vnode_pos(server: usize, replica: usize) -> u64 {
+    // splitmix-style mix of (server, replica)
+    let mut x = (server as u64) << 32 | replica as u64;
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+impl DhtView {
+    pub fn new(servers: &[usize]) -> DhtView {
+        let mut ring = Vec::with_capacity(servers.len() * VNODES_PER_SERVER);
+        for &s in servers {
+            for r in 0..VNODES_PER_SERVER {
+                ring.push((vnode_pos(s, r), s));
+            }
+        }
+        ring.sort_unstable();
+        DhtView { ring, epoch: 0 }
+    }
+
+    /// Owning server for a key: first vnode clockwise from the key's hash.
+    pub fn place(&self, key: Key) -> usize {
+        assert!(!self.ring.is_empty(), "empty DHT ring");
+        let h = (key.0 >> 64) as u64 ^ key.0 as u64;
+        match self.ring.binary_search_by(|&(pos, _)| pos.cmp(&h)) {
+            Ok(i) => self.ring[i].1,
+            Err(i) => self.ring[i % self.ring.len()].1,
+        }
+    }
+
+    /// Remove a failed server from the ring (its keys re-home clockwise).
+    pub fn remove_server(&mut self, server: usize) {
+        self.ring.retain(|&(_, s)| s != server);
+        self.epoch += 1;
+    }
+
+    pub fn server_count(&self) -> usize {
+        let mut ids: Vec<usize> = self.ring.iter().map(|&(_, s)| s).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+}
+
+/// The control plane.
+#[derive(Debug)]
+pub struct Controller {
+    pub view: DhtView,
+    namespaces: BTreeMap<NamespaceId, Namespace>,
+    next_ns: u32,
+}
+
+impl Controller {
+    pub fn new(n_servers: usize) -> Controller {
+        let servers: Vec<usize> = (0..n_servers).collect();
+        Controller { view: DhtView::new(&servers), namespaces: BTreeMap::new(), next_ns: 1 }
+    }
+
+    pub fn create_namespace(&mut self, name: &str) -> NamespaceId {
+        self.create_namespace_with_quota(name, None)
+    }
+
+    pub fn create_namespace_with_quota(
+        &mut self,
+        name: &str,
+        quota_bytes: Option<u64>,
+    ) -> NamespaceId {
+        let id = NamespaceId(self.next_ns);
+        self.next_ns += 1;
+        self.namespaces.insert(id, Namespace { id, name: name.to_string(), quota_bytes });
+        id
+    }
+
+    pub fn namespace(&self, id: NamespaceId) -> Option<&Namespace> {
+        self.namespaces.get(&id)
+    }
+
+    pub fn delete_namespace(&mut self, id: NamespaceId) -> bool {
+        self.namespaces.remove(&id).is_some()
+    }
+
+    /// SDK-side placement through the current view.
+    pub fn place(&self, key: Key) -> usize {
+        self.view.place(key)
+    }
+
+    /// Membership change on failure.
+    pub fn mark_failed(&mut self, server: usize) {
+        self.view.remove_server(server);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_is_deterministic_and_covers_servers() {
+        let c = Controller::new(8);
+        let mut seen = vec![false; 8];
+        for i in 0..2000u32 {
+            let k = Key::of_bytes(&i.to_le_bytes());
+            let s = c.place(k);
+            assert_eq!(s, c.place(k));
+            seen[s] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all servers should own some keys");
+    }
+
+    #[test]
+    fn placement_is_balanced() {
+        let c = Controller::new(8);
+        let mut counts = vec![0usize; 8];
+        for i in 0..8000u32 {
+            counts[c.place(Key::of_bytes(&i.to_le_bytes()))] += 1;
+        }
+        let min = *counts.iter().min().unwrap() as f64;
+        let max = *counts.iter().max().unwrap() as f64;
+        assert!(max / min < 2.0, "imbalanced ring: {counts:?}");
+    }
+
+    #[test]
+    fn removal_only_rehomes_victims_keys() {
+        let mut c = Controller::new(8);
+        let keys: Vec<Key> = (0..4000u32).map(|i| Key::of_bytes(&i.to_le_bytes())).collect();
+        let before: Vec<usize> = keys.iter().map(|&k| c.place(k)).collect();
+        c.mark_failed(3);
+        let mut moved_not_from_victim = 0;
+        for (k, &b) in keys.iter().zip(&before) {
+            let a = c.place(*k);
+            assert_ne!(a, 3, "failed server still owns keys");
+            if b != 3 && a != b {
+                moved_not_from_victim += 1;
+            }
+        }
+        // consistent hashing: only the victim's keys move
+        assert_eq!(moved_not_from_victim, 0);
+        assert_eq!(c.view.server_count(), 7);
+    }
+
+    #[test]
+    fn namespace_lifecycle() {
+        let mut c = Controller::new(2);
+        let ns = c.create_namespace_with_quota("kv", Some(1 << 30));
+        assert_eq!(c.namespace(ns).unwrap().name, "kv");
+        assert_eq!(c.namespace(ns).unwrap().quota_bytes, Some(1 << 30));
+        assert!(c.delete_namespace(ns));
+        assert!(c.namespace(ns).is_none());
+        assert!(!c.delete_namespace(ns));
+    }
+}

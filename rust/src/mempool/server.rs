@@ -1,0 +1,350 @@
+//! MP Server (paper §4.4.1): per-node memory management — huge-page arena
+//! accounting, multi-granularity allocation, DRAM→SSD (EVS) tiering with
+//! LRU eviction, persistence and crash recovery.
+//!
+//! Data is tracked by (namespace, key) → block descriptor; payloads are
+//! simulated by size. Allocation models the paper's huge-page + variable-
+//! length partition scheme by accounting fragmentation at huge-page
+//! granularity for large blocks and slab granularity for small ones.
+
+use std::collections::BTreeMap;
+
+use super::controller::NamespaceId;
+use super::Key;
+
+/// Residency tier of a block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Dram,
+    Ssd,
+}
+
+/// Huge-page size used for large-block accounting (2 MiB).
+pub const HUGE_PAGE: u64 = 2 << 20;
+/// Slab granularity for small blocks (4 KiB).
+pub const SLAB: u64 = 4 << 10;
+
+/// Rounded allocation footprint of a block (multi-granularity alloc).
+pub fn alloc_footprint(bytes: u64) -> u64 {
+    if bytes >= HUGE_PAGE {
+        bytes.div_ceil(HUGE_PAGE) * HUGE_PAGE
+    } else {
+        bytes.div_ceil(SLAB) * SLAB
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Block {
+    bytes: u64,
+    tier: Tier,
+    /// Persisted to EVS (write-through, §4.4.1 "persistence is enforced by
+    /// writing all data to EVS").
+    persisted: bool,
+    /// LRU stamp: monotonic access counter (O(log n) LRU via `lru_index`).
+    last_used: u64,
+}
+
+/// Result of a Get against one server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GetResult {
+    Dram(u64),
+    Ssd(u64),
+    Miss,
+}
+
+/// Result of a Put.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PutOutcome {
+    Stored,
+    /// Needed LRU eviction(s) to make room.
+    EvictedThenStored,
+    /// Identical key already present (content-addressed dedup).
+    AlreadyPresent,
+    /// Larger than total capacity.
+    Rejected,
+}
+
+/// Aggregatable server statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerStats {
+    pub dram_used: u64,
+    pub ssd_used: u64,
+    pub blocks_dram: usize,
+    pub blocks_ssd: usize,
+    pub evictions_to_ssd: u64,
+    pub evictions_dropped: u64,
+    pub dedup_hits: u64,
+}
+
+/// One DRAM-contributing node of the pool.
+///
+/// LRU is index-based (Perf pass, EXPERIMENTS.md §Perf): a monotonic access
+/// counter stamps each DRAM block; `lru_index` maps stamp → block id, so
+/// touch and evict are O(log n) instead of the original O(n) VecDeque scan
+/// that dominated the pool hot path.
+#[derive(Debug)]
+pub struct Server {
+    pub id: usize,
+    dram_capacity: u64,
+    ssd_capacity: u64,
+    dram_used: u64,
+    ssd_used: u64,
+    blocks: BTreeMap<(NamespaceId, Key), Block>,
+    /// stamp → DRAM-resident block id (coldest = smallest stamp).
+    lru_index: BTreeMap<u64, (NamespaceId, Key)>,
+    clock: u64,
+    stats: ServerStats,
+}
+
+impl Server {
+    pub fn new(id: usize, dram_capacity: u64, ssd_capacity: u64) -> Server {
+        Server {
+            id,
+            dram_capacity,
+            ssd_capacity,
+            dram_used: 0,
+            ssd_used: 0,
+            blocks: BTreeMap::new(),
+            lru_index: BTreeMap::new(),
+            clock: 0,
+            stats: ServerStats::default(),
+        }
+    }
+
+    fn touch(&mut self, id: (NamespaceId, Key)) {
+        self.clock += 1;
+        let stamp = self.clock;
+        if let Some(block) = self.blocks.get_mut(&id) {
+            self.lru_index.remove(&block.last_used);
+            block.last_used = stamp;
+        }
+        self.lru_index.insert(stamp, id);
+    }
+
+    /// Evict coldest DRAM blocks until `needed` bytes fit; demote to SSD if
+    /// space allows, else drop entirely (LRU policy, §4.4.1).
+    fn make_room(&mut self, needed: u64) -> bool {
+        if needed > self.dram_capacity {
+            return false;
+        }
+        while self.dram_used + needed > self.dram_capacity {
+            let Some((&stamp, &victim)) = self.lru_index.iter().next() else {
+                return false;
+            };
+            self.lru_index.remove(&stamp);
+            let Some(block) = self.blocks.get_mut(&victim) else {
+                continue;
+            };
+            let fp = alloc_footprint(block.bytes);
+            self.dram_used -= fp;
+            if block.persisted && self.ssd_used + fp <= self.ssd_capacity {
+                block.tier = Tier::Ssd;
+                // EVS copy already exists (write-through) — no extra bytes
+                self.stats.evictions_to_ssd += 1;
+            } else if self.ssd_used + fp <= self.ssd_capacity {
+                block.tier = Tier::Ssd;
+                self.ssd_used += fp;
+                self.stats.evictions_to_ssd += 1;
+            } else {
+                self.blocks.remove(&victim);
+                self.stats.evictions_dropped += 1;
+            }
+        }
+        true
+    }
+
+    pub fn put(&mut self, ns: NamespaceId, key: Key, bytes: u64) -> PutOutcome {
+        let id = (ns, key);
+        if self.blocks.contains_key(&id) {
+            self.stats.dedup_hits += 1;
+            self.touch(id);
+            return PutOutcome::AlreadyPresent;
+        }
+        let fp = alloc_footprint(bytes);
+        let evicted = self.dram_used + fp > self.dram_capacity;
+        if !self.make_room(fp) {
+            return PutOutcome::Rejected;
+        }
+        self.dram_used += fp;
+        // write-through persistence to EVS when it has room
+        let persisted = self.ssd_used + fp <= self.ssd_capacity;
+        if persisted {
+            self.ssd_used += fp;
+        }
+        self.clock += 1;
+        let stamp = self.clock;
+        self.blocks.insert(id, Block { bytes, tier: Tier::Dram, persisted, last_used: stamp });
+        self.lru_index.insert(stamp, id);
+        if evicted {
+            PutOutcome::EvictedThenStored
+        } else {
+            PutOutcome::Stored
+        }
+    }
+
+    pub fn get(&mut self, ns: NamespaceId, key: Key) -> GetResult {
+        let id = (ns, key);
+        let Some(block) = self.blocks.get(&id) else {
+            return GetResult::Miss;
+        };
+        let bytes = block.bytes;
+        match block.tier {
+            Tier::Dram => {
+                self.touch(id);
+                GetResult::Dram(bytes)
+            }
+            Tier::Ssd => {
+                // promote back to DRAM if possible (re-warm)
+                let fp = alloc_footprint(bytes);
+                if self.make_room(fp) {
+                    self.dram_used += fp;
+                    self.clock += 1;
+                    let stamp = self.clock;
+                    let b = self.blocks.get_mut(&id).unwrap();
+                    b.tier = Tier::Dram;
+                    b.last_used = stamp;
+                    self.lru_index.insert(stamp, id);
+                }
+                GetResult::Ssd(bytes)
+            }
+        }
+    }
+
+    pub fn delete(&mut self, ns: NamespaceId, key: Key) -> bool {
+        let id = (ns, key);
+        if let Some(block) = self.blocks.remove(&id) {
+            let fp = alloc_footprint(block.bytes);
+            if block.tier == Tier::Dram {
+                self.dram_used -= fp;
+                self.lru_index.remove(&block.last_used);
+            }
+            if block.persisted || block.tier == Tier::Ssd {
+                self.ssd_used = self.ssd_used.saturating_sub(fp);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Crash: volatile DRAM lost; persisted blocks survive on EVS and are
+    /// served from the SSD tier. Returns (lost, recoverable).
+    pub fn crash(&mut self) -> (usize, usize) {
+        let mut lost = 0;
+        let mut recoverable = 0;
+        self.lru_index.clear();
+        self.dram_used = 0;
+        self.blocks.retain(|_, b| {
+            if b.persisted {
+                b.tier = Tier::Ssd;
+                recoverable += 1;
+                true
+            } else {
+                lost += 1;
+                false
+            }
+        });
+        (lost, recoverable)
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let mut s = self.stats;
+        s.dram_used = self.dram_used;
+        s.ssd_used = self.ssd_used;
+        s.blocks_dram = self.blocks.values().filter(|b| b.tier == Tier::Dram).count();
+        s.blocks_ssd = self.blocks.values().filter(|b| b.tier == Tier::Ssd).count();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ns() -> NamespaceId {
+        NamespaceId(1)
+    }
+
+    fn key(i: u32) -> Key {
+        Key::of_bytes(&i.to_le_bytes())
+    }
+
+    #[test]
+    fn footprint_granularity() {
+        assert_eq!(alloc_footprint(1), SLAB);
+        assert_eq!(alloc_footprint(SLAB), SLAB);
+        assert_eq!(alloc_footprint(SLAB + 1), 2 * SLAB);
+        assert_eq!(alloc_footprint(HUGE_PAGE), HUGE_PAGE);
+        assert_eq!(alloc_footprint(HUGE_PAGE + 1), 2 * HUGE_PAGE);
+    }
+
+    #[test]
+    fn lru_evicts_coldest_first() {
+        let mut s = Server::new(0, 3 * SLAB, 100 * SLAB);
+        s.put(ns(), key(1), SLAB);
+        s.put(ns(), key(2), SLAB);
+        s.put(ns(), key(3), SLAB);
+        // touch key 1 so key 2 becomes coldest
+        assert!(matches!(s.get(ns(), key(1)), GetResult::Dram(_)));
+        let out = s.put(ns(), key(4), SLAB);
+        assert_eq!(out, PutOutcome::EvictedThenStored);
+        // key 2 went to SSD; key 1 still in DRAM
+        assert!(matches!(s.get(ns(), key(2)), GetResult::Ssd(_)));
+        assert!(matches!(s.get(ns(), key(1)), GetResult::Dram(_) | GetResult::Ssd(_)));
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let mut s = Server::new(0, 2 * SLAB, 0);
+        assert_eq!(s.put(ns(), key(1), 10 * SLAB), PutOutcome::Rejected);
+    }
+
+    #[test]
+    fn ssd_promotion_on_access() {
+        let mut s = Server::new(0, 2 * SLAB, 100 * SLAB);
+        s.put(ns(), key(1), SLAB);
+        s.put(ns(), key(2), SLAB);
+        s.put(ns(), key(3), SLAB); // evicts key 1 to SSD
+        assert!(matches!(s.get(ns(), key(1)), GetResult::Ssd(_)));
+        // second access should find it re-warmed in DRAM
+        assert!(matches!(s.get(ns(), key(1)), GetResult::Dram(_)));
+    }
+
+    #[test]
+    fn delete_frees_space() {
+        let mut s = Server::new(0, 2 * SLAB, 100 * SLAB);
+        s.put(ns(), key(1), SLAB);
+        s.put(ns(), key(2), SLAB);
+        assert!(s.delete(ns(), key(1)));
+        assert!(!s.delete(ns(), key(1)));
+        // room for a new block without eviction
+        assert_eq!(s.put(ns(), key(3), SLAB), PutOutcome::Stored);
+    }
+
+    #[test]
+    fn crash_preserves_persisted_only() {
+        let mut s = Server::new(0, 10 * SLAB, 2 * SLAB); // small SSD
+        s.put(ns(), key(1), SLAB); // persisted (SSD has room)
+        s.put(ns(), key(2), SLAB); // persisted
+        s.put(ns(), key(3), SLAB); // NOT persisted (SSD full)
+        let (lost, recoverable) = s.crash();
+        assert_eq!(lost, 1);
+        assert_eq!(recoverable, 2);
+        assert!(matches!(s.get(ns(), key(1)), GetResult::Ssd(_) | GetResult::Dram(_)));
+        assert_eq!(s.get(ns(), key(3)), GetResult::Miss);
+    }
+
+    #[test]
+    fn accounting_never_goes_negative() {
+        let mut s = Server::new(0, 4 * SLAB, 8 * SLAB);
+        for i in 0..50 {
+            s.put(ns(), key(i), SLAB);
+            if i % 3 == 0 {
+                s.delete(ns(), key(i / 2));
+            }
+        }
+        let st = s.stats();
+        assert!(st.dram_used <= 4 * SLAB);
+        assert!(st.ssd_used <= 8 * SLAB);
+    }
+}

@@ -1,0 +1,250 @@
+//! Serving metrics: latency histograms, throughput counters, run reports.
+//!
+//! `Histogram` is a fixed-layout log-bucketed histogram (hdrhistogram is not
+//! vendored): 1 µs – ~1.2 hours range, ~4% relative bucket width, O(1)
+//! record, exact count/sum.
+
+use std::fmt;
+
+/// Log-bucketed latency histogram over µs values.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// 64 buckets per octave-ish: bucket = floor(log2(v) * SUBDIV)
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const SUBDIV: f64 = 16.0; // buckets per doubling → ~4.4% width
+const NBUCKETS: usize = 32 * 16; // up to 2^32 µs
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; NBUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        let v = v.max(1.0);
+        let b = (v.log2() * SUBDIV) as usize;
+        b.min(NBUCKETS - 1)
+    }
+
+    /// Representative (geometric-mid) value of a bucket.
+    fn bucket_value(b: usize) -> f64 {
+        2f64.powf((b as f64 + 0.5) / SUBDIV)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile in [0, 1]; ±bucket-width accuracy.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::bucket_value(b).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+impl fmt::Display for Histogram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.1} p50={:.1} p99={:.1} max={:.1}",
+            self.count,
+            self.mean(),
+            self.p50(),
+            self.p99(),
+            self.max()
+        )
+    }
+}
+
+/// End-of-run serving report (per paper §5.2 reporting conventions).
+#[derive(Debug, Clone, Default)]
+pub struct ServingReport {
+    /// Wall/virtual time of the run, µs.
+    pub duration_us: f64,
+    pub requests_completed: u64,
+    pub prompt_tokens: u64,
+    pub output_tokens: u64,
+    pub ttft_us: HistogramSnapshot,
+    pub tpot_us: HistogramSnapshot,
+    pub prefill_npus: usize,
+    pub decode_npus: usize,
+}
+
+/// Cheap copyable histogram summary.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl From<&Histogram> for HistogramSnapshot {
+    fn from(h: &Histogram) -> Self {
+        HistogramSnapshot {
+            count: h.count(),
+            mean: h.mean(),
+            p50: h.p50(),
+            p99: h.p99(),
+            max: h.max(),
+        }
+    }
+}
+
+impl ServingReport {
+    /// Prefill throughput in tokens/s per NPU (Table 3's metric).
+    pub fn prefill_tokens_per_s_per_npu(&self) -> f64 {
+        if self.duration_us <= 0.0 || self.prefill_npus == 0 {
+            return 0.0;
+        }
+        self.prompt_tokens as f64 / (self.duration_us / 1e6) / self.prefill_npus as f64
+    }
+
+    /// Decode throughput in tokens/s per NPU (Table 4's metric).
+    pub fn decode_tokens_per_s_per_npu(&self) -> f64 {
+        if self.duration_us <= 0.0 || self.decode_npus == 0 {
+            return 0.0;
+        }
+        self.output_tokens as f64 / (self.duration_us / 1e6) / self.decode_npus as f64
+    }
+
+    /// Tokens/s per TFLOPS — the paper's headline efficiency metric.
+    pub fn tokens_per_s_per_tflops(&self, tput_per_npu: f64, npu_tflops: f64) -> f64 {
+        tput_per_npu / npu_tflops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basics() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 500.5).abs() < 1.0);
+        let p50 = h.p50();
+        assert!((450.0..=560.0).contains(&p50), "p50 {p50}");
+        let p99 = h.p99();
+        assert!((930.0..=1000.0).contains(&p99), "p99 {p99}");
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 1000.0);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(10.0);
+        b.record(1000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), 1000.0);
+        assert_eq!(a.min(), 10.0);
+    }
+
+    #[test]
+    fn quantile_edge_cases() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        let mut h = Histogram::new();
+        h.record(42.0);
+        assert_eq!(h.p50(), 42.0);
+        assert_eq!(h.p99(), 42.0);
+    }
+
+    #[test]
+    fn report_throughput_math() {
+        let r = ServingReport {
+            duration_us: 1e6,
+            prompt_tokens: 16_000,
+            output_tokens: 2_000,
+            prefill_npus: 4,
+            decode_npus: 2,
+            ..Default::default()
+        };
+        assert!((r.prefill_tokens_per_s_per_npu() - 4000.0).abs() < 1e-6);
+        assert!((r.decode_tokens_per_s_per_npu() - 1000.0).abs() < 1e-6);
+    }
+}

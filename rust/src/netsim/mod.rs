@@ -1,0 +1,204 @@
+//! Network simulator: the three CloudMatrix384 planes (§3.2) plus the
+//! persistent-storage backends behind the memory pool (§4.4.1).
+//!
+//! Transfer costs follow the classic α + n/β model with parameters taken
+//! from Table 1 (UB plane, measured 512-B latency and sustained bandwidth),
+//! §3.3 (RDMA and VPC provisioning) and §4.4.3 (OBS bucket bandwidth).
+//! Contention is modeled by fair-share bandwidth division across concurrent
+//! flows on a shared link ([`SharedLink`]).
+
+use crate::config::NetPlaneParams;
+use crate::Micros;
+
+/// The three network planes of a CloudMatrix384 (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Plane {
+    /// Scale-up fabric: all-to-all NPUs + CPUs, the paper's key enabler.
+    Ub,
+    /// Scale-out RDMA (RoCE), NPUs only; carries prefill→decode KV.
+    Rdma,
+    /// Datacenter/VPC plane via the Qingtian card; control + storage.
+    Vpc,
+}
+
+/// Endpoint types for a UB transfer (Table 1 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathKind {
+    NpuToNpu,
+    NpuToCpu,
+}
+
+/// Transfer direction semantics (Table 1 distinguishes read vs write).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Read,
+    Write,
+}
+
+/// Locality of the two endpoints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Locality {
+    IntraNode,
+    InterNode,
+}
+
+/// Full Table 1 parameter set + RDMA/VPC/storage planes.
+#[derive(Debug, Clone)]
+pub struct NetSim {
+    /// UB parameters indexed by (path, op, locality).
+    ub: [[NetPlaneParams; 2]; 4],
+    pub rdma: NetPlaneParams,
+    pub vpc: NetPlaneParams,
+    /// OBS object-store bucket (2.5 GB/s shared per bucket, §4.4.3).
+    pub obs_bucket: NetPlaneParams,
+    /// EVS SSD tier per node (bounded by the 400 Gbps Qingtian path).
+    pub evs_node: NetPlaneParams,
+}
+
+fn ub_index(path: PathKind, op: OpKind) -> usize {
+    match (path, op) {
+        (PathKind::NpuToNpu, OpKind::Read) => 0,
+        (PathKind::NpuToNpu, OpKind::Write) => 1,
+        (PathKind::NpuToCpu, OpKind::Read) => 2,
+        (PathKind::NpuToCpu, OpKind::Write) => 3,
+    }
+}
+
+impl Default for NetSim {
+    /// Parameters straight from Table 1 / §3.3 / §4.4.3.
+    fn default() -> Self {
+        let p = |lat: f64, bw: f64| NetPlaneParams { base_latency_us: lat, bandwidth_gbps: bw };
+        NetSim {
+            ub: [
+                // [intra, inter] per (path, op)
+                [p(1.2, 167.0), p(1.9, 164.0)], // NPU-NPU read
+                [p(1.3, 137.0), p(2.1, 135.0)], // NPU-NPU write
+                [p(1.0, 151.0), p(1.7, 147.0)], // NPU-CPU read
+                [p(1.1, 110.0), p(1.9, 107.0)], // NPU-CPU write
+            ],
+            rdma: p(3.0, 25.0),      // 200 Gbps/die, RoCE startup
+            vpc: p(20.0, 6.25),      // 400 Gbps/node shared by 8 NPUs
+            obs_bucket: p(2000.0, 2.5),
+            evs_node: p(150.0, 50.0),
+        }
+    }
+}
+
+impl NetSim {
+    /// UB parameters for a path/op/locality combination.
+    pub fn ub_params(&self, path: PathKind, op: OpKind, loc: Locality) -> NetPlaneParams {
+        let i = ub_index(path, op);
+        match loc {
+            Locality::IntraNode => self.ub[i][0],
+            Locality::InterNode => self.ub[i][1],
+        }
+    }
+
+    /// One-shot transfer cost over a plane, µs.
+    pub fn transfer_us(
+        &self,
+        plane: Plane,
+        path: PathKind,
+        op: OpKind,
+        loc: Locality,
+        bytes: u64,
+    ) -> Micros {
+        match plane {
+            Plane::Ub => self.ub_params(path, op, loc).transfer_us(bytes),
+            Plane::Rdma => self.rdma.transfer_us(bytes),
+            Plane::Vpc => self.vpc.transfer_us(bytes),
+        }
+    }
+
+    /// Inter/intra degradation ratio for a UB path (Table 1's headline:
+    /// bandwidth within 3%, latency +<1 µs).
+    pub fn ub_degradation(&self, path: PathKind, op: OpKind) -> (f64, f64) {
+        let intra = self.ub_params(path, op, Locality::IntraNode);
+        let inter = self.ub_params(path, op, Locality::InterNode);
+        (
+            inter.bandwidth_gbps / intra.bandwidth_gbps,
+            inter.base_latency_us / intra.base_latency_us,
+        )
+    }
+}
+
+/// Fair-share contention on a shared link: `flows` concurrent transfers
+/// each get `bw/flows`; returns the per-flow transfer time.
+#[derive(Debug, Clone, Copy)]
+pub struct SharedLink {
+    pub params: NetPlaneParams,
+}
+
+impl SharedLink {
+    pub fn new(params: NetPlaneParams) -> Self {
+        SharedLink { params }
+    }
+
+    pub fn transfer_us(&self, bytes: u64, concurrent_flows: usize) -> Micros {
+        let flows = concurrent_flows.max(1) as f64;
+        self.params.base_latency_us + bytes as f64 / (self.params.bandwidth_gbps * 1e3 / flows)
+    }
+
+    /// Aggregate time for `flows` equal transfers sharing the link.
+    pub fn aggregate_us(&self, bytes_each: u64, flows: usize) -> Micros {
+        self.transfer_us(bytes_each, flows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values_wired() {
+        let n = NetSim::default();
+        let p = n.ub_params(PathKind::NpuToNpu, OpKind::Read, Locality::InterNode);
+        assert!((p.bandwidth_gbps - 164.0).abs() < 1e-9);
+        assert!((p.base_latency_us - 1.9).abs() < 1e-9);
+        let p = n.ub_params(PathKind::NpuToCpu, OpKind::Write, Locality::IntraNode);
+        assert!((p.bandwidth_gbps - 110.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degradation_matches_paper() {
+        // Table 1: inter-node bandwidth within 3% of intra, latency < 1 µs
+        // extra (ratio <= ~1.75 at 512 B).
+        let n = NetSim::default();
+        for path in [PathKind::NpuToNpu, PathKind::NpuToCpu] {
+            for op in [OpKind::Read, OpKind::Write] {
+                let (bw_ratio, lat_ratio) = n.ub_degradation(path, op);
+                assert!(bw_ratio > 0.97, "bw degradation too big: {bw_ratio}");
+                assert!(lat_ratio < 1.8, "latency blowup: {lat_ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_scales_linearly() {
+        let n = NetSim::default();
+        let t1 = n.transfer_us(Plane::Ub, PathKind::NpuToNpu, OpKind::Read, Locality::InterNode, 1 << 20);
+        let t2 = n.transfer_us(Plane::Ub, PathKind::NpuToNpu, OpKind::Read, Locality::InterNode, 2 << 20);
+        // doubling payload roughly doubles the bandwidth-dominated total
+        // (base latency dilutes the ratio slightly)
+        assert!(t2 > t1 * 1.6 && t2 < t1 * 2.2, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn ub_beats_vpc_for_cache_reads() {
+        // the Fig 23 premise: pulling a KV block over UB is much faster
+        // than over the VPC plane.
+        let n = NetSim::default();
+        let block = 512 * 1024;
+        let ub = n.transfer_us(Plane::Ub, PathKind::NpuToCpu, OpKind::Read, Locality::InterNode, block);
+        let vpc = n.transfer_us(Plane::Vpc, PathKind::NpuToCpu, OpKind::Read, Locality::InterNode, block);
+        assert!(vpc / ub > 5.0, "ub={ub} vpc={vpc}");
+    }
+
+    #[test]
+    fn shared_link_fair_share() {
+        let l = SharedLink::new(NetPlaneParams { base_latency_us: 1.0, bandwidth_gbps: 10.0 });
+        let alone = l.transfer_us(10_000_000, 1);
+        let shared = l.transfer_us(10_000_000, 4);
+        assert!(shared > alone * 3.5 && shared < alone * 4.5);
+    }
+}

@@ -1,0 +1,302 @@
+//! [`ModelRuntime`]: compiled executables + typed prefill/decode entry
+//! points. One instance per weight variant per process; `Send` across the
+//! coordinator's engine threads (calls are internally serialized by PJRT).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::Manifest;
+use super::weights::{literal_from_bytes, WeightStore};
+
+/// Which weight variant to serve (paper Table 6 compares these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Float32 weights (the "BF16 baseline" at our scale).
+    Fp,
+    /// §4.5 INT8-quantized weights, executed via the Pallas int8 GEMM path.
+    Int8,
+}
+
+impl Variant {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Variant::Fp => "fp",
+            Variant::Int8 => "int8",
+        }
+    }
+}
+
+/// Prefill results: last-token logits + the request's latent KV caches.
+pub struct PrefillOut {
+    pub logits: Vec<f32>,
+    /// [n_layers, 1, max_seq, d_c] flattened.
+    pub c_cache: Vec<f32>,
+    /// [n_layers, 1, max_seq, d_rope] flattened.
+    pub r_cache: Vec<f32>,
+    pub latency_us: u64,
+}
+
+/// Mutable decode-side batch state: token slots + latent caches.
+///
+/// The coordinator owns one `DecodeState` per decode engine; slot `i`
+/// corresponds to batch lane `i` of the decode graph. Lane data is copied in
+/// from prefill output on admission (the paper's prefill→decode KV transfer).
+pub struct DecodeState {
+    pub batch: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub d_c: usize,
+    pub d_rope: usize,
+    pub tokens: Vec<i32>,
+    pub positions: Vec<i32>,
+    /// [n_layers, batch, max_seq, d_c]
+    pub c_cache: Vec<f32>,
+    /// [n_layers, batch, max_seq, d_rope]
+    pub r_cache: Vec<f32>,
+}
+
+impl DecodeState {
+    pub fn new(m: &Manifest) -> Self {
+        let d = &m.model;
+        let b = d.decode_batch;
+        DecodeState {
+            batch: b,
+            n_layers: d.n_layers,
+            max_seq: d.max_seq,
+            d_c: d.d_c,
+            d_rope: d.d_rope,
+            tokens: vec![0; b],
+            positions: vec![0; b],
+            c_cache: vec![0.0; d.n_layers * b * d.max_seq * d.d_c],
+            r_cache: vec![0.0; d.n_layers * b * d.max_seq * d.d_rope],
+        }
+    }
+
+    /// Copy a prefill-produced cache (single-lane layout) into slot `lane`.
+    ///
+    /// This is the data movement the paper routes over the RDMA plane
+    /// (§4.3.3); the netsim models its cost, this does the real copy.
+    pub fn load_lane(&mut self, lane: usize, pf: &PrefillOut, first_token: i32, prompt_len: usize) {
+        assert!(lane < self.batch);
+        let (l, s) = (self.n_layers, self.max_seq);
+        for layer in 0..l {
+            let src = layer * s * self.d_c;
+            let dst = (layer * self.batch + lane) * s * self.d_c;
+            self.c_cache[dst..dst + s * self.d_c]
+                .copy_from_slice(&pf.c_cache[src..src + s * self.d_c]);
+            let src = layer * s * self.d_rope;
+            let dst = (layer * self.batch + lane) * s * self.d_rope;
+            self.r_cache[dst..dst + s * self.d_rope]
+                .copy_from_slice(&pf.r_cache[src..src + s * self.d_rope]);
+        }
+        self.tokens[lane] = first_token;
+        self.positions[lane] = prompt_len as i32;
+    }
+
+    /// Reset a lane to the idle state (position 0, zero cache not required —
+    /// attention masks by position).
+    pub fn clear_lane(&mut self, lane: usize) {
+        self.tokens[lane] = 0;
+        self.positions[lane] = 0;
+    }
+}
+
+/// One decode step's outputs.
+pub struct DecodeOut {
+    pub next_tokens: Vec<i32>,
+    /// Only populated by the MTP graph.
+    pub spec_tokens: Vec<i32>,
+    pub logits: Vec<f32>,
+    pub latency_us: u64,
+}
+
+/// Loaded + compiled model: the serving hot path.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub variant: Variant,
+    client: PjRtClient,
+    executables: BTreeMap<String, PjRtLoadedExecutable>,
+    /// Weight literals per blob, in HLO parameter order (kept for
+    /// re-upload paths and size accounting).
+    weights: Vec<WeightStore>,
+    /// Device-resident weight buffers (Perf pass, EXPERIMENTS.md §Perf):
+    /// uploaded once at load; `execute_b` reuses them every call instead
+    /// of re-transferring ~28 MB of literals per step — the paper's Model
+    /// Caching "pin weights device-side" behaviour.
+    weight_buffers: Vec<PjRtBuffer>,
+    pub compile_ms: u128,
+}
+
+impl ModelRuntime {
+    /// Load artifacts for `variant` from `dir`, compile all graphs.
+    pub fn load(dir: impl AsRef<std::path::Path>, variant: Variant) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(manifest, variant)
+    }
+
+    pub fn from_manifest(manifest: Manifest, variant: Variant) -> Result<ModelRuntime> {
+        let t0 = Instant::now();
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        let names = ["prefill", "decode", "decode_mtp"];
+        let mut executables = BTreeMap::new();
+        let mut blob_names: Vec<String> = Vec::new();
+        for name in names {
+            let key = format!("{name}_{}", variant.tag());
+            let art = manifest.artifact(&key)?;
+            let path = manifest.dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {key}"))?;
+            executables.insert(name.to_string(), exe);
+            if blob_names.is_empty() {
+                blob_names = art.weight_blobs.clone();
+            }
+        }
+
+        let weights = blob_names
+            .iter()
+            .map(|b| WeightStore::load(&manifest, b))
+            .collect::<Result<Vec<_>>>()?;
+
+        // pin weights device-side once (reused by every execute_b call)
+        let mut weight_buffers = Vec::new();
+        for ws in &weights {
+            for lit in &ws.literals {
+                weight_buffers.push(
+                    client
+                        .buffer_from_host_literal(None, lit)
+                        .context("uploading weight buffer")?,
+                );
+            }
+        }
+
+        Ok(ModelRuntime {
+            manifest,
+            variant,
+            client,
+            executables,
+            weights,
+            weight_buffers,
+            compile_ms: t0.elapsed().as_millis(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run(&self, name: &str, dynamic: Vec<Literal>) -> Result<Vec<Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("no executable `{name}`"))?;
+        // device-resident weights + per-call dynamic uploads (execute_b):
+        // avoids re-copying the full weight set on every step.
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(
+            self.weight_buffers.len() + dynamic.len());
+        args.extend(self.weight_buffers.iter());
+        let dyn_buffers = dynamic
+            .iter()
+            .map(|lit| self.client.buffer_from_host_literal(None, lit))
+            .collect::<Result<Vec<_>, _>>()?;
+        args.extend(dyn_buffers.iter());
+        let result = exe.execute_b::<&PjRtBuffer>(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Run the prefill graph on one prompt (padded/truncated to
+    /// `prefill_seq`; real token count = `tokens.len().min(prefill_seq)`).
+    pub fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        let t0 = Instant::now();
+        let s = self.manifest.model.prefill_seq;
+        let mut padded = vec![0i32; s];
+        let n = tokens.len().min(s);
+        padded[..n].copy_from_slice(&tokens[..n]);
+        let tok = Literal::vec1(&padded).reshape(&[1, s as i64])?;
+        let outs = self.run("prefill", vec![tok])?;
+        if outs.len() != 3 {
+            bail!("prefill returned {} outputs, expected 3", outs.len());
+        }
+        Ok(PrefillOut {
+            logits: outs[0].to_vec::<f32>()?,
+            c_cache: outs[1].to_vec::<f32>()?,
+            r_cache: outs[2].to_vec::<f32>()?,
+            latency_us: t0.elapsed().as_micros() as u64,
+        })
+    }
+
+    fn decode_args(&self, st: &DecodeState) -> Result<Vec<Literal>> {
+        let d = &self.manifest.model;
+        let (l, b, s) = (d.n_layers as i64, st.batch as i64, d.max_seq as i64);
+        Ok(vec![
+            Literal::vec1(&st.tokens),
+            Literal::vec1(&st.positions),
+            Literal::vec1(&st.c_cache).reshape(&[l, b, s, d.d_c as i64])?,
+            Literal::vec1(&st.r_cache).reshape(&[l, b, s, d.d_rope as i64])?,
+        ])
+    }
+
+    /// One decode step over all lanes; updates `st` in place.
+    pub fn decode_step(&self, st: &mut DecodeState) -> Result<DecodeOut> {
+        let t0 = Instant::now();
+        let outs = self.run("decode", self.decode_args(st)?)?;
+        if outs.len() != 4 {
+            bail!("decode returned {} outputs, expected 4", outs.len());
+        }
+        let next = outs[0].to_vec::<i32>()?;
+        let logits = outs[1].to_vec::<f32>()?;
+        st.c_cache = outs[2].to_vec::<f32>()?;
+        st.r_cache = outs[3].to_vec::<f32>()?;
+        for (i, &t) in next.iter().enumerate() {
+            st.tokens[i] = t;
+            st.positions[i] += 1;
+        }
+        Ok(DecodeOut {
+            next_tokens: next,
+            spec_tokens: vec![],
+            logits,
+            latency_us: t0.elapsed().as_micros() as u64,
+        })
+    }
+
+    /// One MTP decode step: main token + 1 speculative token per lane.
+    /// The coordinator validates speculation on the next step (§4.2.4).
+    pub fn decode_step_mtp(&self, st: &mut DecodeState) -> Result<DecodeOut> {
+        let t0 = Instant::now();
+        let outs = self.run("decode_mtp", self.decode_args(st)?)?;
+        if outs.len() != 5 {
+            bail!("decode_mtp returned {} outputs, expected 5", outs.len());
+        }
+        let next = outs[0].to_vec::<i32>()?;
+        let spec = outs[1].to_vec::<i32>()?;
+        let logits = outs[2].to_vec::<f32>()?;
+        st.c_cache = outs[3].to_vec::<f32>()?;
+        st.r_cache = outs[4].to_vec::<f32>()?;
+        for (i, &t) in next.iter().enumerate() {
+            st.tokens[i] = t;
+            st.positions[i] += 1;
+        }
+        Ok(DecodeOut {
+            next_tokens: next,
+            spec_tokens: spec,
+            logits,
+            latency_us: t0.elapsed().as_micros() as u64,
+        })
+    }
+
+    /// Total weight bytes resident (model-cache accounting).
+    pub fn weight_bytes(&self) -> usize {
+        self.weights.iter().map(|w| w.total_bytes).sum()
+    }
+}
+
+/// Build a literal for a dynamic input from raw bytes (integration tests).
+pub fn dyn_literal(entry: &super::manifest::TensorEntry, bytes: &[u8]) -> Result<Literal> {
+    literal_from_bytes(entry, bytes)
+}

@@ -1,0 +1,158 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// One tensor inside a weight blob, in exact HLO-parameter order.
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// One lowered HLO graph.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    /// Blob names whose tensors form the leading HLO parameters, in order.
+    pub weight_blobs: Vec<String>,
+    /// Dynamic (per-call) inputs following the weights, in order.
+    pub dyn_inputs: Vec<TensorEntry>,
+    /// Output names, in tuple order.
+    pub outputs: Vec<String>,
+}
+
+/// Model dimensions the coordinator needs for shape math.
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_c: usize,
+    pub d_rope: usize,
+    pub max_seq: usize,
+    pub prefill_seq: usize,
+    pub decode_batch: usize,
+    pub n_params: usize,
+}
+
+impl ModelDims {
+    /// Latent-KV bytes per token per layer-stack (the paper's 93%-smaller
+    /// MLA cache): f32 latents + f32 rope keys across all layers.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.n_layers * (self.d_c + self.d_rope) * 4
+    }
+}
+
+/// Parsed manifest: model dims + artifact index + blob tensor tables.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub blobs: BTreeMap<String, (String, Vec<TensorEntry>)>,
+    pub mtp_acceptance: f64,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let m = j.req("model")?;
+        let model = ModelDims {
+            vocab_size: m.req("vocab_size")?.as_usize()?,
+            d_model: m.req("d_model")?.as_usize()?,
+            n_layers: m.req("n_layers")?.as_usize()?,
+            n_heads: m.req("n_heads")?.as_usize()?,
+            d_c: m.req("d_c")?.as_usize()?,
+            d_rope: m.req("d_rope")?.as_usize()?,
+            max_seq: m.req("max_seq")?.as_usize()?,
+            prefill_seq: m.req("prefill_seq")?.as_usize()?,
+            decode_batch: m.req("decode_batch")?.as_usize()?,
+            n_params: j.req("n_params")?.as_usize()?,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.req("artifacts")?.as_obj()? {
+            artifacts.insert(name.clone(), parse_artifact(a)?);
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+
+        let mut blobs = BTreeMap::new();
+        for (name, b) in j.req("blobs")?.as_obj()? {
+            let file = b.req("file")?.as_str()?.to_string();
+            let tensors = b
+                .req("tensors")?
+                .as_arr()?
+                .iter()
+                .map(parse_tensor)
+                .collect::<Result<Vec<_>>>()?;
+            blobs.insert(name.clone(), (file, tensors));
+        }
+
+        let mtp_acceptance =
+            j.get("mtp_acceptance").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0);
+
+        Ok(Manifest { dir, model, artifacts, blobs, mtp_acceptance })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))
+    }
+}
+
+fn parse_tensor(t: &Json) -> Result<TensorEntry> {
+    Ok(TensorEntry {
+        name: t.get("name").map(|v| v.as_str().map(String::from)).transpose()?.unwrap_or_default(),
+        dtype: t.req("dtype")?.as_str()?.to_string(),
+        shape: t
+            .req("shape")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        offset: t.get("offset").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+        nbytes: t.get("nbytes").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+    })
+}
+
+fn parse_artifact(a: &Json) -> Result<ArtifactEntry> {
+    Ok(ArtifactEntry {
+        file: a.req("file")?.as_str()?.to_string(),
+        weight_blobs: a
+            .req("weight_blobs")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?,
+        dyn_inputs: a
+            .req("dyn_inputs")?
+            .as_arr()?
+            .iter()
+            .map(parse_tensor)
+            .collect::<Result<Vec<_>>>()?,
+        outputs: a
+            .req("outputs")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?,
+    })
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the XLA CPU client. This is the only place the Rust
+//! coordinator touches model compute; Python is never on the request path.
+//!
+//! Pipeline: `manifest.json` → [`Manifest`] → [`WeightStore`] (raw blobs →
+//! PJRT literals, uploaded once) → [`ModelRuntime`] (compiled executables +
+//! typed prefill/decode entry points operating on token/cache state).
+
+mod engine;
+mod manifest;
+mod weights;
+
+pub use engine::{DecodeOut, DecodeState, ModelRuntime, PrefillOut, Variant};
+pub use manifest::{ArtifactEntry, Manifest, ModelDims, TensorEntry};
+pub use weights::WeightStore;

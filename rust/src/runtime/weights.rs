@@ -1,0 +1,73 @@
+//! Weight-blob loading: raw little-endian tensors → PJRT literals.
+//!
+//! Weights are HLO *parameters* (not embedded constants — HLO text elides
+//! large constants), mirroring the paper's Model Caching view of weights as
+//! loadable blocks (§4.4.3). The Rust model cache (crate::cache::model)
+//! simulates block placement/bandwidth; this module performs the real load
+//! for the PJRT execution path.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+use super::manifest::{Manifest, TensorEntry};
+
+/// Literals for one weight blob, in manifest (== HLO parameter) order.
+pub struct WeightStore {
+    pub name: String,
+    pub literals: Vec<Literal>,
+    pub total_bytes: usize,
+}
+
+fn dtype_to_element(dtype: &str) -> Result<ElementType> {
+    Ok(match dtype {
+        "float32" => ElementType::F32,
+        "float64" => ElementType::F64,
+        "int8" => ElementType::S8,
+        "int32" => ElementType::S32,
+        "int64" => ElementType::S64,
+        "uint8" => ElementType::U8,
+        other => bail!("unsupported tensor dtype `{other}`"),
+    })
+}
+
+/// Build a literal from raw bytes + manifest entry.
+pub fn literal_from_bytes(entry: &TensorEntry, bytes: &[u8]) -> Result<Literal> {
+    let ty = dtype_to_element(&entry.dtype)?;
+    let lit = Literal::create_from_shape_and_untyped_data(ty, &entry.shape, bytes)
+        .with_context(|| format!("literal for tensor `{}`", entry.name))?;
+    Ok(lit)
+}
+
+impl WeightStore {
+    /// Load one named blob from the artifact directory.
+    pub fn load(manifest: &Manifest, blob_name: &str) -> Result<WeightStore> {
+        let (file, tensors) = manifest
+            .blobs
+            .get(blob_name)
+            .with_context(|| format!("blob `{blob_name}` not in manifest"))?;
+        let path = manifest.dir.join(file);
+        Self::load_from_file(&path, blob_name, tensors)
+    }
+
+    /// Load a blob from an explicit path (used by tests with synthetic data).
+    pub fn load_from_file(
+        path: &Path,
+        name: &str,
+        tensors: &[TensorEntry],
+    ) -> Result<WeightStore> {
+        let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        let mut literals = Vec::with_capacity(tensors.len());
+        let mut total = 0usize;
+        for t in tensors {
+            let end = t.offset + t.nbytes;
+            if end > raw.len() {
+                bail!("tensor `{}` extends past blob end ({} > {})", t.name, end, raw.len());
+            }
+            literals.push(literal_from_bytes(t, &raw[t.offset..end])?);
+            total += t.nbytes;
+        }
+        Ok(WeightStore { name: name.to_string(), literals, total_bytes: total })
+    }
+}

@@ -1,0 +1,107 @@
+//! Ascend 910C die simulator: engine occupancy + operator timing models.
+//!
+//! The paper's evaluation is throughput/latency numbers derived from how
+//! long each operator occupies the die's engines (AIC cube cores, AIV
+//! vector cores, SDMA transfer engines) and the UB fabric. This module
+//! reproduces that occupancy algebra with the 910C's published parameters
+//! (§3.3.1) and the operator-level calibrations of §5.5:
+//!
+//! * [`ops::gemm`]   — INT8 GEMM roofline (Table 10).
+//! * [`ops::mla`]    — MLA attention, compute- and memory-bound (Tables 8–9).
+//! * [`ops::comm`]   — FusedDispatch / FusedCombine vs DeepEP (Table 7).
+//! * [`pipeline`]    — the two-stream microbatch decode pipeline (Fig 20),
+//!                     the AIC/AIV/SDMA prefill pipeline (Fig 21), and MTP
+//!                     (Fig 22).
+
+pub mod ops;
+pub mod pipeline;
+
+use crate::config::Ascend910cDie;
+use crate::Micros;
+
+/// A share of one die's engines assigned to an execution stream (§4.2.3's
+/// asymmetric AIC/AIV partitioning).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineShare {
+    pub aic: usize,
+    pub aiv: usize,
+}
+
+impl EngineShare {
+    /// Full die.
+    pub fn full(die: &Ascend910cDie) -> Self {
+        EngineShare { aic: die.aic_cores, aiv: die.aiv_cores }
+    }
+
+    /// Stream 0 of the decode pipeline: 16 AIC + 32 AIV (§4.2.3).
+    pub fn decode_stream0(_die: &Ascend910cDie) -> Self {
+        EngineShare { aic: 16, aiv: 32 }
+    }
+
+    /// Stream 1 of the decode pipeline: 8 AIC + 16 AIV (§4.2.3).
+    pub fn decode_stream1(_die: &Ascend910cDie) -> Self {
+        EngineShare { aic: 8, aiv: 16 }
+    }
+
+    /// Fraction of the die's cube throughput this share provides.
+    pub fn aic_fraction(&self, die: &Ascend910cDie) -> f64 {
+        self.aic as f64 / die.aic_cores as f64
+    }
+
+    pub fn aiv_fraction(&self, die: &Ascend910cDie) -> f64 {
+        self.aiv as f64 / die.aiv_cores as f64
+    }
+}
+
+/// Roofline helper: time to execute `flops` at INT8 on an engine share.
+pub fn int8_compute_us(die: &Ascend910cDie, share: EngineShare, ops: f64, efficiency: f64) -> Micros {
+    let peak = die.int8_tops * 1e12 * share.aic_fraction(die) * efficiency;
+    ops / peak * 1e6
+}
+
+/// Roofline helper: BF16 compute time on an engine share.
+pub fn bf16_compute_us(die: &Ascend910cDie, share: EngineShare, flops: f64, efficiency: f64) -> Micros {
+    let peak = die.bf16_tflops * 1e12 * share.aic_fraction(die) * efficiency;
+    flops / peak * 1e6
+}
+
+/// Roofline helper: HBM-bound time for `bytes` at a utilization factor.
+pub fn hbm_us(die: &Ascend910cDie, bytes: f64, utilization: f64) -> Micros {
+    bytes / (die.hbm_gbps * 1e9 * utilization) * 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_shares() {
+        let die = Ascend910cDie::default();
+        let full = EngineShare::full(&die);
+        assert_eq!(full.aic, 24);
+        let s0 = EngineShare::decode_stream0(&die);
+        let s1 = EngineShare::decode_stream1(&die);
+        assert_eq!(s0.aic, 2 * s1.aic);
+        assert!((s0.aic_fraction(&die) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rooflines_scale() {
+        let die = Ascend910cDie::default();
+        let full = EngineShare::full(&die);
+        let half = EngineShare { aic: 12, aiv: 24 };
+        let t_full = int8_compute_us(&die, full, 1e12, 0.8);
+        let t_half = int8_compute_us(&die, half, 1e12, 0.8);
+        assert!((t_half / t_full - 2.0).abs() < 1e-9);
+        // 1 TOP at 752*0.8 effective TOPS ≈ 1.662 ms
+        assert!((t_full - 1662.2).abs() < 1.0, "{t_full}");
+    }
+
+    #[test]
+    fn hbm_time() {
+        let die = Ascend910cDie::default();
+        // 1.6 TB/s at util 1.0 → 1 GB in 625 µs
+        let t = hbm_us(&die, 1e9, 1.0);
+        assert!((t - 625.0).abs() < 1.0, "{t}");
+    }
+}

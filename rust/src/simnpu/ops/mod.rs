@@ -1,0 +1,5 @@
+//! Operator timing models, calibrated against the paper's §5.5 tables.
+
+pub mod comm;
+pub mod gemm;
+pub mod mla;

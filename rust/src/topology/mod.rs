@@ -1,0 +1,130 @@
+//! CloudMatrix384 supernode topology: node/die addressing, the two-tier UB
+//! switch fabric (§3.3.3, Table 11), and the tightly-coupled-block NPU
+//! allocator used for the Fig. 24 allocation-rate study (§6.1.2).
+
+pub mod alloc;
+pub mod switches;
+
+pub use alloc::{AllocationSim, AllocationStats, BlockAllocator};
+pub use switches::{switch_plan, SwitchPlan};
+
+use crate::config::CloudMatrixTopo;
+
+/// Physical address of one NPU die inside the supernode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DieId {
+    pub node: u16,
+    pub npu: u8,
+    pub die: u8,
+}
+
+/// Physical address of one Kunpeng CPU socket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CpuId {
+    pub node: u16,
+    pub socket: u8,
+}
+
+/// Enumerated view of a supernode: stable global indices for dies/CPUs.
+#[derive(Debug, Clone)]
+pub struct Supernode {
+    pub topo: CloudMatrixTopo,
+}
+
+impl Supernode {
+    pub fn new(topo: CloudMatrixTopo) -> Self {
+        Supernode { topo }
+    }
+
+    pub fn cloudmatrix384() -> Self {
+        Self::new(CloudMatrixTopo::default())
+    }
+
+    pub fn n_dies(&self) -> usize {
+        self.topo.total_dies()
+    }
+
+    pub fn n_cpus(&self) -> usize {
+        self.topo.total_cpus()
+    }
+
+    /// Global die index → physical address.
+    pub fn die(&self, idx: usize) -> DieId {
+        let per_node = self.topo.npus_per_node * self.topo.dies_per_npu;
+        let node = idx / per_node;
+        let rem = idx % per_node;
+        DieId {
+            node: node as u16,
+            npu: (rem / self.topo.dies_per_npu) as u8,
+            die: (rem % self.topo.dies_per_npu) as u8,
+        }
+    }
+
+    /// Physical address → global die index.
+    pub fn die_index(&self, id: DieId) -> usize {
+        let per_node = self.topo.npus_per_node * self.topo.dies_per_npu;
+        id.node as usize * per_node
+            + id.npu as usize * self.topo.dies_per_npu
+            + id.die as usize
+    }
+
+    pub fn cpu(&self, idx: usize) -> CpuId {
+        CpuId {
+            node: (idx / self.topo.cpus_per_node) as u16,
+            socket: (idx % self.topo.cpus_per_node) as u8,
+        }
+    }
+
+    pub fn cpu_index(&self, id: CpuId) -> usize {
+        id.node as usize * self.topo.cpus_per_node + id.socket as usize
+    }
+
+    /// True iff two dies share a compute node (single-tier L1 UB path).
+    pub fn same_node(&self, a: DieId, b: DieId) -> bool {
+        a.node == b.node
+    }
+
+    /// True iff two dies share an NPU package (cross-die fabric).
+    pub fn same_package(&self, a: DieId, b: DieId) -> bool {
+        a.node == b.node && a.npu == b.npu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn die_addressing_roundtrip() {
+        let sn = Supernode::cloudmatrix384();
+        assert_eq!(sn.n_dies(), 768);
+        for idx in [0, 1, 15, 16, 767] {
+            assert_eq!(sn.die_index(sn.die(idx)), idx);
+        }
+        let last = sn.die(767);
+        assert_eq!(last.node, 47);
+        assert_eq!(last.npu, 7);
+        assert_eq!(last.die, 1);
+    }
+
+    #[test]
+    fn cpu_addressing_roundtrip() {
+        let sn = Supernode::cloudmatrix384();
+        assert_eq!(sn.n_cpus(), 192);
+        for idx in [0, 3, 4, 191] {
+            assert_eq!(sn.cpu_index(sn.cpu(idx)), idx);
+        }
+    }
+
+    #[test]
+    fn locality_predicates() {
+        let sn = Supernode::cloudmatrix384();
+        let a = sn.die(0);
+        let b = sn.die(1); // same package, other die
+        let c = sn.die(2); // same node, other NPU
+        let d = sn.die(16); // next node
+        assert!(sn.same_package(a, b));
+        assert!(sn.same_node(a, c) && !sn.same_package(a, c));
+        assert!(!sn.same_node(a, d));
+    }
+}

@@ -1,0 +1,129 @@
+//! UB switch-system planning (§3.3.3) and the Table 11 utilization study.
+//!
+//! The supernode fabric is a two-tier non-blocking Clos: each node's 7
+//! on-board L1 switch chips map one-to-one onto 7 L2 sub-planes; each L1
+//! chip fans out 16 links, one to every L2 chip in its sub-plane. An L2
+//! chip has 48 ports, so one sub-plane of 16 chips terminates up to 48
+//! nodes. Table 11 counts *logical* switches (two chips each) and shows
+//! utilization peaks exactly when node count divides the port budget.
+
+use crate::config::{CloudMatrixTopo, UB_PLANES};
+
+/// Switch provisioning plan for a supernode scale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwitchPlan {
+    pub npus: usize,
+    pub nodes: usize,
+    /// Logical L2 switches (Table 11 counts these; 2 chips per switch).
+    pub switches: usize,
+    /// Fraction of L2 ports carrying traffic.
+    pub utilization: f64,
+    /// Whether the plan is non-blocking (uplink = downlink capacity).
+    pub non_blocking: bool,
+}
+
+/// Compute the Table 11 row for a supernode with `npus` NPUs.
+///
+/// Port math: each node contributes `l1_switches_per_node` uplink bundles
+/// (one per sub-plane), each bundle fanning to every L2 chip of the plane.
+/// With 16 L2 chips x 48 ports per plane, a plane supports 48 node-links
+/// per chip; chips are provisioned in groups that terminate `ports` node
+/// links. Logical switches are counted across all 7 planes, 2 chips per
+/// logical switch, scaled to the minimum chip count covering `nodes`.
+pub fn switch_plan(topo: &CloudMatrixTopo, npus: usize) -> SwitchPlan {
+    let nodes = npus.div_ceil(topo.npus_per_node);
+    // Each L2 chip of a sub-plane terminates one link from every node:
+    // `nodes` of its 48 ports are used. A full-scale plane (48 nodes) needs
+    // all 16 chips; smaller supernodes still need all 16 links from each L1
+    // chip *unless* chips are provisioned in proportion. The paper
+    // provisions port-for-port: chips_per_plane = ceil(16 * nodes / 48).
+    let chips_per_plane_full = topo.l2_switches_per_plane; // 16
+    // L2 chips are provisioned in groups of 4 per sub-plane (the paper's
+    // Table 11 counts: 8/12/16 chips per plane at 24/36/48 nodes) — each
+    // group of 4 chips terminates 12 nodes' worth of plane links.
+    let nodes_per_group = 12;
+    let chips_per_plane =
+        (nodes.div_ceil(nodes_per_group) * 4).clamp(4, chips_per_plane_full);
+    let total_chips = chips_per_plane * UB_PLANES;
+    // Table 11 counts logical switches = two chips each.
+    let switches = total_chips.div_ceil(2);
+
+    // Ports used vs provisioned: each chip has 48 ports; the nodes spread
+    // their per-plane links evenly across the plane's chips.
+    let ports_used = nodes * chips_per_plane_full; // 16 links per node-plane
+    let ports_avail = chips_per_plane * topo.ports_per_l2_chip;
+    let utilization = ports_used as f64 / ports_avail as f64;
+
+    SwitchPlan {
+        npus,
+        nodes,
+        switches,
+        utilization: utilization.min(1.0),
+        non_blocking: true,
+    }
+}
+
+/// The Table 11 sweep.
+pub fn table11_rows(topo: &CloudMatrixTopo) -> Vec<SwitchPlan> {
+    [384, 352, 288, 256, 192]
+        .iter()
+        .map(|&npus| switch_plan(topo, npus))
+        .collect()
+}
+
+/// Amortized switch chips per NPU — §6.1.2's "nearly constant network cost".
+pub fn chips_per_npu(plan: &SwitchPlan) -> f64 {
+    (plan.switches * 2) as f64 / plan.npus as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> CloudMatrixTopo {
+        CloudMatrixTopo::default()
+    }
+
+    #[test]
+    fn full_scale_matches_paper() {
+        // Table 11: 384 NPUs → 48 nodes, 56 switches, 100% utilization.
+        let p = switch_plan(&topo(), 384);
+        assert_eq!(p.nodes, 48);
+        assert_eq!(p.switches, 56);
+        assert!((p.utilization - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_rows_match() {
+        // (npus, nodes, switches, util%)
+        let expect = [
+            (384, 48, 56, 100.0),
+            (352, 44, 56, 92.0),
+            (288, 36, 42, 100.0),
+            (256, 32, 42, 89.0),
+            (192, 24, 28, 100.0),
+        ];
+        for (npus, nodes, switches, util) in expect {
+            let p = switch_plan(&topo(), npus);
+            assert_eq!(p.nodes, nodes, "nodes @ {npus}");
+            assert_eq!(p.switches, switches, "switches @ {npus}");
+            assert!(
+                (p.utilization * 100.0 - util).abs() < 1.0,
+                "util @ {npus}: {} vs {util}",
+                p.utilization * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn amortized_cost_constant_at_full_util() {
+        let p384 = switch_plan(&topo(), 384);
+        let p288 = switch_plan(&topo(), 288);
+        let p192 = switch_plan(&topo(), 192);
+        let c384 = chips_per_npu(&p384);
+        let c288 = chips_per_npu(&p288);
+        let c192 = chips_per_npu(&p192);
+        assert!((c384 - c288).abs() < 0.01, "{c384} vs {c288}");
+        assert!((c384 - c192).abs() < 0.01, "{c384} vs {c192}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Small self-contained utilities: a minimal JSON parser (serde is not
+//! vendored in this environment) and a deterministic PRNG.
+
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

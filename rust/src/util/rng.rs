@@ -1,0 +1,203 @@
+//! Deterministic PRNG (xoshiro256**) — workload generation, placement
+//! simulation and the property-test harness all need seeded, reproducible
+//! randomness; the `rand` crate is not vendored in this image.
+
+/// xoshiro256** with splitmix64 seeding. Not cryptographic.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seeded constructor: identical seeds give identical streams.
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 to spread the seed across the state.
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        // Lemire-style rejection-free reduction (bias < 2^-64 * n).
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive (full-range safe).
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        let span = hi - lo;
+        if span == u64::MAX {
+            return self.next_u64();
+        }
+        lo + self.below(span + 1)
+    }
+
+    /// Exponential with the given mean (inter-arrival times).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        let u = self.f64().max(1e-300);
+        -mean * u.ln()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Log-normal with given ln-space mean and sigma (request lengths).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Zipf-like rank sampling over [0, n): P(k) ∝ 1/(k+1)^alpha.
+    /// Used for skewed expert activation and prefix popularity.
+    pub fn zipf(&mut self, n: u64, alpha: f64) -> u64 {
+        // inverse-CDF on a truncated harmonic approximation; exact enough
+        // for workload shaping.
+        let u = self.f64();
+        if alpha <= 0.0 {
+            return self.below(n);
+        }
+        let nf = n as f64;
+        if (alpha - 1.0).abs() < 1e-9 {
+            let h = nf.ln();
+            return ((u * h).exp() - 1.0).min(nf - 1.0).max(0.0) as u64;
+        }
+        let one_minus = 1.0 - alpha;
+        let h = (nf.powf(one_minus) - 1.0) / one_minus;
+        let x = (1.0 + u * h * one_minus).powf(1.0 / one_minus);
+        (x - 1.0).min(nf - 1.0).max(0.0) as u64
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick one element uniformly.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn range_full_span_no_overflow() {
+        let mut r = Rng::new(9);
+        // would overflow `hi - lo + 1` if unguarded (caught in debug builds)
+        let _ = r.range(0, u64::MAX);
+        let x = r.range(u64::MAX - 1, u64::MAX);
+        assert!(x >= u64::MAX - 1);
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(2);
+        for n in [1u64, 2, 7, 100, 1 << 40] {
+            for _ in 0..100 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(4.0)).sum::<f64>()
+            / n as f64;
+        assert!((mean - 4.0).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(4);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn zipf_skew() {
+        let mut r = Rng::new(5);
+        let mut counts = [0u64; 10];
+        for _ in 0..20_000 {
+            counts[r.zipf(10, 1.2) as usize] += 1;
+        }
+        // strictly more mass at rank 0 than rank 9, by a lot
+        assert!(counts[0] > counts[9] * 4, "{counts:?}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(6);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

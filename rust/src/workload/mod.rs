@@ -1,0 +1,305 @@
+//! Workload generation: the dynamic, heterogeneous request patterns the
+//! paper's §1/§4.1 motivate — bursty Poisson arrivals, log-normal
+//! prompt/output lengths, multi-turn sessions with shared prefixes, and
+//! Zipf-skewed expert activation.
+
+use crate::util::Rng;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time, µs from run start.
+    pub arrival_us: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    /// Tokens of the prompt (only generated when prefix caching matters;
+    /// empty means "synthetic lengths only").
+    pub prompt: Vec<i32>,
+    /// Session this request belongs to (multi-turn reuse).
+    pub session: u64,
+    /// Turn index within the session.
+    pub turn: u32,
+}
+
+/// Workload shape parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub seed: u64,
+    /// Mean request inter-arrival time, µs. Poisson process.
+    pub mean_interarrival_us: f64,
+    /// Burstiness: probability that an arrival spawns a burst…
+    pub burst_prob: f64,
+    /// …of this mean size (geometric).
+    pub burst_mean: f64,
+    /// Log-normal prompt length: ln-space mean and sigma.
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    pub min_prompt: usize,
+    pub max_prompt: usize,
+    /// Log-normal output length parameters.
+    pub output_mu: f64,
+    pub output_sigma: f64,
+    pub min_output: usize,
+    pub max_output: usize,
+    /// Fraction of requests continuing an existing session (prefix reuse).
+    pub multi_turn_prob: f64,
+    /// Session-popularity skew (Zipf alpha; 0 = uniform). Hot sessions are
+    /// what make cache-affinity routing hotspot (§4.1).
+    pub session_skew: f64,
+    /// Whether to materialize prompt token ids (needed for cache tests).
+    pub materialize_tokens: bool,
+    /// Vocabulary for materialized tokens.
+    pub vocab: usize,
+}
+
+impl WorkloadSpec {
+    /// A 4K-ish prompt / 256-output mix at moderate load (Table 4/5 style).
+    pub fn paper_default(seed: u64) -> Self {
+        WorkloadSpec {
+            seed,
+            mean_interarrival_us: 2_000.0,
+            burst_prob: 0.05,
+            burst_mean: 6.0,
+            prompt_mu: (4096.0f64).ln() - 0.18,
+            prompt_sigma: 0.6,
+            min_prompt: 64,
+            max_prompt: 16384,
+            output_mu: (256.0f64).ln() - 0.08,
+            output_sigma: 0.4,
+            min_output: 16,
+            max_output: 2048,
+            multi_turn_prob: 0.45,
+            session_skew: 0.0,
+            materialize_tokens: false,
+            vocab: 2048,
+        }
+    }
+
+    /// Small trace sized for the real-model E2E examples.
+    pub fn e2e_small(seed: u64, prefill_seq: usize, vocab: usize) -> Self {
+        WorkloadSpec {
+            seed,
+            mean_interarrival_us: 30_000.0,
+            burst_prob: 0.15,
+            burst_mean: 3.0,
+            prompt_mu: (prefill_seq as f64 * 0.5).ln(),
+            prompt_sigma: 0.4,
+            min_prompt: 8,
+            max_prompt: prefill_seq,
+            output_mu: (24.0f64).ln(),
+            output_sigma: 0.3,
+            min_output: 4,
+            max_output: 48,
+            multi_turn_prob: 0.5,
+            session_skew: 0.0,
+            materialize_tokens: true,
+            vocab,
+        }
+    }
+}
+
+/// Session state for multi-turn prefix construction.
+struct Session {
+    id: u64,
+    history: Vec<i32>,
+    turns: u32,
+}
+
+/// Generate a trace of `n` requests.
+pub fn generate(spec: &WorkloadSpec, n: usize) -> Vec<Request> {
+    let mut rng = Rng::new(spec.seed);
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    let mut sessions: Vec<Session> = Vec::new();
+    let mut next_session = 0u64;
+    let mut burst_left = 0usize;
+
+    for id in 0..n as u64 {
+        if burst_left > 0 {
+            burst_left -= 1;
+            t += rng.exponential(spec.mean_interarrival_us * 0.05);
+        } else {
+            t += rng.exponential(spec.mean_interarrival_us);
+            if rng.f64() < spec.burst_prob {
+                burst_left = (rng.exponential(spec.burst_mean) as usize).clamp(1, 64);
+            }
+        }
+
+        let prompt_len = (rng.lognormal(spec.prompt_mu, spec.prompt_sigma) as usize)
+            .clamp(spec.min_prompt, spec.max_prompt);
+        let output_len = (rng.lognormal(spec.output_mu, spec.output_sigma) as usize)
+            .clamp(spec.min_output, spec.max_output);
+
+        // multi-turn: continue a random session, prefix = its history
+        let reuse = !sessions.is_empty() && rng.f64() < spec.multi_turn_prob;
+        let (session, turn, prompt) = if reuse {
+            let idx = if spec.session_skew > 0.0 {
+                rng.zipf(sessions.len() as u64, spec.session_skew) as usize
+            } else {
+                rng.below(sessions.len() as u64) as usize
+            };
+            let s = &mut sessions[idx];
+            s.turns += 1;
+            let mut prompt = Vec::new();
+            if spec.materialize_tokens {
+                prompt = s.history.clone();
+                let new_part = prompt_len.saturating_sub(prompt.len()).max(1);
+                for _ in 0..new_part {
+                    prompt.push(rng.below(spec.vocab as u64) as i32);
+                }
+                s.history = prompt.clone();
+            }
+            (s.id, s.turns, prompt)
+        } else {
+            let sid = next_session;
+            next_session += 1;
+            let mut prompt = Vec::new();
+            if spec.materialize_tokens {
+                prompt = (0..prompt_len).map(|_| rng.below(spec.vocab as u64) as i32).collect();
+            }
+            sessions.push(Session { id: sid, history: prompt.clone(), turns: 0 });
+            if sessions.len() > 256 {
+                sessions.remove(0);
+            }
+            (sid, 0, prompt)
+        };
+
+        let prompt_tokens = if spec.materialize_tokens { prompt.len().max(prompt_len) } else { prompt_len };
+        out.push(Request {
+            id,
+            arrival_us: t,
+            prompt_tokens,
+            output_tokens: output_len,
+            prompt,
+            session,
+            turn,
+        });
+    }
+    out
+}
+
+/// Zipf-skewed expert-activation sampler (EPLB stress; §1 "imbalanced
+/// expert activations").
+pub struct ExpertActivation {
+    rng: Rng,
+    n_experts: usize,
+    alpha: f64,
+    perm: Vec<usize>,
+}
+
+impl ExpertActivation {
+    pub fn new(seed: u64, n_experts: usize, alpha: f64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut perm: Vec<usize> = (0..n_experts).collect();
+        rng.shuffle(&mut perm);
+        ExpertActivation { rng, n_experts, alpha, perm }
+    }
+
+    /// Draw top-k distinct experts for one token.
+    pub fn sample_topk(&mut self, k: usize) -> Vec<usize> {
+        let mut picked = Vec::with_capacity(k);
+        let mut guard = 0;
+        while picked.len() < k && guard < 100 {
+            let e = self.perm[self.rng.zipf(self.n_experts as u64, self.alpha) as usize];
+            if !picked.contains(&e) {
+                picked.push(e);
+            }
+            guard += 1;
+        }
+        while picked.len() < k {
+            let e = self.rng.below(self.n_experts as u64) as usize;
+            if !picked.contains(&e) {
+                picked.push(e);
+            }
+        }
+        picked
+    }
+
+    /// Per-expert token counts for a batch — the EPLB input.
+    pub fn batch_histogram(&mut self, tokens: usize, k: usize) -> Vec<u64> {
+        let mut h = vec![0u64; self.n_experts];
+        for _ in 0..tokens {
+            for e in self.sample_topk(k) {
+                h[e] += 1;
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic() {
+        let spec = WorkloadSpec::paper_default(9);
+        let a = generate(&spec, 100);
+        let b = generate(&spec, 100);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_us, y.arrival_us);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_lengths_bounded() {
+        let spec = WorkloadSpec::paper_default(1);
+        let trace = generate(&spec, 500);
+        let mut last = 0.0;
+        for r in &trace {
+            assert!(r.arrival_us >= last);
+            last = r.arrival_us;
+            assert!((spec.min_prompt..=spec.max_prompt).contains(&r.prompt_tokens));
+            assert!((spec.min_output..=spec.max_output).contains(&r.output_tokens));
+        }
+    }
+
+    #[test]
+    fn multi_turn_sessions_share_prefixes() {
+        let mut spec = WorkloadSpec::e2e_small(3, 128, 2048);
+        spec.multi_turn_prob = 1.0;
+        let trace = generate(&spec, 50);
+        let with_turns: Vec<_> = trace.iter().filter(|r| r.turn > 0).collect();
+        assert!(!with_turns.is_empty());
+        // a turn>0 request's prompt must extend some earlier prompt
+        for r in with_turns.iter().take(5) {
+            let parent = trace
+                .iter()
+                .filter(|p| p.session == r.session && p.turn + 1 == r.turn)
+                .next_back();
+            if let Some(p) = parent {
+                if !p.prompt.is_empty() {
+                    assert!(r.prompt.starts_with(&p.prompt[..p.prompt.len().min(8)]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expert_skew_is_skewed() {
+        let mut ea = ExpertActivation::new(5, 256, 1.1);
+        let h = ea.batch_histogram(4000, 8);
+        let total: u64 = h.iter().sum();
+        assert_eq!(total, 4000 * 8);
+        let mut sorted = h.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top16: u64 = sorted[..16].iter().sum();
+        // top 6% of experts should carry far more than 6% of load
+        assert!(top16 as f64 / total as f64 > 0.25, "top16 share {}", top16 as f64 / total as f64);
+    }
+
+    #[test]
+    fn topk_distinct() {
+        let mut ea = ExpertActivation::new(6, 64, 1.2);
+        for _ in 0..200 {
+            let picks = ea.sample_topk(8);
+            let mut sorted = picks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 8);
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they skip (pass vacuously with
+//! a notice) when artifacts are absent so `cargo test` works in a fresh
+//! checkout.
+
+use cm_infer::runtime::{DecodeState, Manifest, ModelRuntime, Variant};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("CM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts/ not built; skipping runtime integration test");
+        None
+    }
+}
+
+fn prompt(dims: &cm_infer::runtime::ModelDims, seed: usize, len: usize) -> Vec<i32> {
+    (0..len).map(|i| ((i * 997 + seed * 131 + 13) % dims.vocab_size) as i32).collect()
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).expect("manifest");
+    assert!(m.model.n_params > 0);
+    assert!(m.artifacts.contains_key("prefill_fp"));
+    assert!(m.artifacts.contains_key("decode_int8"));
+    for (_, blob) in m.blobs.values() {
+        assert!(!blob.is_empty());
+    }
+    assert!(m.model.kv_bytes_per_token() > 0);
+}
+
+#[test]
+fn fp_runtime_prefill_decode_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir, Variant::Fp).expect("runtime");
+    let dims = rt.manifest.model.clone();
+    let p = prompt(&dims, 1, 40);
+
+    let pf1 = rt.prefill(&p).unwrap();
+    let pf2 = rt.prefill(&p).unwrap();
+    assert_eq!(pf1.logits, pf2.logits, "prefill must be deterministic");
+    assert_eq!(pf1.logits.len(), dims.vocab_size);
+
+    let first = argmax(&pf1.logits);
+    let mut st1 = DecodeState::new(&rt.manifest);
+    let mut st2 = DecodeState::new(&rt.manifest);
+    for lane in 0..st1.batch {
+        st1.load_lane(lane, &pf1, first, p.len());
+        st2.load_lane(lane, &pf2, first, p.len());
+    }
+    for _ in 0..4 {
+        let o1 = rt.decode_step(&mut st1).unwrap();
+        let o2 = rt.decode_step(&mut st2).unwrap();
+        assert_eq!(o1.next_tokens, o2.next_tokens);
+        // all lanes identical inputs → identical outputs
+        assert!(o1.next_tokens.windows(2).all(|w| w[0] == w[1]));
+    }
+}
+
+#[test]
+fn decode_lanes_do_not_cross_contaminate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir, Variant::Fp).expect("runtime");
+    let dims = rt.manifest.model.clone();
+    let pa = prompt(&dims, 2, 36);
+    let pb = prompt(&dims, 3, 52);
+    let fa = rt.prefill(&pa).unwrap();
+    let fb = rt.prefill(&pb).unwrap();
+    let ta = argmax(&fa.logits);
+    let tb = argmax(&fb.logits);
+
+    // run A alone in lane 0
+    let mut st_solo = DecodeState::new(&rt.manifest);
+    st_solo.load_lane(0, &fa, ta, pa.len());
+    let solo: Vec<i32> = (0..3).map(|_| rt.decode_step(&mut st_solo).unwrap().next_tokens[0]).collect();
+
+    // run A in lane 0 with B in lane 1
+    let mut st_mix = DecodeState::new(&rt.manifest);
+    st_mix.load_lane(0, &fa, ta, pa.len());
+    st_mix.load_lane(1, &fb, tb, pb.len());
+    let mixed: Vec<i32> = (0..3).map(|_| rt.decode_step(&mut st_mix).unwrap().next_tokens[0]).collect();
+
+    assert_eq!(solo, mixed, "lane 1's content must not affect lane 0");
+}
+
+#[test]
+fn mtp_graph_main_tokens_match_plain_decode() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir, Variant::Fp).expect("runtime");
+    let dims = rt.manifest.model.clone();
+    let p = prompt(&dims, 4, 48);
+    let pf = rt.prefill(&p).unwrap();
+    let first = argmax(&pf.logits);
+
+    let mut st_a = DecodeState::new(&rt.manifest);
+    let mut st_b = DecodeState::new(&rt.manifest);
+    for lane in 0..st_a.batch {
+        st_a.load_lane(lane, &pf, first, p.len());
+        st_b.load_lane(lane, &pf, first, p.len());
+    }
+    for _ in 0..3 {
+        let plain = rt.decode_step(&mut st_a).unwrap();
+        let mtp = rt.decode_step_mtp(&mut st_b).unwrap();
+        assert_eq!(plain.next_tokens, mtp.next_tokens,
+                   "MTP main path must equal plain decode");
+        assert_eq!(mtp.spec_tokens.len(), plain.next_tokens.len());
+    }
+}
+
+#[test]
+fn int8_variant_agrees_with_fp_on_top1() {
+    let Some(dir) = artifacts_dir() else { return };
+    let fp = ModelRuntime::load(&dir, Variant::Fp).expect("fp");
+    let q = ModelRuntime::load(&dir, Variant::Int8).expect("int8");
+    let dims = fp.manifest.model.clone();
+    let mut agree = 0;
+    let n = 6;
+    for seed in 0..n {
+        let p = prompt(&dims, 10 + seed, 44);
+        let a = fp.prefill(&p).unwrap();
+        let b = q.prefill(&p).unwrap();
+        if argmax(&a.logits) == argmax(&b.logits) {
+            agree += 1;
+        }
+    }
+    assert!(agree >= n - 1, "INT8 top-1 agreement too low: {agree}/{n}");
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}

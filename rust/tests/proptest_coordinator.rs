@@ -1,0 +1,268 @@
+//! Property tests on coordinator invariants (routing, batching, memory-pool
+//! state, placement, transfer mapping) via the crate's mini property-test
+//! harness (proptest is not vendored — DESIGN.md §1).
+
+use std::collections::BTreeMap;
+
+use cm_infer::coordinator::batcher::AdmissionQueue;
+use cm_infer::coordinator::eplb::place_experts;
+use cm_infer::coordinator::router::{Router, RouterKind};
+use cm_infer::coordinator::transfer::{connection_histogram, prefill_source_rank};
+use cm_infer::mempool::{Key, MemPool};
+use cm_infer::proptest::check;
+use cm_infer::topology::alloc::BlockAllocator;
+
+#[test]
+fn prop_router_token_conservation() {
+    // queued tokens across instances == routed - completed, for any
+    // interleaving of routes and completions, for both router kinds.
+    check("router-conservation", 150, |g| {
+        let n = g.usize(1..=8);
+        let kind = if g.bool() {
+            RouterKind::PeerToPeer
+        } else {
+            RouterKind::KvCentric { overload_factor: g.f64(1.0, 10.0) }
+        };
+        let mut router = Router::new(kind, n);
+        let mut outstanding: i64 = 0;
+        let mut per_instance = vec![0i64; n];
+        for _ in 0..g.usize(1..=200) {
+            if g.bool() || outstanding == 0 {
+                let tokens = g.u64(1..=10_000);
+                let d = router.route(g.u64(0..=20), tokens);
+                per_instance[d.instance] += tokens as i64;
+                outstanding += tokens as i64;
+            } else {
+                // complete some work on a random loaded instance
+                let loaded: Vec<usize> =
+                    (0..n).filter(|&i| per_instance[i] > 0).collect();
+                if let Some(&i) = loaded.first() {
+                    let amt = per_instance[i].min(g.u64(1..=10_000) as i64);
+                    router.complete(i, amt as u64);
+                    per_instance[i] -= amt;
+                    outstanding -= amt;
+                }
+            }
+        }
+        let total: u64 = router.queued_tokens.iter().sum();
+        total as i64 == outstanding
+    });
+}
+
+#[test]
+fn prop_p2p_routes_to_least_loaded() {
+    check("p2p-least-loaded", 100, |g| {
+        let n = g.usize(2..=6);
+        let mut router = Router::new(RouterKind::PeerToPeer, n);
+        // pre-load random queue depths
+        for i in 0..n {
+            let tokens = g.u64(0..=5_000);
+            if tokens > 0 {
+                // route enough sessions to instance i artificially
+                router.queued_tokens[i] = tokens;
+            }
+        }
+        let min_before = *router.queued_tokens.iter().min().unwrap();
+        let d = router.route(g.u64(0..=100), 1);
+        router.queued_tokens[d.instance] - 1 == min_before
+    });
+}
+
+#[test]
+fn prop_admission_queue_fcfs_no_loss() {
+    check("admission-fcfs", 150, |g| {
+        let mut q = AdmissionQueue::default();
+        let ids = g.vec_u64(0..=1_000_000, 0..=100);
+        for &id in &ids {
+            q.push(id);
+        }
+        let mut drained = Vec::new();
+        while !q.is_empty() {
+            let k = g.usize(1..=7);
+            drained.extend(q.admit(k));
+        }
+        drained == ids
+    });
+}
+
+#[test]
+fn prop_mempool_get_after_put_hits() {
+    check("mempool-get-after-put", 60, |g| {
+        let servers = g.usize(1..=6);
+        let mut pool = MemPool::new(servers, 64 << 20, 512 << 20);
+        let ns = pool.controller.create_namespace("p");
+        let n = g.usize(1..=40);
+        let mut keys = Vec::new();
+        for i in 0..n {
+            let key = Key::of_bytes(&(i as u64 ^ g.u64(0..=u64::MAX)).to_le_bytes());
+            let bytes = g.u64(1..=1 << 20);
+            pool.put(ns, key, bytes);
+            keys.push((key, bytes));
+        }
+        // all keys must be retrievable with the stored size (capacity is
+        // ample here, so nothing may be dropped)
+        keys.iter().all(|&(k, b)| {
+            let got = pool.get(ns, k, true);
+            got.hit && got.bytes == b
+        })
+    });
+}
+
+#[test]
+fn prop_mempool_accounting_bounded_under_pressure() {
+    check("mempool-pressure-bounds", 40, |g| {
+        let dram = 4u64 << 20;
+        let ssd = 8u64 << 20;
+        let mut pool = MemPool::new(2, dram, ssd);
+        let ns = pool.controller.create_namespace("p");
+        for i in 0..g.usize(1..=300) {
+            let key = Key::of_bytes(&(i as u64).to_le_bytes());
+            pool.put(ns, key, g.u64(1..=1 << 20));
+        }
+        let st = pool.stats();
+        st.dram_used <= 2 * dram && st.ssd_used <= 2 * ssd
+    });
+}
+
+#[test]
+fn prop_dht_placement_stable_and_total() {
+    check("dht-stability", 60, |g| {
+        let servers = g.usize(2..=12);
+        let pool = MemPool::new(servers, 1 << 20, 1 << 20);
+        (0..50).all(|i| {
+            let k = Key::of_bytes(&(i as u64 ^ g.u64(0..=u64::MAX)).to_le_bytes());
+            let a = pool.controller.place(k);
+            let b = pool.controller.place(k);
+            a == b && a < servers
+        })
+    });
+}
+
+#[test]
+fn prop_allocator_no_overlap_no_leak() {
+    check("alloc-no-overlap", 60, |g| {
+        let size = g.usize(16..=256);
+        let mut alloc = BlockAllocator::new(size, g.usize(1..=3));
+        let mut live: Vec<cm_infer::topology::alloc::Placement> = Vec::new();
+        for _ in 0..g.usize(1..=150) {
+            if g.bool() {
+                if let Some(p) = alloc.allocate(g.usize(1..=size / 2)) {
+                    live.push(p);
+                }
+            } else if !live.is_empty() {
+                let i = g.usize(0..=live.len() - 1);
+                alloc.release(live.swap_remove(i));
+            }
+        }
+        // no two live placements overlap
+        for (i, a) in live.iter().enumerate() {
+            for b in live.iter().skip(i + 1) {
+                if a.supernode == b.supernode
+                    && a.start < b.start + b.size
+                    && b.start < a.start + a.size
+                {
+                    return false;
+                }
+            }
+        }
+        // accounting equals sum of live sizes
+        alloc.allocated() == live.iter().map(|p| p.size).sum::<usize>()
+    });
+}
+
+#[test]
+fn prop_connection_mapping_balanced() {
+    // §4.3.3: for any compatible (prefill_tp, decode_tp, decode_dp), the
+    // deterministic mapping never creates a hotspot.
+    check("transfer-mapping-balanced", 100, |g| {
+        let decode_tp = 1usize << g.usize(0..=3); // 1..8
+        let ratio = 1usize << g.usize(0..=3);
+        let prefill_tp = decode_tp * ratio;
+        let group_size = g.usize(1..=8);
+        let decode_dp = ratio * group_size;
+        let h = connection_histogram(prefill_tp, decode_tp, decode_dp);
+        let used: Vec<usize> = h.into_iter().filter(|&c| c > 0).collect();
+        if used.is_empty() {
+            return true;
+        }
+        let max = *used.iter().max().unwrap();
+        let min = *used.iter().min().unwrap();
+        max == min
+    });
+}
+
+#[test]
+fn prop_source_rank_in_range() {
+    check("transfer-src-in-range", 150, |g| {
+        let decode_tp = 1usize << g.usize(0..=3);
+        let ratio = 1usize << g.usize(0..=2);
+        let prefill_tp = decode_tp * ratio;
+        let decode_dp = ratio * g.usize(1..=8);
+        let tp_rank = g.usize(0..=decode_tp - 1);
+        let dp_rank = g.usize(0..=decode_dp - 1);
+        let src = prefill_source_rank(prefill_tp, decode_tp, decode_dp, tp_rank, dp_rank);
+        src < prefill_tp
+    });
+}
+
+#[test]
+fn prop_eplb_imbalance_never_increased_by_replicas() {
+    check("eplb-replicas-help", 60, |g| {
+        let n_experts = 16;
+        let load: Vec<u64> = (0..n_experts).map(|_| g.u64(0..=10_000)).collect();
+        if load.iter().all(|&l| l == 0) {
+            return true;
+        }
+        let base = place_experts(&load, n_experts, 0);
+        let extra = g.usize(1..=16);
+        let better = place_experts(&load, n_experts + extra, extra);
+        // max per-rank load must not increase when replicas are added
+        let max_load = |p: &cm_infer::coordinator::eplb::ExpertPlacement| {
+            load.iter()
+                .zip(&p.replicas)
+                .map(|(&l, &r)| l as f64 / r as f64)
+                .fold(0.0f64, f64::max)
+        };
+        max_load(&better) <= max_load(&base) + 1e-9
+    });
+}
+
+#[test]
+fn prop_context_cache_chain_keys_prefix_sensitive() {
+    check("cache-chain-prefix", 80, |g| {
+        let mut pool = MemPool::new(2, 16 << 20, 64 << 20);
+        let cc = cm_infer::cache::ContextCache::new(&mut pool, 8, 64, true);
+        let a: Vec<i32> = g.vec_u64(0..=100, 16..=64).iter().map(|&x| x as i32).collect();
+        let mut b = a.clone();
+        if b.is_empty() {
+            return true;
+        }
+        // flip one token in the first block
+        b[0] = b[0].wrapping_add(1);
+        let ka = cc.block_keys(&a);
+        let kb = cc.block_keys(&b);
+        // every chained key after the first block must differ
+        ka.iter().zip(&kb).all(|(x, y)| x != y)
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use cm_infer::util::Json;
+    check("json-roundtrip", 100, |g| {
+        // build a random JSON value, serialize, reparse, compare
+        let mut obj = BTreeMap::new();
+        for _ in 0..g.usize(0..=8) {
+            let key = g.string(1..=8);
+            let v = match g.usize(0..=3) {
+                0 => Json::Num(g.f64(-1e6, 1e6).round()),
+                1 => Json::Str(g.string(0..=12)),
+                2 => Json::Bool(g.bool()),
+                _ => Json::Arr(vec![Json::Num(g.u64(0..=100) as f64)]),
+            };
+            obj.insert(key, v);
+        }
+        let v = Json::Obj(obj);
+        Json::parse(&v.to_string()).map(|p| p == v).unwrap_or(false)
+    });
+}
