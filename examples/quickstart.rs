@@ -7,8 +7,8 @@
 //! kernels (inside the lowered HLO), the JAX model graphs, and the Rust
 //! runtime — no Python anywhere on this path.
 
-use anyhow::Result;
 use cm_infer::runtime::{DecodeState, ModelRuntime, Variant};
+use cm_infer::util::Result;
 
 fn main() -> Result<()> {
     let dir = std::env::var("CM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());

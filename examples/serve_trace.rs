@@ -25,8 +25,8 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
-use anyhow::Result;
 use cm_infer::metrics::Histogram;
+use cm_infer::util::Result;
 use cm_infer::runtime::{DecodeState, ModelRuntime, PrefillOut, Variant};
 use cm_infer::workload::{generate, WorkloadSpec};
 
@@ -75,7 +75,35 @@ fn main() -> Result<()> {
     println!("model {:.1}M params; compiling runtimes in engine threads...", dims.n_params as f64 / 1e6);
 
     // --- trace ------------------------------------------------------------
-    let spec = WorkloadSpec::e2e_small(7, dims.prefill_seq, dims.vocab_size);
+    // `--scenario NAME` reshapes the synthetic trace with the scenario
+    // layer's machinery, scaled down to the laptop model: burst_storm
+    // (heavy-tailed bursts), diurnal (piecewise rate swell mid-run, via the
+    // workload generator's time-varying arrival support), or
+    // long_context_drift (prompts pushed toward the prefill window).
+    let mut spec = WorkloadSpec::e2e_small(7, dims.prefill_seq, dims.vocab_size);
+    let scenario = flag_val(&args, "--scenario");
+    match scenario.as_deref() {
+        Some("burst_storm") => {
+            spec.burst_prob = 0.4;
+            spec.burst_mean = 8.0;
+        }
+        Some("diurnal") => {
+            spec.rate_points =
+                vec![(0.0, 30_000.0), (1e6, 8_000.0), (3e6, 30_000.0)];
+        }
+        Some("long_context_drift") => {
+            spec.prompt_mu = (dims.prefill_seq as f64 * 0.85).ln();
+            spec.prompt_sigma = 0.15;
+        }
+        Some(other) => {
+            eprintln!("unknown --scenario `{other}` (burst_storm, diurnal, long_context_drift)");
+            std::process::exit(2);
+        }
+        None => {}
+    }
+    if let Some(name) = &scenario {
+        println!("trace scenario: {name}");
+    }
     let trace = generate(&spec, n_requests);
     let total_prompt: usize = trace.iter().map(|r| r.prompt.len().min(dims.prefill_seq)).collect::<Vec<_>>().iter().sum();
 

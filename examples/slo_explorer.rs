@@ -3,13 +3,72 @@
 //! latency model admits and report the throughput/latency frontier.
 //!
 //!   cargo run --release --offline --example slo_explorer [--kv N]
+//!
+//! With `--scenario NAME` (diurnal, burst_storm, long_context_drift,
+//! mixed_slo) it instead runs the full serving simulation on that preset,
+//! frozen split vs elastic autoscaling, and prints the SLO attainment and
+//! resplit log — the §6.2.2 adaptive-deployment experiment.
 
-use cm_infer::config::{Ascend910cDie, DeepSeekDims, SloConfig};
+use cm_infer::config::{Ascend910cDie, Config, DeepSeekDims, SloConfig};
 use cm_infer::coordinator::batcher::plan_for_slo;
+use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
 use cm_infer::simnpu::pipeline::DecodePoint;
+use cm_infer::workload::{generate_scenario, ScenarioSpec};
+
+fn explore_scenario(name: &str) {
+    let Some(sc) = ScenarioSpec::by_name(name, 7) else {
+        eprintln!("unknown scenario `{name}`; presets: {}", ScenarioSpec::PRESETS.join(", "));
+        std::process::exit(2);
+    };
+    let n = 2000;
+    let trace = generate_scenario(&sc, n);
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+
+    println!("== scenario `{}`: frozen split vs elastic PDC ({n} requests) ==\n", sc.name);
+    for (label, autoscale) in [("frozen", false), ("elastic", true)] {
+        let opts = SimOptions {
+            autoscale: autoscale.then(AutoscaleOptions::default),
+            ..SimOptions::default()
+        };
+        let r = ServeSim::new(cfg.clone(), opts, trace.clone()).run();
+        println!("{label}:");
+        println!(
+            "  TTFT ms: p50 {:8.1}  p99 {:8.1}   TPOT ms: p50 {:6.1}  p99 {:6.1}",
+            r.ttft_us.p50 / 1e3,
+            r.ttft_us.p99 / 1e3,
+            r.tpot_us.p50 / 1e3,
+            r.tpot_us.p99 / 1e3
+        );
+        println!(
+            "  SLO attainment {:.1}%   NPU-s: prefill {:.0} / decode {:.0}",
+            r.overall_attainment() * 100.0,
+            r.prefill_npu_seconds,
+            r.decode_npu_seconds
+        );
+        for e in &r.resplits {
+            println!(
+                "    resplit t={:7.2}s {:?}→{:?} {:3} NPUs → {}P/{}D",
+                e.t_us / 1e6,
+                e.from,
+                e.to,
+                e.npus,
+                e.prefill_npus_after,
+                e.decode_npus_after
+            );
+        }
+        println!();
+    }
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(name) =
+        args.iter().position(|a| a == "--scenario").and_then(|i| args.get(i + 1))
+    {
+        explore_scenario(name);
+        return;
+    }
     let kv: usize = args
         .iter()
         .position(|a| a == "--kv")

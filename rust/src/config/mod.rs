@@ -10,7 +10,7 @@ pub mod toml;
 pub use hw::{Ascend910cDie, CloudMatrixTopo, DeepSeekDims, NetPlaneParams, UB_PLANES};
 pub use serving::{DeploymentPreset, ServingConfig, SloConfig};
 
-use anyhow::Result;
+use crate::util::Result;
 use std::path::Path;
 
 /// Root config: hardware + model + serving.

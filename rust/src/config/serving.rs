@@ -59,8 +59,13 @@ pub struct ServingConfig {
     pub context_caching: bool,
     /// Route cache accesses over UB (true) or fall back to VPC (Fig 23).
     pub cache_over_ub: bool,
-    /// Latency SLOs.
+    /// Latency SLOs (tier 0).
     pub slo: SloConfig,
+    /// Additional SLO tiers for mixed-SLO serving (Table 5 mechanism):
+    /// tier `i+1` of a request maps to `tier_slos[i]`. Each tier gets its
+    /// own SLO-derived decode concurrency cap in the batcher. Empty by
+    /// default (single-tier deployment).
+    pub tier_slos: Vec<SloConfig>,
 }
 
 impl ServingConfig {
@@ -82,6 +87,7 @@ impl ServingConfig {
             context_caching: true,
             cache_over_ub: true,
             slo: SloConfig::default(),
+            tier_slos: Vec::new(),
         }
     }
 
@@ -115,6 +121,20 @@ impl ServingConfig {
     /// Total NPUs provisioned.
     pub fn total_npus(&self) -> usize {
         self.prefill_instances * self.npus_per_prefill + self.decode_npus
+    }
+
+    /// Number of SLO tiers (>= 1; tier 0 is the base SLO).
+    pub fn n_tiers(&self) -> usize {
+        1 + self.tier_slos.len()
+    }
+
+    /// The SLO for a request tier; out-of-range tiers fall back to tier 0.
+    pub fn slo_for_tier(&self, tier: usize) -> SloConfig {
+        if tier == 0 {
+            self.slo
+        } else {
+            self.tier_slos.get(tier - 1).copied().unwrap_or(self.slo)
+        }
     }
 }
 

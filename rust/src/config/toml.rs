@@ -6,7 +6,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 /// A scalar TOML value.
 #[derive(Debug, Clone, PartialEq)]
@@ -96,7 +97,7 @@ pub fn parse(text: &str) -> Result<TomlDoc> {
         };
         let key = line[..eq].trim().to_string();
         let val = parse_value(line[eq + 1..].trim())
-            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            .map_err(|e| crate::anyhow!("line {}: {e}", lineno + 1))?;
         doc.tables.get_mut(&current).unwrap().insert(key, val);
     }
     Ok(doc)

@@ -98,11 +98,19 @@ impl Autoscaler {
         stats: &WorkloadStats,
         current_prefill_npus: usize,
     ) -> Option<SplitPlan> {
-        if stats.window_us <= 0.0 || stats.prompt_tokens + stats.output_tokens == 0 {
+        if stats.window_us <= 0.0
+            || (stats.prompt_tokens + stats.output_tokens == 0
+                && stats.prefill_queue_tokens <= 0.0)
+        {
             return None;
         }
         let (pf_per_npu, dc_per_npu) = self.capacities(die, model, serving);
-        let prompt_rate = stats.prompt_tokens as f64 / (stats.window_us / 1e6);
+        // Demand = fresh arrivals plus the standing prefill backlog (a queue
+        // is deferred demand: without this term the controller would hand
+        // NPUs back to decode the moment the arrival mix flips, stranding
+        // whatever queue the previous phase built up).
+        let prompt_rate = (stats.prompt_tokens as f64 + stats.prefill_queue_tokens)
+            / (stats.window_us / 1e6);
         let output_rate = stats.output_tokens as f64 / (stats.window_us / 1e6);
 
         // NPUs needed per pool at observed demand; split the total in that
@@ -275,6 +283,27 @@ mod tests {
         let (die, m, s) = env();
         let a = Autoscaler::paper_default();
         assert!(a.recommend(&die, &m, &s, &WorkloadStats::default(), 96).is_none());
+    }
+
+    #[test]
+    fn standing_backlog_holds_prefill_capacity() {
+        let (die, m, s) = env();
+        let a = Autoscaler::paper_default();
+        // arrival mix flipped to output-heavy, but a large prefill backlog
+        // remains: the controller must keep prefill NPUs to drain it
+        let with_backlog = WorkloadStats {
+            prefill_queue_tokens: 5_000_000.0,
+            ..stats(100_000, 400_000)
+        };
+        let hold = a.recommend(&die, &m, &s, &with_backlog, 96);
+        let shrink = a.recommend(&die, &m, &s, &stats(100_000, 400_000), 96).unwrap();
+        assert!(shrink.prefill_npus < 96, "{shrink:?}");
+        if let Some(h) = hold {
+            assert!(
+                h.prefill_npus > shrink.prefill_npus,
+                "backlog must bias toward prefill: {h:?} vs {shrink:?}"
+            );
+        }
     }
 
     #[test]

@@ -40,15 +40,20 @@ pub fn plan_for_slo(
     }
 }
 
-/// FCFS admission queue for decode slots.
+/// FCFS admission queue for decode slots, carrying each request's SLO tier
+/// (tier 0 = base SLO; `push` defaults to it).
 #[derive(Debug, Default)]
 pub struct AdmissionQueue {
-    waiting: std::collections::VecDeque<u64>,
+    waiting: std::collections::VecDeque<(u64, usize)>,
 }
 
 impl AdmissionQueue {
     pub fn push(&mut self, req: u64) {
-        self.waiting.push_back(req);
+        self.push_tier(req, 0);
+    }
+
+    pub fn push_tier(&mut self, req: u64, tier: usize) {
+        self.waiting.push_back((req, tier));
     }
 
     pub fn len(&self) -> usize {
@@ -59,10 +64,33 @@ impl AdmissionQueue {
         self.waiting.is_empty()
     }
 
-    /// Admit up to `free_slots` requests, FCFS.
+    /// Admit up to `free_slots` requests, FCFS, ignoring tier caps.
     pub fn admit(&mut self, free_slots: usize) -> Vec<u64> {
         let n = free_slots.min(self.waiting.len());
-        self.waiting.drain(..n).collect()
+        self.waiting.drain(..n).map(|(r, _)| r).collect()
+    }
+
+    /// Admit up to `free_slots` requests in FCFS order, but only those whose
+    /// tier the `can_admit` predicate accepts *at the moment of admission*
+    /// (per-tier concurrency caps from [`plan_for_slo`]). Requests whose
+    /// tier is saturated are skipped over — a tight-tier request never
+    /// head-of-line-blocks behind a capped loose tier, and vice versa.
+    pub fn admit_where(
+        &mut self,
+        free_slots: usize,
+        mut can_admit: impl FnMut(usize) -> bool,
+    ) -> Vec<(u64, usize)> {
+        let mut admitted = Vec::new();
+        let mut kept = std::collections::VecDeque::with_capacity(self.waiting.len());
+        while let Some((req, tier)) = self.waiting.pop_front() {
+            if admitted.len() < free_slots && can_admit(tier) {
+                admitted.push((req, tier));
+            } else {
+                kept.push_back((req, tier));
+            }
+        }
+        self.waiting = kept;
+        admitted
     }
 }
 
@@ -125,6 +153,43 @@ mod tests {
         assert_eq!(q.admit(100), (3..10).collect::<Vec<u64>>());
         assert!(q.is_empty());
         assert_eq!(q.admit(4), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn tiered_admission_bypasses_capped_tier() {
+        let mut q = AdmissionQueue::default();
+        // loose tier 0 at the head, tight tier 1 behind it
+        q.push_tier(0, 0);
+        q.push_tier(1, 0);
+        q.push_tier(2, 1);
+        q.push_tier(3, 1);
+        // tier 0 is capped out: only tier-1 requests may enter
+        let got = q.admit_where(10, |tier| tier == 1);
+        assert_eq!(got, vec![(2, 1), (3, 1)]);
+        // the skipped tier-0 requests remain, FCFS order preserved
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.admit(10), vec![0, 1]);
+    }
+
+    #[test]
+    fn tiered_admission_respects_free_slots_and_counts() {
+        let mut q = AdmissionQueue::default();
+        for i in 0..8 {
+            q.push_tier(i, (i % 2) as usize);
+        }
+        // per-tier budget of 2 each, enforced by a counting closure
+        let mut admitted_per_tier = [0usize; 2];
+        let got = q.admit_where(3, |tier| {
+            if admitted_per_tier[tier] < 2 {
+                admitted_per_tier[tier] += 1;
+                true
+            } else {
+                false
+            }
+        });
+        // FCFS: 0 (t0), 1 (t1), 2 (t0) — free_slots=3 stops it there
+        assert_eq!(got, vec![(0, 0), (1, 1), (2, 0)]);
+        assert_eq!(q.len(), 5);
     }
 
     #[test]

@@ -13,6 +13,8 @@ pub struct Slot {
     /// Current context length (prompt + generated so far).
     pub kv_len: usize,
     pub remaining_tokens: usize,
+    /// SLO tier the request belongs to (0 = the deployment's base SLO).
+    pub slo_tier: usize,
 }
 
 /// The decode instance: slot array + step dynamics.
@@ -51,17 +53,48 @@ impl DecodeInstance {
     }
 
     pub fn admit(&mut self, request: u64, prompt_len: usize, output_tokens: usize) {
+        self.admit_tiered(request, prompt_len, output_tokens, 0);
+    }
+
+    /// Admit a request carrying its SLO tier (mixed-SLO batching).
+    pub fn admit_tiered(
+        &mut self,
+        request: u64,
+        prompt_len: usize,
+        output_tokens: usize,
+        slo_tier: usize,
+    ) {
         assert!(self.free_slots() > 0, "admitting into a full instance");
         self.slots.push(Slot {
             request,
             kv_len: prompt_len,
             remaining_tokens: output_tokens,
+            slo_tier,
         });
     }
 
-    /// Batch per NPU implied by current occupancy.
+    /// Resize the instance's NPU pool (elastic resplits). `batch_per_npu`
+    /// is the SLO-derived per-NPU concurrency; the slot cap follows the new
+    /// size. Active slots above the new cap are retained — the instance
+    /// simply stops admitting until generation drains it below the cap.
+    pub fn resize(&mut self, npus: usize, batch_per_npu: usize) {
+        self.npus = npus;
+        self.max_concurrent = batch_per_npu * npus;
+    }
+
+    /// Occupancy in [0, 1] relative to the current concurrency cap.
+    pub fn occupancy(&self) -> f64 {
+        if self.max_concurrent == 0 {
+            return 1.0;
+        }
+        (self.slots.len() as f64 / self.max_concurrent as f64).min(1.0)
+    }
+
+    /// Batch per NPU implied by current occupancy. A zero-NPU instance
+    /// (shrunk away by a resplit while its last slots drain) degrades to
+    /// batch-per-NPU = slot count.
     pub fn batch_per_npu(&self) -> usize {
-        self.slots.len().div_ceil(self.npus).max(1)
+        self.slots.len().div_ceil(self.npus.max(1)).max(1)
     }
 
     /// Mean KV length across active slots.
@@ -213,5 +246,30 @@ mod tests {
         let mut d = DecodeInstance::new(1, 1, 6);
         d.admit(1, 10, 10);
         d.admit(2, 10, 10);
+    }
+
+    #[test]
+    fn resize_moves_cap_and_keeps_slots() {
+        let (_, _, mut s) = env();
+        s.mtp = false;
+        let mut d = DecodeInstance::new(4, 16, 7);
+        for i in 0..8 {
+            d.admit_tiered(i, 100, 10, (i % 2) as usize);
+        }
+        assert_eq!(d.free_slots(), 8);
+        // shrink below occupancy: no free slots, nothing evicted
+        d.resize(1, 4);
+        assert_eq!(d.max_concurrent, 4);
+        assert_eq!(d.free_slots(), 0);
+        assert_eq!(d.slots.len(), 8);
+        assert!((d.occupancy() - 1.0).abs() < 1e-9);
+        // generation still progresses on retained slots
+        let emits = d.step(&s);
+        assert_eq!(emits.len(), 8);
+        // grow back: cap scales with npus x batch
+        d.resize(8, 4);
+        assert_eq!(d.max_concurrent, 32);
+        assert_eq!(d.free_slots(), 24);
+        assert_eq!(d.slots[1].slo_tier, 1);
     }
 }

@@ -16,7 +16,9 @@
 //! * [`transfer`] — prefill→decode KV transfer over the RDMA plane with the
 //!   deterministic group-connection mapping (§4.3.3).
 //! * [`sim`]      — the discrete-event serving simulation tying PDC
-//!   together over the netsim/simnpu substrates.
+//!   together over the netsim/simnpu substrates: a decode-instance pool
+//!   behind a placement policy, and the elastic `ScaleEpoch` loop wiring
+//!   [`autoscale::Autoscaler`] into the event stream (§4.1, §6.2.2).
 
 pub mod autoscale;
 pub mod batcher;
@@ -29,4 +31,4 @@ pub mod sim;
 pub mod transfer;
 
 pub use request::{RequestId, RequestPhase, RequestState};
-pub use sim::{ServeSim, SimOptions};
+pub use sim::{AutoscaleOptions, DecodePlacement, ServeSim, SimOptions};

@@ -82,6 +82,7 @@ mod tests {
             prompt: vec![],
             session: 0,
             turn: 0,
+            slo_tier: 0,
         }
     }
 

@@ -39,6 +39,11 @@ pub struct Router {
     pub kind: RouterKind,
     /// Outstanding queued tokens per prefill instance.
     pub queued_tokens: Vec<u64>,
+    /// Which instance slots are currently serving the prefill role. The
+    /// elastic autoscaler (paper §4.1 dynamic adjustment) activates and
+    /// drains slots as NPUs move between the prefill and decode pools;
+    /// inactive slots receive no traffic.
+    active: Vec<bool>,
     /// session → home instance (KV-centric affinity state; the P2P router
     /// keeps NO such state — that is the point).
     home: BTreeMap<u64, usize>,
@@ -46,13 +51,32 @@ pub struct Router {
 
 impl Router {
     pub fn new(kind: RouterKind, n_instances: usize) -> Router {
-        Router { kind, queued_tokens: vec![0; n_instances], home: BTreeMap::new() }
+        Router {
+            kind,
+            queued_tokens: vec![0; n_instances],
+            active: vec![true; n_instances],
+            home: BTreeMap::new(),
+        }
+    }
+
+    /// Mark an instance slot active (serving prefill) or draining/inactive.
+    pub fn set_active(&mut self, instance: usize, on: bool) {
+        self.active[instance] = on;
+    }
+
+    pub fn is_active(&self, instance: usize) -> bool {
+        self.active[instance]
+    }
+
+    pub fn active_instances(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
     }
 
     fn least_loaded(&self) -> usize {
         self.queued_tokens
             .iter()
             .enumerate()
+            .filter(|&(i, _)| self.active[i])
             .min_by_key(|&(_, &q)| q)
             .map(|(i, _)| i)
             .unwrap_or(0)
@@ -69,6 +93,10 @@ impl Router {
             RouterKind::KvCentric { overload_factor } => {
                 let least = self.least_loaded();
                 match self.home.get(&session) {
+                    // a drained home instance lost its local cache with it
+                    Some(&home) if !self.active[home] => {
+                        RouteDecision { instance: least, cache_usable: false }
+                    }
                     Some(&home) => {
                         let home_q = self.queued_tokens[home] as f64;
                         let least_q = self.queued_tokens[least] as f64;
@@ -95,14 +123,21 @@ impl Router {
         self.queued_tokens[instance] = self.queued_tokens[instance].saturating_sub(tokens);
     }
 
-    /// Load imbalance across instances: max/mean queued tokens.
+    /// Load imbalance across *active* instances: max/mean queued tokens.
     pub fn imbalance(&self) -> f64 {
-        let total: u64 = self.queued_tokens.iter().sum();
-        if total == 0 {
+        let active: Vec<u64> = self
+            .queued_tokens
+            .iter()
+            .zip(&self.active)
+            .filter(|&(_, &a)| a)
+            .map(|(&q, _)| q)
+            .collect();
+        let total: u64 = active.iter().sum();
+        if total == 0 || active.is_empty() {
             return 1.0;
         }
-        let mean = total as f64 / self.queued_tokens.len() as f64;
-        let max = *self.queued_tokens.iter().max().unwrap() as f64;
+        let mean = total as f64 / active.len() as f64;
+        let max = *active.iter().max().unwrap() as f64;
         max / mean
     }
 }
@@ -155,6 +190,31 @@ mod tests {
         r.route(1, 1_000_000);
         let d = r.route(1, 100);
         assert!(d.cache_usable);
+    }
+
+    #[test]
+    fn inactive_instances_receive_no_traffic() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 3);
+        r.set_active(1, false);
+        for s in 0..30u64 {
+            let d = r.route(s, 100);
+            assert_ne!(d.instance, 1, "drained instance must not be routed to");
+        }
+        assert_eq!(r.queued_tokens[1], 0);
+        assert_eq!(r.active_instances(), 2);
+        // reactivation brings it back as the least-loaded target
+        r.set_active(1, true);
+        assert_eq!(r.route(99, 1).instance, 1);
+    }
+
+    #[test]
+    fn kv_centric_drained_home_forfeits_cache() {
+        let mut r = Router::new(RouterKind::KvCentric { overload_factor: 100.0 }, 2);
+        let first = r.route(7, 100);
+        r.set_active(first.instance, false);
+        let again = r.route(7, 100);
+        assert_ne!(again.instance, first.instance);
+        assert!(!again.cache_usable, "cache on a drained instance is gone");
     }
 
     #[test]

@@ -3,15 +3,29 @@
 //! Glues the coordinator components over the substrate models: requests
 //! arrive (workload), are routed (router) to prefill instances (prefill),
 //! reuse cached prefixes (cache::context over mempool), transfer KV over
-//! the RDMA plane (transfer), and decode in the LEP instance (decode) under
-//! SLO-adaptive batching (batcher). Time is virtual (µs); engine latencies
+//! the RDMA plane (transfer), and decode in a *pool* of LEP instances
+//! (decode) behind a decode-side placement policy, under SLO-adaptive,
+//! SLO-tiered batching (batcher). Time is virtual (µs); engine latencies
 //! come from the calibrated simnpu/netsim models.
+//!
+//! ## Elastic PDC (paper §4.1 "Dynamic Adjustment", §6.2.2)
+//!
+//! With [`SimOptions::autoscale`] set, the [`Autoscaler`] controller is in
+//! the loop as a periodic `ScaleEpoch` event: each epoch collects
+//! [`WorkloadStats`] from the window's arrivals/emissions plus live queue
+//! depths and slot occupancy, asks the controller for a [`SplitPlan`], and
+//! enacts it — draining prefill instances into the decode pool or pulling
+//! decode NPUs up as new prefill instances. Moved NPUs are offline for a
+//! modeled *role-switch latency* (weight reload through the shared model
+//! cache — the Table 2 EMS warm-switch path), and every move is logged as a
+//! [`ResplitEvent`] in the final [`ServingReport`].
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::cache::ContextCache;
 use crate::config::Config;
+use crate::coordinator::autoscale::{Autoscaler, SplitPlan, WorkloadStats};
 use crate::coordinator::batcher::{plan_for_slo, AdmissionQueue};
 use crate::coordinator::decode::DecodeInstance;
 use crate::coordinator::eplb;
@@ -20,10 +34,62 @@ use crate::coordinator::request::{RequestPhase, RequestState};
 use crate::coordinator::router::{Router, RouterKind};
 use crate::coordinator::transfer::{kv_transfer, TransferScheduler};
 use crate::mempool::MemPool;
-use crate::metrics::{Histogram, ServingReport};
+use crate::metrics::{Histogram, ResplitEvent, Role, ServingReport, TierAttainment};
 use crate::simnpu::pipeline::DecodePoint;
 use crate::workload::{ExpertActivation, Request};
 use crate::Micros;
+
+/// Decode-side placement policy for the instance pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodePlacement {
+    /// Send each transfer-complete request to the instance with the lowest
+    /// (active + queued) / capacity ratio.
+    LeastLoaded,
+    /// Rotate across instances regardless of load.
+    RoundRobin,
+}
+
+/// Elastic-autoscaling knobs (see module docs).
+#[derive(Debug, Clone)]
+pub struct AutoscaleOptions {
+    /// Controller epoch length, µs.
+    pub interval_us: f64,
+    /// Role-switch latency, µs: the time a moved NPU group is offline
+    /// between roles (engine teardown + weight reload). Defaults to the
+    /// model-cache warm-switch latency ([`default_switch_latency_us`]).
+    pub switch_latency_us: f64,
+    /// Floor on decode-pool NPUs; 0 derives `max(quantum, decode_npus/4)`
+    /// from the deployment, rounded so the prefill side stays
+    /// instance-quantized.
+    pub min_decode_npus: usize,
+    /// Controller hysteresis (don't move below this current:ideal ratio).
+    pub hysteresis: f64,
+}
+
+impl Default for AutoscaleOptions {
+    fn default() -> Self {
+        AutoscaleOptions {
+            interval_us: 1e6,
+            switch_latency_us: default_switch_latency_us(),
+            min_decode_npus: 0,
+            hysteresis: 1.15,
+        }
+    }
+}
+
+/// Modeled role-switch latency: a role change is an engine restart on a new
+/// graph, so the dominant cost is streaming the (already pool-resident)
+/// weights back into NPU memory — the Table 2 EMS warm model-switch path
+/// (§4.4.3), ~5 s for the 671 GB model.
+pub fn default_switch_latency_us() -> Micros {
+    let net = crate::netsim::NetSim::default();
+    let row = crate::cache::model::table2_row(
+        &net,
+        &crate::cache::model::Table2Params::default(),
+        crate::cache::LoadStrategy::Ems,
+    );
+    row.switch_latency_s * 1e6
+}
 
 /// Simulation options beyond the base [`Config`].
 #[derive(Debug, Clone)]
@@ -34,6 +100,13 @@ pub struct SimOptions {
     /// Hard cap on simulated events (runaway guard).
     pub max_events: usize,
     pub seed: u64,
+    /// Number of decode instances the decode NPUs are split across.
+    pub decode_instances: usize,
+    /// Placement policy over the decode pool.
+    pub placement: DecodePlacement,
+    /// Elastic PDC: wire the autoscaler into the event loop. `None` runs
+    /// the classic frozen split.
+    pub autoscale: Option<AutoscaleOptions>,
 }
 
 impl Default for SimOptions {
@@ -43,6 +116,9 @@ impl Default for SimOptions {
             prefill_tokens_per_npu: 16384,
             max_events: 2_000_000,
             seed: 0,
+            decode_instances: 1,
+            placement: DecodePlacement::LeastLoaded,
+            autoscale: None,
         }
     }
 }
@@ -53,7 +129,13 @@ enum Event {
     PrefillKick(usize),
     PrefillDone(usize),
     TransferDone(u64),
-    DecodeStep,
+    DecodeStep(usize),
+    /// Autoscaler epoch: collect stats, recommend, enact.
+    ScaleEpoch,
+    /// A converted NPU group finishes its role switch into prefill slot i.
+    PrefillUp(usize),
+    /// Prefill slot i's drained NPU group finishes its switch into decode.
+    DecodeUp(usize),
 }
 
 /// Heap entry ordered by virtual time.
@@ -85,8 +167,17 @@ pub struct ServeSim {
     pub requests: Vec<RequestState>,
     router: Router,
     prefills: Vec<PrefillInstance>,
-    decode: DecodeInstance,
-    admission: AdmissionQueue,
+    /// Prefill slots mid-role-switch (decode→prefill conversion pending).
+    pf_pending_up: Vec<bool>,
+    /// Prefill slots draining toward decode (NPUs promised away; the slot
+    /// may not be re-activated until its `DecodeUp` completes).
+    pf_draining: Vec<bool>,
+    decodes: Vec<DecodeInstance>,
+    decode_queues: Vec<AdmissionQueue>,
+    decode_step_pending: Vec<bool>,
+    /// SLO-derived decode batch per NPU, per tier (tier 0 = base SLO).
+    tier_batch_per_npu: Vec<usize>,
+    rr_next: usize,
     transfers: TransferScheduler,
     pool: MemPool,
     context_cache: Option<ContextCache>,
@@ -97,8 +188,20 @@ pub struct ServeSim {
     heap: BinaryHeap<Reverse<Timed>>,
     seq: u64,
     now: Micros,
-    decode_step_pending: bool,
-    // metrics
+    // --- elastic state ---
+    autoscaler: Option<Autoscaler>,
+    scale_interval_us: Micros,
+    switch_latency_us: Micros,
+    /// Committed (post-enactment) prefill NPU target the controller sees.
+    target_prefill_npus: usize,
+    win_prompt_tokens: u64,
+    win_output_tokens: u64,
+    resplits: Vec<ResplitEvent>,
+    /// NPU-seconds integration.
+    acc_prefill_npu_us: f64,
+    acc_decode_npu_us: f64,
+    last_npu_t: Micros,
+    // --- metrics ---
     ttft: Histogram,
     tpot: Histogram,
     pub cache_fetch_us_total: f64,
@@ -110,11 +213,17 @@ pub struct ServeSim {
     pub recomputed_tokens: u64,
 }
 
+/// Split `total` as evenly as possible across `n` bins.
+fn split_even(total: usize, n: usize) -> Vec<usize> {
+    let n = n.max(1);
+    (0..n).map(|i| total / n + usize::from(i < total % n)).collect()
+}
+
 impl ServeSim {
     pub fn new(cfg: Config, opts: SimOptions, trace: Vec<Request>) -> ServeSim {
         let s = &cfg.serving;
-        let n_pf = s.prefill_instances;
-        let prefills = (0..n_pf).map(|i| PrefillInstance::new(i, s.npus_per_prefill)).collect();
+        let quantum = s.npus_per_prefill;
+        let n_pf_initial = s.prefill_instances;
 
         // memory pool across all host CPUs of the deployment's nodes
         let pool_nodes = (s.total_npus() / cfg.topo.npus_per_node).max(2);
@@ -142,37 +251,101 @@ impl ServeSim {
         let eplb_imbalance =
             eplb::deployment_imbalance(&hist, s.decode_ep_degree(), redundant).min(1.6);
 
-        let plan = plan_for_slo(
-            &cfg.die,
-            &cfg.model,
-            &DecodePoint {
-                kv_len: 4096,
-                ep: s.decode_ep_degree(),
-                microbatch: s.microbatch,
-                mtp: s.mtp,
-                mtp_acceptance: s.mtp_acceptance,
-                eplb_imbalance,
-                batch_per_npu: 1,
-            },
-            &s.slo,
-            s.decode_npus,
-        );
-        let decode = DecodeInstance::new(s.decode_npus, plan.max_concurrent, opts.seed ^ 0xD);
+        // per-tier SLO-adaptive decode batch caps (Table 5 mechanism)
+        let base_point = DecodePoint {
+            kv_len: 4096,
+            ep: s.decode_ep_degree(),
+            microbatch: s.microbatch,
+            mtp: s.mtp,
+            mtp_acceptance: s.mtp_acceptance,
+            eplb_imbalance,
+            batch_per_npu: 1,
+        };
+        let tier_batch_per_npu: Vec<usize> = (0..s.n_tiers())
+            .map(|t| {
+                plan_for_slo(&cfg.die, &cfg.model, &base_point, &s.slo_for_tier(t), 1)
+                    .batch_per_npu
+            })
+            .collect();
 
+        // the elastic controller (optional) and the prefill slot budget
+        let (autoscaler, scale_interval_us, switch_latency_us) = match &opts.autoscale {
+            Some(a) => {
+                let total = s.total_npus();
+                let raw_min_dec = if a.min_decode_npus > 0 {
+                    a.min_decode_npus
+                } else {
+                    (s.decode_npus / 4).max(quantum)
+                };
+                // keep the prefill side instance-quantized at max scale-out
+                let min_dec = total - (total.saturating_sub(raw_min_dec)) / quantum * quantum;
+                let ctl = Autoscaler {
+                    total_npus: total,
+                    prefill_quantum: quantum,
+                    min_prefill: quantum,
+                    min_decode: min_dec,
+                    hysteresis: a.hysteresis,
+                };
+                (Some(ctl), a.interval_us, a.switch_latency_us)
+            }
+            None => (None, 0.0, 0.0),
+        };
+        let max_pf_slots = match &autoscaler {
+            Some(c) => ((c.total_npus - c.min_decode) / quantum).max(n_pf_initial),
+            None => n_pf_initial,
+        };
+
+        let prefills = (0..max_pf_slots).map(|i| PrefillInstance::new(i, quantum)).collect();
+        let mut router = Router::new(opts.router, max_pf_slots);
+        for idx in n_pf_initial..max_pf_slots {
+            router.set_active(idx, false);
+        }
+
+        // decode pool: split the decode NPUs across the instances (never
+        // more instances than NPUs — every instance needs capacity)
+        let n_dec = opts.decode_instances.clamp(1, s.decode_npus.max(1));
+        let batch0 = tier_batch_per_npu[0];
+        let decodes: Vec<DecodeInstance> = split_even(s.decode_npus, n_dec)
+            .into_iter()
+            .enumerate()
+            .map(|(i, npus)| {
+                DecodeInstance::new(
+                    npus,
+                    batch0 * npus,
+                    opts.seed ^ 0xD ^ (i as u64).wrapping_mul(0x9E37_79B9),
+                )
+            })
+            .collect();
+
+        let target_prefill_npus = n_pf_initial * quantum;
         let mut sim = ServeSim {
-            router: Router::new(opts.router, n_pf),
+            router,
             prefills,
-            decode,
-            admission: AdmissionQueue::default(),
+            pf_pending_up: vec![false; max_pf_slots],
+            pf_draining: vec![false; max_pf_slots],
+            decode_queues: (0..n_dec).map(|_| AdmissionQueue::default()).collect(),
+            decode_step_pending: vec![false; n_dec],
+            decodes,
+            tier_batch_per_npu,
+            rr_next: 0,
             transfers: TransferScheduler::default(),
             pool,
             context_cache,
-            inflight_batches: vec![None; n_pf],
+            inflight_batches: vec![None; max_pf_slots],
             eplb_imbalance,
             heap: BinaryHeap::new(),
             seq: 0,
             now: 0.0,
-            decode_step_pending: false,
+            autoscaler,
+            scale_interval_us,
+            switch_latency_us,
+            target_prefill_npus,
+            win_prompt_tokens: 0,
+            win_output_tokens: 0,
+            resplits: Vec::new(),
+            acc_prefill_npu_us: 0.0,
+            acc_decode_npu_us: 0.0,
+            last_npu_t: 0.0,
             ttft: Histogram::new(),
             tpot: Histogram::new(),
             cache_fetch_us_total: 0.0,
@@ -186,6 +359,10 @@ impl ServeSim {
         for i in 0..sim.requests.len() {
             let t = sim.requests[i].spec.arrival_us;
             sim.push(t, Event::Arrival(i));
+        }
+        if sim.autoscaler.is_some() {
+            let t = sim.scale_interval_us;
+            sim.push(t, Event::ScaleEpoch);
         }
         sim
     }
@@ -202,7 +379,7 @@ impl ServeSim {
             self.now = t;
             events += 1;
             if events > self.opts.max_events {
-                log::warn!("event cap reached at t={t}");
+                eprintln!("warning: event cap reached at t={t}");
                 break;
             }
             match ev {
@@ -210,7 +387,10 @@ impl ServeSim {
                 Event::PrefillKick(inst) => self.kick_prefill(inst),
                 Event::PrefillDone(inst) => self.on_prefill_done(inst),
                 Event::TransferDone(req) => self.on_transfer_done(req),
-                Event::DecodeStep => self.on_decode_step(),
+                Event::DecodeStep(inst) => self.on_decode_step(inst),
+                Event::ScaleEpoch => self.on_scale_epoch(),
+                Event::PrefillUp(inst) => self.on_prefill_up(inst),
+                Event::DecodeUp(inst) => self.on_decode_up(inst),
             }
         }
         self.report()
@@ -222,6 +402,7 @@ impl ServeSim {
         let prompt = self.requests[idx].spec.prompt.clone();
         let prompt_tokens = self.requests[idx].spec.prompt_tokens;
         let session = self.requests[idx].spec.session;
+        self.win_prompt_tokens += prompt_tokens as u64;
 
         let mut reused = 0usize;
         let mut fetch_us = 0.0;
@@ -324,6 +505,7 @@ impl ServeSim {
             st.t_last_token = Some(self.now);
             st.generated = 1;
             self.ttft.record(st.ttft_us().unwrap());
+            self.win_output_tokens += 1;
             if st.is_done() {
                 st.phase = RequestPhase::Finished;
                 st.t_finished = Some(self.now);
@@ -339,38 +521,100 @@ impl ServeSim {
         self.push(self.now, Event::PrefillKick(inst));
     }
 
-    fn on_transfer_done(&mut self, rid: u64) {
-        self.transfers.poll(self.now);
-        let st = &mut self.requests[rid as usize];
-        st.phase = RequestPhase::QueuedDecode;
-        self.admission.push(rid);
-        if !self.decode_step_pending {
-            self.decode_step_pending = true;
-            self.push(self.now, Event::DecodeStep);
+    /// Decode-side placement: pick the pool instance for a ready request.
+    /// Zero-capacity instances (shrunk away by a resplit) are never picked;
+    /// at least one instance always has capacity (the decode pool floor).
+    fn place_decode(&mut self) -> usize {
+        match self.opts.placement {
+            DecodePlacement::RoundRobin => {
+                for _ in 0..self.decodes.len() {
+                    let i = self.rr_next % self.decodes.len();
+                    self.rr_next = self.rr_next.wrapping_add(1);
+                    if self.decodes[i].max_concurrent > 0 {
+                        return i;
+                    }
+                }
+                0
+            }
+            DecodePlacement::LeastLoaded => {
+                let mut best = 0usize;
+                let mut best_score = f64::INFINITY;
+                for (i, d) in self.decodes.iter().enumerate() {
+                    if d.max_concurrent == 0 {
+                        continue;
+                    }
+                    let load = d.slots.len() + self.decode_queues[i].len();
+                    let score = load as f64 / d.max_concurrent as f64;
+                    if score < best_score {
+                        best_score = score;
+                        best = i;
+                    }
+                }
+                best
+            }
         }
     }
 
-    fn on_decode_step(&mut self) {
-        // admit waiting requests into free slots (continuous batching)
-        let free = self.decode.free_slots();
-        for rid in self.admission.admit(free) {
+    fn on_transfer_done(&mut self, rid: u64) {
+        self.transfers.poll(self.now);
+        let inst = self.place_decode();
+        let st = &mut self.requests[rid as usize];
+        st.phase = RequestPhase::QueuedDecode;
+        let tier = st.spec.slo_tier.min(self.tier_batch_per_npu.len() - 1);
+        self.decode_queues[inst].push_tier(rid, tier);
+        if !self.decode_step_pending[inst] {
+            self.decode_step_pending[inst] = true;
+            self.push(self.now, Event::DecodeStep(inst));
+        }
+    }
+
+    fn on_decode_step(&mut self, inst: usize) {
+        // admit waiting requests into free slots: continuous batching with a
+        // per-tier slot quota of `batch_for_slo(tier) x npus` (Table 5's
+        // SLO-adaptive cap, applied per tier so a saturated loose tier can
+        // never crowd a tight tier out of its quota, and vice versa)
+        let npus = self.decodes[inst].npus;
+        let free = self.decodes[inst].free_slots();
+        let caps: Vec<usize> = self.tier_batch_per_npu.iter().map(|b| b * npus).collect();
+        let mut occ = vec![0usize; caps.len()];
+        for s in &self.decodes[inst].slots {
+            occ[s.slo_tier.min(caps.len() - 1)] += 1;
+        }
+        let admitted = self.decode_queues[inst].admit_where(free, |tier| {
+            if occ[tier] < caps[tier] {
+                occ[tier] += 1;
+                true
+            } else {
+                false
+            }
+        });
+        for (rid, tier) in admitted {
             let st = &mut self.requests[rid as usize];
+            debug_assert!(
+                st.phase == RequestPhase::QueuedDecode,
+                "request {rid} admitted twice into the decode pool"
+            );
             st.phase = RequestPhase::Decoding;
             let remaining = st.spec.output_tokens.saturating_sub(st.generated).max(1);
-            self.decode.admit(rid, st.spec.prompt_tokens + st.generated, remaining);
+            self.decodes[inst].admit_tiered(
+                rid,
+                st.spec.prompt_tokens + st.generated,
+                remaining,
+                tier,
+            );
         }
-        if self.decode.slots.is_empty() {
-            self.decode_step_pending = false;
+        if self.decodes[inst].slots.is_empty() {
+            self.decode_step_pending[inst] = false;
             return;
         }
-        let model = self.decode.step_model(
+        let model = self.decodes[inst].step_model(
             &self.cfg.die,
             &self.cfg.model,
             &self.cfg.serving,
             self.eplb_imbalance,
         );
         let step_end = self.now + model.step_us;
-        let emits = self.decode.step(&self.cfg.serving);
+        let emits = self.decodes[inst].step(&self.cfg.serving);
         for e in emits {
             let st = &mut self.requests[e.request as usize];
             let last = st.t_last_token.unwrap_or(self.now);
@@ -379,6 +623,7 @@ impl ServeSim {
                 self.tpot.record(per_tok);
             }
             st.generated += e.tokens;
+            self.win_output_tokens += e.tokens as u64;
             st.t_last_token = Some(step_end);
             if e.finished {
                 st.phase = RequestPhase::Finished;
@@ -386,10 +631,235 @@ impl ServeSim {
                 self.finished += 1;
             }
         }
-        self.push(step_end, Event::DecodeStep);
+        self.push(step_end, Event::DecodeStep(inst));
     }
 
-    fn report(&self) -> ServingReport {
+    // --- elastic PDC -------------------------------------------------------
+
+    /// Fold elapsed virtual time into the per-role NPU-second integrals.
+    /// Must be called before any change to the active split.
+    fn integrate_npu_time(&mut self) {
+        let dt = self.now - self.last_npu_t;
+        if dt > 0.0 {
+            let pf = self.router.active_instances() * self.cfg.serving.npus_per_prefill;
+            let dc: usize = self.decodes.iter().map(|d| d.npus).sum();
+            self.acc_prefill_npu_us += pf as f64 * dt;
+            self.acc_decode_npu_us += dc as f64 * dt;
+        }
+        self.last_npu_t = self.now;
+    }
+
+    /// Re-spread the decode pool's NPUs across its instances after a move.
+    /// When the pool shrinks below one NPU per instance, NPUs go to the
+    /// instances holding the most slots (then deepest queue, then lowest
+    /// index — deterministic), so compute is never credited to an empty
+    /// instance while a loaded one sits at zero.
+    fn redistribute_decode(&mut self, new_total: usize) {
+        let batch0 = self.tier_batch_per_npu[0];
+        let n = self.decodes.len();
+        let sizes = split_even(new_total, n.min(new_total.max(1)));
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| {
+            (
+                std::cmp::Reverse(self.decodes[i].slots.len()),
+                std::cmp::Reverse(self.decode_queues[i].len()),
+                i,
+            )
+        });
+        for (rank, &i) in order.iter().enumerate() {
+            let npus = sizes.get(rank).copied().unwrap_or(0);
+            self.decodes[i].resize(npus, batch0);
+        }
+        // rescue queued work stranded on a zero-capacity instance
+        let best = (0..self.decodes.len())
+            .max_by_key(|&i| self.decodes[i].max_concurrent)
+            .unwrap_or(0);
+        for i in 0..self.decodes.len() {
+            if self.decodes[i].max_concurrent == 0 && !self.decode_queues[i].is_empty() {
+                for (rid, tier) in self.decode_queues[i].admit_where(usize::MAX, |_| true) {
+                    self.decode_queues[best].push_tier(rid, tier);
+                }
+            }
+        }
+        // grown capacity may unblock queued admissions
+        for i in 0..self.decodes.len() {
+            if !self.decode_step_pending[i]
+                && (!self.decode_queues[i].is_empty() || !self.decodes[i].slots.is_empty())
+            {
+                self.decode_step_pending[i] = true;
+                self.push(self.now, Event::DecodeStep(i));
+            }
+        }
+    }
+
+    fn decode_total_npus(&self) -> usize {
+        self.decodes.iter().map(|d| d.npus).sum()
+    }
+
+    fn on_scale_epoch(&mut self) {
+        let Some(ctl) = self.autoscaler.clone() else {
+            return;
+        };
+        // live pressure signals
+        let queue_tokens: u64 = (0..self.prefills.len())
+            .filter(|&i| self.router.is_active(i))
+            .map(|i| self.router.queued_tokens[i])
+            .sum();
+        let (slots, caps) = self
+            .decodes
+            .iter()
+            .fold((0usize, 0usize), |(s, c), d| (s + d.slots.len(), c + d.max_concurrent));
+        let stats = WorkloadStats {
+            prompt_tokens: self.win_prompt_tokens,
+            output_tokens: self.win_output_tokens,
+            prefill_queue_tokens: queue_tokens as f64,
+            decode_occupancy: if caps == 0 { 0.0 } else { slots as f64 / caps as f64 },
+            window_us: self.scale_interval_us,
+        };
+        self.win_prompt_tokens = 0;
+        self.win_output_tokens = 0;
+
+        if let Some(plan) = ctl.recommend(
+            &self.cfg.die,
+            &self.cfg.model,
+            &self.cfg.serving,
+            &stats,
+            self.target_prefill_npus,
+        ) {
+            self.enact(&plan);
+        }
+        if self.finished < self.requests.len() {
+            let t = self.now + self.scale_interval_us;
+            self.push(t, Event::ScaleEpoch);
+        }
+    }
+
+    /// Enact a recommended split: move NPU groups between roles, modeling
+    /// the role-switch latency (the group is offline in between).
+    fn enact(&mut self, plan: &SplitPlan) {
+        let quantum = self.cfg.serving.npus_per_prefill;
+        let total = self.cfg.serving.total_npus();
+        let cur = self.target_prefill_npus;
+        if plan.prefill_npus > cur {
+            // decode → prefill: NPUs leave the decode pool now, come up as
+            // prefill instances after the role switch. Clamp the move to
+            // the usable slot count BEFORE taking NPUs from decode, so a
+            // partial enactment can never strand NPUs between roles.
+            let usable_slots = (0..self.prefills.len())
+                .filter(|&i| {
+                    !self.router.is_active(i) && !self.pf_pending_up[i] && !self.pf_draining[i]
+                })
+                .count();
+            let avail = self.decode_total_npus().saturating_sub(quantum); // keep decode alive
+            let k = ((plan.prefill_npus - cur) / quantum)
+                .min(avail / quantum)
+                .min(usable_slots);
+            if k == 0 {
+                return;
+            }
+            self.integrate_npu_time();
+            let new_decode = self.decode_total_npus() - k * quantum;
+            self.redistribute_decode(new_decode);
+            let mut started = 0usize;
+            for idx in 0..self.prefills.len() {
+                if started == k {
+                    break;
+                }
+                if !self.router.is_active(idx)
+                    && !self.pf_pending_up[idx]
+                    && !self.pf_draining[idx]
+                {
+                    self.pf_pending_up[idx] = true;
+                    let t = self.now + self.switch_latency_us;
+                    self.push(t, Event::PrefillUp(idx));
+                    started += 1;
+                }
+            }
+            debug_assert_eq!(started, k, "usable prefill slots vanished mid-enactment");
+            self.target_prefill_npus = cur + started * quantum;
+            self.resplits.push(ResplitEvent {
+                t_us: self.now,
+                from: Role::Decode,
+                to: Role::Prefill,
+                npus: started * quantum,
+                prefill_npus_after: self.target_prefill_npus,
+                // post-move split once every in-flight switch lands (the
+                // instantaneous decode reading would under-count quanta
+                // still mid drain from earlier moves)
+                decode_npus_after: total - self.target_prefill_npus,
+            });
+        } else if plan.prefill_npus < cur {
+            // prefill → decode: drain instances now (queues reassigned, any
+            // inflight batch completes), NPUs join decode after the switch
+            let k = (cur - plan.prefill_npus) / quantum;
+            let active = self.router.active_instances();
+            let k = k.min(active.saturating_sub(1)); // keep prefill alive
+            if k == 0 {
+                return;
+            }
+            self.integrate_npu_time();
+            let mut drained = 0usize;
+            for idx in (0..self.prefills.len()).rev() {
+                if drained == k {
+                    break;
+                }
+                if self.router.is_active(idx) {
+                    self.drain_prefill(idx);
+                    drained += 1;
+                }
+            }
+            self.target_prefill_npus = cur - drained * quantum;
+            self.resplits.push(ResplitEvent {
+                t_us: self.now,
+                from: Role::Prefill,
+                to: Role::Decode,
+                npus: drained * quantum,
+                prefill_npus_after: self.target_prefill_npus,
+                decode_npus_after: total - self.target_prefill_npus,
+            });
+        }
+    }
+
+    /// Stop routing to a prefill instance, hand its queue to the remaining
+    /// active instances, and schedule its NPUs to join the decode pool once
+    /// any inflight batch and the role switch complete.
+    fn drain_prefill(&mut self, idx: usize) {
+        self.router.set_active(idx, false);
+        self.pf_draining[idx] = true;
+        let queued = std::mem::take(&mut self.prefills[idx].queue);
+        for (rid, ct, pl) in queued {
+            self.router.complete(idx, ct as u64);
+            let session = self.requests[rid as usize].spec.session;
+            // reassignment keeps the already-fetched prefix reuse (the KV
+            // blocks live in the shared pool, P2P property §4.1)
+            let d = self.router.route(session, ct as u64);
+            self.requests[rid as usize].prefill_instance = Some(d.instance);
+            self.prefills[d.instance].enqueue(rid, ct, pl);
+            self.push(self.now, Event::PrefillKick(d.instance));
+        }
+        let free_at = self.prefills[idx].busy_until.max(self.now);
+        let t = free_at + self.switch_latency_us;
+        self.push(t, Event::DecodeUp(idx));
+    }
+
+    fn on_prefill_up(&mut self, idx: usize) {
+        self.integrate_npu_time();
+        self.pf_pending_up[idx] = false;
+        self.router.set_active(idx, true);
+        self.prefills[idx].busy_until = self.now;
+    }
+
+    fn on_decode_up(&mut self, idx: usize) {
+        self.integrate_npu_time();
+        self.pf_draining[idx] = false;
+        let new_total = self.decode_total_npus() + self.cfg.serving.npus_per_prefill;
+        self.redistribute_decode(new_total);
+    }
+
+    // --- reporting ---------------------------------------------------------
+
+    fn report(&mut self) -> ServingReport {
+        self.integrate_npu_time();
         let duration = self
             .requests
             .iter()
@@ -408,7 +878,49 @@ impl ServeSim {
             tpot_us: (&self.tpot).into(),
             prefill_npus: self.cfg.serving.prefill_instances * self.cfg.serving.npus_per_prefill,
             decode_npus: self.cfg.serving.decode_npus,
+            prefill_npu_seconds: self.acc_prefill_npu_us / 1e6,
+            decode_npu_seconds: self.acc_decode_npu_us / 1e6,
+            tier_attainment: self.tier_attainment(),
+            resplits: self.resplits.clone(),
         }
+    }
+
+    /// Per-tier SLO attainment over finished requests.
+    fn tier_attainment(&self) -> Vec<TierAttainment> {
+        let n_tiers = self.cfg.serving.n_tiers();
+        let mut out = Vec::with_capacity(n_tiers);
+        for tier in 0..n_tiers {
+            let slo = self.cfg.serving.slo_for_tier(tier);
+            let mut requests = 0u64;
+            let (mut ttft_ok, mut tpot_ok, mut both_ok) = (0u64, 0u64, 0u64);
+            for r in &self.requests {
+                if r.spec.slo_tier.min(n_tiers - 1) != tier || r.t_finished.is_none() {
+                    continue;
+                }
+                requests += 1;
+                let t_ok = r.ttft_us().is_some_and(|t| t <= slo.ttft_ms * 1000.0);
+                let p_ok = if r.generated > 1 {
+                    let span = r.t_finished.unwrap() - r.t_first_token.unwrap();
+                    span / (r.generated - 1) as f64 <= slo.tpot_ms * 1000.0
+                } else {
+                    true
+                };
+                ttft_ok += u64::from(t_ok);
+                tpot_ok += u64::from(p_ok);
+                both_ok += u64::from(t_ok && p_ok);
+            }
+            let frac = |n: u64| if requests == 0 { 1.0 } else { n as f64 / requests as f64 };
+            out.push(TierAttainment {
+                tier,
+                tpot_slo_ms: slo.tpot_ms,
+                ttft_slo_ms: slo.ttft_ms,
+                requests,
+                ttft_attained: frac(ttft_ok),
+                tpot_attained: frac(tpot_ok),
+                attained: frac(both_ok),
+            });
+        }
+        out
     }
 
     /// Context-cache hit rate observed during the run.
@@ -424,6 +936,25 @@ impl ServeSim {
     /// Measured EPLB residual imbalance used by the engine models.
     pub fn eplb_imbalance(&self) -> f64 {
         self.eplb_imbalance
+    }
+
+    /// The resplit log so far (also included in the final report).
+    pub fn resplit_log(&self) -> &[ResplitEvent] {
+        &self.resplits
+    }
+
+    /// Read-only view of the decode-instance pool (tests, tools).
+    pub fn decode_pool(&self) -> &[DecodeInstance] {
+        &self.decodes
+    }
+
+    /// Current (instantaneous) NPU split as (prefill, decode); NPUs mid
+    /// role-switch belong to neither side.
+    pub fn current_split(&self) -> (usize, usize) {
+        (
+            self.router.active_instances() * self.cfg.serving.npus_per_prefill,
+            self.decode_total_npus(),
+        )
     }
 }
 
@@ -516,5 +1047,70 @@ mod tests {
             r_with.ttft_us.mean,
             r_without.ttft_us.mean
         );
+    }
+
+    #[test]
+    fn decode_pool_completes_and_spreads_load() {
+        for placement in [DecodePlacement::LeastLoaded, DecodePlacement::RoundRobin] {
+            let (report, sim) = run_with(
+                200,
+                SimOptions { decode_instances: 4, placement, ..SimOptions::default() },
+            );
+            assert_eq!(report.requests_completed, 200, "{placement:?}");
+            // every pool instance saw traffic
+            for (i, d) in sim.decodes.iter().enumerate() {
+                assert!(d.tokens_emitted > 0, "{placement:?}: instance {i} idle");
+            }
+            // pool sizes partition the decode NPUs
+            assert_eq!(sim.decode_total_npus(), sim.cfg.serving.decode_npus);
+        }
+    }
+
+    #[test]
+    fn decode_pool_matches_single_instance_totals() {
+        let (single, _) = run_with(150, SimOptions { seed: 2, ..SimOptions::default() });
+        let (pooled, _) = run_with(
+            150,
+            SimOptions { seed: 2, decode_instances: 2, ..SimOptions::default() },
+        );
+        assert_eq!(single.requests_completed, pooled.requests_completed);
+        assert_eq!(single.output_tokens, pooled.output_tokens);
+    }
+
+    #[test]
+    fn frozen_run_logs_no_resplits_and_integrates_npu_time() {
+        let (report, _) = run_with(120, SimOptions::default());
+        assert!(report.resplits.is_empty());
+        let dur_s = report.duration_us / 1e6;
+        let pf = report.prefill_npus as f64 * dur_s;
+        let dc = report.decode_npus as f64 * dur_s;
+        assert!((report.prefill_npu_seconds - pf).abs() / pf < 1e-6);
+        assert!((report.decode_npu_seconds - dc).abs() / dc < 1e-6);
+    }
+
+    #[test]
+    fn autoscaled_run_is_deterministic() {
+        let opts = || SimOptions {
+            seed: 11,
+            autoscale: Some(AutoscaleOptions {
+                interval_us: 5e5,
+                switch_latency_us: 1e6,
+                ..AutoscaleOptions::default()
+            }),
+            ..SimOptions::default()
+        };
+        let (a, _) = run_with(200, opts());
+        let (b, _) = run_with(200, opts());
+        assert_eq!(a.duration_us, b.duration_us);
+        assert_eq!(a.output_tokens, b.output_tokens);
+        assert_eq!(a.resplits.len(), b.resplits.len());
+        assert_eq!(a.requests_completed, 200);
+    }
+
+    #[test]
+    fn switch_latency_is_model_cache_warm_load() {
+        let us = default_switch_latency_us();
+        // Table 2: ~5 s warm switch for the 671 GB model over the pool
+        assert!(us > 1e6 && us < 2e7, "switch latency {us} µs");
     }
 }

@@ -12,7 +12,35 @@
 //! * **Layer 2/1 (python/, build-time only)** — a JAX MoE transformer with
 //!   MLA attention and Pallas kernels, AOT-lowered to HLO text artifacts
 //!   that [`runtime`] loads and executes through PJRT. Python never runs on
-//!   the request path.
+//!   the request path. (The PJRT path is gated behind the `pjrt` cargo
+//!   feature; the default build substitutes an error-returning stub so the
+//!   whole crate builds offline with zero external dependencies.)
+//!
+//! ## Elastic PDC
+//!
+//! The serving simulation implements the paper's §4.1 "Dynamic Adjustment"
+//! end to end: [`coordinator::sim::ServeSim`] runs a *pool* of decode
+//! instances behind a placement policy
+//! ([`coordinator::sim::DecodePlacement`]), and — when
+//! [`coordinator::sim::SimOptions::autoscale`] is set — wires the
+//! [`coordinator::autoscale::Autoscaler`] into the event loop as a periodic
+//! `ScaleEpoch`: windowed workload stats in, a `SplitPlan` out, enacted by
+//! draining prefill instances into the decode pool (or the reverse) with a
+//! modeled role-switch latency (the Table 2 model-cache warm switch).
+//! Every move lands in the report's resplit log, alongside per-phase
+//! NPU-seconds and per-tier SLO attainment
+//! ([`metrics::ServingReport`]).
+//!
+//! Time-varying workloads come from the scenario layer
+//! ([`workload::ScenarioSpec`]) with four named presets:
+//!
+//! * `diurnal` — sinusoidal arrival wave; prompt-heavy "day" flips to
+//!   output-heavy "night" (drives resplits in both directions),
+//! * `burst_storm` — heavy-tailed arrival bursts,
+//! * `long_context_drift` — the prompt-length distribution drifts 1 K→12 K
+//!   mid-run,
+//! * `mixed_slo` — interleaved 50 ms / 15 ms TPOT tiers, enforced by
+//!   per-tier concurrency quotas in [`coordinator::batcher`].
 //!
 //! See DESIGN.md for the full system inventory and the per-experiment index
 //! mapping every paper table/figure to a module and bench target.

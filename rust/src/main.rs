@@ -8,9 +8,9 @@
 //!   tables                       — regenerate all paper tables (also via
 //!                                  `cargo bench`)
 
-use anyhow::{bail, Result};
-
+use cm_infer::bail;
 use cm_infer::runtime::{DecodeState, ModelRuntime, Variant};
+use cm_infer::util::Result;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -38,7 +38,9 @@ fn print_help() {
          \x20 generate [--int8] [--steps N] [--prompt-len N]\n\
          \x20                           real prefill+decode through PJRT\n\
          \x20 simulate [--npus N] [--requests N] [--seed N]\n\
-         \x20                           PDC serving simulation (CloudMatrix384)\n\
+         \x20          [--scenario diurnal|burst_storm|long_context_drift|mixed_slo]\n\
+         \x20          [--autoscale]     PDC serving simulation (CloudMatrix384);\n\
+         \x20                           --autoscale wires the elastic PD controller\n\
          \n\
          Run `make artifacts` first; benches: `cargo bench` (paper tables)."
     );
@@ -131,12 +133,13 @@ fn generate(args: &[String]) -> Result<()> {
 fn simulate(args: &[String]) -> Result<()> {
     use cm_infer::config::Config;
     use cm_infer::coordinator::router::RouterKind;
-    use cm_infer::coordinator::sim::{ServeSim, SimOptions};
-    use cm_infer::workload::{generate, WorkloadSpec};
+    use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
+    use cm_infer::workload::{generate, generate_scenario, ScenarioSpec, WorkloadSpec};
 
     let n: usize = flag_val(args, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(500);
     let seed: u64 = flag_val(args, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let kv_centric = has_flag(args, "--kv-centric");
+    let autoscale = has_flag(args, "--autoscale");
 
     let mut cfg = Config::default();
     if let Some(path) = flag_val(args, "--config") {
@@ -164,7 +167,20 @@ fn simulate(args: &[String]) -> Result<()> {
         cfg.serving.decode_ep_degree(),
         cfg.serving.slo.tpot_ms
     );
-    let trace = generate(&WorkloadSpec::paper_default(seed), n);
+    let trace = match flag_val(args, "--scenario") {
+        Some(name) => {
+            let Some(sc) = ScenarioSpec::by_name(&name, seed) else {
+                bail!(
+                    "unknown scenario `{name}` (presets: {})",
+                    ScenarioSpec::PRESETS.join(", ")
+                );
+            };
+            cfg.serving.tier_slos = sc.tier_slo_configs();
+            println!("[simulate] scenario preset: {}", sc.name);
+            generate_scenario(&sc, n)
+        }
+        None => generate(&WorkloadSpec::paper_default(seed), n),
+    };
     let opts = SimOptions {
         router: if kv_centric {
             RouterKind::KvCentric { overload_factor: 3.0 }
@@ -172,6 +188,7 @@ fn simulate(args: &[String]) -> Result<()> {
             RouterKind::PeerToPeer
         },
         seed,
+        autoscale: autoscale.then(AutoscaleOptions::default),
         ..SimOptions::default()
     };
     let mut sim = ServeSim::new(cfg, opts, trace);
@@ -204,6 +221,37 @@ fn simulate(args: &[String]) -> Result<()> {
         sim.peak_router_imbalance,
         sim.eplb_imbalance()
     );
+    println!(
+        "  NPU-seconds: prefill {:.0}  decode {:.0}",
+        r.prefill_npu_seconds, r.decode_npu_seconds
+    );
+    for t in &r.tier_attainment {
+        if t.requests > 0 {
+            println!(
+                "  tier {} (TPOT {} ms): {} requests, SLO attainment {:.1}% (TTFT {:.1}%, TPOT {:.1}%)",
+                t.tier,
+                t.tpot_slo_ms,
+                t.requests,
+                t.attained * 100.0,
+                t.ttft_attained * 100.0,
+                t.tpot_attained * 100.0
+            );
+        }
+    }
+    if !r.resplits.is_empty() {
+        println!("  resplit log ({} moves):", r.resplits.len());
+        for e in &r.resplits {
+            println!(
+                "    t={:8.2}s  {:?}→{:?}  {:3} NPUs  → split {}P/{}D",
+                e.t_us / 1e6,
+                e.from,
+                e.to,
+                e.npus,
+                e.prefill_npus_after,
+                e.decode_npus_after
+            );
+        }
+    }
     Ok(())
 }
 

@@ -133,6 +133,44 @@ impl fmt::Display for Histogram {
     }
 }
 
+/// NPU role in the PDC split (resplit-event bookkeeping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Prefill,
+    Decode,
+}
+
+/// One elastic resplit enacted by the autoscaler (paper §4.1 dynamic
+/// adjustment): `npus` moved `from` → `to` at virtual time `t_us`. The
+/// moved NPUs are offline until the modeled role-switch (weight reload via
+/// the model cache, Table 2) completes.
+#[derive(Debug, Clone, Copy)]
+pub struct ResplitEvent {
+    pub t_us: f64,
+    pub from: Role,
+    pub to: Role,
+    pub npus: usize,
+    /// Target prefill/decode NPU counts after this move completes.
+    pub prefill_npus_after: usize,
+    pub decode_npus_after: usize,
+}
+
+/// Per-SLO-tier attainment summary (mixed-SLO workloads, Table 5 tiers).
+#[derive(Debug, Clone, Copy)]
+pub struct TierAttainment {
+    pub tier: usize,
+    pub tpot_slo_ms: f64,
+    pub ttft_slo_ms: f64,
+    /// Finished requests in this tier.
+    pub requests: u64,
+    /// Fraction with TTFT within the tier's TTFT SLO.
+    pub ttft_attained: f64,
+    /// Fraction with mean TPOT within the tier's TPOT SLO.
+    pub tpot_attained: f64,
+    /// Fraction attaining both.
+    pub attained: f64,
+}
+
 /// End-of-run serving report (per paper §5.2 reporting conventions).
 #[derive(Debug, Clone, Default)]
 pub struct ServingReport {
@@ -143,8 +181,19 @@ pub struct ServingReport {
     pub output_tokens: u64,
     pub ttft_us: HistogramSnapshot,
     pub tpot_us: HistogramSnapshot,
+    /// NPUs in the prefill/decode pools at run start (frozen-split view).
     pub prefill_npus: usize,
     pub decode_npus: usize,
+    /// Integrated prefill-role NPU-seconds over the run (elastic runs
+    /// integrate the time-varying split; NPUs mid-role-switch count to
+    /// neither pool).
+    pub prefill_npu_seconds: f64,
+    /// Integrated decode-role NPU-seconds over the run.
+    pub decode_npu_seconds: f64,
+    /// SLO attainment per tier (tier 0 = the deployment's base SLO).
+    pub tier_attainment: Vec<TierAttainment>,
+    /// Elastic resplit log, in enactment order (empty for frozen runs).
+    pub resplits: Vec<ResplitEvent>,
 }
 
 /// Cheap copyable histogram summary.
@@ -190,6 +239,25 @@ impl ServingReport {
     pub fn tokens_per_s_per_tflops(&self, tput_per_npu: f64, npu_tflops: f64) -> f64 {
         tput_per_npu / npu_tflops
     }
+
+    /// Number of logged resplit moves in a given direction.
+    pub fn resplit_count(&self, from: Role, to: Role) -> usize {
+        self.resplits.iter().filter(|e| e.from == from && e.to == to).count()
+    }
+
+    /// Overall SLO attainment across tiers (request-weighted); 1.0 when no
+    /// tier data was collected.
+    pub fn overall_attainment(&self) -> f64 {
+        let total: u64 = self.tier_attainment.iter().map(|t| t.requests).sum();
+        if total == 0 {
+            return 1.0;
+        }
+        self.tier_attainment
+            .iter()
+            .map(|t| t.attained * t.requests as f64)
+            .sum::<f64>()
+            / total as f64
+    }
 }
 
 #[cfg(test)]
@@ -232,6 +300,69 @@ mod tests {
         h.record(42.0);
         assert_eq!(h.p50(), 42.0);
         assert_eq!(h.p99(), 42.0);
+    }
+
+    /// The log-bucket layout guarantees ~4.4% relative quantile error
+    /// (one bucket spans a factor of 2^(1/16) ≈ 1.0443). Check p50/p99
+    /// against the exact sorted quantiles on heavy-tailed samples.
+    #[test]
+    fn quantiles_within_one_log_bucket_of_exact() {
+        let one_bucket = 2f64.powf(1.0 / 16.0) - 1.0; // ≈ 0.0443
+        for (seed, mu, sigma) in [(42u64, 10.0, 1.5), (7, 4.0, 0.5), (9, 14.0, 2.5)] {
+            let mut rng = crate::util::Rng::new(seed);
+            let mut h = Histogram::new();
+            let mut xs = Vec::new();
+            for _ in 0..5000 {
+                let v = rng.lognormal(mu, sigma).clamp(1.0, 3.9e9);
+                h.record(v);
+                xs.push(v);
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.5, 0.99] {
+                let rank = (q * xs.len() as f64).ceil() as usize - 1;
+                let exact = xs[rank];
+                let got = h.quantile(q);
+                let rel = (got - exact).abs() / exact;
+                assert!(
+                    rel <= one_bucket + 1e-3,
+                    "seed {seed} q{q}: {got} vs exact {exact} (rel {rel:.4})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantile_empty_and_single_sample() {
+        let h = Histogram::new();
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.0);
+        }
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+
+        let mut h = Histogram::new();
+        h.record(123_456.789);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 123_456.789, "q={q}");
+        }
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn quantiles_monotone_in_q() {
+        let mut rng = crate::util::Rng::new(3);
+        let mut h = Histogram::new();
+        for _ in 0..2000 {
+            h.record(rng.lognormal(8.0, 1.0));
+        }
+        let mut last = 0.0;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let v = h.quantile(q);
+            assert!(v >= last, "quantile not monotone at q={q}: {v} < {last}");
+            last = v;
+        }
+        assert!(h.quantile(1.0) <= h.max());
     }
 
     #[test]

@@ -5,113 +5,13 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::{Context, Result};
 use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 use super::manifest::Manifest;
+use super::state::{DecodeOut, DecodeState, PrefillOut, Variant};
 use super::weights::{literal_from_bytes, WeightStore};
-
-/// Which weight variant to serve (paper Table 6 compares these).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Variant {
-    /// Float32 weights (the "BF16 baseline" at our scale).
-    Fp,
-    /// §4.5 INT8-quantized weights, executed via the Pallas int8 GEMM path.
-    Int8,
-}
-
-impl Variant {
-    pub fn tag(self) -> &'static str {
-        match self {
-            Variant::Fp => "fp",
-            Variant::Int8 => "int8",
-        }
-    }
-}
-
-/// Prefill results: last-token logits + the request's latent KV caches.
-pub struct PrefillOut {
-    pub logits: Vec<f32>,
-    /// [n_layers, 1, max_seq, d_c] flattened.
-    pub c_cache: Vec<f32>,
-    /// [n_layers, 1, max_seq, d_rope] flattened.
-    pub r_cache: Vec<f32>,
-    pub latency_us: u64,
-}
-
-/// Mutable decode-side batch state: token slots + latent caches.
-///
-/// The coordinator owns one `DecodeState` per decode engine; slot `i`
-/// corresponds to batch lane `i` of the decode graph. Lane data is copied in
-/// from prefill output on admission (the paper's prefill→decode KV transfer).
-pub struct DecodeState {
-    pub batch: usize,
-    pub n_layers: usize,
-    pub max_seq: usize,
-    pub d_c: usize,
-    pub d_rope: usize,
-    pub tokens: Vec<i32>,
-    pub positions: Vec<i32>,
-    /// [n_layers, batch, max_seq, d_c]
-    pub c_cache: Vec<f32>,
-    /// [n_layers, batch, max_seq, d_rope]
-    pub r_cache: Vec<f32>,
-}
-
-impl DecodeState {
-    pub fn new(m: &Manifest) -> Self {
-        let d = &m.model;
-        let b = d.decode_batch;
-        DecodeState {
-            batch: b,
-            n_layers: d.n_layers,
-            max_seq: d.max_seq,
-            d_c: d.d_c,
-            d_rope: d.d_rope,
-            tokens: vec![0; b],
-            positions: vec![0; b],
-            c_cache: vec![0.0; d.n_layers * b * d.max_seq * d.d_c],
-            r_cache: vec![0.0; d.n_layers * b * d.max_seq * d.d_rope],
-        }
-    }
-
-    /// Copy a prefill-produced cache (single-lane layout) into slot `lane`.
-    ///
-    /// This is the data movement the paper routes over the RDMA plane
-    /// (§4.3.3); the netsim models its cost, this does the real copy.
-    pub fn load_lane(&mut self, lane: usize, pf: &PrefillOut, first_token: i32, prompt_len: usize) {
-        assert!(lane < self.batch);
-        let (l, s) = (self.n_layers, self.max_seq);
-        for layer in 0..l {
-            let src = layer * s * self.d_c;
-            let dst = (layer * self.batch + lane) * s * self.d_c;
-            self.c_cache[dst..dst + s * self.d_c]
-                .copy_from_slice(&pf.c_cache[src..src + s * self.d_c]);
-            let src = layer * s * self.d_rope;
-            let dst = (layer * self.batch + lane) * s * self.d_rope;
-            self.r_cache[dst..dst + s * self.d_rope]
-                .copy_from_slice(&pf.r_cache[src..src + s * self.d_rope]);
-        }
-        self.tokens[lane] = first_token;
-        self.positions[lane] = prompt_len as i32;
-    }
-
-    /// Reset a lane to the idle state (position 0, zero cache not required —
-    /// attention masks by position).
-    pub fn clear_lane(&mut self, lane: usize) {
-        self.tokens[lane] = 0;
-        self.positions[lane] = 0;
-    }
-}
-
-/// One decode step's outputs.
-pub struct DecodeOut {
-    pub next_tokens: Vec<i32>,
-    /// Only populated by the MTP graph.
-    pub spec_tokens: Vec<i32>,
-    pub logits: Vec<f32>,
-    pub latency_us: u64,
-}
 
 /// Loaded + compiled model: the serving hot path.
 pub struct ModelRuntime {

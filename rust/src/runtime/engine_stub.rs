@@ -1,0 +1,66 @@
+//! No-PJRT stub for [`ModelRuntime`]/[`WeightStore`] (compiled when the
+//! `pjrt` feature is off, which is the default in this image — the `xla`
+//! crate is not vendored). Keeps every real-model entry point compiling so
+//! the simulator, benches and examples build offline; any attempt to
+//! actually execute a graph returns a clear error at runtime. The
+//! discrete-event simulator (`coordinator::sim`) never touches this path.
+
+use super::manifest::Manifest;
+use super::state::{DecodeOut, DecodeState, PrefillOut, Variant};
+use crate::bail;
+use crate::util::Result;
+
+const STUB_MSG: &str =
+    "built without the `pjrt` feature: real-model execution is unavailable \
+     (add the `xla` dependency and build with `--features pjrt`)";
+
+/// Weight-blob placeholder matching the PJRT `WeightStore` surface.
+pub struct WeightStore {
+    pub name: String,
+    pub total_bytes: usize,
+}
+
+impl WeightStore {
+    pub fn load(_manifest: &Manifest, _blob_name: &str) -> Result<WeightStore> {
+        bail!("{STUB_MSG}")
+    }
+}
+
+/// Stub model runtime: loads the manifest (so `info`-style commands work)
+/// but refuses to compile or execute graphs.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub variant: Variant,
+    pub compile_ms: u128,
+}
+
+impl ModelRuntime {
+    pub fn load(dir: impl AsRef<std::path::Path>, variant: Variant) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(manifest, variant)
+    }
+
+    pub fn from_manifest(_manifest: Manifest, _variant: Variant) -> Result<ModelRuntime> {
+        bail!("{STUB_MSG}")
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (no pjrt)".to_string()
+    }
+
+    pub fn prefill(&self, _tokens: &[i32]) -> Result<PrefillOut> {
+        bail!("{STUB_MSG}")
+    }
+
+    pub fn decode_step(&self, _st: &mut DecodeState) -> Result<DecodeOut> {
+        bail!("{STUB_MSG}")
+    }
+
+    pub fn decode_step_mtp(&self, _st: &mut DecodeState) -> Result<DecodeOut> {
+        bail!("{STUB_MSG}")
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        0
+    }
+}

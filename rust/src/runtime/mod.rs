@@ -5,11 +5,25 @@
 //! Pipeline: `manifest.json` → [`Manifest`] → [`WeightStore`] (raw blobs →
 //! PJRT literals, uploaded once) → [`ModelRuntime`] (compiled executables +
 //! typed prefill/decode entry points operating on token/cache state).
+//!
+//! The XLA/PJRT dependency is gated behind the `pjrt` cargo feature; the
+//! default build substitutes an error-returning stub (`engine_stub`) so the
+//! simulator and its tests/benches build fully offline.
 
+#[cfg(feature = "pjrt")]
 mod engine;
+#[cfg(not(feature = "pjrt"))]
+mod engine_stub;
 mod manifest;
+mod state;
+#[cfg(feature = "pjrt")]
 mod weights;
 
-pub use engine::{DecodeOut, DecodeState, ModelRuntime, PrefillOut, Variant};
+#[cfg(feature = "pjrt")]
+pub use engine::ModelRuntime;
+#[cfg(not(feature = "pjrt"))]
+pub use engine_stub::{ModelRuntime, WeightStore};
 pub use manifest::{ArtifactEntry, Manifest, ModelDims, TensorEntry};
+pub use state::{DecodeOut, DecodeState, PrefillOut, Variant};
+#[cfg(feature = "pjrt")]
 pub use weights::WeightStore;

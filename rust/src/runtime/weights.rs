@@ -8,7 +8,8 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::{Context, Result};
 use xla::{ElementType, Literal};
 
 use super::manifest::{Manifest, TensorEntry};

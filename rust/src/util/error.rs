@@ -1,0 +1,113 @@
+//! Minimal error type + context helpers (anyhow is not vendored in this
+//! image — DESIGN.md §1). API-compatible with the subset the crate uses:
+//! [`Result`], [`Context::context`]/[`Context::with_context`], and the
+//! [`bail!`](crate::bail)/[`anyhow!`](crate::anyhow) macros.
+
+use std::fmt;
+
+/// String-backed error with a context chain, printed outermost-first.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with an outer context line.
+    pub fn wrap(self, ctx: impl fmt::Display) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// keeps this blanket conversion coherent (mirroring anyhow's design).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias (defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values (`Result` and `Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => { $crate::util::error::Error::msg(format!($($t)*)) }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("bad {}", 7)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "bad 7");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: Result<u32> = fails().context("outer");
+        assert_eq!(r.unwrap_err().to_string(), "outer: bad 7");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let r: Result<i64> = "zz".parse::<i64>().map_err(Error::from);
+        assert!(r.is_err());
+        let opt: Option<u32> = None;
+        assert_eq!(opt.context("missing").unwrap_err().to_string(), "missing");
+    }
+}

@@ -8,7 +8,8 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]

@@ -1,8 +1,11 @@
 //! Small self-contained utilities: a minimal JSON parser (serde is not
-//! vendored in this environment) and a deterministic PRNG.
+//! vendored in this environment), a deterministic PRNG, and a tiny
+//! anyhow-style error type (anyhow is not vendored either).
 
+pub mod error;
 pub mod json;
 pub mod rng;
 
+pub use error::{Context, Error, Result};
 pub use json::Json;
 pub use rng::Rng;

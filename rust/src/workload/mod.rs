@@ -2,6 +2,11 @@
 //! paper's §1/§4.1 motivate — bursty Poisson arrivals, log-normal
 //! prompt/output lengths, multi-turn sessions with shared prefixes, and
 //! Zipf-skewed expert activation.
+//!
+//! On top of the stationary [`WorkloadSpec`] sits [`ScenarioSpec`]: named,
+//! time-varying scenarios (piecewise phases + sinusoidal rate modulation +
+//! mixed SLO tiers) that exercise the elastic PDC autoscaler — `diurnal`,
+//! `burst_storm`, `long_context_drift` and `mixed_slo` presets.
 
 use crate::util::Rng;
 
@@ -20,6 +25,10 @@ pub struct Request {
     pub session: u64,
     /// Turn index within the session.
     pub turn: u32,
+    /// SLO tier (0 = the deployment's base SLO; higher tiers index
+    /// `ServingConfig::tier_slos`). Mixed-SLO scenarios thread this through
+    /// the batcher's per-tier concurrency caps.
+    pub slo_tier: usize,
 }
 
 /// Workload shape parameters.
@@ -51,6 +60,11 @@ pub struct WorkloadSpec {
     pub materialize_tokens: bool,
     /// Vocabulary for materialized tokens.
     pub vocab: usize,
+    /// Piecewise time-varying arrival rate: `(start_us, mean_interarrival_us)`
+    /// breakpoints in ascending `start_us` order. From each breakpoint on,
+    /// the process uses that mean inter-arrival time; before the first
+    /// breakpoint (and when empty) `mean_interarrival_us` applies.
+    pub rate_points: Vec<(f64, f64)>,
 }
 
 impl WorkloadSpec {
@@ -73,6 +87,7 @@ impl WorkloadSpec {
             session_skew: 0.0,
             materialize_tokens: false,
             vocab: 2048,
+            rate_points: Vec::new(),
         }
     }
 
@@ -95,6 +110,7 @@ impl WorkloadSpec {
             session_skew: 0.0,
             materialize_tokens: true,
             vocab,
+            rate_points: Vec::new(),
         }
     }
 }
@@ -106,8 +122,49 @@ struct Session {
     turns: u32,
 }
 
+/// Generator knobs that may vary over virtual time (piecewise phases,
+/// sinusoidal modulation). For a stationary [`WorkloadSpec`] they equal the
+/// spec's own fields at every `t`.
+#[derive(Debug, Clone, Copy)]
+struct ShapeAt {
+    mean_interarrival_us: f64,
+    prompt_mu: f64,
+    prompt_sigma: f64,
+    output_mu: f64,
+    output_sigma: f64,
+}
+
+impl ShapeAt {
+    fn of_spec(spec: &WorkloadSpec, t: f64) -> ShapeAt {
+        // piecewise arrival rate: latest breakpoint at or before t wins
+        let mean_interarrival_us = spec
+            .rate_points
+            .iter()
+            .rev()
+            .find(|&&(start, _)| start <= t)
+            .map(|&(_, ia)| ia)
+            .unwrap_or(spec.mean_interarrival_us);
+        ShapeAt {
+            mean_interarrival_us,
+            prompt_mu: spec.prompt_mu,
+            prompt_sigma: spec.prompt_sigma,
+            output_mu: spec.output_mu,
+            output_sigma: spec.output_sigma,
+        }
+    }
+}
+
 /// Generate a trace of `n` requests.
 pub fn generate(spec: &WorkloadSpec, n: usize) -> Vec<Request> {
+    generate_impl(spec, None, n)
+}
+
+/// Generate a trace from a time-varying [`ScenarioSpec`].
+pub fn generate_scenario(scenario: &ScenarioSpec, n: usize) -> Vec<Request> {
+    generate_impl(&scenario.base, Some(scenario), n)
+}
+
+fn generate_impl(spec: &WorkloadSpec, scenario: Option<&ScenarioSpec>, n: usize) -> Vec<Request> {
     let mut rng = Rng::new(spec.seed);
     let mut out = Vec::with_capacity(n);
     let mut t = 0.0f64;
@@ -116,20 +173,34 @@ pub fn generate(spec: &WorkloadSpec, n: usize) -> Vec<Request> {
     let mut burst_left = 0usize;
 
     for id in 0..n as u64 {
+        let shape_here = match scenario {
+            Some(sc) => sc.shape_at(spec, t),
+            None => ShapeAt::of_spec(spec, t),
+        };
         if burst_left > 0 {
             burst_left -= 1;
-            t += rng.exponential(spec.mean_interarrival_us * 0.05);
+            t += rng.exponential(shape_here.mean_interarrival_us * 0.05);
         } else {
-            t += rng.exponential(spec.mean_interarrival_us);
+            t += rng.exponential(shape_here.mean_interarrival_us);
             if rng.f64() < spec.burst_prob {
                 burst_left = (rng.exponential(spec.burst_mean) as usize).clamp(1, 64);
             }
         }
+        // lengths follow the arrival's own phase
+        let shape = match scenario {
+            Some(sc) => sc.shape_at(spec, t),
+            None => ShapeAt::of_spec(spec, t),
+        };
 
-        let prompt_len = (rng.lognormal(spec.prompt_mu, spec.prompt_sigma) as usize)
+        let prompt_len = (rng.lognormal(shape.prompt_mu, shape.prompt_sigma) as usize)
             .clamp(spec.min_prompt, spec.max_prompt);
-        let output_len = (rng.lognormal(spec.output_mu, spec.output_sigma) as usize)
+        let output_len = (rng.lognormal(shape.output_mu, shape.output_sigma) as usize)
             .clamp(spec.min_output, spec.max_output);
+
+        let slo_tier = match scenario {
+            Some(sc) if !sc.tier_mix.is_empty() => sc.sample_tier(&mut rng),
+            _ => 0,
+        };
 
         // multi-turn: continue a random session, prefix = its history
         let reuse = !sessions.is_empty() && rng.f64() < spec.multi_turn_prob;
@@ -174,9 +245,224 @@ pub fn generate(spec: &WorkloadSpec, n: usize) -> Vec<Request> {
             prompt,
             session,
             turn,
+            slo_tier,
         });
     }
     out
+}
+
+// ---------------------------------------------------------------------------
+// Scenario layer: named time-varying workloads for the elastic PDC loop
+// ---------------------------------------------------------------------------
+
+/// One piecewise scenario phase: from `start_us` on, these arrival/length
+/// parameters apply (until the next phase starts).
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioPhase {
+    pub start_us: f64,
+    pub mean_interarrival_us: f64,
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    pub output_mu: f64,
+    pub output_sigma: f64,
+}
+
+/// Sinusoidal arrival-rate modulation: the instantaneous rate is scaled by
+/// `1 + amplitude * sin(2π t / period_us)` (the "diurnal" wave).
+#[derive(Debug, Clone, Copy)]
+pub struct RateWave {
+    pub period_us: f64,
+    /// In [0, 1): peak-to-mean rate swing.
+    pub amplitude: f64,
+}
+
+/// A named, time-varying scenario layered on a base [`WorkloadSpec`]:
+/// piecewise phases override arrival rate and length distributions,
+/// an optional [`RateWave`] modulates the arrival rate sinusoidally, and
+/// `tier_mix` assigns per-request SLO tiers for mixed-SLO serving.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: &'static str,
+    pub base: WorkloadSpec,
+    /// Phases in ascending `start_us` order; before the first phase the
+    /// base spec's parameters apply.
+    pub phases: Vec<ScenarioPhase>,
+    pub wave: Option<RateWave>,
+    /// `(tier, weight)` sampled independently per request; empty = tier 0.
+    pub tier_mix: Vec<(usize, f64)>,
+    /// SLOs for tiers 1.. as `(tpot_ms, ttft_ms)`, aligned with
+    /// `ServingConfig::tier_slos` (tier 0 stays the deployment's base SLO).
+    pub tier_slos_ms: Vec<(f64, f64)>,
+}
+
+/// ln-space mean so the log-normal's *mean* lands on `target`.
+fn ln_mean(target: f64, sigma: f64) -> f64 {
+    target.ln() - sigma * sigma / 2.0
+}
+
+impl ScenarioSpec {
+    /// All preset names accepted by [`ScenarioSpec::by_name`].
+    pub const PRESETS: [&'static str; 4] =
+        ["diurnal", "burst_storm", "long_context_drift", "mixed_slo"];
+
+    pub fn by_name(name: &str, seed: u64) -> Option<ScenarioSpec> {
+        match name {
+            "diurnal" => Some(Self::diurnal(seed)),
+            "burst_storm" => Some(Self::burst_storm(seed)),
+            "long_context_drift" => Some(Self::long_context_drift(seed)),
+            "mixed_slo" => Some(Self::mixed_slo(seed)),
+            _ => None,
+        }
+    }
+
+    /// Day/night cycle (paper §4.1 "dynamic real-world workloads"): a
+    /// sinusoidal arrival wave over a 24 s virtual "day" whose first half
+    /// is interactive/RAG traffic (long prompts, short answers) and whose
+    /// second half is batch-generation traffic (short prompts, long
+    /// outputs). The prompt:output demand ratio flips by ~3 orders of
+    /// magnitude at the phase boundary — the workload that motivates
+    /// independent prefill/decode scaling.
+    pub fn diurnal(seed: u64) -> ScenarioSpec {
+        let mut base = WorkloadSpec::paper_default(seed);
+        base.mean_interarrival_us = 10_000.0;
+        base.burst_prob = 0.02;
+        base.multi_turn_prob = 0.1;
+        base.min_prompt = 64;
+        base.max_prompt = 16_384;
+        base.min_output = 8;
+        base.max_output = 2_048;
+        let period = 24e6;
+        ScenarioSpec {
+            name: "diurnal",
+            base,
+            phases: vec![
+                // "day": RAG — long prompts, terse answers
+                ScenarioPhase {
+                    start_us: 0.0,
+                    mean_interarrival_us: 10_000.0,
+                    prompt_mu: ln_mean(6144.0, 0.25),
+                    prompt_sigma: 0.25,
+                    output_mu: ln_mean(32.0, 0.3),
+                    output_sigma: 0.3,
+                },
+                // "night": batch generation — short prompts, long outputs
+                ScenarioPhase {
+                    start_us: period / 2.0,
+                    mean_interarrival_us: 10_000.0,
+                    prompt_mu: ln_mean(256.0, 0.3),
+                    prompt_sigma: 0.3,
+                    output_mu: ln_mean(1024.0, 0.25),
+                    output_sigma: 0.25,
+                },
+            ],
+            wave: Some(RateWave { period_us: period, amplitude: 0.25 }),
+            tier_mix: Vec::new(),
+            tier_slos_ms: Vec::new(),
+        }
+    }
+
+    /// Heavy-tailed burst storms: a moderate base rate punctuated by large
+    /// geometric bursts — the load-balance stress that §4.1's stateless
+    /// P2P routing argument targets.
+    pub fn burst_storm(seed: u64) -> ScenarioSpec {
+        let mut base = WorkloadSpec::paper_default(seed);
+        base.mean_interarrival_us = 6_000.0;
+        base.burst_prob = 0.30;
+        base.burst_mean = 20.0;
+        ScenarioSpec {
+            name: "burst_storm",
+            base,
+            phases: Vec::new(),
+            wave: None,
+            tier_mix: Vec::new(),
+            tier_slos_ms: Vec::new(),
+        }
+    }
+
+    /// Prompt-length distribution drifting upward mid-run (1 K → 12 K):
+    /// models a tenant mix shifting toward long-context workloads, which
+    /// must pull NPUs into the prefill pool over time.
+    pub fn long_context_drift(seed: u64) -> ScenarioSpec {
+        let mut base = WorkloadSpec::paper_default(seed);
+        base.mean_interarrival_us = 8_000.0;
+        base.multi_turn_prob = 0.2;
+        let phase = |start_us: f64, prompt: f64| ScenarioPhase {
+            start_us,
+            mean_interarrival_us: 8_000.0,
+            prompt_mu: ln_mean(prompt, 0.3),
+            prompt_sigma: 0.3,
+            output_mu: ln_mean(128.0, 0.3),
+            output_sigma: 0.3,
+        };
+        ScenarioSpec {
+            name: "long_context_drift",
+            base,
+            phases: vec![
+                phase(0.0, 1024.0),
+                phase(5e6, 2048.0),
+                phase(10e6, 8192.0),
+                phase(15e6, 12_288.0),
+            ],
+            wave: None,
+            tier_mix: Vec::new(),
+            tier_slos_ms: Vec::new(),
+        }
+    }
+
+    /// Mixed SLO tiers (Table 5's 15 ms vs 50 ms TPOT targets) arriving
+    /// interleaved: 70% standard-tier, 30% tight-tier traffic. The batcher
+    /// enforces a separate SLO-derived concurrency cap per tier.
+    pub fn mixed_slo(seed: u64) -> ScenarioSpec {
+        let mut base = WorkloadSpec::paper_default(seed);
+        base.mean_interarrival_us = 4_000.0;
+        ScenarioSpec {
+            name: "mixed_slo",
+            base,
+            phases: Vec::new(),
+            wave: None,
+            tier_mix: vec![(0, 0.7), (1, 0.3)],
+            tier_slos_ms: vec![(15.0, 1_500.0)],
+        }
+    }
+
+    /// The extra-tier SLOs as config objects, ready to assign to
+    /// `ServingConfig::tier_slos` (single source of the tier encoding).
+    pub fn tier_slo_configs(&self) -> Vec<crate::config::SloConfig> {
+        self.tier_slos_ms
+            .iter()
+            .map(|&(tpot_ms, ttft_ms)| crate::config::SloConfig { tpot_ms, ttft_ms })
+            .collect()
+    }
+
+    /// Effective generator shape at virtual time `t`.
+    fn shape_at(&self, spec: &WorkloadSpec, t: f64) -> ShapeAt {
+        let mut s = ShapeAt::of_spec(spec, t);
+        if let Some(p) = self.phases.iter().rev().find(|p| p.start_us <= t) {
+            s.mean_interarrival_us = p.mean_interarrival_us;
+            s.prompt_mu = p.prompt_mu;
+            s.prompt_sigma = p.prompt_sigma;
+            s.output_mu = p.output_mu;
+            s.output_sigma = p.output_sigma;
+        }
+        if let Some(w) = self.wave {
+            let mult = 1.0 + w.amplitude * (2.0 * std::f64::consts::PI * t / w.period_us).sin();
+            s.mean_interarrival_us /= mult.max(0.05);
+        }
+        s
+    }
+
+    /// Draw a request's SLO tier from `tier_mix`.
+    fn sample_tier(&self, rng: &mut Rng) -> usize {
+        let total: f64 = self.tier_mix.iter().map(|&(_, w)| w).sum();
+        let mut u = rng.f64() * total;
+        for &(tier, w) in &self.tier_mix {
+            if u < w {
+                return tier;
+            }
+            u -= w;
+        }
+        self.tier_mix.last().map(|&(t, _)| t).unwrap_or(0)
+    }
 }
 
 /// Zipf-skewed expert-activation sampler (EPLB stress; §1 "imbalanced
@@ -276,6 +562,84 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn scenario_traces_are_deterministic() {
+        for name in ScenarioSpec::PRESETS {
+            let sc = ScenarioSpec::by_name(name, 13).unwrap();
+            let a = generate_scenario(&sc, 200);
+            let b = generate_scenario(&sc, 200);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.arrival_us, y.arrival_us, "{name}");
+                assert_eq!(x.prompt_tokens, y.prompt_tokens, "{name}");
+                assert_eq!(x.slo_tier, y.slo_tier, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_flips_prompt_output_mix() {
+        let sc = ScenarioSpec::diurnal(3);
+        let trace = generate_scenario(&sc, 2400);
+        let half = 12e6;
+        let (day, night): (Vec<_>, Vec<_>) =
+            trace.iter().partition(|r| r.arrival_us < half);
+        assert!(day.len() > 200 && night.len() > 200, "{} / {}", day.len(), night.len());
+        let mean = |xs: &[&Request], f: fn(&Request) -> usize| {
+            xs.iter().map(|r| f(r) as f64).sum::<f64>() / xs.len() as f64
+        };
+        let day_prompt = mean(&day, |r| r.prompt_tokens);
+        let day_output = mean(&day, |r| r.output_tokens);
+        let night_prompt = mean(&night, |r| r.prompt_tokens);
+        let night_output = mean(&night, |r| r.output_tokens);
+        assert!(day_prompt > 8.0 * day_output, "day {day_prompt} vs {day_output}");
+        assert!(night_output > 2.0 * night_prompt, "night {night_prompt} vs {night_output}");
+    }
+
+    #[test]
+    fn piecewise_rate_points_shift_density() {
+        let mut spec = WorkloadSpec::paper_default(4);
+        spec.burst_prob = 0.0;
+        spec.mean_interarrival_us = 1_000.0;
+        spec.rate_points = vec![(0.0, 1_000.0), (1e6, 20_000.0)];
+        let trace = generate(&spec, 1200);
+        let early = trace.iter().filter(|r| r.arrival_us < 1e6).count();
+        let late_window =
+            trace.iter().filter(|r| (1e6..2e6).contains(&r.arrival_us)).count();
+        // ~1000 arrivals expected in the first second, ~50 in the next
+        assert!(early > 700, "early {early}");
+        assert!(late_window < early / 4, "late {late_window} vs early {early}");
+    }
+
+    #[test]
+    fn mixed_slo_interleaves_tiers() {
+        let sc = ScenarioSpec::mixed_slo(5);
+        let trace = generate_scenario(&sc, 1000);
+        let tight = trace.iter().filter(|r| r.slo_tier == 1).count();
+        assert!((150..=450).contains(&tight), "tight-tier count {tight}");
+        // interleaved, not phase-separated: tight tier present in each third
+        for w in 0..3 {
+            let lo = w * 333;
+            let in_window = trace[lo..lo + 333].iter().filter(|r| r.slo_tier == 1).count();
+            assert!(in_window > 20, "window {w}: {in_window}");
+        }
+        assert_eq!(sc.tier_slos_ms.len(), 1);
+    }
+
+    #[test]
+    fn long_context_drift_grows_prompts() {
+        let sc = ScenarioSpec::long_context_drift(6);
+        let trace = generate_scenario(&sc, 2000);
+        let mean_in = |lo: f64, hi: f64| {
+            let xs: Vec<_> =
+                trace.iter().filter(|r| (lo..hi).contains(&r.arrival_us)).collect();
+            assert!(!xs.is_empty());
+            xs.iter().map(|r| r.prompt_tokens as f64).sum::<f64>() / xs.len() as f64
+        };
+        let first = mean_in(0.0, 5e6);
+        let last = mean_in(15e6, f64::MAX);
+        assert!(last > 4.0 * first, "drift {first} -> {last}");
     }
 
     #[test]

@@ -1,0 +1,104 @@
+//! Golden-trace regression harness: run `ServeSim` on fixed
+//! (scenario preset, seed) pairs and hold the report scalars bit-exact
+//! against a checked-in fixture.
+//!
+//! The fixture (`rust/tests/fixtures/golden_traces.txt`) stores every
+//! scalar as its IEEE-754 bit pattern, so any change to simulator
+//! arithmetic — however small — trips this test. On first run (sentinel
+//! fixture) the harness writes the observed snapshot in place, so
+//! regenerating after an *intentional* model change is: delete the value
+//! lines, re-run, commit the diff.
+
+use cm_infer::config::Config;
+use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
+use cm_infer::workload::{generate_scenario, ScenarioSpec};
+
+const FIXTURE: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/fixtures/golden_traces.txt");
+const HEADER: &str = "# golden ServingReport scalars — format: <case> <key> <f64-bits-hex> <value>";
+
+struct Case {
+    preset: &'static str,
+    seed: u64,
+    n: usize,
+    autoscale: bool,
+}
+
+const CASES: [Case; 3] = [
+    Case { preset: "diurnal", seed: 3, n: 500, autoscale: true },
+    Case { preset: "burst_storm", seed: 5, n: 500, autoscale: false },
+    Case { preset: "mixed_slo", seed: 9, n: 500, autoscale: false },
+];
+
+fn run_case(c: &Case) -> Vec<(String, f64)> {
+    let sc = ScenarioSpec::by_name(c.preset, c.seed).unwrap();
+    let trace = generate_scenario(&sc, c.n);
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    let opts = SimOptions {
+        seed: c.seed,
+        autoscale: c.autoscale.then(|| AutoscaleOptions {
+            interval_us: 1e6,
+            switch_latency_us: 2e6,
+            ..AutoscaleOptions::default()
+        }),
+        ..SimOptions::default()
+    };
+    let r = ServeSim::new(cfg, opts, trace).run();
+    let tag = format!("{}-{}", c.preset, c.seed);
+    vec![
+        (format!("{tag} duration_us"), r.duration_us),
+        (format!("{tag} requests_completed"), r.requests_completed as f64),
+        (format!("{tag} output_tokens"), r.output_tokens as f64),
+        (format!("{tag} ttft_p50"), r.ttft_us.p50),
+        (format!("{tag} ttft_p99"), r.ttft_us.p99),
+        (format!("{tag} tpot_p50"), r.tpot_us.p50),
+        (format!("{tag} tpot_p99"), r.tpot_us.p99),
+        (format!("{tag} resplits"), r.resplits.len() as f64),
+    ]
+}
+
+fn render(rows: &[(String, f64)]) -> String {
+    let mut out = String::from(HEADER);
+    out.push('\n');
+    for (key, v) in rows {
+        out.push_str(&format!("{key} {:#018x} {v}\n", v.to_bits()));
+    }
+    out
+}
+
+#[test]
+fn golden_traces_bit_exact() {
+    let mut rows = Vec::new();
+    for c in &CASES {
+        // determinism across in-process runs is unconditional
+        let a = run_case(c);
+        let b = run_case(c);
+        for ((ka, va), (kb, vb)) in a.iter().zip(&b) {
+            assert_eq!(ka, kb);
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{ka}: non-deterministic ({va} vs {vb})"
+            );
+        }
+        rows.extend(a);
+    }
+    let got = render(&rows);
+
+    let existing = std::fs::read_to_string(FIXTURE).unwrap_or_default();
+    let has_values = existing.lines().any(|l| !l.trim().is_empty() && !l.starts_with('#'));
+    if !has_values {
+        // bootstrap: first run on this toolchain writes the snapshot
+        match std::fs::write(FIXTURE, &got) {
+            Ok(()) => eprintln!("NOTE: wrote golden fixture {FIXTURE}; commit it"),
+            Err(e) => eprintln!("NOTE: could not write golden fixture: {e}"),
+        }
+        return;
+    }
+    assert_eq!(
+        existing, got,
+        "golden trace drifted — if the simulator change is intentional, \
+         truncate {FIXTURE} to its header and re-run to regenerate"
+    );
+}

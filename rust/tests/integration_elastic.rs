@@ -1,0 +1,175 @@
+//! End-to-end tests of the elastic PDC loop (paper §4.1 dynamic
+//! adjustment, §6.2.2): the autoscaled simulation against the same trace
+//! with a frozen split, across the scenario presets.
+
+use cm_infer::config::Config;
+use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
+use cm_infer::metrics::{Role, ServingReport};
+use cm_infer::workload::{generate_scenario, ScenarioSpec};
+
+fn run(cfg: Config, opts: SimOptions, trace: Vec<cm_infer::workload::Request>) -> ServingReport {
+    ServeSim::new(cfg, opts, trace).run()
+}
+
+fn autoscale_opts() -> AutoscaleOptions {
+    AutoscaleOptions { interval_us: 1e6, ..AutoscaleOptions::default() }
+}
+
+/// The acceptance scenario: under `diurnal` (a day of prompt-heavy RAG
+/// traffic that overloads the frozen prefill pool, then a night of
+/// output-heavy generation), the autoscaled deployment must (a) beat the
+/// frozen split on SLO attainment or p99 TTFT by a clear margin and
+/// (b) log at least one resplit in each direction.
+#[test]
+fn diurnal_autoscaling_beats_frozen_split() {
+    let sc = ScenarioSpec::diurnal(7);
+    let n = 2400; // ~one full 24 s day/night period at ~100 req/s
+    let trace = generate_scenario(&sc, n);
+
+    let frozen = run(Config::default(), SimOptions::default(), trace.clone());
+    let auto = run(
+        Config::default(),
+        SimOptions { autoscale: Some(autoscale_opts()), ..SimOptions::default() },
+        trace,
+    );
+
+    // both serve the full trace — elasticity must not lose requests
+    assert_eq!(frozen.requests_completed, n as u64);
+    assert_eq!(auto.requests_completed, n as u64);
+    assert_eq!(frozen.output_tokens, auto.output_tokens);
+
+    // the frozen run never resplits; the elastic run moves both ways
+    assert!(frozen.resplits.is_empty());
+    assert!(
+        auto.resplit_count(Role::Decode, Role::Prefill) >= 1,
+        "no decode→prefill move in {:?}",
+        auto.resplits
+    );
+    assert!(
+        auto.resplit_count(Role::Prefill, Role::Decode) >= 1,
+        "no prefill→decode move in {:?}",
+        auto.resplits
+    );
+
+    // headline: strictly better SLO attainment, or ≥10% lower p99 TTFT
+    let better_attainment = auto.overall_attainment() > frozen.overall_attainment();
+    let better_p99 = auto.ttft_us.p99 <= frozen.ttft_us.p99 * 0.9;
+    assert!(
+        better_attainment || better_p99,
+        "elastic run not better: attainment {:.3} vs {:.3}, p99 TTFT {:.0} vs {:.0} µs; \
+         resplits {:?}",
+        auto.overall_attainment(),
+        frozen.overall_attainment(),
+        auto.ttft_us.p99,
+        frozen.ttft_us.p99,
+        auto.resplits
+    );
+
+    // NPU-seconds: the elastic run can never exceed the provisioned budget
+    // (moved NPUs are offline during role switches, so strictly less)
+    let total = frozen.prefill_npus + frozen.decode_npus;
+    let budget = total as f64 * auto.duration_us / 1e6;
+    assert!(
+        auto.prefill_npu_seconds + auto.decode_npu_seconds <= budget * 1.0001,
+        "{} + {} NPU-s exceeds budget {}",
+        auto.prefill_npu_seconds,
+        auto.decode_npu_seconds,
+        budget
+    );
+    assert!(auto.prefill_npu_seconds > 0.0 && auto.decode_npu_seconds > 0.0);
+}
+
+#[test]
+fn resplit_log_is_consistent() {
+    let sc = ScenarioSpec::diurnal(11);
+    let trace = generate_scenario(&sc, 1800);
+    let auto = run(
+        Config::default(),
+        SimOptions { autoscale: Some(autoscale_opts()), ..SimOptions::default() },
+        trace,
+    );
+    let total = Config::default().serving.total_npus();
+    let mut last_t = 0.0f64;
+    for e in &auto.resplits {
+        assert!(e.t_us >= last_t, "resplit log out of order: {:?}", auto.resplits);
+        last_t = e.t_us;
+        assert!(e.npus > 0);
+        assert_ne!(e.from, e.to);
+        assert_eq!(
+            e.prefill_npus_after + e.decode_npus_after,
+            total,
+            "split must partition the deployment: {e:?}"
+        );
+        // prefill side stays instance-quantized
+        assert_eq!(e.prefill_npus_after % 16, 0, "{e:?}");
+    }
+}
+
+#[test]
+fn burst_storm_served_elastically() {
+    let sc = ScenarioSpec::burst_storm(3);
+    let trace = generate_scenario(&sc, 800);
+    let auto = run(
+        Config::default(),
+        SimOptions { autoscale: Some(autoscale_opts()), ..SimOptions::default() },
+        trace,
+    );
+    assert_eq!(auto.requests_completed, 800);
+    // bursty but stationary-mix traffic may or may not trigger moves; the
+    // run must stay consistent either way
+    let total = Config::default().serving.total_npus();
+    for e in &auto.resplits {
+        assert_eq!(e.prefill_npus_after + e.decode_npus_after, total);
+    }
+}
+
+#[test]
+fn long_context_drift_pulls_npus_into_prefill() {
+    let sc = ScenarioSpec::long_context_drift(5);
+    let trace = generate_scenario(&sc, 1600);
+    let auto = run(
+        Config::default(),
+        SimOptions { autoscale: Some(autoscale_opts()), ..SimOptions::default() },
+        trace,
+    );
+    assert_eq!(auto.requests_completed, 1600);
+    // the drift from 1 K to 12 K prompts must eventually grow the prefill
+    // pool beyond its initial 96 NPUs
+    assert!(
+        auto.resplit_count(Role::Decode, Role::Prefill) >= 1,
+        "drift produced no prefill growth: {:?}",
+        auto.resplits
+    );
+    let max_prefill = auto
+        .resplits
+        .iter()
+        .map(|e| e.prefill_npus_after)
+        .max()
+        .unwrap_or(0);
+    assert!(max_prefill > 96, "prefill never grew: {:?}", auto.resplits);
+}
+
+#[test]
+fn mixed_slo_tiers_thread_through_batcher() {
+    let sc = ScenarioSpec::mixed_slo(9);
+    let trace = generate_scenario(&sc, 900);
+    let n_tight = trace.iter().filter(|r| r.slo_tier == 1).count();
+    assert!(n_tight > 100, "trace should carry tight-tier traffic: {n_tight}");
+
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    let report = run(cfg, SimOptions::default(), trace);
+
+    assert_eq!(report.requests_completed, 900);
+    assert_eq!(report.tier_attainment.len(), 2);
+    let t0 = &report.tier_attainment[0];
+    let t1 = &report.tier_attainment[1];
+    assert_eq!(t0.requests + t1.requests, 900);
+    assert!(t1.requests as usize == n_tight);
+    assert!((t1.tpot_slo_ms - 15.0).abs() < 1e-9);
+    for t in [t0, t1] {
+        assert!((0.0..=1.0).contains(&t.ttft_attained), "{t:?}");
+        assert!((0.0..=1.0).contains(&t.tpot_attained), "{t:?}");
+        assert!(t.attained <= t.ttft_attained.min(t.tpot_attained) + 1e-9, "{t:?}");
+    }
+}

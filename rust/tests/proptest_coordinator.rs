@@ -1,16 +1,21 @@
 //! Property tests on coordinator invariants (routing, batching, memory-pool
-//! state, placement, transfer mapping) via the crate's mini property-test
-//! harness (proptest is not vendored — DESIGN.md §1).
+//! state, placement, transfer mapping, and end-to-end conservation over the
+//! elastic decode pool) via the crate's mini property-test harness
+//! (proptest is not vendored — DESIGN.md §1).
 
 use std::collections::BTreeMap;
 
+use cm_infer::config::{Config, DeploymentPreset, ServingConfig};
 use cm_infer::coordinator::batcher::AdmissionQueue;
 use cm_infer::coordinator::eplb::place_experts;
 use cm_infer::coordinator::router::{Router, RouterKind};
+use cm_infer::coordinator::sim::{AutoscaleOptions, DecodePlacement, ServeSim, SimOptions};
 use cm_infer::coordinator::transfer::{connection_histogram, prefill_source_rank};
+use cm_infer::coordinator::RequestPhase;
 use cm_infer::mempool::{Key, MemPool};
 use cm_infer::proptest::check;
 use cm_infer::topology::alloc::BlockAllocator;
+use cm_infer::workload::{generate_scenario, ScenarioSpec};
 
 #[test]
 fn prop_router_token_conservation() {
@@ -82,6 +87,79 @@ fn prop_admission_queue_fcfs_no_loss() {
             drained.extend(q.admit(k));
         }
         drained == ids
+    });
+}
+
+#[test]
+fn prop_elastic_decode_pool_conserves_requests_and_tokens() {
+    // Across random scenario × router × placement × caching × autoscale
+    // combinations on the Tiny deployment: every admitted request finishes
+    // exactly once, output tokens are conserved end to end, and the decode
+    // pool's emission accounting balances (a double-occupied slot across a
+    // resplit epoch would double-emit and break the balance; the sim also
+    // debug-asserts single admission on every transition).
+    check("elastic-conservation", 10, |g| {
+        let preset = *g.rng().choose(&ScenarioSpec::PRESETS);
+        let mut sc = ScenarioSpec::by_name(preset, g.u64(0..=1_000)).unwrap();
+        // scale the scenario down to the Tiny deployment
+        let slow = g.f64(5.0, 20.0);
+        sc.base.mean_interarrival_us *= slow;
+        sc.base.max_prompt = 4096;
+        sc.base.max_output = 512;
+        for p in &mut sc.phases {
+            p.mean_interarrival_us *= slow;
+        }
+        let n = g.usize(20..=60);
+        let trace = generate_scenario(&sc, n);
+        let expected_output: u64 =
+            trace.iter().map(|r| r.output_tokens.max(1) as u64).sum();
+
+        let mut cfg = Config::default();
+        cfg.serving = ServingConfig::preset(DeploymentPreset::Tiny);
+        cfg.serving.context_caching = g.bool();
+        let opts = SimOptions {
+            router: if g.bool() {
+                RouterKind::PeerToPeer
+            } else {
+                RouterKind::KvCentric { overload_factor: g.f64(1.0, 6.0) }
+            },
+            seed: g.u64(0..=1_000),
+            decode_instances: g.usize(1..=2),
+            placement: if g.bool() {
+                DecodePlacement::LeastLoaded
+            } else {
+                DecodePlacement::RoundRobin
+            },
+            autoscale: g.bool().then(|| AutoscaleOptions {
+                interval_us: g.f64(5e5, 2e6),
+                switch_latency_us: g.f64(1e5, 1e6),
+                ..AutoscaleOptions::default()
+            }),
+            ..SimOptions::default()
+        };
+        let mut sim = ServeSim::new(cfg, opts, trace);
+        let report = sim.run();
+
+        // every request finished exactly once, with its exact token count
+        if report.requests_completed != n as u64 || sim.finished != n {
+            return false;
+        }
+        for r in &sim.requests {
+            if r.phase != RequestPhase::Finished
+                || r.t_finished.is_none()
+                || r.generated != r.spec.output_tokens.max(1)
+            {
+                return false;
+            }
+        }
+        if report.output_tokens != expected_output {
+            return false;
+        }
+        // decode pool drained, and its emissions account for every token
+        // beyond the per-request first token produced by prefill
+        let pool_emitted: u64 = sim.decode_pool().iter().map(|d| d.tokens_emitted).sum();
+        sim.decode_pool().iter().all(|d| d.slots.is_empty())
+            && pool_emitted == expected_output - n as u64
     });
 }
 
