@@ -7,11 +7,15 @@
 //! With `--scenario NAME` (diurnal, burst_storm, long_context_drift,
 //! mixed_slo) it instead runs the full serving simulation on that preset,
 //! frozen split vs elastic autoscaling, and prints the SLO attainment and
-//! resplit log — the §6.2.2 adaptive-deployment experiment.
+//! resplit log — the §6.2.2 adaptive-deployment experiment. The `chaos_*`
+//! presets (chaos_crashes, chaos_degraded) inject their fault plan and
+//! compare recovery orchestration against the recovery-disabled baseline —
+//! the §4.4.1 fault-resilience experiment.
 
 use cm_infer::config::{Ascend910cDie, Config, DeepSeekDims, SloConfig};
 use cm_infer::coordinator::batcher::plan_for_slo;
 use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
+use cm_infer::faults::{FaultOptions, FaultPlan};
 use cm_infer::simnpu::pipeline::DecodePoint;
 use cm_infer::workload::{generate_scenario, ScenarioSpec};
 
@@ -25,10 +29,29 @@ fn explore_scenario(name: &str) {
     let mut cfg = Config::default();
     cfg.serving.tier_slos = sc.tier_slo_configs();
 
-    println!("== scenario `{}`: frozen split vs elastic PDC ({n} requests) ==\n", sc.name);
-    for (label, autoscale) in [("frozen", false), ("elastic", true)] {
+    // (label, autoscale, chaos recovery) legs: healthy presets compare
+    // frozen vs elastic; chaos presets compare recovery vs baseline.
+    let legs: Vec<(&str, bool, Option<bool>)> = match sc.fault_profile {
+        Some(_) => vec![
+            ("healthy (no faults)", false, None),
+            ("chaos + recovery", false, Some(true)),
+            ("chaos baseline (no recovery)", false, Some(false)),
+        ],
+        None => vec![("frozen", false, None), ("elastic", true, None)],
+    };
+    println!("== scenario `{}` ({n} requests) ==\n", sc.name);
+    for (label, autoscale, chaos) in legs {
+        let faults = match (chaos, sc.fault_profile) {
+            (Some(recovery), Some(profile)) => Some(FaultOptions {
+                plan: FaultPlan::generate(7, &profile),
+                recovery,
+                ..FaultOptions::default()
+            }),
+            _ => None,
+        };
         let opts = SimOptions {
             autoscale: autoscale.then(AutoscaleOptions::default),
+            faults,
             ..SimOptions::default()
         };
         let r = ServeSim::new(cfg.clone(), opts, trace.clone()).run();
@@ -46,6 +69,9 @@ fn explore_scenario(name: &str) {
             r.prefill_npu_seconds,
             r.decode_npu_seconds
         );
+        if let Some(summary) = r.chaos_summary() {
+            println!("{summary}");
+        }
         for e in &r.resplits {
             println!(
                 "    resplit t={:7.2}s {:?}→{:?} {:3} NPUs → {}P/{}D",

@@ -17,8 +17,10 @@
 //!   deterministic group-connection mapping (§4.3.3).
 //! * [`sim`]      — the discrete-event serving simulation tying PDC
 //!   together over the netsim/simnpu substrates: a decode-instance pool
-//!   behind a placement policy, and the elastic `ScaleEpoch` loop wiring
-//!   [`autoscale::Autoscaler`] into the event stream (§4.1, §6.2.2).
+//!   behind a placement policy, the elastic `ScaleEpoch` loop wiring
+//!   [`autoscale::Autoscaler`] into the event stream (§4.1, §6.2.2), and
+//!   the chaos loop injecting [`crate::faults::FaultPlan`] events with
+//!   heartbeat detection and recovery orchestration (§4.4.1).
 
 pub mod autoscale;
 pub mod batcher;

@@ -19,6 +19,10 @@ pub enum RequestPhase {
     /// Generating tokens.
     Decoding,
     Finished,
+    /// Dropped by a failure with recovery orchestration disabled (chaos
+    /// baseline): the request will never finish, and is explicitly
+    /// accounted as lost — conservation is `Finished + Lost = admitted`.
+    Lost,
 }
 
 /// Full per-request tracking state.
@@ -33,10 +37,19 @@ pub struct RequestState {
     pub t_prefill_start: Option<Micros>,
     pub t_first_token: Option<Micros>,
     pub t_finished: Option<Micros>,
+    /// Virtual time the request was declared lost (chaos baseline only).
+    pub t_lost: Option<Micros>,
     /// Output tokens produced so far.
     pub generated: usize,
     /// Virtual time the previous token was emitted (TPOT tracking).
     pub t_last_token: Option<Micros>,
+    /// Set while the request is rebuilding KV state after a decode-instance
+    /// crash (re-prefill path): prefill completion must then *not* emit a
+    /// first token, record TTFT, or double-count — the tokens streamed
+    /// before the crash are durable; only the KV is being recomputed.
+    pub recovering: bool,
+    /// How many times a fault forced this request to restart work.
+    pub restarts: u32,
 }
 
 impl RequestState {
@@ -49,8 +62,11 @@ impl RequestState {
             t_prefill_start: None,
             t_first_token: None,
             t_finished: None,
+            t_lost: None,
             generated: 0,
             t_last_token: None,
+            recovering: false,
+            restarts: 0,
         }
     }
 
@@ -66,6 +82,12 @@ impl RequestState {
 
     pub fn is_done(&self) -> bool {
         self.generated >= self.spec.output_tokens
+    }
+
+    /// Output tokens promised but not delivered (lost-token accounting;
+    /// every request delivers at least one token when it completes).
+    pub fn undelivered_tokens(&self) -> u64 {
+        self.spec.output_tokens.max(1).saturating_sub(self.generated) as u64
     }
 }
 
@@ -111,5 +133,18 @@ mod tests {
         assert!(!st.is_done());
         st.generated = 3;
         assert!(st.is_done());
+    }
+
+    #[test]
+    fn lost_requests_are_stamped_and_account_undelivered() {
+        let mut st = RequestState::new(req(16, 5));
+        st.generated = 2;
+        st.phase = RequestPhase::Lost;
+        st.t_lost = Some(900.0);
+        assert!(!st.is_done());
+        assert_eq!(st.undelivered_tokens(), 3);
+        // a finished request has nothing undelivered
+        st.generated = 5;
+        assert_eq!(st.undelivered_tokens(), 0);
     }
 }

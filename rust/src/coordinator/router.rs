@@ -44,6 +44,11 @@ pub struct Router {
     /// drains slots as NPUs move between the prefill and decode pools;
     /// inactive slots receive no traffic.
     active: Vec<bool>,
+    /// Instance slots the failure detector has declared dead (chaos
+    /// faults). Orthogonal to `active`: a drained slot left the prefill
+    /// role voluntarily and keeps its flag when reactivated; a failed slot
+    /// is masked out until recovery clears it, whatever its role state.
+    failed: Vec<bool>,
     /// session → home instance (KV-centric affinity state; the P2P router
     /// keeps NO such state — that is the point).
     home: BTreeMap<u64, usize>,
@@ -55,6 +60,7 @@ impl Router {
             kind,
             queued_tokens: vec![0; n_instances],
             active: vec![true; n_instances],
+            failed: vec![false; n_instances],
             home: BTreeMap::new(),
         }
     }
@@ -64,19 +70,32 @@ impl Router {
         self.active[instance] = on;
     }
 
+    /// Mark an instance slot failed (failure detector) or recovered.
+    /// Failed slots receive no traffic and — for the KV-centric baseline —
+    /// forfeit every session home pointing at them, exactly like drained
+    /// slots: the local cache died with the instance.
+    pub fn set_failed(&mut self, instance: usize, failed: bool) {
+        self.failed[instance] = failed;
+    }
+
+    pub fn is_failed(&self, instance: usize) -> bool {
+        self.failed[instance]
+    }
+
+    /// Routable: serving the prefill role *and* not marked failed.
     pub fn is_active(&self, instance: usize) -> bool {
-        self.active[instance]
+        self.active[instance] && !self.failed[instance]
     }
 
     pub fn active_instances(&self) -> usize {
-        self.active.iter().filter(|&&a| a).count()
+        (0..self.active.len()).filter(|&i| self.is_active(i)).count()
     }
 
     fn least_loaded(&self) -> usize {
         self.queued_tokens
             .iter()
             .enumerate()
-            .filter(|&(i, _)| self.active[i])
+            .filter(|&(i, _)| self.is_active(i))
             .min_by_key(|&(_, &q)| q)
             .map(|(i, _)| i)
             .unwrap_or(0)
@@ -93,8 +112,9 @@ impl Router {
             RouterKind::KvCentric { overload_factor } => {
                 let least = self.least_loaded();
                 match self.home.get(&session) {
-                    // a drained home instance lost its local cache with it
-                    Some(&home) if !self.active[home] => {
+                    // a drained or failed home instance lost its local
+                    // cache with it
+                    Some(&home) if !self.is_active(home) => {
                         RouteDecision { instance: least, cache_usable: false }
                     }
                     Some(&home) => {
@@ -128,9 +148,9 @@ impl Router {
         let active: Vec<u64> = self
             .queued_tokens
             .iter()
-            .zip(&self.active)
-            .filter(|&(_, &a)| a)
-            .map(|(&q, _)| q)
+            .enumerate()
+            .filter(|&(i, _)| self.is_active(i))
+            .map(|(_, &q)| q)
             .collect();
         let total: u64 = active.iter().sum();
         if total == 0 || active.is_empty() {
@@ -215,6 +235,57 @@ mod tests {
         let again = r.route(7, 100);
         assert_ne!(again.instance, first.instance);
         assert!(!again.cache_usable, "cache on a drained instance is gone");
+    }
+
+    #[test]
+    fn failed_instances_receive_no_traffic_until_recovered() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 3);
+        r.set_failed(1, true);
+        assert!(r.is_failed(1));
+        assert!(!r.is_active(1), "failed slot must not be routable");
+        assert_eq!(r.active_instances(), 2);
+        for s in 0..30u64 {
+            let d = r.route(s, 100);
+            assert_ne!(d.instance, 1, "failed instance must not be routed to");
+        }
+        assert_eq!(r.queued_tokens[1], 0);
+        // recovery restores routing: the recovered slot is least-loaded
+        r.set_failed(1, false);
+        assert!(r.is_active(1));
+        assert_eq!(r.route(99, 1).instance, 1);
+    }
+
+    #[test]
+    fn kv_centric_failed_home_forfeits_cache() {
+        // the satellite distinction: *failed* homes (not just drained ones)
+        // must forfeit KV-centric affinity — the local cache died with the
+        // instance.
+        let mut r = Router::new(RouterKind::KvCentric { overload_factor: 100.0 }, 2);
+        let first = r.route(7, 100);
+        assert!(first.cache_usable);
+        r.set_failed(first.instance, true);
+        let again = r.route(7, 100);
+        assert_ne!(again.instance, first.instance);
+        assert!(!again.cache_usable, "cache on a failed instance is gone");
+        // the home moved to the live instance; recovery of the dead one
+        // must not pull the session back
+        r.set_failed(first.instance, false);
+        let third = r.route(7, 100);
+        assert_eq!(third.instance, again.instance);
+        assert!(third.cache_usable);
+    }
+
+    #[test]
+    fn failed_and_drained_masks_are_orthogonal() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 2);
+        // drained AND failed: recovery alone must not reactivate the slot
+        r.set_active(0, false);
+        r.set_failed(0, true);
+        assert!(!r.is_active(0));
+        r.set_failed(0, false);
+        assert!(!r.is_active(0), "recovered slot is still drained");
+        r.set_active(0, true);
+        assert!(r.is_active(0));
     }
 
     #[test]

@@ -21,20 +21,22 @@
 //! [`ResplitEvent`] in the final [`ServingReport`].
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BinaryHeap};
 
 use crate::cache::ContextCache;
 use crate::config::Config;
 use crate::coordinator::autoscale::{Autoscaler, SplitPlan, WorkloadStats};
 use crate::coordinator::batcher::{plan_for_slo, AdmissionQueue};
-use crate::coordinator::decode::DecodeInstance;
+use crate::coordinator::decode::{DecodeInstance, Slot};
 use crate::coordinator::eplb;
 use crate::coordinator::prefill::{batch_latency_us, PrefillInstance};
 use crate::coordinator::request::{RequestPhase, RequestState};
 use crate::coordinator::router::{Router, RouterKind};
-use crate::coordinator::transfer::{kv_transfer, TransferScheduler};
-use crate::mempool::MemPool;
+use crate::coordinator::transfer::{kv_transfer, TransferCost, TransferScheduler};
+use crate::faults::{FaultKind, FaultOptions, FaultRecord};
+use crate::mempool::{Key, MemPool, NamespaceId};
 use crate::metrics::{Histogram, ResplitEvent, Role, ServingReport, TierAttainment};
+use crate::netsim::LinkDegradation;
 use crate::simnpu::pipeline::DecodePoint;
 use crate::workload::{ExpertActivation, Request};
 use crate::Micros;
@@ -107,6 +109,9 @@ pub struct SimOptions {
     /// Elastic PDC: wire the autoscaler into the event loop. `None` runs
     /// the classic frozen split.
     pub autoscale: Option<AutoscaleOptions>,
+    /// Chaos: inject a [`crate::faults::FaultPlan`] and (optionally)
+    /// orchestrate recovery. `None` runs the healthy system.
+    pub faults: Option<FaultOptions>,
 }
 
 impl Default for SimOptions {
@@ -119,6 +124,7 @@ impl Default for SimOptions {
             decode_instances: 1,
             placement: DecodePlacement::LeastLoaded,
             autoscale: None,
+            faults: None,
         }
     }
 }
@@ -127,7 +133,11 @@ impl Default for SimOptions {
 enum Event {
     Arrival(usize),
     PrefillKick(usize),
-    PrefillDone(usize),
+    /// Batch completion on slot `.0`, valid only for batch epoch `.1` —
+    /// a crash discards the in-flight batch and bumps the slot's epoch, so
+    /// the stale completion of the dead batch can never terminate a
+    /// replacement batch early.
+    PrefillDone(usize, u64),
     TransferDone(u64),
     DecodeStep(usize),
     /// Autoscaler epoch: collect stats, recommend, enact.
@@ -136,6 +146,16 @@ enum Event {
     PrefillUp(usize),
     /// Prefill slot i's drained NPU group finishes its switch into decode.
     DecodeUp(usize),
+    /// Fault i of the plan takes hardware effect (chaos runs).
+    Fault(usize),
+    /// Failure-detection heartbeat epoch (chaos runs).
+    Heartbeat,
+    /// The replacement NPU group for fault record i (a decode crash)
+    /// finishes its warm model load and rejoins the pool.
+    DecodeRecover(usize),
+    /// The replacement NPU group for fault record i (a prefill crash)
+    /// finishes its warm model load and resumes serving.
+    PrefillRecover(usize),
 }
 
 /// Heap entry ordered by virtual time.
@@ -184,7 +204,17 @@ pub struct ServeSim {
     /// Per-prefill-instance batch in flight: (requests, completion handled
     /// at PrefillDone).
     inflight_batches: Vec<Option<crate::coordinator::prefill::PrefillBatch>>,
+    /// Global residual EPLB imbalance measured at init for the full
+    /// deployment (prefill engines and SLO planning use this).
     eplb_imbalance: f64,
+    /// Per-decode-instance residual imbalance, recomputed whenever a
+    /// resplit changes an instance's EP degree (ROADMAP: elastic moves pay
+    /// the real EPLB cost).
+    decode_eplb: Vec<f64>,
+    /// The measured expert-activation histogram the imbalances derive from.
+    expert_hist: Vec<u64>,
+    /// npus → imbalance memo (resplits revisit the same sizes).
+    eplb_cache: BTreeMap<usize, f64>,
     heap: BinaryHeap<Reverse<Timed>>,
     seq: u64,
     now: Micros,
@@ -201,6 +231,33 @@ pub struct ServeSim {
     acc_prefill_npu_us: f64,
     acc_decode_npu_us: f64,
     last_npu_t: Micros,
+    // --- chaos state ---
+    /// Failure-detection heartbeat period (0 = no chaos).
+    hb_us: Micros,
+    /// Whether recovery orchestration is enabled (false = baseline).
+    recovery_enabled: bool,
+    /// Replacement warm model-load latency (Table 2).
+    recovery_latency_us: Micros,
+    /// Prefill slots whose NPU group crashed (hardware view; the router's
+    /// failed mask follows at detection).
+    pf_failed: Vec<bool>,
+    /// Per-slot batch epoch: bumped whenever an in-flight batch is
+    /// discarded by a crash, invalidating its pending `PrefillDone`.
+    pf_epoch: Vec<u64>,
+    /// Decode instances whose NPU group crashed.
+    decode_failed: Vec<bool>,
+    /// Per-decode-instance straggler window (step-latency multiplier).
+    straggle: Vec<LinkDegradation>,
+    /// Fabric degradation window (KV transfers + pool fetches).
+    link: LinkDegradation,
+    /// Record indices of crashes awaiting heartbeat detection.
+    undetected: Vec<usize>,
+    fault_records: Vec<FaultRecord>,
+    /// Requests dropped by faults (recovery-disabled baseline).
+    lost: usize,
+    /// Pool namespace tracking each request's prompt-KV residency (chaos
+    /// runs only): decides re-fetch vs re-prefill after a decode crash.
+    kv_ns: Option<NamespaceId>,
     // --- metrics ---
     ttft: Histogram,
     tpot: Histogram,
@@ -217,6 +274,26 @@ pub struct ServeSim {
 fn split_even(total: usize, n: usize) -> Vec<usize> {
     let n = n.max(1);
     (0..n).map(|i| total / n + usize::from(i < total % n)).collect()
+}
+
+/// Pool key under which a request's prompt-KV residency is tracked
+/// (chaos runs): decides the re-fetch vs re-prefill recovery path.
+fn chaos_kv_key(rid: u64) -> Key {
+    Key::of_bytes(&rid.to_le_bytes())
+}
+
+/// Residual EPLB imbalance of a decode instance sized `npus` (2 dies/NPU =
+/// `2·npus` EP ranks) under the measured activation histogram. Shrinking an
+/// instance drops its EP degree below one-expert-per-rank, so experts pack
+/// multiple-per-rank (LPT) and the residual imbalance grows — the real
+/// EPLB cost an elastic resplit pays.
+fn instance_eplb(hist: &[u64], npus: usize, redundant_budget: usize) -> f64 {
+    if npus == 0 {
+        return 1.0;
+    }
+    let ranks = npus * 2;
+    let redundant = redundant_budget.min(ranks.saturating_sub(hist.len()));
+    eplb::deployment_imbalance(hist, ranks, redundant).min(1.6)
 }
 
 impl ServeSim {
@@ -245,11 +322,7 @@ impl ServeSim {
         // EPLB: measure skewed activation, place experts, derive imbalance
         let mut ea = ExpertActivation::new(opts.seed ^ 0xE9, cfg.model.n_routed_experts, 1.05);
         let hist = ea.batch_histogram(8192, cfg.model.top_k);
-        let redundant = s
-            .decode_redundant_experts
-            .min(s.decode_ep_degree().saturating_sub(cfg.model.n_routed_experts));
-        let eplb_imbalance =
-            eplb::deployment_imbalance(&hist, s.decode_ep_degree(), redundant).min(1.6);
+        let eplb_imbalance = instance_eplb(&hist, s.decode_npus, s.decode_redundant_experts);
 
         // per-tier SLO-adaptive decode batch caps (Table 5 mechanism)
         let base_point = DecodePoint {
@@ -305,8 +378,10 @@ impl ServeSim {
         // more instances than NPUs — every instance needs capacity)
         let n_dec = opts.decode_instances.clamp(1, s.decode_npus.max(1));
         let batch0 = tier_batch_per_npu[0];
-        let decodes: Vec<DecodeInstance> = split_even(s.decode_npus, n_dec)
-            .into_iter()
+        let sizes = split_even(s.decode_npus, n_dec);
+        let decodes: Vec<DecodeInstance> = sizes
+            .iter()
+            .copied()
             .enumerate()
             .map(|(i, npus)| {
                 DecodeInstance::new(
@@ -316,6 +391,29 @@ impl ServeSim {
                 )
             })
             .collect();
+        // per-instance EPLB at the initial sizes (== the global value when
+        // the pool is one full-size instance)
+        let mut eplb_cache = BTreeMap::new();
+        eplb_cache.insert(s.decode_npus, eplb_imbalance);
+        let decode_eplb: Vec<f64> = sizes
+            .iter()
+            .map(|&n| {
+                *eplb_cache
+                    .entry(n)
+                    .or_insert_with(|| instance_eplb(&hist, n, s.decode_redundant_experts))
+            })
+            .collect();
+
+        // chaos wiring: detection/recovery knobs + the KV-residency
+        // namespace that decides re-fetch vs re-prefill after a crash
+        let (hb_us, recovery_enabled, recovery_latency_us) = match &opts.faults {
+            Some(f) => (f.heartbeat_us, f.recovery, f.recovery_latency_us),
+            None => (0.0, true, 0.0),
+        };
+        let kv_ns = opts
+            .faults
+            .as_ref()
+            .map(|_| pool.controller.create_namespace("chaos-kv"));
 
         let target_prefill_npus = n_pf_initial * quantum;
         let mut sim = ServeSim {
@@ -333,6 +431,9 @@ impl ServeSim {
             context_cache,
             inflight_batches: vec![None; max_pf_slots],
             eplb_imbalance,
+            decode_eplb,
+            expert_hist: hist,
+            eplb_cache,
             heap: BinaryHeap::new(),
             seq: 0,
             now: 0.0,
@@ -346,6 +447,18 @@ impl ServeSim {
             acc_prefill_npu_us: 0.0,
             acc_decode_npu_us: 0.0,
             last_npu_t: 0.0,
+            hb_us,
+            recovery_enabled,
+            recovery_latency_us,
+            pf_failed: vec![false; max_pf_slots],
+            pf_epoch: vec![0; max_pf_slots],
+            decode_failed: vec![false; n_dec],
+            straggle: vec![LinkDegradation::default(); n_dec],
+            link: LinkDegradation::default(),
+            undetected: Vec::new(),
+            fault_records: Vec::new(),
+            lost: 0,
+            kv_ns,
             ttft: Histogram::new(),
             tpot: Histogram::new(),
             cache_fetch_us_total: 0.0,
@@ -364,6 +477,21 @@ impl ServeSim {
             let t = sim.scale_interval_us;
             sim.push(t, Event::ScaleEpoch);
         }
+        // chaos: schedule every planned fault, plus the detection heartbeat
+        let fault_times: Vec<(Micros, usize)> = sim
+            .opts
+            .faults
+            .as_ref()
+            .map(|f| f.plan.events.iter().enumerate().map(|(i, e)| (e.t_us, i)).collect())
+            .unwrap_or_default();
+        let any_faults = !fault_times.is_empty();
+        for (t, i) in fault_times {
+            sim.push(t, Event::Fault(i));
+        }
+        if any_faults {
+            let t = sim.hb_us;
+            sim.push(t, Event::Heartbeat);
+        }
         sim
     }
 
@@ -376,6 +504,38 @@ impl ServeSim {
     pub fn run(&mut self) -> ServingReport {
         let mut events = 0usize;
         while let Some(Reverse(Timed { t, ev, .. })) = self.heap.pop() {
+            // Once every request is terminally accounted, serving is over:
+            // remaining planned faults would hit an empty system with no
+            // heartbeat left to detect them, and pending replacements are
+            // pure bookkeeping. Neither may advance virtual time — they
+            // would inflate the reported duration (and deflate goodput/s).
+            if !self.requests.is_empty() && self.finished + self.lost >= self.requests.len() {
+                match ev {
+                    Event::Fault(_) | Event::Heartbeat => continue,
+                    Event::DecodeRecover(rec) => {
+                        if let FaultKind::DecodeCrash { instance } =
+                            self.fault_records[rec].kind
+                        {
+                            self.integrate_npu_time();
+                            self.fault_records[rec].recovered_us = Some(t);
+                            self.decode_failed[instance] = false;
+                        }
+                        continue;
+                    }
+                    Event::PrefillRecover(rec) => {
+                        if let FaultKind::PrefillCrash { instance } =
+                            self.fault_records[rec].kind
+                        {
+                            self.integrate_npu_time();
+                            self.fault_records[rec].recovered_us = Some(t);
+                            self.pf_failed[instance] = false;
+                            self.router.set_failed(instance, false);
+                        }
+                        continue;
+                    }
+                    _ => {}
+                }
+            }
             self.now = t;
             events += 1;
             if events > self.opts.max_events {
@@ -385,12 +545,16 @@ impl ServeSim {
             match ev {
                 Event::Arrival(idx) => self.on_arrival(idx),
                 Event::PrefillKick(inst) => self.kick_prefill(inst),
-                Event::PrefillDone(inst) => self.on_prefill_done(inst),
+                Event::PrefillDone(inst, epoch) => self.on_prefill_done(inst, epoch),
                 Event::TransferDone(req) => self.on_transfer_done(req),
                 Event::DecodeStep(inst) => self.on_decode_step(inst),
                 Event::ScaleEpoch => self.on_scale_epoch(),
                 Event::PrefillUp(inst) => self.on_prefill_up(inst),
                 Event::DecodeUp(inst) => self.on_decode_up(inst),
+                Event::Fault(i) => self.on_fault(i),
+                Event::Heartbeat => self.on_heartbeat(),
+                Event::DecodeRecover(rec) => self.on_decode_recover(rec),
+                Event::PrefillRecover(rec) => self.on_prefill_recover(rec),
             }
         }
         self.report()
@@ -437,6 +601,9 @@ impl ServeSim {
             }
         }
 
+        // a degraded fabric stretches pool fetches (chaos LinkDegrade)
+        fetch_us *= self.link.multiplier(self.now);
+
         let compute = prompt_tokens - reused;
         let decision = self.router.route(session, compute as u64);
         if !decision.cache_usable {
@@ -459,6 +626,9 @@ impl ServeSim {
     }
 
     fn kick_prefill(&mut self, inst: usize) {
+        if self.pf_failed[inst] {
+            return; // dark NPUs; the queue re-homes at detection/recovery
+        }
         if self.inflight_batches[inst].is_some() {
             return; // busy; PrefillDone will re-kick
         }
@@ -480,13 +650,25 @@ impl ServeSim {
         }
         self.inflight_batches[inst] = Some(batch);
         self.prefills[inst].busy_until = self.now + lat;
-        self.push(self.now + lat, Event::PrefillDone(inst));
+        let epoch = self.pf_epoch[inst];
+        self.push(self.now + lat, Event::PrefillDone(inst, epoch));
     }
 
-    fn on_prefill_done(&mut self, inst: usize) {
+    fn on_prefill_done(&mut self, inst: usize, epoch: u64) {
+        if epoch != self.pf_epoch[inst] {
+            // completion of a batch that a crash already discarded
+            return;
+        }
+        if self.pf_failed[inst] {
+            // the instance died mid-batch: the batch is lost, not done.
+            // Its requests stay in `inflight_batches` until the failure
+            // detector re-homes (or loses) them at the next heartbeat.
+            return;
+        }
         let Some(batch) = self.inflight_batches[inst].take() else {
             return;
         };
+        let link_mult = self.link.multiplier(self.now);
         self.router.complete(inst, batch.compute_tokens as u64);
         // store the new KV blocks back to the context cache (async; cost
         // charged to the pool but does not extend the critical path)
@@ -498,8 +680,34 @@ impl ServeSim {
                 }
             }
         }
+        // chaos: record prompt-KV pool residency per request (write-behind,
+        // off the critical path) — a later decode crash re-fetches from
+        // here when the blocks survive, or re-prefills when they are gone
+        if let Some(ns) = self.kv_ns {
+            for &rid in &batch.requests {
+                let bytes = self.requests[rid as usize].spec.prompt_tokens as u64
+                    * self.cfg.model.kv_bytes_per_token();
+                self.pool.put(ns, chaos_kv_key(rid), bytes);
+            }
+        }
         for &rid in &batch.requests {
             let st = &mut self.requests[rid as usize];
+            if st.recovering {
+                // KV rebuild after a decode crash: the tokens streamed
+                // before the crash are durable, so no first token, no
+                // TTFT sample, no token counting — the rebuilt KV just
+                // transfers back to a live decode instance.
+                st.recovering = false;
+                st.phase = RequestPhase::Transferring;
+                // the rebuilt KV covers prompt AND the already-generated
+                // suffix — all of it moves to the new decode instance
+                let kv_tokens = st.spec.prompt_tokens + st.generated;
+                let cost = kv_transfer(&self.pool.net, &self.cfg.model, kv_tokens);
+                let cost = TransferCost { rdma_us: cost.rdma_us * link_mult, ..cost };
+                let done = self.transfers.begin(rid, self.now, &cost);
+                self.push(done, Event::TransferDone(rid));
+                continue;
+            }
             // prefill emits the request's first output token
             st.t_first_token = Some(self.now);
             st.t_last_token = Some(self.now);
@@ -510,10 +718,12 @@ impl ServeSim {
                 st.phase = RequestPhase::Finished;
                 st.t_finished = Some(self.now);
                 self.finished += 1;
+                self.drop_chaos_kv(rid);
                 continue;
             }
             st.phase = RequestPhase::Transferring;
             let cost = kv_transfer(&self.pool.net, &self.cfg.model, st.spec.prompt_tokens);
+            let cost = TransferCost { rdma_us: cost.rdma_us * link_mult, ..cost };
             let done = self.transfers.begin(rid, self.now, &cost);
             self.push(done, Event::TransferDone(rid));
         }
@@ -522,32 +732,33 @@ impl ServeSim {
     }
 
     /// Decode-side placement: pick the pool instance for a ready request.
-    /// Zero-capacity instances (shrunk away by a resplit) are never picked;
-    /// at least one instance always has capacity (the decode pool floor).
-    fn place_decode(&mut self) -> usize {
+    /// Zero-capacity instances (shrunk away by a resplit) and failed ones
+    /// (chaos) are never picked; `None` means no live instance exists
+    /// right now (every instance crashed — possible only mid-chaos).
+    fn place_decode(&mut self) -> Option<usize> {
         match self.opts.placement {
             DecodePlacement::RoundRobin => {
                 for _ in 0..self.decodes.len() {
                     let i = self.rr_next % self.decodes.len();
                     self.rr_next = self.rr_next.wrapping_add(1);
-                    if self.decodes[i].max_concurrent > 0 {
-                        return i;
+                    if self.decodes[i].max_concurrent > 0 && !self.decode_failed[i] {
+                        return Some(i);
                     }
                 }
-                0
+                None
             }
             DecodePlacement::LeastLoaded => {
-                let mut best = 0usize;
+                let mut best = None;
                 let mut best_score = f64::INFINITY;
                 for (i, d) in self.decodes.iter().enumerate() {
-                    if d.max_concurrent == 0 {
+                    if d.max_concurrent == 0 || self.decode_failed[i] {
                         continue;
                     }
                     let load = d.slots.len() + self.decode_queues[i].len();
                     let score = load as f64 / d.max_concurrent as f64;
                     if score < best_score {
                         best_score = score;
-                        best = i;
+                        best = Some(i);
                     }
                 }
                 best
@@ -555,20 +766,56 @@ impl ServeSim {
         }
     }
 
+    /// Drop a terminal request's chaos-KV residency entry: its prompt KV no
+    /// longer needs crash recovery, and dead entries would otherwise
+    /// pressure the pool's LRU against live context-cache blocks.
+    fn drop_chaos_kv(&mut self, rid: u64) {
+        if let Some(ns) = self.kv_ns {
+            self.pool.delete(ns, chaos_kv_key(rid));
+        }
+    }
+
+    /// Queue to park work on when no live decode instance exists: a failed
+    /// instance (its replacement recovery is — or will be — scheduled, and
+    /// its recovery drains the queue). `place_decode() == None` implies at
+    /// least one instance is failed, because the decode-pool floor keeps
+    /// capacity on some instance otherwise.
+    fn park_decode_target(&self) -> usize {
+        (0..self.decodes.len()).find(|&i| self.decode_failed[i]).unwrap_or(0)
+    }
+
     fn on_transfer_done(&mut self, rid: u64) {
         self.transfers.poll(self.now);
-        let inst = self.place_decode();
+        let inst = match self.place_decode() {
+            Some(i) => i,
+            None if self.recovery_enabled => {
+                // every live-capacity instance is down but replacements are
+                // coming: park on a failed instance; recovery drains it
+                self.park_decode_target()
+            }
+            None => {
+                // recovery disabled and the whole pool is dead
+                self.lose_request(rid);
+                return;
+            }
+        };
         let st = &mut self.requests[rid as usize];
         st.phase = RequestPhase::QueuedDecode;
         let tier = st.spec.slo_tier.min(self.tier_batch_per_npu.len() - 1);
         self.decode_queues[inst].push_tier(rid, tier);
-        if !self.decode_step_pending[inst] {
+        if !self.decode_failed[inst] && !self.decode_step_pending[inst] {
             self.decode_step_pending[inst] = true;
             self.push(self.now, Event::DecodeStep(inst));
         }
     }
 
     fn on_decode_step(&mut self, inst: usize) {
+        if self.decode_failed[inst] {
+            // the instance went dark: drop this (sole) outstanding step
+            // chain; detection re-homes its work, recovery restarts steps.
+            self.decode_step_pending[inst] = false;
+            return;
+        }
         // admit waiting requests into free slots: continuous batching with a
         // per-tier slot quota of `batch_for_slo(tier) x npus` (Table 5's
         // SLO-adaptive cap, applied per tier so a saturated loose tier can
@@ -611,9 +858,13 @@ impl ServeSim {
             &self.cfg.die,
             &self.cfg.model,
             &self.cfg.serving,
-            self.eplb_imbalance,
+            // per-instance imbalance: a resplit-shrunk instance has a lower
+            // EP degree, packs experts multiple-per-rank, and pays for it
+            self.decode_eplb[inst],
         );
-        let step_end = self.now + model.step_us;
+        // a straggling instance (chaos) runs every step slower
+        let step_us = model.step_us * self.straggle[inst].multiplier(self.now);
+        let step_end = self.now + step_us;
         let emits = self.decodes[inst].step(&self.cfg.serving);
         for e in emits {
             let st = &mut self.requests[e.request as usize];
@@ -629,6 +880,7 @@ impl ServeSim {
                 st.phase = RequestPhase::Finished;
                 st.t_finished = Some(step_end);
                 self.finished += 1;
+                self.drop_chaos_kv(e.request);
             }
         }
         self.push(step_end, Event::DecodeStep(inst));
@@ -641,8 +893,21 @@ impl ServeSim {
     fn integrate_npu_time(&mut self) {
         let dt = self.now - self.last_npu_t;
         if dt > 0.0 {
-            let pf = self.router.active_instances() * self.cfg.serving.npus_per_prefill;
-            let dc: usize = self.decodes.iter().map(|d| d.npus).sum();
+            // failed components count to neither pool from the instant of
+            // the crash: their NPUs are dark until a replacement warm-loads
+            // (pf_failed covers the crash-to-detection window, before the
+            // router's failed mask catches up)
+            let pf = (0..self.prefills.len())
+                .filter(|&i| self.router.is_active(i) && !self.pf_failed[i])
+                .count()
+                * self.cfg.serving.npus_per_prefill;
+            let dc: usize = self
+                .decodes
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| !self.decode_failed[i])
+                .map(|(_, d)| d.npus)
+                .sum();
             self.acc_prefill_npu_us += pf as f64 * dt;
             self.acc_decode_npu_us += dc as f64 * dt;
         }
@@ -670,12 +935,24 @@ impl ServeSim {
             let npus = sizes.get(rank).copied().unwrap_or(0);
             self.decodes[i].resize(npus, batch0);
         }
-        // rescue queued work stranded on a zero-capacity instance
+        // EPLB follows the new per-instance EP degrees (satellite: elastic
+        // moves pay the real post-resize imbalance in step_model)
+        for i in 0..self.decodes.len() {
+            let npus = self.decodes[i].npus;
+            let imb = self.eplb_for_npus(npus);
+            self.decode_eplb[i] = imb;
+        }
+        // rescue queued work stranded on a zero-capacity (or failed)
+        // instance
         let best = (0..self.decodes.len())
+            .filter(|&i| !self.decode_failed[i])
             .max_by_key(|&i| self.decodes[i].max_concurrent)
             .unwrap_or(0);
         for i in 0..self.decodes.len() {
-            if self.decodes[i].max_concurrent == 0 && !self.decode_queues[i].is_empty() {
+            if self.decodes[i].max_concurrent == 0
+                && i != best
+                && !self.decode_queues[i].is_empty()
+            {
                 for (rid, tier) in self.decode_queues[i].admit_where(usize::MAX, |_| true) {
                     self.decode_queues[best].push_tier(rid, tier);
                 }
@@ -683,7 +960,8 @@ impl ServeSim {
         }
         // grown capacity may unblock queued admissions
         for i in 0..self.decodes.len() {
-            if !self.decode_step_pending[i]
+            if !self.decode_failed[i]
+                && !self.decode_step_pending[i]
                 && (!self.decode_queues[i].is_empty() || !self.decodes[i].slots.is_empty())
             {
                 self.decode_step_pending[i] = true;
@@ -694,6 +972,20 @@ impl ServeSim {
 
     fn decode_total_npus(&self) -> usize {
         self.decodes.iter().map(|d| d.npus).sum()
+    }
+
+    /// Memoized per-size instance imbalance (resplits revisit sizes).
+    fn eplb_for_npus(&mut self, npus: usize) -> f64 {
+        if let Some(&v) = self.eplb_cache.get(&npus) {
+            return v;
+        }
+        let v = instance_eplb(
+            &self.expert_hist,
+            npus,
+            self.cfg.serving.decode_redundant_experts,
+        );
+        self.eplb_cache.insert(npus, v);
+        v
     }
 
     fn on_scale_epoch(&mut self) {
@@ -728,7 +1020,7 @@ impl ServeSim {
         ) {
             self.enact(&plan);
         }
-        if self.finished < self.requests.len() {
+        if self.finished + self.lost < self.requests.len() {
             let t = self.now + self.scale_interval_us;
             self.push(t, Event::ScaleEpoch);
         }
@@ -747,7 +1039,10 @@ impl ServeSim {
             // partial enactment can never strand NPUs between roles.
             let usable_slots = (0..self.prefills.len())
                 .filter(|&i| {
-                    !self.router.is_active(i) && !self.pf_pending_up[i] && !self.pf_draining[i]
+                    !self.router.is_active(i)
+                        && !self.pf_pending_up[i]
+                        && !self.pf_draining[i]
+                        && !self.pf_failed[i]
                 })
                 .count();
             let avail = self.decode_total_npus().saturating_sub(quantum); // keep decode alive
@@ -768,6 +1063,7 @@ impl ServeSim {
                 if !self.router.is_active(idx)
                     && !self.pf_pending_up[idx]
                     && !self.pf_draining[idx]
+                    && !self.pf_failed[idx]
                 {
                     self.pf_pending_up[idx] = true;
                     let t = self.now + self.switch_latency_us;
@@ -803,7 +1099,9 @@ impl ServeSim {
                 if drained == k {
                     break;
                 }
-                if self.router.is_active(idx) {
+                // never drain a crashed-but-undetected slot: its NPUs are
+                // dead and must not be converted into decode capacity
+                if self.router.is_active(idx) && !self.pf_failed[idx] {
                     self.drain_prefill(idx);
                     drained += 1;
                 }
@@ -847,6 +1145,9 @@ impl ServeSim {
         self.pf_pending_up[idx] = false;
         self.router.set_active(idx, true);
         self.prefills[idx].busy_until = self.now;
+        // a fresh instance may be the first routable one in a while
+        // (chaos): rescue anything parked on dead slots
+        self.resweep_stranded_prefill();
     }
 
     fn on_decode_up(&mut self, idx: usize) {
@@ -854,6 +1155,417 @@ impl ServeSim {
         self.pf_draining[idx] = false;
         let new_total = self.decode_total_npus() + self.cfg.serving.npus_per_prefill;
         self.redistribute_decode(new_total);
+    }
+
+    // --- chaos: fault injection + recovery orchestration -------------------
+
+    /// Injected fault `i` of the plan takes hardware effect. Crash classes
+    /// stay invisible to the coordinator until the next heartbeat epoch;
+    /// transient degradations apply immediately and self-expire. Raw target
+    /// indices are retargeted deterministically onto a live, eligible
+    /// component so every planned fault lands whenever at all possible.
+    fn on_fault(&mut self, i: usize) {
+        let Some(ev) = self.opts.faults.as_ref().and_then(|f| f.plan.events.get(i).copied())
+        else {
+            return;
+        };
+        match ev.kind {
+            FaultKind::DecodeCrash { instance } => {
+                let eligible: Vec<usize> = (0..self.decodes.len())
+                    .filter(|&d| !self.decode_failed[d] && self.decodes[d].npus > 0)
+                    .collect();
+                let Some(&inst) = eligible.get(instance % eligible.len().max(1)) else {
+                    return; // nothing left to crash
+                };
+                self.integrate_npu_time();
+                self.decode_failed[inst] = true;
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::DecodeCrash { instance: inst },
+                    detected_us: self.now, // provisional; set at detection
+                    recovered_us: None,
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                });
+                self.undetected.push(self.fault_records.len() - 1);
+            }
+            FaultKind::PrefillCrash { instance } => {
+                let eligible: Vec<usize> = (0..self.prefills.len())
+                    .filter(|&p| {
+                        self.router.is_active(p)
+                            && !self.pf_failed[p]
+                            && !self.pf_draining[p]
+                            && !self.pf_pending_up[p]
+                    })
+                    .collect();
+                let Some(&idx) = eligible.get(instance % eligible.len().max(1)) else {
+                    return;
+                };
+                self.integrate_npu_time();
+                self.pf_failed[idx] = true;
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::PrefillCrash { instance: idx },
+                    detected_us: self.now,
+                    recovered_us: None,
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                });
+                self.undetected.push(self.fault_records.len() - 1);
+            }
+            FaultKind::PoolServerFail { server } => {
+                let sid = server % self.pool.servers.len().max(1);
+                // DRAM contents are gone; EVS-persisted blocks keep serving
+                // from the SSD tier (§4.4.1) — no orchestration needed
+                self.pool.fail_server(sid);
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::PoolServerFail { server: sid },
+                    detected_us: self.now,
+                    recovered_us: Some(self.now),
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                });
+            }
+            FaultKind::LinkDegrade { factor, duration_us } => {
+                self.link = self.link.extend(self.now, factor, duration_us);
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: ev.kind,
+                    detected_us: self.now,
+                    recovered_us: Some(self.now + duration_us),
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                });
+            }
+            FaultKind::Straggler { instance, factor, duration_us } => {
+                let eligible: Vec<usize> = (0..self.decodes.len())
+                    .filter(|&d| !self.decode_failed[d] && self.decodes[d].npus > 0)
+                    .collect();
+                let Some(&inst) = eligible.get(instance % eligible.len().max(1)) else {
+                    return;
+                };
+                self.straggle[inst] = self.straggle[inst].extend(self.now, factor, duration_us);
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::Straggler { instance: inst, factor, duration_us },
+                    detected_us: self.now,
+                    recovered_us: Some(self.now + duration_us),
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                });
+            }
+        }
+    }
+
+    /// Failure-detection epoch: newly-dead components are noticed, their
+    /// stranded work re-dispatched (or declared lost when recovery is
+    /// disabled), and replacement NPU groups scheduled at the warm
+    /// model-load latency.
+    fn on_heartbeat(&mut self) {
+        let pending = std::mem::take(&mut self.undetected);
+        for rec in pending {
+            self.fault_records[rec].detected_us = self.now;
+            match self.fault_records[rec].kind {
+                FaultKind::DecodeCrash { instance } => self.detect_decode_crash(instance, rec),
+                FaultKind::PrefillCrash { instance } => self.detect_prefill_crash(instance, rec),
+                _ => {}
+            }
+        }
+        if !self.recovery_enabled {
+            self.sweep_failed_queues();
+        }
+        if self.finished + self.lost < self.requests.len() {
+            let t = self.now + self.hb_us;
+            self.push(t, Event::Heartbeat);
+        }
+    }
+
+    /// A decode-instance crash is detected. In-flight slots lost their HBM
+    /// KV state; queued requests lost nothing but their home. With recovery
+    /// on, queued work re-homes across the live pool, slot requests take
+    /// the KV re-fetch or re-prefill path, and a replacement group starts
+    /// its warm model load. With recovery off, everything on the instance
+    /// is lost and its NPUs never come back.
+    fn detect_decode_crash(&mut self, inst: usize, rec: usize) {
+        let slots: Vec<Slot> = std::mem::take(&mut self.decodes[inst].slots);
+        let queued = self.decode_queues[inst].admit_where(usize::MAX, |_| true);
+        if self.recovery_enabled {
+            for s in slots {
+                self.rehome_decode_slot(s, rec);
+            }
+            for (rid, tier) in queued {
+                match self.place_decode() {
+                    Some(target) => {
+                        // actually moved — counted as re-dispatch work
+                        self.fault_records[rec].requests_rehomed += 1;
+                        self.decode_queues[target].push_tier(rid, tier);
+                        if !self.decode_step_pending[target] {
+                            self.decode_step_pending[target] = true;
+                            self.push(self.now, Event::DecodeStep(target));
+                        }
+                    }
+                    // the whole pool is down: park here until recovery
+                    // (not a re-home — the request never moved)
+                    None => self.decode_queues[inst].push_tier(rid, tier),
+                }
+            }
+            let t = self.now + self.recovery_latency_us;
+            self.push(t, Event::DecodeRecover(rec));
+        } else {
+            for s in slots {
+                if self.lose_request(s.request) {
+                    self.fault_records[rec].requests_lost += 1;
+                }
+            }
+            for (rid, _) in queued {
+                if self.lose_request(rid) {
+                    self.fault_records[rec].requests_lost += 1;
+                }
+            }
+        }
+    }
+
+    /// Re-home one in-flight decode slot after its instance crashed. The
+    /// tokens already streamed to the user are durable; what died with the
+    /// instance is the KV state in HBM. If the prompt KV still lives in the
+    /// memory pool (survived eviction and server crashes — §4.4.1), it is
+    /// re-fetched and the request rejoins the decode queue after the fetch;
+    /// otherwise everything the new instance needs (prompt + generated
+    /// suffix) is recomputed through prefill.
+    fn rehome_decode_slot(&mut self, slot: Slot, rec: usize) {
+        let rid = slot.request;
+        self.fault_records[rec].requests_rehomed += 1;
+        self.requests[rid as usize].restarts += 1;
+        let survived = match self.kv_ns {
+            Some(ns) => {
+                let over_ub = self.cfg.serving.cache_over_ub;
+                let got = self.pool.get(ns, chaos_kv_key(rid), over_ub);
+                got.hit.then_some(got.latency_us)
+            }
+            None => None,
+        };
+        match survived {
+            Some(fetch_us) => {
+                self.fault_records[rec].kv_refetched += 1;
+                let st = &mut self.requests[rid as usize];
+                st.phase = RequestPhase::Transferring;
+                let delay = fetch_us * self.link.multiplier(self.now);
+                let t = self.now + delay;
+                self.push(t, Event::TransferDone(rid));
+            }
+            None => {
+                self.fault_records[rec].reprefilled += 1;
+                let st = &mut self.requests[rid as usize];
+                st.recovering = true;
+                st.phase = RequestPhase::QueuedPrefill;
+                // full recompute: the prompt KV is gone, and the generated
+                // suffix must be rebuilt alongside it
+                let ct = st.spec.prompt_tokens + st.generated;
+                let session = st.spec.session;
+                let d = self.router.route(session, ct as u64);
+                st.prefill_instance = Some(d.instance);
+                self.prefills[d.instance].enqueue(rid, ct, ct);
+                self.push(self.now, Event::PrefillKick(d.instance));
+            }
+        }
+    }
+
+    /// A prefill-instance crash is detected: mask it out of the router
+    /// (forfeiting KV-centric homes), re-home its in-flight batch and queue
+    /// (or lose them in baseline mode), and schedule the replacement.
+    fn detect_prefill_crash(&mut self, idx: usize, rec: usize) {
+        self.integrate_npu_time();
+        self.router.set_failed(idx, true);
+        let inflight: Vec<u64> =
+            self.inflight_batches[idx].take().map(|b| b.requests).unwrap_or_default();
+        // the dead batch's pending PrefillDone must never complete a
+        // replacement batch started after recovery
+        self.pf_epoch[idx] += 1;
+        let queued = std::mem::take(&mut self.prefills[idx].queue);
+        if self.recovery_enabled {
+            // in-flight batch requests and queued ones re-home the same
+            // way: the batch ones just also lose their mid-compute work
+            for rid in inflight.into_iter().chain(queued.into_iter().map(|(rid, _, _)| rid)) {
+                self.fault_records[rec].requests_rehomed += 1;
+                self.rehome_prefill_request(rid, idx);
+            }
+            let t = self.now + self.recovery_latency_us;
+            self.push(t, Event::PrefillRecover(rec));
+        } else {
+            for rid in inflight {
+                let ct = self.requests[rid as usize].compute_tokens();
+                self.router.complete(idx, ct as u64);
+                if self.lose_request(rid) {
+                    self.fault_records[rec].requests_lost += 1;
+                }
+            }
+            for (rid, ct, _) in queued {
+                self.router.complete(idx, ct as u64);
+                if self.lose_request(rid) {
+                    self.fault_records[rec].requests_lost += 1;
+                }
+            }
+        }
+    }
+
+    /// Terminal loss accounting: the request will never finish, and the
+    /// conservation invariant becomes `finished + lost == admitted`.
+    /// Returns whether the request was actually lost now (false if it
+    /// already reached a terminal state — never double-counted).
+    fn lose_request(&mut self, rid: u64) -> bool {
+        let st = &mut self.requests[rid as usize];
+        if matches!(st.phase, RequestPhase::Finished | RequestPhase::Lost) {
+            return false;
+        }
+        st.phase = RequestPhase::Lost;
+        st.t_lost = Some(self.now);
+        self.lost += 1;
+        self.drop_chaos_kv(rid);
+        true
+    }
+
+    /// Recovery-disabled baseline: work that lands on (or was left on) dead
+    /// components has no orchestrator to save it — declare it lost at each
+    /// heartbeat so the run terminates with every request accounted.
+    fn sweep_failed_queues(&mut self) {
+        for idx in 0..self.prefills.len() {
+            if !self.pf_failed[idx] {
+                continue;
+            }
+            if let Some(batch) = self.inflight_batches[idx].take() {
+                self.pf_epoch[idx] += 1;
+                self.router.complete(idx, batch.compute_tokens as u64);
+                for rid in batch.requests {
+                    self.lose_request(rid);
+                }
+            }
+            let queued = std::mem::take(&mut self.prefills[idx].queue);
+            for (rid, ct, _) in queued {
+                self.router.complete(idx, ct as u64);
+                self.lose_request(rid);
+            }
+        }
+        for i in 0..self.decodes.len() {
+            if !self.decode_failed[i] {
+                continue;
+            }
+            let slots: Vec<Slot> = std::mem::take(&mut self.decodes[i].slots);
+            for s in slots {
+                self.lose_request(s.request);
+            }
+            for (rid, _) in self.decode_queues[i].admit_where(usize::MAX, |_| true) {
+                self.lose_request(rid);
+            }
+        }
+    }
+
+    /// Re-route one request out of prefill slot `from` (crashed or
+    /// stranded): release its routing charge, pick a new home, and —
+    /// exactly like `on_arrival` — forfeit the cached-prefix discount when
+    /// the router says the reuse did not survive the move (a KV-centric
+    /// home's local cache died with it; P2P reuse lives in the shared
+    /// pool and always survives).
+    fn rehome_prefill_request(&mut self, rid: u64, from: usize) {
+        let st = &mut self.requests[rid as usize];
+        if st.phase == RequestPhase::Prefilling {
+            st.restarts += 1; // mid-compute work was lost with the batch
+        }
+        st.phase = RequestPhase::QueuedPrefill;
+        let charge = if st.recovering {
+            st.spec.prompt_tokens + st.generated
+        } else {
+            st.compute_tokens()
+        };
+        let session = st.spec.session;
+        self.router.complete(from, charge as u64);
+        let d = self.router.route(session, charge as u64);
+        if !d.cache_usable && st.reused_tokens > 0 {
+            self.recomputed_tokens += st.reused_tokens as u64;
+            st.reused_tokens = 0;
+        }
+        let (ct, pl) = if st.recovering {
+            let t = st.spec.prompt_tokens + st.generated;
+            (t, t)
+        } else {
+            (st.compute_tokens(), st.spec.prompt_tokens)
+        };
+        st.prefill_instance = Some(d.instance);
+        self.prefills[d.instance].enqueue(rid, ct, pl);
+        self.push(self.now, Event::PrefillKick(d.instance));
+    }
+
+    /// Re-route queued work stranded on slots that are not currently
+    /// routable (e.g. parked there while every prefill instance was down).
+    fn resweep_stranded_prefill(&mut self) {
+        if self.router.active_instances() == 0 {
+            return;
+        }
+        for idx in 0..self.prefills.len() {
+            if self.router.is_active(idx) || self.prefills[idx].queue.is_empty() {
+                continue;
+            }
+            let queued = std::mem::take(&mut self.prefills[idx].queue);
+            for (rid, _, _) in queued {
+                self.rehome_prefill_request(rid, idx);
+            }
+        }
+    }
+
+    /// The replacement NPU group for a crashed decode instance is up
+    /// (warm model load complete): the instance rejoins the pool and
+    /// drains whatever parked on it meanwhile.
+    fn on_decode_recover(&mut self, rec: usize) {
+        let FaultKind::DecodeCrash { instance: inst } = self.fault_records[rec].kind else {
+            return;
+        };
+        self.integrate_npu_time();
+        self.fault_records[rec].recovered_us = Some(self.now);
+        self.decode_failed[inst] = false;
+        // a resplit may have shrunk the instance to zero while it was dark:
+        // hand any parked queue to a live instance instead of stranding it
+        if self.decodes[inst].max_concurrent == 0 && !self.decode_queues[inst].is_empty() {
+            if let Some(target) = self.place_decode() {
+                for (rid, tier) in self.decode_queues[inst].admit_where(usize::MAX, |_| true) {
+                    self.decode_queues[target].push_tier(rid, tier);
+                }
+                if !self.decode_step_pending[target] {
+                    self.decode_step_pending[target] = true;
+                    self.push(self.now, Event::DecodeStep(target));
+                }
+            }
+        }
+        if !self.decode_step_pending[inst]
+            && (!self.decode_queues[inst].is_empty() || !self.decodes[inst].slots.is_empty())
+        {
+            self.decode_step_pending[inst] = true;
+            self.push(self.now, Event::DecodeStep(inst));
+        }
+    }
+
+    /// The replacement NPU group for a crashed prefill slot is up: clear
+    /// the failure masks, resume routing, and rescue anything stranded.
+    fn on_prefill_recover(&mut self, rec: usize) {
+        let FaultKind::PrefillCrash { instance: idx } = self.fault_records[rec].kind else {
+            return;
+        };
+        self.integrate_npu_time();
+        self.fault_records[rec].recovered_us = Some(self.now);
+        self.pf_failed[idx] = false;
+        self.router.set_failed(idx, false);
+        self.prefills[idx].busy_until = self.now;
+        self.resweep_stranded_prefill();
+        self.push(self.now, Event::PrefillKick(idx));
     }
 
     // --- reporting ---------------------------------------------------------
@@ -869,6 +1581,18 @@ impl ServeSim {
         let prompt_tokens: u64 =
             self.requests.iter().filter(|r| r.t_first_token.is_some()).map(|r| r.spec.prompt_tokens as u64).sum();
         let output_tokens: u64 = self.requests.iter().map(|r| r.generated as u64).sum();
+        let goodput_tokens: u64 = self
+            .requests
+            .iter()
+            .filter(|r| r.phase == RequestPhase::Finished)
+            .map(|r| r.generated as u64)
+            .sum();
+        let tokens_lost: u64 = self
+            .requests
+            .iter()
+            .filter(|r| r.phase == RequestPhase::Lost)
+            .map(|r| r.undelivered_tokens())
+            .sum();
         ServingReport {
             duration_us: duration,
             requests_completed: self.finished as u64,
@@ -882,6 +1606,10 @@ impl ServeSim {
             decode_npu_seconds: self.acc_decode_npu_us / 1e6,
             tier_attainment: self.tier_attainment(),
             resplits: self.resplits.clone(),
+            faults: self.fault_records.clone(),
+            requests_lost: self.lost as u64,
+            tokens_lost,
+            goodput_tokens,
         }
     }
 
@@ -941,6 +1669,22 @@ impl ServeSim {
     /// The resplit log so far (also included in the final report).
     pub fn resplit_log(&self) -> &[ResplitEvent] {
         &self.resplits
+    }
+
+    /// The chaos fault log so far (also included in the final report).
+    pub fn fault_log(&self) -> &[FaultRecord] {
+        &self.fault_records
+    }
+
+    /// Requests declared lost so far (recovery-disabled baseline).
+    pub fn lost_requests(&self) -> usize {
+        self.lost
+    }
+
+    /// Per-decode-instance residual EPLB imbalance currently in effect
+    /// (recomputed on every resplit resize — tests, tools).
+    pub fn decode_eplb(&self) -> &[f64] {
+        &self.decode_eplb
     }
 
     /// Read-only view of the decode-instance pool (tests, tools).
@@ -1112,5 +1856,226 @@ mod tests {
         let us = default_switch_latency_us();
         // Table 2: ~5 s warm switch for the 671 GB model over the pool
         assert!(us > 1e6 && us < 2e7, "switch latency {us} µs");
+    }
+
+    // --- chaos -------------------------------------------------------------
+
+    use crate::faults::{FaultEvent, FaultKind, FaultOptions, FaultPlan};
+
+    fn chaos_opts(events: Vec<FaultEvent>, recovery: bool) -> SimOptions {
+        SimOptions {
+            seed: 3,
+            decode_instances: 2,
+            faults: Some(FaultOptions {
+                plan: FaultPlan::new(events),
+                heartbeat_us: 1e5,
+                recovery,
+                recovery_latency_us: 1e6,
+            }),
+            ..SimOptions::default()
+        }
+    }
+
+    #[test]
+    fn empty_fault_plan_matches_healthy_run() {
+        // identical options apart from the chaos plumbing itself
+        let healthy = run_with(
+            150,
+            SimOptions { seed: 3, decode_instances: 2, ..SimOptions::default() },
+        );
+        let chaos = run_with(150, chaos_opts(Vec::new(), true));
+        // chaos plumbing with nothing scheduled must not perturb the sim —
+        // bit-for-bit, not just on conserved counters
+        assert_eq!(healthy.0.duration_us.to_bits(), chaos.0.duration_us.to_bits());
+        assert_eq!(healthy.0.ttft_us.p99.to_bits(), chaos.0.ttft_us.p99.to_bits());
+        assert_eq!(healthy.0.tpot_us.p99.to_bits(), chaos.0.tpot_us.p99.to_bits());
+        assert_eq!(healthy.0.requests_completed, chaos.0.requests_completed);
+        assert_eq!(healthy.0.output_tokens, chaos.0.output_tokens);
+        assert!(chaos.0.faults.is_empty());
+        assert_eq!(chaos.0.requests_lost, 0);
+        assert_eq!(chaos.0.availability(), 1.0);
+    }
+
+    #[test]
+    fn decode_crash_recovers_and_completes_all() {
+        let ev = vec![FaultEvent {
+            t_us: 2e6,
+            kind: FaultKind::DecodeCrash { instance: 0 },
+        }];
+        let (report, sim) = run_with(300, chaos_opts(ev, true));
+        assert_eq!(report.requests_completed, 300, "recovery must save every request");
+        assert_eq!(report.requests_lost, 0);
+        assert_eq!(report.availability(), 1.0);
+        assert_eq!(report.faults.len(), 1);
+        let rec = &report.faults[0];
+        assert!(rec.detected_us >= rec.t_us);
+        let recovered = rec.recovered_us.expect("replacement must come up");
+        assert!(recovered > rec.detected_us);
+        assert!(rec.requests_rehomed > 0, "a busy instance must strand work: {rec:?}");
+        // only in-flight slots split into refetch/re-prefill; queued
+        // re-homes need neither
+        assert!(rec.kv_refetched + rec.reprefilled <= rec.requests_rehomed);
+        assert!(report.mean_mttr_us().unwrap() >= 1e6);
+        // every re-homed request still delivered its exact token count
+        for r in &sim.requests {
+            assert_eq!(r.generated, r.spec.output_tokens.max(1), "request {}", r.spec.id);
+        }
+    }
+
+    #[test]
+    fn recovery_disabled_baseline_loses_requests() {
+        let ev = vec![FaultEvent {
+            t_us: 2e6,
+            kind: FaultKind::DecodeCrash { instance: 0 },
+        }];
+        let (with, _) = run_with(300, chaos_opts(ev.clone(), true));
+        let (without, sim) = run_with(300, chaos_opts(ev, false));
+        assert!(without.requests_lost > 0, "a dead instance with no recovery must lose work");
+        assert_eq!(
+            without.requests_completed + without.requests_lost,
+            300,
+            "every request accounted exactly once"
+        );
+        assert!(without.availability() < 1.0);
+        assert!(without.tokens_lost > 0);
+        assert!(
+            with.goodput_tokens > without.goodput_tokens,
+            "recovery must strictly beat the baseline on goodput: {} vs {}",
+            with.goodput_tokens,
+            without.goodput_tokens
+        );
+        // lost requests are explicitly stamped, never silently dropped
+        for r in &sim.requests {
+            match r.phase {
+                RequestPhase::Finished => assert!(r.t_finished.is_some()),
+                RequestPhase::Lost => assert!(r.t_lost.is_some()),
+                other => panic!("request {} ended in {:?}", r.spec.id, other),
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_crash_rehomes_and_recovers() {
+        let ev = vec![FaultEvent {
+            t_us: 3e5,
+            kind: FaultKind::PrefillCrash { instance: 2 },
+        }];
+        let (report, _) = run_with(300, chaos_opts(ev, true));
+        assert_eq!(report.requests_completed, 300);
+        assert_eq!(report.faults.len(), 1);
+        assert!(report.faults[0].recovered_us.is_some());
+    }
+
+    #[test]
+    fn pool_server_failure_is_transparent_to_serving() {
+        let ev = vec![FaultEvent {
+            t_us: 1e6,
+            kind: FaultKind::PoolServerFail { server: 1 },
+        }];
+        let (report, _) = run_with(200, chaos_opts(ev, true));
+        // persisted blocks survive on EVS; serving completes regardless
+        assert_eq!(report.requests_completed, 200);
+        assert_eq!(report.faults.len(), 1);
+        assert_eq!(report.requests_lost, 0);
+    }
+
+    #[test]
+    fn gray_failures_slow_but_complete() {
+        let healthy = run_with(200, SimOptions { seed: 3, ..SimOptions::default() });
+        let ev = vec![
+            FaultEvent {
+                t_us: 1e5,
+                kind: FaultKind::Straggler { instance: 0, factor: 3.0, duration_us: 5e6 },
+            },
+            FaultEvent {
+                t_us: 1e5,
+                kind: FaultKind::LinkDegrade { factor: 4.0, duration_us: 5e6 },
+            },
+        ];
+        let opts = SimOptions {
+            faults: Some(FaultOptions {
+                plan: FaultPlan::new(ev),
+                heartbeat_us: 1e5,
+                recovery: true,
+                recovery_latency_us: 1e6,
+            }),
+            seed: 3,
+            ..SimOptions::default()
+        };
+        let (report, _) = run_with(200, opts);
+        assert_eq!(report.requests_completed, 200);
+        assert_eq!(report.faults.len(), 2);
+        assert_eq!(report.requests_lost, 0);
+        assert!(
+            report.duration_us >= healthy.0.duration_us,
+            "degradation cannot speed the run up: {} vs {}",
+            report.duration_us,
+            healthy.0.duration_us
+        );
+    }
+
+    #[test]
+    fn chaos_run_is_deterministic() {
+        let ev = || {
+            vec![
+                FaultEvent { t_us: 1e6, kind: FaultKind::DecodeCrash { instance: 1 } },
+                FaultEvent { t_us: 2e6, kind: FaultKind::PrefillCrash { instance: 0 } },
+                FaultEvent { t_us: 3e6, kind: FaultKind::PoolServerFail { server: 0 } },
+            ]
+        };
+        let (a, _) = run_with(250, chaos_opts(ev(), true));
+        let (b, _) = run_with(250, chaos_opts(ev(), true));
+        assert_eq!(a.duration_us.to_bits(), b.duration_us.to_bits());
+        assert_eq!(a.output_tokens, b.output_tokens);
+        assert_eq!(a.goodput_tokens, b.goodput_tokens);
+        assert_eq!(a.faults.len(), b.faults.len());
+        for (x, y) in a.faults.iter().zip(&b.faults) {
+            assert_eq!(x.t_us.to_bits(), y.t_us.to_bits());
+            assert_eq!(x.detected_us.to_bits(), y.detected_us.to_bits());
+            assert_eq!(x.requests_rehomed, y.requests_rehomed);
+        }
+    }
+
+    #[test]
+    fn per_instance_eplb_tracks_pool_split() {
+        // one full-size instance: the per-instance imbalance IS the global
+        let (_, single) = run_with(50, SimOptions::default());
+        assert_eq!(single.decode_eplb().len(), 1);
+        assert!((single.decode_eplb()[0] - single.eplb_imbalance()).abs() < 1e-12);
+        // split pool: each instance is sized at half the EP degree and its
+        // imbalance is recomputed for that size, not the init-time global
+        let (_, split) = run_with(
+            50,
+            SimOptions { decode_instances: 2, ..SimOptions::default() },
+        );
+        assert_eq!(split.decode_eplb().len(), 2);
+        assert_eq!(split.decode_eplb()[0], split.decode_eplb()[1]);
+        let mut ea = ExpertActivation::new(
+            split.opts.seed ^ 0xE9,
+            split.cfg.model.n_routed_experts,
+            1.05,
+        );
+        let hist = ea.batch_histogram(8192, split.cfg.model.top_k);
+        let expected = instance_eplb(
+            &hist,
+            split.cfg.serving.decode_npus / 2,
+            split.cfg.serving.decode_redundant_experts,
+        );
+        assert_eq!(split.decode_eplb()[0], expected);
+        for &v in split.decode_eplb() {
+            assert!((1.0..=1.6).contains(&v), "imbalance out of range: {v}");
+        }
+    }
+
+    #[test]
+    fn instance_eplb_covers_both_packing_regimes() {
+        let mut ea = ExpertActivation::new(0xE9, 256, 1.05);
+        let hist = ea.batch_histogram(8192, 8);
+        let full = instance_eplb(&hist, 160, 32); // 320 ranks: replica path
+        let half = instance_eplb(&hist, 80, 32); // 160 ranks: LPT packing
+        assert!((1.0..=1.6).contains(&full), "{full}");
+        assert!((1.0..=1.6).contains(&half), "{half}");
+        // a drained-away instance degrades to the neutral multiplier
+        assert_eq!(instance_eplb(&hist, 0, 32), 1.0);
     }
 }

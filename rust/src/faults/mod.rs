@@ -1,0 +1,357 @@
+//! Chaos: deterministic fault injection and recovery orchestration for the
+//! serving simulator (paper §4.4.1 fault resilience; xDeepServe /
+//! DeepServe-style production failure handling).
+//!
+//! The CloudMatrix384 pitch rests on resource pooling *surviving component
+//! loss*: EMS keeps persisted KV blocks across memory-pool server crashes,
+//! the P2P router is stateless so any prefill instance can pick up another's
+//! work, and the elastic controller can replace a dead NPU group by paying
+//! the Table 2 warm model-load latency. This module provides the fault side
+//! of that story as first-class simulation inputs:
+//!
+//! * [`FaultPlan`] — a deterministic, seeded schedule of [`FaultEvent`]s
+//!   (decode/prefill instance crashes, memory-pool server failures, UB/RDMA
+//!   link degradation windows, straggler slow-downs).
+//! * [`FaultProfile`] — a named generator spec (how many faults of each
+//!   class over what horizon) from which [`FaultPlan::generate`] draws a
+//!   reproducible plan; scenario presets (`chaos_*` in
+//!   [`crate::workload::ScenarioSpec`]) carry one.
+//! * [`FaultOptions`] — the sim-side knobs: the plan, the failure-detection
+//!   heartbeat period, and whether recovery orchestration is enabled
+//!   (disabled = the "no failure handling" baseline every chaos experiment
+//!   is measured against).
+//! * [`FaultRecord`] — per-fault outcome written into the final
+//!   [`crate::metrics::ServingReport`]: detection and recovery times (MTTR),
+//!   how many requests were re-homed, how many KV states were re-fetched
+//!   from the pool vs re-prefilled from scratch, and how many requests were
+//!   lost (baseline mode only).
+//!
+//! The injection mechanics live in [`crate::coordinator::sim::ServeSim`]:
+//! faults take hardware effect immediately, the coordinator notices at the
+//! next heartbeat epoch, and recovery (re-dispatch + replacement NPU group
+//! warm-loading weights) is orchestrated from there.
+
+use crate::util::Rng;
+use crate::Micros;
+
+/// One injectable failure class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// A decode-pool instance crashes: in-flight slots freeze (their HBM KV
+    /// state is gone), queued work is stranded until re-homed.
+    DecodeCrash { instance: usize },
+    /// A prefill instance crashes: the in-flight batch is lost (recompute),
+    /// its queue is stranded, and the router must mask it out.
+    PrefillCrash { instance: usize },
+    /// A memory-pool server crashes: DRAM-only blocks are lost; blocks
+    /// persisted to EVS survive and are served from the SSD tier (§4.4.1).
+    PoolServerFail { server: usize },
+    /// The inter-node fabric degrades: KV transfers and pool fetches run at
+    /// `1/factor` of healthy bandwidth for `duration_us`.
+    LinkDegrade { factor: f64, duration_us: Micros },
+    /// One decode instance runs its steps `factor`× slower for
+    /// `duration_us` (thermal throttling, a sick die, noisy neighbor).
+    Straggler { instance: usize, factor: f64, duration_us: Micros },
+}
+
+impl FaultKind {
+    /// Short class tag for logs and reports.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FaultKind::DecodeCrash { .. } => "decode-crash",
+            FaultKind::PrefillCrash { .. } => "prefill-crash",
+            FaultKind::PoolServerFail { .. } => "pool-server-fail",
+            FaultKind::LinkDegrade { .. } => "link-degrade",
+            FaultKind::Straggler { .. } => "straggler",
+        }
+    }
+
+    /// Whether the coordinator must notice this fault at a heartbeat and
+    /// orchestrate recovery. Only instance crashes strand work that needs
+    /// re-dispatch; pool-server failures are absorbed by the pool itself
+    /// (persisted blocks keep serving from EVS, §4.4.1) and degradations
+    /// are transient windows that expire on their own.
+    pub fn needs_detection(&self) -> bool {
+        matches!(
+            self,
+            FaultKind::DecodeCrash { .. } | FaultKind::PrefillCrash { .. }
+        )
+    }
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Injection time, µs of virtual run time.
+    pub t_us: Micros,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults, sorted by injection time.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultPlan {
+        events.sort_by(|a, b| a.t_us.total_cmp(&b.t_us));
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Draw a reproducible plan from a profile: event times are uniform in
+    /// the middle 80% of the horizon (faults at t=0 hit an empty system and
+    /// faults at the very end outlive the run — both uninteresting), and
+    /// target indices are drawn raw; the simulator retargets them onto
+    /// whatever component is alive and eligible at injection time.
+    pub fn generate(seed: u64, profile: &FaultProfile) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA17);
+        let mut events = Vec::new();
+        let t = |rng: &mut Rng| profile.horizon_us * (0.1 + 0.8 * rng.f64());
+        for _ in 0..profile.decode_crashes {
+            let t_us = t(&mut rng);
+            let instance = rng.below(64) as usize;
+            events.push(FaultEvent { t_us, kind: FaultKind::DecodeCrash { instance } });
+        }
+        for _ in 0..profile.prefill_crashes {
+            let t_us = t(&mut rng);
+            let instance = rng.below(64) as usize;
+            events.push(FaultEvent { t_us, kind: FaultKind::PrefillCrash { instance } });
+        }
+        for _ in 0..profile.pool_failures {
+            let t_us = t(&mut rng);
+            let server = rng.below(64) as usize;
+            events.push(FaultEvent { t_us, kind: FaultKind::PoolServerFail { server } });
+        }
+        for _ in 0..profile.link_degrades {
+            let t_us = t(&mut rng);
+            events.push(FaultEvent {
+                t_us,
+                kind: FaultKind::LinkDegrade {
+                    factor: profile.degrade_factor,
+                    duration_us: profile.degrade_duration_us,
+                },
+            });
+        }
+        for _ in 0..profile.stragglers {
+            let t_us = t(&mut rng);
+            let instance = rng.below(64) as usize;
+            events.push(FaultEvent {
+                t_us,
+                kind: FaultKind::Straggler {
+                    instance,
+                    factor: profile.straggler_factor,
+                    duration_us: profile.degrade_duration_us,
+                },
+            });
+        }
+        FaultPlan::new(events)
+    }
+}
+
+/// Generator spec for [`FaultPlan::generate`]: how many faults of each
+/// class to inject over a virtual-time horizon.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultProfile {
+    /// Virtual-time window faults are drawn from, µs.
+    pub horizon_us: Micros,
+    pub decode_crashes: usize,
+    pub prefill_crashes: usize,
+    pub pool_failures: usize,
+    pub link_degrades: usize,
+    pub stragglers: usize,
+    /// Bandwidth division factor while a link-degrade window is active.
+    pub degrade_factor: f64,
+    /// Step slow-down factor for straggler instances.
+    pub straggler_factor: f64,
+    /// Length of degradation/straggler windows, µs.
+    pub degrade_duration_us: Micros,
+}
+
+impl FaultProfile {
+    /// Instance + pool-server crashes over a 24 s diurnal day — the
+    /// acceptance chaos profile.
+    pub fn crashes(horizon_us: Micros) -> FaultProfile {
+        FaultProfile {
+            horizon_us,
+            decode_crashes: 2,
+            prefill_crashes: 1,
+            pool_failures: 2,
+            link_degrades: 0,
+            stragglers: 0,
+            degrade_factor: 1.0,
+            straggler_factor: 1.0,
+            degrade_duration_us: 0.0,
+        }
+    }
+
+    /// Gray failures only: degraded links + stragglers, no crashes.
+    pub fn degraded(horizon_us: Micros) -> FaultProfile {
+        FaultProfile {
+            horizon_us,
+            decode_crashes: 0,
+            prefill_crashes: 0,
+            pool_failures: 0,
+            link_degrades: 2,
+            stragglers: 2,
+            degrade_factor: 4.0,
+            straggler_factor: 3.0,
+            degrade_duration_us: horizon_us / 8.0,
+        }
+    }
+
+    pub fn total_faults(&self) -> usize {
+        self.decode_crashes
+            + self.prefill_crashes
+            + self.pool_failures
+            + self.link_degrades
+            + self.stragglers
+    }
+}
+
+/// Sim-side chaos knobs ([`crate::coordinator::sim::SimOptions::faults`]).
+#[derive(Debug, Clone)]
+pub struct FaultOptions {
+    pub plan: FaultPlan,
+    /// Failure-detection heartbeat period, µs: crashes injected between
+    /// heartbeats are invisible to the coordinator until the next epoch.
+    pub heartbeat_us: Micros,
+    /// Orchestrate recovery (re-home stranded work, re-fetch or re-prefill
+    /// lost KV, warm-load a replacement NPU group). `false` is the
+    /// baseline: crashed components never return and their work is lost.
+    pub recovery: bool,
+    /// Time for a replacement NPU group to come up (engine restart + warm
+    /// weight reload through the shared model cache — the Table 2 EMS
+    /// warm-switch path, same latency the elastic resplits pay).
+    pub recovery_latency_us: Micros,
+}
+
+impl Default for FaultOptions {
+    fn default() -> Self {
+        FaultOptions {
+            plan: FaultPlan::default(),
+            heartbeat_us: 250_000.0,
+            recovery: true,
+            recovery_latency_us: crate::coordinator::sim::default_switch_latency_us(),
+        }
+    }
+}
+
+/// Outcome of one injected fault, as recorded in the serving report.
+#[derive(Debug, Clone)]
+pub struct FaultRecord {
+    /// Injection time, µs.
+    pub t_us: Micros,
+    pub kind: FaultKind,
+    /// When the coordinator noticed (heartbeat epoch); equals `t_us` for
+    /// self-expiring degradations.
+    pub detected_us: Micros,
+    /// When the component was back in service; `None` when recovery is
+    /// disabled (baseline) or the fault class needs none.
+    pub recovered_us: Option<Micros>,
+    /// Requests re-dispatched off the failed component.
+    pub requests_rehomed: usize,
+    /// Requests lost outright (recovery-disabled baseline).
+    pub requests_lost: usize,
+    /// Re-homed decode requests whose prompt KV survived in the pool and
+    /// was re-fetched (cheap path).
+    pub kv_refetched: usize,
+    /// Re-homed decode requests whose KV was DRAM-only and lost — sent
+    /// back through prefill for full recompute (expensive path).
+    pub reprefilled: usize,
+}
+
+impl FaultRecord {
+    /// Time from injection to restored service, if it recovered.
+    pub fn mttr_us(&self) -> Option<Micros> {
+        self.recovered_us.map(|r| r - self.t_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_plan_is_deterministic_and_sorted() {
+        let p = FaultProfile::crashes(24e6);
+        let a = FaultPlan::generate(7, &p);
+        let b = FaultPlan::generate(7, &p);
+        assert_eq!(a.len(), p.total_faults());
+        assert_eq!(a.events, b.events);
+        for w in a.events.windows(2) {
+            assert!(w[0].t_us <= w[1].t_us, "plan not sorted: {:?}", a.events);
+        }
+        // all times inside the middle of the horizon
+        for e in &a.events {
+            assert!(e.t_us >= 0.1 * 24e6 && e.t_us <= 0.9 * 24e6, "{e:?}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let p = FaultProfile::crashes(24e6);
+        let a = FaultPlan::generate(1, &p);
+        let b = FaultPlan::generate(2, &p);
+        assert_ne!(a.events, b.events);
+    }
+
+    #[test]
+    fn profile_class_counts_respected() {
+        let p = FaultProfile::degraded(10e6);
+        let plan = FaultPlan::generate(3, &p);
+        let degrades = plan
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::LinkDegrade { .. }))
+            .count();
+        let stragglers = plan
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::Straggler { .. }))
+            .count();
+        assert_eq!(degrades, 2);
+        assert_eq!(stragglers, 2);
+        assert_eq!(plan.len(), p.total_faults());
+        assert!(plan.events.iter().all(|e| !e.kind.needs_detection()));
+    }
+
+    #[test]
+    fn only_instance_crashes_need_detection() {
+        assert!(FaultKind::DecodeCrash { instance: 0 }.needs_detection());
+        assert!(FaultKind::PrefillCrash { instance: 0 }.needs_detection());
+        // self-absorbed: the pool serves persisted blocks from EVS without
+        // any coordinator orchestration
+        assert!(!FaultKind::PoolServerFail { server: 0 }.needs_detection());
+        assert!(!FaultKind::LinkDegrade { factor: 2.0, duration_us: 1e6 }.needs_detection());
+        assert!(
+            !FaultKind::Straggler { instance: 0, factor: 2.0, duration_us: 1e6 }
+                .needs_detection()
+        );
+    }
+
+    #[test]
+    fn mttr_math() {
+        let rec = FaultRecord {
+            t_us: 1_000.0,
+            kind: FaultKind::DecodeCrash { instance: 0 },
+            detected_us: 1_500.0,
+            recovered_us: Some(6_500.0),
+            requests_rehomed: 3,
+            requests_lost: 0,
+            kv_refetched: 2,
+            reprefilled: 1,
+        };
+        assert_eq!(rec.mttr_us(), Some(5_500.0));
+        let unrec = FaultRecord { recovered_us: None, ..rec };
+        assert_eq!(unrec.mttr_us(), None);
+    }
+}

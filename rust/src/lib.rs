@@ -42,6 +42,24 @@
 //! * `mixed_slo` — interleaved 50 ms / 15 ms TPOT tiers, enforced by
 //!   per-tier concurrency quotas in [`coordinator::batcher`].
 //!
+//! ## Chaos (fault injection + recovery orchestration)
+//!
+//! The [`faults`] subsystem turns the paper's §4.4.1 fault-resilience claim
+//! into an executable experiment: a deterministic, seeded
+//! [`faults::FaultPlan`] (instance/NPU crashes, memory-pool server
+//! failures, UB/RDMA link-degradation windows, stragglers) is injected into
+//! [`coordinator::sim::ServeSim`] as first-class events. Failures are
+//! *detected* at heartbeat epochs; recovery orchestration then re-homes
+//! stranded work (decode requests re-fetch surviving prompt KV from the
+//! pool, or re-prefill when it was DRAM-only and lost), masks failed
+//! instances out of the [`coordinator::router`], and warm-loads a
+//! replacement NPU group at the Table 2 model-cache latency. The report
+//! gains availability metrics (goodput vs. lost tokens, per-fault MTTR,
+//! SLO attainment under faults) and the scenario layer gains
+//! `chaos_crashes` / `chaos_degraded` presets, runnable from the
+//! `simulate` CLI (`--scenario chaos_crashes [--no-recovery]`) and the
+//! `slo_explorer` example.
+//!
 //! See DESIGN.md for the full system inventory and the per-experiment index
 //! mapping every paper table/figure to a module and bench target.
 
@@ -49,6 +67,7 @@ pub mod benchlib;
 pub mod cache;
 pub mod config;
 pub mod coordinator;
+pub mod faults;
 pub mod mempool;
 pub mod metrics;
 pub mod netsim;

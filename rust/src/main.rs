@@ -38,9 +38,13 @@ fn print_help() {
          \x20 generate [--int8] [--steps N] [--prompt-len N]\n\
          \x20                           real prefill+decode through PJRT\n\
          \x20 simulate [--npus N] [--requests N] [--seed N]\n\
-         \x20          [--scenario diurnal|burst_storm|long_context_drift|mixed_slo]\n\
-         \x20          [--autoscale]     PDC serving simulation (CloudMatrix384);\n\
-         \x20                           --autoscale wires the elastic PD controller\n\
+         \x20          [--scenario diurnal|burst_storm|long_context_drift|mixed_slo\n\
+         \x20                      |chaos_crashes|chaos_degraded]\n\
+         \x20          [--autoscale] [--no-recovery]\n\
+         \x20                           PDC serving simulation (CloudMatrix384);\n\
+         \x20                           --autoscale wires the elastic PD controller;\n\
+         \x20                           chaos_* presets inject faults (--no-recovery\n\
+         \x20                           disables the recovery orchestration baseline)\n\
          \n\
          Run `make artifacts` first; benches: `cargo bench` (paper tables)."
     );
@@ -134,12 +138,14 @@ fn simulate(args: &[String]) -> Result<()> {
     use cm_infer::config::Config;
     use cm_infer::coordinator::router::RouterKind;
     use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
+    use cm_infer::faults::{FaultOptions, FaultPlan};
     use cm_infer::workload::{generate, generate_scenario, ScenarioSpec, WorkloadSpec};
 
     let n: usize = flag_val(args, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(500);
     let seed: u64 = flag_val(args, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let kv_centric = has_flag(args, "--kv-centric");
     let autoscale = has_flag(args, "--autoscale");
+    let no_recovery = has_flag(args, "--no-recovery");
 
     let mut cfg = Config::default();
     if let Some(path) = flag_val(args, "--config") {
@@ -167,6 +173,7 @@ fn simulate(args: &[String]) -> Result<()> {
         cfg.serving.decode_ep_degree(),
         cfg.serving.slo.tpot_ms
     );
+    let mut fault_profile = None;
     let trace = match flag_val(args, "--scenario") {
         Some(name) => {
             let Some(sc) = ScenarioSpec::by_name(&name, seed) else {
@@ -176,11 +183,24 @@ fn simulate(args: &[String]) -> Result<()> {
                 );
             };
             cfg.serving.tier_slos = sc.tier_slo_configs();
+            fault_profile = sc.fault_profile;
             println!("[simulate] scenario preset: {}", sc.name);
             generate_scenario(&sc, n)
         }
         None => generate(&WorkloadSpec::paper_default(seed), n),
     };
+    let faults = fault_profile.map(|p| FaultOptions {
+        plan: FaultPlan::generate(seed, &p),
+        recovery: !no_recovery,
+        ..FaultOptions::default()
+    });
+    if let Some(f) = &faults {
+        println!(
+            "[simulate] chaos: {} faults planned, recovery {}",
+            f.plan.len(),
+            if f.recovery { "ON" } else { "OFF (baseline)" }
+        );
+    }
     let opts = SimOptions {
         router: if kv_centric {
             RouterKind::KvCentric { overload_factor: 3.0 }
@@ -189,6 +209,7 @@ fn simulate(args: &[String]) -> Result<()> {
         },
         seed,
         autoscale: autoscale.then(AutoscaleOptions::default),
+        faults,
         ..SimOptions::default()
     };
     let mut sim = ServeSim::new(cfg, opts, trace);
@@ -251,6 +272,9 @@ fn simulate(args: &[String]) -> Result<()> {
                 e.decode_npus_after
             );
         }
+    }
+    if let Some(summary) = r.chaos_summary() {
+        println!("{summary}");
     }
     Ok(())
 }

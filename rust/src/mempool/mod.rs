@@ -180,6 +180,14 @@ impl MemPool {
         }
     }
 
+    /// SDK Delete: drop `key` from its placed server (all tiers); returns
+    /// whether a block was actually removed. Deletion is metadata-only in
+    /// the real system, so no transfer cost is charged.
+    pub fn delete(&mut self, ns: NamespaceId, key: Key) -> bool {
+        let sid = self.controller.place(key);
+        self.servers[sid].delete(ns, key)
+    }
+
     /// Fail a server: DRAM contents lost; EVS-persisted blocks recoverable.
     /// Returns (blocks_lost, blocks_recoverable) — §4.4.1 fault resilience.
     pub fn fail_server(&mut self, sid: usize) -> (usize, usize) {
@@ -295,6 +303,18 @@ mod tests {
         // data still accessible (served from the SSD tier post-recovery)
         let got = p.get(ns, keys[0], true);
         assert!(got.hit);
+    }
+
+    #[test]
+    fn sdk_delete_frees_the_placed_copy() {
+        let mut p = pool();
+        let ns = p.controller.create_namespace("ctx");
+        let k = Key::of_bytes(b"ephemeral");
+        p.put(ns, k, 8192);
+        assert!(p.get(ns, k, true).hit);
+        assert!(p.delete(ns, k));
+        assert!(!p.get(ns, k, true).hit, "deleted key must miss");
+        assert!(!p.delete(ns, k), "double delete is a no-op");
     }
 
     #[test]

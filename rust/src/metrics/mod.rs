@@ -194,6 +194,15 @@ pub struct ServingReport {
     pub tier_attainment: Vec<TierAttainment>,
     /// Elastic resplit log, in enactment order (empty for frozen runs).
     pub resplits: Vec<ResplitEvent>,
+    /// Chaos fault log, in injection order (empty for healthy runs).
+    pub faults: Vec<crate::faults::FaultRecord>,
+    /// Requests dropped by faults with recovery disabled (chaos baseline).
+    pub requests_lost: u64,
+    /// Output tokens promised by lost requests but never delivered.
+    pub tokens_lost: u64,
+    /// Output tokens delivered by *completed* requests (goodput): partial
+    /// streams of lost requests don't count as useful work.
+    pub goodput_tokens: u64,
 }
 
 /// Cheap copyable histogram summary.
@@ -243,6 +252,93 @@ impl ServingReport {
     /// Number of logged resplit moves in a given direction.
     pub fn resplit_count(&self, from: Role, to: Role) -> usize {
         self.resplits.iter().filter(|e| e.from == from && e.to == to).count()
+    }
+
+    /// Fraction of admitted requests that completed (chaos availability);
+    /// 1.0 for healthy runs where nothing was lost.
+    pub fn availability(&self) -> f64 {
+        let admitted = self.requests_completed + self.requests_lost;
+        if admitted == 0 {
+            return 1.0;
+        }
+        self.requests_completed as f64 / admitted as f64
+    }
+
+    /// Mean time-to-recovery across *crash* faults that went through the
+    /// detect→re-home→replace cycle, µs; `None` when none did (healthy run
+    /// or recovery-disabled baseline). Self-absorbed faults (pool-server
+    /// failures served from EVS, self-expiring degradation windows) carry a
+    /// `recovered_us` for the log but would dilute the repair-time mean.
+    pub fn mean_mttr_us(&self) -> Option<f64> {
+        let mttrs: Vec<f64> = self
+            .faults
+            .iter()
+            .filter(|f| {
+                matches!(
+                    f.kind,
+                    crate::faults::FaultKind::DecodeCrash { .. }
+                        | crate::faults::FaultKind::PrefillCrash { .. }
+                )
+            })
+            .filter_map(|f| f.mttr_us())
+            .collect();
+        if mttrs.is_empty() {
+            return None;
+        }
+        Some(mttrs.iter().sum::<f64>() / mttrs.len() as f64)
+    }
+
+    /// Goodput in output tokens/s: useful (completed-request) tokens over
+    /// the run duration.
+    pub fn goodput_tokens_per_s(&self) -> f64 {
+        if self.duration_us <= 0.0 {
+            return 0.0;
+        }
+        self.goodput_tokens as f64 / (self.duration_us / 1e6)
+    }
+
+    /// Multi-line, indented, human-readable chaos summary (availability,
+    /// goodput, MTTR, per-fault outcomes); `None` for healthy runs. Shared
+    /// by the `simulate` CLI and the `slo_explorer` example so the two
+    /// never drift apart.
+    pub fn chaos_summary(&self) -> Option<String> {
+        use std::fmt::Write;
+        if self.faults.is_empty() && self.requests_lost == 0 {
+            return None;
+        }
+        let mut out = String::new();
+        let mttr = match self.mean_mttr_us() {
+            Some(m) => format!("  MTTR {:.2} s", m / 1e6),
+            None => String::new(),
+        };
+        let _ = writeln!(
+            out,
+            "  chaos: availability {:.2}%  goodput {:.0} tok/s  lost {} requests / {} tokens{}",
+            self.availability() * 100.0,
+            self.goodput_tokens_per_s(),
+            self.requests_lost,
+            self.tokens_lost,
+            mttr
+        );
+        for f in &self.faults {
+            let outcome = match f.recovered_us {
+                Some(t) => format!("recovered t={:.2}s", t / 1e6),
+                None => "never recovered".to_string(),
+            };
+            let _ = writeln!(
+                out,
+                "    t={:7.2}s  {:<16} rehomed {:3} (refetch {} / reprefill {})  lost {:3}  {}",
+                f.t_us / 1e6,
+                f.kind.tag(),
+                f.requests_rehomed,
+                f.kv_refetched,
+                f.reprefilled,
+                f.requests_lost,
+                outcome
+            );
+        }
+        out.pop(); // callers println! the block
+        Some(out)
     }
 
     /// Overall SLO attainment across tiers (request-weighted); 1.0 when no
@@ -377,5 +473,49 @@ mod tests {
         };
         assert!((r.prefill_tokens_per_s_per_npu() - 4000.0).abs() < 1e-6);
         assert!((r.decode_tokens_per_s_per_npu() - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn availability_and_goodput_math() {
+        let healthy = ServingReport { requests_completed: 10, ..Default::default() };
+        assert_eq!(healthy.availability(), 1.0);
+        assert_eq!(healthy.mean_mttr_us(), None);
+
+        let r = ServingReport {
+            duration_us: 2e6,
+            requests_completed: 95,
+            requests_lost: 5,
+            goodput_tokens: 9_000,
+            tokens_lost: 1_000,
+            faults: vec![
+                crate::faults::FaultRecord {
+                    t_us: 100.0,
+                    kind: crate::faults::FaultKind::DecodeCrash { instance: 0 },
+                    detected_us: 200.0,
+                    recovered_us: Some(1_100.0),
+                    requests_rehomed: 4,
+                    requests_lost: 0,
+                    kv_refetched: 3,
+                    reprefilled: 1,
+                },
+                crate::faults::FaultRecord {
+                    t_us: 500.0,
+                    kind: crate::faults::FaultKind::PoolServerFail { server: 1 },
+                    detected_us: 500.0,
+                    // self-absorbed instantly (EVS keeps serving): must NOT
+                    // dilute the crash-repair MTTR mean
+                    recovered_us: Some(500.0),
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                },
+            ],
+            ..Default::default()
+        };
+        assert!((r.availability() - 0.95).abs() < 1e-9);
+        // only orchestrated crash recoveries contribute to MTTR
+        assert_eq!(r.mean_mttr_us(), Some(1_000.0));
+        assert!((r.goodput_tokens_per_s() - 4_500.0).abs() < 1e-9);
     }
 }

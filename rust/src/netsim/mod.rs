@@ -122,6 +122,58 @@ impl NetSim {
     }
 }
 
+/// A transient fabric-degradation window (chaos `LinkDegrade` faults): while
+/// active, transfers on the affected plane run at `1/factor` of healthy
+/// bandwidth — modeled as a latency multiplier on the α+n/β cost. Windows
+/// are passive state: they expire by timestamp, no restore event needed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkDegradation {
+    /// Latency multiplier while active (>= 1).
+    pub factor: f64,
+    /// Virtual time the window ends, µs.
+    pub until_us: Micros,
+}
+
+impl Default for LinkDegradation {
+    fn default() -> Self {
+        LinkDegradation { factor: 1.0, until_us: 0.0 }
+    }
+}
+
+impl LinkDegradation {
+    /// Open a degradation window `[now, now + duration)`.
+    pub fn begin(now: Micros, factor: f64, duration_us: Micros) -> LinkDegradation {
+        LinkDegradation { factor: factor.max(1.0), until_us: now + duration_us }
+    }
+
+    /// Latency multiplier in effect at virtual time `now`.
+    pub fn multiplier(&self, now: Micros) -> f64 {
+        if now < self.until_us {
+            self.factor
+        } else {
+            1.0
+        }
+    }
+
+    pub fn is_active(&self, now: Micros) -> bool {
+        now < self.until_us
+    }
+
+    /// Merge a new window into this one: when they overlap, the combined
+    /// window takes the worse factor and the later end (a second incident
+    /// must never *shorten* an outage); an expired window is replaced.
+    pub fn extend(&self, now: Micros, factor: f64, duration_us: Micros) -> LinkDegradation {
+        let new = LinkDegradation::begin(now, factor, duration_us);
+        if !self.is_active(now) {
+            return new;
+        }
+        LinkDegradation {
+            factor: self.factor.max(new.factor),
+            until_us: self.until_us.max(new.until_us),
+        }
+    }
+}
+
 /// Fair-share contention on a shared link: `flows` concurrent transfers
 /// each get `bw/flows`; returns the per-flow transfer time.
 #[derive(Debug, Clone, Copy)]
@@ -192,6 +244,37 @@ mod tests {
         let ub = n.transfer_us(Plane::Ub, PathKind::NpuToCpu, OpKind::Read, Locality::InterNode, block);
         let vpc = n.transfer_us(Plane::Vpc, PathKind::NpuToCpu, OpKind::Read, Locality::InterNode, block);
         assert!(vpc / ub > 5.0, "ub={ub} vpc={vpc}");
+    }
+
+    #[test]
+    fn degradation_window_expires() {
+        let d = LinkDegradation::begin(1_000.0, 4.0, 500.0);
+        assert_eq!(d.multiplier(1_200.0), 4.0);
+        assert!(d.is_active(1_499.0));
+        assert_eq!(d.multiplier(1_500.0), 1.0);
+        assert!(!d.is_active(1_500.0));
+        // healthy default is a no-op multiplier
+        assert_eq!(LinkDegradation::default().multiplier(0.0), 1.0);
+        // sub-unity factors clamp to healthy (degradation can't speed links up)
+        assert_eq!(LinkDegradation::begin(0.0, 0.5, 100.0).multiplier(50.0), 1.0);
+    }
+
+    #[test]
+    fn overlapping_windows_merge_never_shorten() {
+        let a = LinkDegradation::begin(0.0, 4.0, 1_000.0);
+        // a milder, shorter second incident inside the first window must
+        // not cut the outage short or soften it
+        let merged = a.extend(500.0, 2.0, 100.0);
+        assert_eq!(merged.factor, 4.0);
+        assert_eq!(merged.until_us, 1_000.0);
+        // a worse, longer second incident extends both
+        let merged = a.extend(900.0, 6.0, 1_000.0);
+        assert_eq!(merged.factor, 6.0);
+        assert_eq!(merged.until_us, 1_900.0);
+        // after expiry the old window is irrelevant
+        let fresh = a.extend(2_000.0, 2.0, 300.0);
+        assert_eq!(fresh.factor, 2.0);
+        assert_eq!(fresh.until_us, 2_300.0);
     }
 
     #[test]

@@ -278,8 +278,10 @@ pub struct RateWave {
 
 /// A named, time-varying scenario layered on a base [`WorkloadSpec`]:
 /// piecewise phases override arrival rate and length distributions,
-/// an optional [`RateWave`] modulates the arrival rate sinusoidally, and
-/// `tier_mix` assigns per-request SLO tiers for mixed-SLO serving.
+/// an optional [`RateWave`] modulates the arrival rate sinusoidally,
+/// `tier_mix` assigns per-request SLO tiers for mixed-SLO serving, and
+/// `fault_profile` (the `chaos_*` presets) names the fault classes a
+/// chaos run injects alongside the workload.
 #[derive(Debug, Clone)]
 pub struct ScenarioSpec {
     pub name: &'static str,
@@ -293,6 +295,10 @@ pub struct ScenarioSpec {
     /// SLOs for tiers 1.. as `(tpot_ms, ttft_ms)`, aligned with
     /// `ServingConfig::tier_slos` (tier 0 stays the deployment's base SLO).
     pub tier_slos_ms: Vec<(f64, f64)>,
+    /// Chaos: the fault classes this scenario injects (None = healthy).
+    /// Trace generation ignores it; the sim layer builds a seeded
+    /// [`crate::faults::FaultPlan`] from it.
+    pub fault_profile: Option<crate::faults::FaultProfile>,
 }
 
 /// ln-space mean so the log-normal's *mean* lands on `target`.
@@ -302,8 +308,14 @@ fn ln_mean(target: f64, sigma: f64) -> f64 {
 
 impl ScenarioSpec {
     /// All preset names accepted by [`ScenarioSpec::by_name`].
-    pub const PRESETS: [&'static str; 4] =
-        ["diurnal", "burst_storm", "long_context_drift", "mixed_slo"];
+    pub const PRESETS: [&'static str; 6] = [
+        "diurnal",
+        "burst_storm",
+        "long_context_drift",
+        "mixed_slo",
+        "chaos_crashes",
+        "chaos_degraded",
+    ];
 
     pub fn by_name(name: &str, seed: u64) -> Option<ScenarioSpec> {
         match name {
@@ -311,6 +323,8 @@ impl ScenarioSpec {
             "burst_storm" => Some(Self::burst_storm(seed)),
             "long_context_drift" => Some(Self::long_context_drift(seed)),
             "mixed_slo" => Some(Self::mixed_slo(seed)),
+            "chaos_crashes" => Some(Self::chaos_crashes(seed)),
+            "chaos_degraded" => Some(Self::chaos_degraded(seed)),
             _ => None,
         }
     }
@@ -358,6 +372,7 @@ impl ScenarioSpec {
             wave: Some(RateWave { period_us: period, amplitude: 0.25 }),
             tier_mix: Vec::new(),
             tier_slos_ms: Vec::new(),
+            fault_profile: None,
         }
     }
 
@@ -376,6 +391,7 @@ impl ScenarioSpec {
             wave: None,
             tier_mix: Vec::new(),
             tier_slos_ms: Vec::new(),
+            fault_profile: None,
         }
     }
 
@@ -406,6 +422,7 @@ impl ScenarioSpec {
             wave: None,
             tier_mix: Vec::new(),
             tier_slos_ms: Vec::new(),
+            fault_profile: None,
         }
     }
 
@@ -422,7 +439,29 @@ impl ScenarioSpec {
             wave: None,
             tier_mix: vec![(0, 0.7), (1, 0.3)],
             tier_slos_ms: vec![(15.0, 1_500.0)],
+            fault_profile: None,
         }
+    }
+
+    /// The acceptance chaos scenario: a `diurnal` day with decode/prefill
+    /// instance crashes and memory-pool server failures injected mid-run.
+    /// Run it recovery-on vs recovery-off to measure what the §4.4.1
+    /// resilience story is worth in goodput.
+    pub fn chaos_crashes(seed: u64) -> ScenarioSpec {
+        let mut sc = Self::diurnal(seed);
+        sc.name = "chaos_crashes";
+        sc.fault_profile = Some(crate::faults::FaultProfile::crashes(24e6));
+        sc
+    }
+
+    /// Gray-failure chaos: `burst_storm` traffic over a fabric with
+    /// degradation windows and straggling decode instances — nothing
+    /// crashes, everything slows.
+    pub fn chaos_degraded(seed: u64) -> ScenarioSpec {
+        let mut sc = Self::burst_storm(seed);
+        sc.name = "chaos_degraded";
+        sc.fault_profile = Some(crate::faults::FaultProfile::degraded(8e6));
+        sc
     }
 
     /// The extra-tier SLOs as config objects, ready to assign to
@@ -640,6 +679,29 @@ mod tests {
         let first = mean_in(0.0, 5e6);
         let last = mean_in(15e6, f64::MAX);
         assert!(last > 4.0 * first, "drift {first} -> {last}");
+    }
+
+    #[test]
+    fn chaos_presets_carry_fault_profiles() {
+        let c = ScenarioSpec::by_name("chaos_crashes", 3).unwrap();
+        let p = c.fault_profile.expect("chaos preset must carry a fault profile");
+        assert!(p.decode_crashes + p.prefill_crashes + p.pool_failures > 0);
+        let d = ScenarioSpec::by_name("chaos_degraded", 3).unwrap();
+        let dp = d.fault_profile.unwrap();
+        assert_eq!(dp.decode_crashes + dp.prefill_crashes + dp.pool_failures, 0);
+        assert!(dp.link_degrades > 0 && dp.stragglers > 0);
+        // healthy presets carry none
+        for name in ["diurnal", "burst_storm", "long_context_drift", "mixed_slo"] {
+            assert!(ScenarioSpec::by_name(name, 3).unwrap().fault_profile.is_none(), "{name}");
+        }
+        // the chaos workload is its base preset — faults ride alongside,
+        // they don't change the trace
+        let a = generate_scenario(&ScenarioSpec::diurnal(3), 100);
+        let b = generate_scenario(&c, 100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_us, y.arrival_us);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+        }
     }
 
     #[test]

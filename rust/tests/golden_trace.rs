@@ -11,6 +11,7 @@
 
 use cm_infer::config::Config;
 use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
+use cm_infer::faults::{FaultOptions, FaultPlan};
 use cm_infer::workload::{generate_scenario, ScenarioSpec};
 
 const FIXTURE: &str =
@@ -24,10 +25,12 @@ struct Case {
     autoscale: bool,
 }
 
-const CASES: [Case; 3] = [
+const CASES: [Case; 4] = [
     Case { preset: "diurnal", seed: 3, n: 500, autoscale: true },
     Case { preset: "burst_storm", seed: 5, n: 500, autoscale: false },
     Case { preset: "mixed_slo", seed: 9, n: 500, autoscale: false },
+    // chaos: the preset's fault profile drawn at the case seed, recovery on
+    Case { preset: "chaos_crashes", seed: 4, n: 400, autoscale: false },
 ];
 
 fn run_case(c: &Case) -> Vec<(String, f64)> {
@@ -42,6 +45,12 @@ fn run_case(c: &Case) -> Vec<(String, f64)> {
             switch_latency_us: 2e6,
             ..AutoscaleOptions::default()
         }),
+        faults: sc.fault_profile.map(|p| FaultOptions {
+            plan: FaultPlan::generate(c.seed, &p),
+            heartbeat_us: 250_000.0,
+            recovery: true,
+            recovery_latency_us: 2e6,
+        }),
         ..SimOptions::default()
     };
     let r = ServeSim::new(cfg, opts, trace).run();
@@ -55,6 +64,9 @@ fn run_case(c: &Case) -> Vec<(String, f64)> {
         (format!("{tag} tpot_p50"), r.tpot_us.p50),
         (format!("{tag} tpot_p99"), r.tpot_us.p99),
         (format!("{tag} resplits"), r.resplits.len() as f64),
+        (format!("{tag} faults"), r.faults.len() as f64),
+        (format!("{tag} requests_lost"), r.requests_lost as f64),
+        (format!("{tag} goodput_tokens"), r.goodput_tokens as f64),
     ]
 }
 

@@ -1,0 +1,141 @@
+//! End-to-end chaos tests (paper §4.4.1 fault resilience): a diurnal day
+//! with injected decode/prefill instance crashes and memory-pool server
+//! failures, run with recovery orchestration vs the recovery-disabled
+//! baseline. The acceptance bar: ≥95% of admitted requests complete under
+//! recovery, recovery strictly beats the baseline on goodput, and the same
+//! seed reproduces the run bit-exactly.
+
+use cm_infer::config::Config;
+use cm_infer::coordinator::sim::{ServeSim, SimOptions};
+use cm_infer::faults::{FaultEvent, FaultKind, FaultOptions, FaultPlan};
+use cm_infer::metrics::ServingReport;
+use cm_infer::workload::{generate_scenario, ScenarioSpec};
+
+const N: usize = 1200;
+
+/// The acceptance fault plan: two decode-instance crashes, one prefill
+/// crash, and two pool-server failures, all timed inside the busy middle of
+/// the diurnal day so they strand real in-flight work.
+fn crash_plan() -> FaultPlan {
+    FaultPlan::new(vec![
+        FaultEvent { t_us: 3e6, kind: FaultKind::DecodeCrash { instance: 0 } },
+        FaultEvent { t_us: 4e6, kind: FaultKind::PoolServerFail { server: 0 } },
+        FaultEvent { t_us: 5e6, kind: FaultKind::PrefillCrash { instance: 2 } },
+        FaultEvent { t_us: 7e6, kind: FaultKind::DecodeCrash { instance: 1 } },
+        FaultEvent { t_us: 9e6, kind: FaultKind::PoolServerFail { server: 1 } },
+    ])
+}
+
+fn chaos_run(recovery: bool) -> ServingReport {
+    let sc = ScenarioSpec::diurnal(7);
+    let trace = generate_scenario(&sc, N);
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    let opts = SimOptions {
+        seed: 7,
+        decode_instances: 4,
+        faults: Some(FaultOptions {
+            plan: crash_plan(),
+            heartbeat_us: 250_000.0,
+            recovery,
+            recovery_latency_us: 2e6,
+        }),
+        ..SimOptions::default()
+    };
+    ServeSim::new(cfg, opts, trace).run()
+}
+
+#[test]
+fn integration_chaos() {
+    let with = chaos_run(true);
+    let without = chaos_run(false);
+
+    // conservation under both modes: every admitted request is exactly-once
+    // completed or explicitly lost
+    assert_eq!(with.requests_completed + with.requests_lost, N as u64);
+    assert_eq!(without.requests_completed + without.requests_lost, N as u64);
+
+    // acceptance: ≥95% of admitted requests complete with recovery on
+    assert!(
+        with.availability() >= 0.95,
+        "availability {:.3} under recovery (lost {})",
+        with.availability(),
+        with.requests_lost
+    );
+
+    // the crashes landed, were detected after injection, and recovered
+    assert_eq!(with.faults.len(), 5, "{:?}", with.faults);
+    let mut rehomed_total = 0;
+    for f in &with.faults {
+        assert!(f.detected_us >= f.t_us, "{f:?}");
+        if matches!(
+            f.kind,
+            FaultKind::DecodeCrash { .. } | FaultKind::PrefillCrash { .. }
+        ) {
+            let r = f.recovered_us.expect("crash must recover under orchestration");
+            assert!(r > f.detected_us, "{f:?}");
+            rehomed_total += f.requests_rehomed;
+        }
+    }
+    assert!(rehomed_total > 0, "mid-day crashes must strand in-flight work");
+    let mttr = with.mean_mttr_us().expect("recovered faults must report MTTR");
+    assert!(mttr >= 2e6, "MTTR {mttr} below the warm model-load latency");
+
+    // acceptance: strictly beats the recovery-disabled baseline on goodput
+    assert!(
+        without.requests_lost > 0,
+        "the baseline must lose the stranded work: {:?}",
+        without.faults
+    );
+    assert!(
+        with.goodput_tokens > without.goodput_tokens,
+        "recovery goodput {} must strictly beat baseline {}",
+        with.goodput_tokens,
+        without.goodput_tokens
+    );
+    assert!(without.tokens_lost > 0);
+    assert!(without.availability() < 1.0);
+
+    // acceptance: bit-exact across two runs with the same seed
+    let again = chaos_run(true);
+    assert_eq!(with.duration_us.to_bits(), again.duration_us.to_bits());
+    assert_eq!(with.output_tokens, again.output_tokens);
+    assert_eq!(with.goodput_tokens, again.goodput_tokens);
+    assert_eq!(with.ttft_us.p99.to_bits(), again.ttft_us.p99.to_bits());
+    assert_eq!(with.tpot_us.p99.to_bits(), again.tpot_us.p99.to_bits());
+    assert_eq!(with.faults.len(), again.faults.len());
+    for (a, b) in with.faults.iter().zip(&again.faults) {
+        assert_eq!(a.t_us.to_bits(), b.t_us.to_bits());
+        assert_eq!(a.detected_us.to_bits(), b.detected_us.to_bits());
+        assert_eq!(a.requests_rehomed, b.requests_rehomed);
+        assert_eq!(a.kv_refetched, b.kv_refetched);
+        assert_eq!(a.reprefilled, b.reprefilled);
+    }
+}
+
+/// The seeded chaos preset end to end: `chaos_crashes` carries the fault
+/// profile, `FaultPlan::generate` draws a reproducible plan from it, and
+/// the run completes with every request accounted.
+#[test]
+fn chaos_preset_generated_plan_serves() {
+    let sc = ScenarioSpec::by_name("chaos_crashes", 11).unwrap();
+    let profile = sc.fault_profile.expect("chaos preset carries a profile");
+    let trace = generate_scenario(&sc, 600);
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    let opts = SimOptions {
+        seed: 11,
+        decode_instances: 2,
+        faults: Some(FaultOptions {
+            plan: FaultPlan::generate(11, &profile),
+            heartbeat_us: 250_000.0,
+            recovery: true,
+            recovery_latency_us: 2e6,
+        }),
+        ..SimOptions::default()
+    };
+    let report = ServeSim::new(cfg, opts, trace).run();
+    assert_eq!(report.requests_completed + report.requests_lost, 600);
+    assert_eq!(report.requests_lost, 0, "recovery must save everything");
+    assert!(!report.faults.is_empty(), "the generated plan must land faults");
+}

@@ -12,6 +12,7 @@ use cm_infer::coordinator::router::{Router, RouterKind};
 use cm_infer::coordinator::sim::{AutoscaleOptions, DecodePlacement, ServeSim, SimOptions};
 use cm_infer::coordinator::transfer::{connection_histogram, prefill_source_rank};
 use cm_infer::coordinator::RequestPhase;
+use cm_infer::faults::{FaultOptions, FaultPlan, FaultProfile};
 use cm_infer::mempool::{Key, MemPool};
 use cm_infer::proptest::check;
 use cm_infer::topology::alloc::BlockAllocator;
@@ -160,6 +161,111 @@ fn prop_elastic_decode_pool_conserves_requests_and_tokens() {
         let pool_emitted: u64 = sim.decode_pool().iter().map(|d| d.tokens_emitted).sum();
         sim.decode_pool().iter().all(|d| d.slots.is_empty())
             && pool_emitted == expected_output - n as u64
+    });
+}
+
+#[test]
+fn prop_chaos_conservation_exactly_once() {
+    // Under ANY generated fault plan — decode/prefill crashes, pool-server
+    // failures, degraded links, stragglers — across random scenario ×
+    // placement × caching × autoscale × recovery combinations on the Tiny
+    // deployment, every admitted request is exactly-once completed or
+    // explicitly reported lost: never dropped silently, never
+    // double-counted, and the token books balance to the promised total.
+    check("chaos-conservation", 8, |g| {
+        let preset = *g.rng().choose(&["diurnal", "burst_storm", "mixed_slo"]);
+        let mut sc = ScenarioSpec::by_name(preset, g.u64(0..=1_000)).unwrap();
+        let slow = g.f64(5.0, 20.0);
+        sc.base.mean_interarrival_us *= slow;
+        sc.base.max_prompt = 4096;
+        sc.base.max_output = 256;
+        for p in &mut sc.phases {
+            p.mean_interarrival_us *= slow;
+        }
+        let n = g.usize(20..=50);
+        let trace = generate_scenario(&sc, n);
+        let horizon = trace.last().map(|r| r.arrival_us * 1.5).unwrap_or(1e6).max(1e6);
+        let profile = FaultProfile {
+            horizon_us: horizon,
+            decode_crashes: g.usize(0..=2),
+            prefill_crashes: g.usize(0..=1),
+            pool_failures: g.usize(0..=2),
+            link_degrades: g.usize(0..=1),
+            stragglers: g.usize(0..=1),
+            degrade_factor: g.f64(1.5, 5.0),
+            straggler_factor: g.f64(1.5, 4.0),
+            degrade_duration_us: g.f64(1e5, 2e6),
+        };
+        let mut cfg = Config::default();
+        cfg.serving = ServingConfig::preset(DeploymentPreset::Tiny);
+        cfg.serving.context_caching = g.bool();
+        let opts = SimOptions {
+            router: if g.bool() {
+                RouterKind::PeerToPeer
+            } else {
+                RouterKind::KvCentric { overload_factor: g.f64(1.0, 6.0) }
+            },
+            seed: g.u64(0..=1_000),
+            decode_instances: g.usize(1..=2),
+            placement: if g.bool() {
+                DecodePlacement::LeastLoaded
+            } else {
+                DecodePlacement::RoundRobin
+            },
+            autoscale: g.bool().then(|| AutoscaleOptions {
+                interval_us: g.f64(5e5, 2e6),
+                switch_latency_us: g.f64(1e5, 1e6),
+                ..AutoscaleOptions::default()
+            }),
+            faults: Some(FaultOptions {
+                plan: FaultPlan::generate(g.u64(0..=1_000), &profile),
+                heartbeat_us: g.f64(5e4, 5e5),
+                recovery: g.bool(),
+                recovery_latency_us: g.f64(1e5, 2e6),
+            }),
+            ..SimOptions::default()
+        };
+        let mut sim = ServeSim::new(cfg, opts, trace);
+        let report = sim.run();
+
+        // exactly-once terminal accounting
+        if report.requests_completed + report.requests_lost != n as u64 {
+            return false;
+        }
+        if sim.finished + sim.lost_requests() != n {
+            return false;
+        }
+        let mut finished = 0u64;
+        for r in &sim.requests {
+            match r.phase {
+                RequestPhase::Finished => {
+                    if r.t_finished.is_none() || r.generated != r.spec.output_tokens.max(1) {
+                        return false;
+                    }
+                    finished += 1;
+                }
+                RequestPhase::Lost => {
+                    if r.t_lost.is_none() || r.t_finished.is_some() {
+                        return false;
+                    }
+                }
+                _ => return false, // silently dropped
+            }
+        }
+        if finished != report.requests_completed {
+            return false;
+        }
+        // token books: completed goodput + undelivered + lost partial
+        // streams must cover exactly the promised output
+        let promised: u64 =
+            sim.requests.iter().map(|r| r.spec.output_tokens.max(1) as u64).sum();
+        let lost_partial: u64 = sim
+            .requests
+            .iter()
+            .filter(|r| r.phase == RequestPhase::Lost)
+            .map(|r| r.generated as u64)
+            .sum();
+        report.goodput_tokens + report.tokens_lost + lost_partial == promised
     });
 }
 
