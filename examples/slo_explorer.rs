@@ -5,9 +5,13 @@
 //!   cargo run --release --offline --example slo_explorer [--kv N]
 //!
 //! With `--scenario NAME` (diurnal, burst_storm, long_context_drift,
-//! mixed_slo) it instead runs the full serving simulation on that preset,
-//! frozen split vs elastic autoscaling, and prints the SLO attainment and
-//! resplit log — the §6.2.2 adaptive-deployment experiment. The `chaos_*`
+//! mixed_slo, memory_bound_decode) it instead runs the full serving
+//! simulation on that preset, frozen split vs elastic autoscaling (with
+//! and without the §6.2.1 attention-offload action), and prints the SLO
+//! attainment plus the resplit and offload logs — the §6.2.2
+//! adaptive-deployment experiment. `memory_bound_decode` runs on a
+//! decode-pressured 32-NPU decode slice, the regime where offloading a
+//! fraction of decode attention onto idle prefill NPUs wins. The `chaos_*`
 //! presets (chaos_crashes, chaos_degraded) inject their fault plan and
 //! compare recovery orchestration against the recovery-disabled baseline —
 //! the §4.4.1 fault-resilience experiment.
@@ -28,19 +32,29 @@ fn explore_scenario(name: &str) {
     let trace = generate_scenario(&sc, n);
     let mut cfg = Config::default();
     cfg.serving.tier_slos = sc.tier_slo_configs();
+    if sc.name == "memory_bound_decode" {
+        // the offload regime: a decode-pressured slice (deep batches, long
+        // KV) beside an underutilized prefill pool
+        cfg.serving.decode_npus = 32;
+    }
 
-    // (label, autoscale, chaos recovery) legs: healthy presets compare
-    // frozen vs elastic; chaos presets compare recovery vs baseline.
-    let legs: Vec<(&str, bool, Option<bool>)> = match sc.fault_profile {
+    // (label, autoscale, offload, chaos recovery) legs: healthy presets
+    // compare frozen vs elastic vs the --no-offload ablation; chaos
+    // presets compare recovery vs baseline.
+    let legs: Vec<(&str, bool, bool, Option<bool>)> = match sc.fault_profile {
         Some(_) => vec![
-            ("healthy (no faults)", false, None),
-            ("chaos + recovery", false, Some(true)),
-            ("chaos baseline (no recovery)", false, Some(false)),
+            ("healthy (no faults)", false, true, None),
+            ("chaos + recovery", false, true, Some(true)),
+            ("chaos baseline (no recovery)", false, true, Some(false)),
         ],
-        None => vec![("frozen", false, None), ("elastic", true, None)],
+        None => vec![
+            ("frozen", false, true, None),
+            ("elastic (offload on)", true, true, None),
+            ("elastic (--no-offload)", true, false, None),
+        ],
     };
     println!("== scenario `{}` ({n} requests) ==\n", sc.name);
-    for (label, autoscale, chaos) in legs {
+    for (label, autoscale, offload, chaos) in legs {
         let faults = match (chaos, sc.fault_profile) {
             (Some(recovery), Some(profile)) => Some(FaultOptions {
                 plan: FaultPlan::generate(7, &profile),
@@ -50,7 +64,8 @@ fn explore_scenario(name: &str) {
             _ => None,
         };
         let opts = SimOptions {
-            autoscale: autoscale.then(AutoscaleOptions::default),
+            autoscale: autoscale
+                .then(|| AutoscaleOptions { offload, ..AutoscaleOptions::default() }),
             faults,
             ..SimOptions::default()
         };
@@ -64,11 +79,20 @@ fn explore_scenario(name: &str) {
             r.tpot_us.p99 / 1e3
         );
         println!(
-            "  SLO attainment {:.1}%   NPU-s: prefill {:.0} / decode {:.0}",
+            "  SLO attainment {:.1}%   NPU-s: prefill {:.0} (busy {:.0}) / decode {:.0} (busy {:.0})",
             r.overall_attainment() * 100.0,
             r.prefill_npu_seconds,
-            r.decode_npu_seconds
+            r.prefill_busy_npu_seconds,
+            r.decode_npu_seconds,
+            r.decode_busy_npu_seconds
         );
+        println!(
+            "  decode throughput {:.0} tok/s/NPU",
+            r.decode_tokens_per_s_per_npu()
+        );
+        if let Some(summary) = r.offload_summary() {
+            println!("{summary}");
+        }
         if let Some(summary) = r.chaos_summary() {
             println!("{summary}");
         }

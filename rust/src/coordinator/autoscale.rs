@@ -12,6 +12,13 @@
 //! ([`offload`]): when decode is memory-bound and prefill has idle compute,
 //! a fraction of decode-attention work can migrate to prefill instances
 //! (the Adrenaline design the paper cites as future work).
+//!
+//! [`Autoscaler::recommend_action`] unifies both mechanisms into one
+//! [`ElasticAction`] vocabulary per epoch: `Offload` (borrow idle prefill
+//! HBM bandwidth for the decode FA core — cheap, instant, reversible),
+//! `Recall` (return it — forced with a latency spike when a donor crashes,
+//! graceful when the pressure resolves), or the classic `Resplit` (move
+//! whole NPU groups, paying the Table 2 warm role-switch latency).
 
 use crate::config::{Ascend910cDie, DeepSeekDims, ServingConfig};
 use crate::simnpu::pipeline::{decode_step, prefill_model, DecodePoint, PrefillPoint};
@@ -41,6 +48,89 @@ pub struct SplitPlan {
     /// Predicted decode capacity at this split, tokens/s.
     pub decode_capacity: f64,
 }
+
+/// Why an active §6.2.1 attention offload was (or must be) recalled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecallReason {
+    /// A donor prefill instance crashed: the decode side pulls the FA core
+    /// back locally — a latency spike, not a stall.
+    DonorFailure,
+    /// The memory-bound decode pressure (or the prefill idle headroom that
+    /// paid for the donor tax) vanished.
+    PressureResolved,
+    /// A resplit superseded the offload: NPUs are about to change roles,
+    /// so the borrowed bandwidth goes back first.
+    Preempted,
+}
+
+impl RecallReason {
+    /// Short tag for logs and reports.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            RecallReason::DonorFailure => "donor-failure",
+            RecallReason::PressureResolved => "pressure-resolved",
+            RecallReason::Preempted => "preempted",
+        }
+    }
+}
+
+/// One elastic action the controller can recommend per `ScaleEpoch` —
+/// the §4.1/§6.2.1 unified elasticity vocabulary. A [`SplitPlan`] moves
+/// whole NPU groups between roles (expensive: each moved group pays the
+/// Table 2 warm role-switch latency); an `Offload` borrows idle prefill
+/// HBM bandwidth for a fraction of decode attention without moving any
+/// NPU (cheap, reversible); a `Recall` returns the borrowed bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ElasticAction {
+    /// Classic resplit: migrate NPU groups between the pools.
+    Resplit(SplitPlan),
+    /// Engage §6.2.1 attention offloading: `frac` of the decode FA core
+    /// runs on `donors` prefill instances (Adrenaline-style).
+    Offload { frac: f64, donors: usize },
+    /// End an active offload.
+    Recall { reason: RecallReason },
+}
+
+/// Live measurements the §6.2.1 offload decision needs on top of
+/// [`WorkloadStats`]: the decode pool's operating point (which decides
+/// whether the FA core is worth offloading) and the prefill pool's idle
+/// NPU headroom (which pays the donor tax).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OffloadSignals {
+    /// Mean KV length across active decode slots.
+    pub decode_mean_kv: usize,
+    /// Aggregate decode batch per NPU (total slots / pool NPUs).
+    pub decode_batch_per_npu: usize,
+    /// NPUs currently in the decode pool.
+    pub decode_npus: usize,
+    /// NPUs currently serving prefill (active instances x quantum).
+    pub prefill_npus: usize,
+    /// Idle prefill NPU-equivalents measured over the window:
+    /// `(1 - busy/assigned) x active prefill NPUs`.
+    pub prefill_idle_npus: f64,
+    /// Residual EPLB imbalance of the decode pool (step-model input).
+    pub eplb_imbalance: f64,
+    /// Offload fraction currently engaged, if any.
+    pub offload_active: Option<f64>,
+}
+
+/// Minimum mean decode KV length before attention is worth offloading:
+/// below this, the FA core is too small relative to the UB sync to win.
+pub const OFFLOAD_MIN_KV: usize = 2048;
+/// Minimum aggregate decode batch per NPU: below this the decode pool is
+/// not meaningfully batched and its attention core is compute-trivial.
+pub const OFFLOAD_MIN_BATCH: usize = 8;
+/// Modeled decode-throughput ratio an offload must clear to engage. The
+/// engagement itself is free (no weights move — the FA core is stateless
+/// apart from KV, which is UB-reachable), so even small modeled wins are
+/// worth taking; the recall spike is only paid on donor *failure*.
+pub const OFFLOAD_MIN_GAIN: f64 = 1.01;
+/// Recall (voluntary) thresholds: hysteresis gaps below the engage gates
+/// so the controller does not flap at the boundary.
+pub const OFFLOAD_RECALL_BATCH: usize = OFFLOAD_MIN_BATCH / 2;
+pub const OFFLOAD_RECALL_KV: usize = OFFLOAD_MIN_KV * 3 / 4;
+/// Candidate offload fractions the controller searches.
+const OFFLOAD_FRACS: [f64; 5] = [0.1, 0.2, 0.3, 0.4, 0.5];
 
 /// The PD-ratio controller.
 #[derive(Debug, Clone)]
@@ -139,6 +229,108 @@ impl Autoscaler {
             decode_capacity: decode_npus as f64 * dc_per_npu,
         })
     }
+
+    /// The decode operating point the §6.2.1 offload decision models.
+    /// Public so enactment prices the donor tax at exactly the point the
+    /// decision was made from (one source, no drift).
+    pub fn offload_point(serving: &ServingConfig, sig: &OffloadSignals) -> DecodePoint {
+        DecodePoint {
+            batch_per_npu: sig.decode_batch_per_npu.max(1),
+            kv_len: sig.decode_mean_kv.max(1),
+            ep: serving.decode_ep_degree(),
+            microbatch: serving.microbatch,
+            mtp: serving.mtp,
+            mtp_acceptance: serving.mtp_acceptance,
+            eplb_imbalance: if sig.eplb_imbalance > 0.0 { sig.eplb_imbalance } else { 1.0 },
+        }
+    }
+
+    /// Donor prefill instances needed to host `frac` of the decode pool's
+    /// attention bandwidth (instance-quantized, at least one).
+    pub fn donor_instances(&self, frac: f64, decode_npus: usize) -> usize {
+        ((frac * decode_npus as f64).ceil() as usize)
+            .div_ceil(self.prefill_quantum.max(1))
+            .max(1)
+    }
+
+    /// Recommend one [`ElasticAction`] for the epoch — the §6.2.1-aware
+    /// extension of [`Autoscaler::recommend`].
+    ///
+    /// Decision order:
+    ///
+    /// 1. With an offload active, hold it while the regime lasts; recall it
+    ///    when the decode pressure (batch, KV length) or the prefill idle
+    ///    headroom paying the donor tax has vanished. No resplit is ever
+    ///    recommended while borrowed bandwidth is out.
+    /// 2. Otherwise, engage an offload when decode is memory-bound — long
+    ///    KV, real batching, and the calibrated §6.2.1 model predicting at
+    ///    least [`OFFLOAD_MIN_GAIN`] decode throughput at some fraction —
+    ///    and the prefill pool's *measured* idle NPUs can absorb the donor
+    ///    tax. Offloading answers memory-bound decode pressure without
+    ///    paying the Table 2 role-switch latency a resplit costs.
+    /// 3. Fall back to the classic PD-ratio resplit
+    ///    ([`Autoscaler::recommend`], unchanged semantics).
+    #[allow(clippy::too_many_arguments)]
+    pub fn recommend_action(
+        &self,
+        die: &Ascend910cDie,
+        model: &DeepSeekDims,
+        serving: &ServingConfig,
+        stats: &WorkloadStats,
+        sig: &OffloadSignals,
+        current_prefill_npus: usize,
+        offload_enabled: bool,
+    ) -> Option<ElasticAction> {
+        if let Some(frac) = sig.offload_active {
+            let om =
+                offload::model_offload(die, model, &Self::offload_point(serving, sig), frac);
+            let donor_npus =
+                (self.donor_instances(frac, sig.decode_npus) * self.prefill_quantum) as f64;
+            let tax_npus = donor_npus * (1.0 - om.prefill_retained);
+            let starving = sig.prefill_idle_npus < tax_npus * 0.5;
+            if sig.decode_batch_per_npu < OFFLOAD_RECALL_BATCH
+                || sig.decode_mean_kv < OFFLOAD_RECALL_KV
+                || starving
+            {
+                return Some(ElasticAction::Recall { reason: RecallReason::PressureResolved });
+            }
+            return None;
+        }
+        if offload_enabled
+            && sig.decode_mean_kv >= OFFLOAD_MIN_KV
+            && sig.decode_batch_per_npu >= OFFLOAD_MIN_BATCH
+            && stats.output_tokens > 0
+        {
+            let point = Self::offload_point(serving, sig);
+            let base = offload::model_offload(die, model, &point, 0.0);
+            // best feasible fraction: maximize modeled decode throughput
+            // subject to the donor tax fitting in measured prefill idle
+            let mut best: Option<(f64, usize, f64)> = None;
+            for &frac in &OFFLOAD_FRACS {
+                let om = offload::model_offload(die, model, &point, frac);
+                let donors = self.donor_instances(frac, sig.decode_npus);
+                let donor_npus = donors * self.prefill_quantum;
+                // at least one pure (non-donor) prefill instance remains,
+                // and the donated bandwidth comes out of measured idle
+                if donor_npus >= sig.prefill_npus {
+                    continue;
+                }
+                if donor_npus as f64 * (1.0 - om.prefill_retained) > sig.prefill_idle_npus {
+                    continue;
+                }
+                if best.is_none_or(|(_, _, t)| om.tokens_per_s_per_npu > t) {
+                    best = Some((frac, donors, om.tokens_per_s_per_npu));
+                }
+            }
+            if let Some((frac, donors, tput)) = best {
+                if tput >= base.tokens_per_s_per_npu * OFFLOAD_MIN_GAIN {
+                    return Some(ElasticAction::Offload { frac, donors });
+                }
+            }
+        }
+        self.recommend(die, model, serving, stats, current_prefill_npus)
+            .map(ElasticAction::Resplit)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -181,12 +373,44 @@ pub mod offload {
         frac: f64,
     ) -> OffloadModel {
         let base = crate::simnpu::pipeline::decode_layer(die, m, p);
-        // the attention core's latency splits; remote side pays a UB
-        // round-trip for query/latent-output exchange per microbatch
+        let layer = offloaded_layer_us(m, p, &base, frac);
+        let step_us = layer * m.n_layers as f64 + crate::simnpu::pipeline::STEP_OVERHEAD_US;
+        let accepted = if p.mtp { 1.0 + p.mtp_acceptance } else { 1.0 };
+
+        // prefill donates HBM bandwidth proportional to the offloaded core
         let lanes = (p.batch_per_npu / 2).max(1);
         let lanes_ub = if p.microbatch { lanes.div_ceil(2) } else { lanes };
         let q_tokens = if p.mtp { 2 } else { 1 };
         let shape = mla::MlaDecodeShape { batch: lanes_ub, q_tokens, kv_len: p.kv_len };
+        let core_bytes = mla::attn_core_bytes(m, &shape) * q_tokens as f64;
+        let prefill_hbm_share =
+            (core_bytes * frac) / (die.hbm_gbps * 1e9 * (base.attn_core / 1e6)).max(1.0);
+
+        OffloadModel {
+            frac,
+            decode_layer_us: layer,
+            tpot_ms: step_us / accepted / 1000.0,
+            tokens_per_s_per_npu: p.batch_per_npu as f64 * accepted / (step_us / 1e6),
+            prefill_retained: (1.0 - prefill_hbm_share.min(0.5)).max(0.5),
+        }
+    }
+
+    /// Offloaded per-layer wall time, given the already-computed all-local
+    /// layer breakdown: the attention core's latency splits between the
+    /// local and remote shares, the remote share pays a UB round-trip for
+    /// the query/latent-output exchange per microbatch, and the layer
+    /// recombines on the slower side. Shared by [`model_offload`] and the
+    /// serving sim's per-step path (which already holds the breakdown from
+    /// its step model — no second `decode_layer` evaluation needed).
+    pub fn offloaded_layer_us(
+        m: &DeepSeekDims,
+        p: &DecodePoint,
+        base: &crate::simnpu::pipeline::DecodeLayerBreakdown,
+        frac: f64,
+    ) -> Micros {
+        let lanes = (p.batch_per_npu / 2).max(1);
+        let lanes_ub = if p.microbatch { lanes.div_ceil(2) } else { lanes };
+        let q_tokens = if p.mtp { 2 } else { 1 };
         // query + latent-output payload per microbatch (BF16)
         let payload = (lanes_ub * q_tokens * m.n_heads * (m.d_c + m.d_rope) * 2) as u64;
         let sync_us = crate::netsim::NetSim::default().transfer_us(
@@ -199,23 +423,7 @@ pub mod offload {
         let local = base.attn_core * (1.0 - frac);
         let remote = base.attn_core * frac + sync_us;
         let new_core = local.max(remote);
-        let stream0 = base.mla_prolog + new_core + base.o_proj;
-        let layer = stream0 + base.stream1;
-        let step_us = layer * m.n_layers as f64 + crate::simnpu::pipeline::STEP_OVERHEAD_US;
-        let accepted = if p.mtp { 1.0 + p.mtp_acceptance } else { 1.0 };
-
-        // prefill donates HBM bandwidth proportional to the offloaded core
-        let core_bytes = mla::attn_core_bytes(m, &shape) * q_tokens as f64;
-        let prefill_hbm_share =
-            (core_bytes * frac) / (die.hbm_gbps * 1e9 * (base.attn_core / 1e6)).max(1.0);
-
-        OffloadModel {
-            frac,
-            decode_layer_us: layer,
-            tpot_ms: step_us / accepted / 1000.0,
-            tokens_per_s_per_npu: p.batch_per_npu as f64 * accepted / (step_us / 1e6),
-            prefill_retained: (1.0 - prefill_hbm_share.min(0.5)).max(0.5),
-        }
+        base.mla_prolog + new_core + base.o_proj + base.stream1
     }
 }
 
@@ -304,6 +512,102 @@ mod tests {
                 "backlog must bias toward prefill: {h:?} vs {shrink:?}"
             );
         }
+    }
+
+    /// Signals for the §6.2.1 sweet spot: long KV, saturated batch,
+    /// plenty of measured prefill idle.
+    fn memory_bound_signals() -> OffloadSignals {
+        OffloadSignals {
+            decode_mean_kv: 4096,
+            decode_batch_per_npu: 96,
+            decode_npus: 160,
+            prefill_npus: 96,
+            prefill_idle_npus: 48.0,
+            eplb_imbalance: 1.05,
+            offload_active: None,
+        }
+    }
+
+    #[test]
+    fn memory_bound_decode_prefers_offload_over_resplit() {
+        let (die, m, s) = env();
+        let a = Autoscaler::paper_default();
+        // output-heavy stats that would otherwise recommend a resplit
+        let sig = memory_bound_signals();
+        let action = a
+            .recommend_action(&die, &m, &s, &stats(200_000, 400_000), &sig, 96, true)
+            .expect("memory-bound pressure must act");
+        match action {
+            ElasticAction::Offload { frac, donors } => {
+                assert!(frac > 0.0 && frac <= 1.0, "frac out of bounds: {frac}");
+                assert!(donors >= 1);
+                // donors stay within the pool, leaving a pure instance
+                assert!(donors * a.prefill_quantum < 96, "{donors} donors");
+            }
+            other => panic!("expected Offload, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn offload_disabled_falls_back_to_resplit() {
+        let (die, m, s) = env();
+        let a = Autoscaler::paper_default();
+        let sig = memory_bound_signals();
+        let action = a.recommend_action(&die, &m, &s, &stats(200_000, 400_000), &sig, 96, false);
+        assert!(
+            matches!(action, Some(ElasticAction::Resplit(_))),
+            "with offload off, the classic resplit must come back: {action:?}"
+        );
+    }
+
+    #[test]
+    fn no_prefill_idle_blocks_offload() {
+        let (die, m, s) = env();
+        let a = Autoscaler::paper_default();
+        let sig = OffloadSignals { prefill_idle_npus: 0.0, ..memory_bound_signals() };
+        let action = a.recommend_action(&die, &m, &s, &stats(200_000, 400_000), &sig, 96, true);
+        assert!(
+            !matches!(action, Some(ElasticAction::Offload { .. })),
+            "no idle headroom to pay the donor tax: {action:?}"
+        );
+    }
+
+    #[test]
+    fn short_kv_blocks_offload() {
+        let (die, m, s) = env();
+        let a = Autoscaler::paper_default();
+        let sig = OffloadSignals { decode_mean_kv: 1024, ..memory_bound_signals() };
+        let action = a.recommend_action(&die, &m, &s, &stats(200_000, 400_000), &sig, 96, true);
+        assert!(!matches!(action, Some(ElasticAction::Offload { .. })), "{action:?}");
+    }
+
+    #[test]
+    fn active_offload_holds_then_recalls_when_pressure_fades() {
+        let (die, m, s) = env();
+        let a = Autoscaler::paper_default();
+        let active = OffloadSignals { offload_active: Some(0.3), ..memory_bound_signals() };
+        // regime intact: hold (no resplit while bandwidth is borrowed)
+        let hold = a.recommend_action(&die, &m, &s, &stats(200_000, 400_000), &active, 96, true);
+        assert!(hold.is_none(), "{hold:?}");
+        // decode drained below the recall threshold: pull the core back
+        let drained = OffloadSignals {
+            decode_batch_per_npu: OFFLOAD_RECALL_BATCH - 1,
+            ..active
+        };
+        let recall = a.recommend_action(&die, &m, &s, &stats(200_000, 400_000), &drained, 96, true);
+        assert_eq!(
+            recall,
+            Some(ElasticAction::Recall { reason: RecallReason::PressureResolved })
+        );
+    }
+
+    #[test]
+    fn donor_instances_quantized() {
+        let a = Autoscaler::paper_default();
+        assert_eq!(a.donor_instances(0.1, 160), 1); // 16 NPUs
+        assert_eq!(a.donor_instances(0.3, 160), 3); // 48 NPUs
+        assert_eq!(a.donor_instances(0.5, 160), 5);
+        assert_eq!(a.donor_instances(0.01, 160), 1, "never zero donors");
     }
 
     #[test]

@@ -105,6 +105,20 @@ impl DecodeInstance {
         self.slots.iter().map(|s| s.kv_len).sum::<usize>() / self.slots.len()
     }
 
+    /// The instance's current operating point for the step-latency models
+    /// (also the input to the §6.2.1 offload model).
+    pub fn decode_point(&self, serving: &ServingConfig, eplb_imbalance: f64) -> DecodePoint {
+        DecodePoint {
+            batch_per_npu: self.batch_per_npu(),
+            kv_len: self.mean_kv_len().max(1),
+            ep: serving.decode_ep_degree(),
+            microbatch: serving.microbatch,
+            mtp: serving.mtp,
+            mtp_acceptance: serving.mtp_acceptance,
+            eplb_imbalance,
+        }
+    }
+
     /// Model the latency of the next step at current occupancy.
     pub fn step_model(
         &self,
@@ -113,16 +127,7 @@ impl DecodeInstance {
         serving: &ServingConfig,
         eplb_imbalance: f64,
     ) -> DecodeStepModel {
-        let point = DecodePoint {
-            batch_per_npu: self.batch_per_npu(),
-            kv_len: self.mean_kv_len().max(1),
-            ep: serving.decode_ep_degree(),
-            microbatch: serving.microbatch,
-            mtp: serving.mtp,
-            mtp_acceptance: serving.mtp_acceptance,
-            eplb_imbalance,
-        };
-        decode_step(die, model, &point)
+        decode_step(die, model, &self.decode_point(serving, eplb_imbalance))
     }
 
     /// Execute one decode step: every slot emits 1 token, plus a second

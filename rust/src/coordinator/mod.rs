@@ -21,6 +21,33 @@
 //!   [`autoscale::Autoscaler`] into the event stream (§4.1, §6.2.2), and
 //!   the chaos loop injecting [`crate::faults::FaultPlan`] events with
 //!   heartbeat detection and recovery orchestration (§4.4.1).
+//!
+//! ## The elastic-action state machine (§4.1 + §6.2.1)
+//!
+//! Every `ScaleEpoch` the controller recommends one
+//! [`autoscale::ElasticAction`]:
+//!
+//! * **`Resplit(SplitPlan)`** — move NPU groups between the prefill and
+//!   decode pools. Expensive: each moved group is offline for the Table 2
+//!   warm role-switch latency. Only available when no offload is active
+//!   (enactment recalls a live offload first, reason `Preempted`).
+//! * **`Offload { frac, donors }`** — engage §6.2.1 attention
+//!   offloading: `frac` of the decode FA core runs on `donors` idle
+//!   prefill instances. Instant and reversible — no weights move. Donors
+//!   become [`router::InstanceState::Donor`]: still admissible for
+//!   prefill (paying the modeled HBM tax per batch), deprioritized by
+//!   recovery re-homing, never drained or crashed-and-hidden.
+//! * **`Recall { reason }`** — end the offload. Graceful
+//!   (`PressureResolved`, `Preempted`) recalls are free; a
+//!   `DonorFailure` recall — forced at the heartbeat that detects a donor
+//!   crash — opens a transient decode TPOT degradation window
+//!   ([`sim::RECALL_SPIKE_FACTOR`] for [`sim::RECALL_SPIKE_US`]): a
+//!   latency spike, never a stall.
+//!
+//! Invariants: at most one offload engaged at a time; a donor set always
+//! leaves ≥ 1 pure-Active prefill instance; offload never targets a
+//! `Drained`/`Failed` slot (asserted in [`router::Router::set_donor`]);
+//! resplits and offloads never overlap.
 
 pub mod autoscale;
 pub mod batcher;
@@ -33,4 +60,5 @@ pub mod sim;
 pub mod transfer;
 
 pub use request::{RequestId, RequestPhase, RequestState};
+pub use router::InstanceState;
 pub use sim::{AutoscaleOptions, DecodePlacement, ServeSim, SimOptions};

@@ -22,6 +22,29 @@ pub struct RouteDecision {
     pub cache_usable: bool,
 }
 
+/// Lifecycle state of one prefill instance slot. Replaces the old parallel
+/// `active`/`failed` bool masks so the §6.2.1 offload-donor role does not
+/// become a third ad-hoc mask.
+///
+/// * `Active` — serving prefill traffic.
+/// * `Drained` — voluntarily out of the prefill role (elastic drain); its
+///   NPUs are (or will be) decode capacity.
+/// * `Failed` — masked out by the failure detector. Failure is an *overlay*:
+///   the `drained` bit remembers the role state it covered, so recovery
+///   restores exactly that state (a slot that was drained when it crashed
+///   comes back drained, not routable).
+/// * `Donor` — active *and* donating HBM bandwidth to offloaded decode
+///   attention (§6.2.1): still admissible for prefill traffic, but paying
+///   the donor tax on batch latency and deprioritized when recovery
+///   re-homes stranded work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    Active,
+    Drained,
+    Failed { drained: bool },
+    Donor,
+}
+
 /// Router behavior under comparison.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum RouterKind {
@@ -39,16 +62,11 @@ pub struct Router {
     pub kind: RouterKind,
     /// Outstanding queued tokens per prefill instance.
     pub queued_tokens: Vec<u64>,
-    /// Which instance slots are currently serving the prefill role. The
-    /// elastic autoscaler (paper §4.1 dynamic adjustment) activates and
-    /// drains slots as NPUs move between the prefill and decode pools;
-    /// inactive slots receive no traffic.
-    active: Vec<bool>,
-    /// Instance slots the failure detector has declared dead (chaos
-    /// faults). Orthogonal to `active`: a drained slot left the prefill
-    /// role voluntarily and keeps its flag when reactivated; a failed slot
-    /// is masked out until recovery clears it, whatever its role state.
-    failed: Vec<bool>,
+    /// Per-slot lifecycle state (see [`InstanceState`]). The elastic
+    /// autoscaler activates/drains slots as NPUs move between roles, marks
+    /// donors while §6.2.1 attention offload is engaged, and the failure
+    /// detector overlays `Failed` until recovery.
+    state: Vec<InstanceState>,
     /// session → home instance (KV-centric affinity state; the P2P router
     /// keeps NO such state — that is the point).
     home: BTreeMap<u64, usize>,
@@ -59,58 +77,128 @@ impl Router {
         Router {
             kind,
             queued_tokens: vec![0; n_instances],
-            active: vec![true; n_instances],
-            failed: vec![false; n_instances],
+            state: vec![InstanceState::Active; n_instances],
             home: BTreeMap::new(),
         }
     }
 
+    /// The slot's lifecycle state.
+    pub fn state(&self, instance: usize) -> InstanceState {
+        self.state[instance]
+    }
+
     /// Mark an instance slot active (serving prefill) or draining/inactive.
+    /// Draining a donor implicitly ends its donor role; toggling the role
+    /// of a failed slot only updates the state recovery will restore.
     pub fn set_active(&mut self, instance: usize, on: bool) {
-        self.active[instance] = on;
+        self.state[instance] = match (self.state[instance], on) {
+            (InstanceState::Failed { .. }, true) => InstanceState::Failed { drained: false },
+            (InstanceState::Failed { .. }, false) => InstanceState::Failed { drained: true },
+            (InstanceState::Donor, true) => InstanceState::Donor,
+            (_, true) => InstanceState::Active,
+            (_, false) => InstanceState::Drained,
+        };
     }
 
     /// Mark an instance slot failed (failure detector) or recovered.
     /// Failed slots receive no traffic and — for the KV-centric baseline —
     /// forfeit every session home pointing at them, exactly like drained
-    /// slots: the local cache died with the instance.
+    /// slots: the local cache died with the instance. A failed donor loses
+    /// its donor role permanently (the sim recalls the offload); recovery
+    /// brings it back as a plain `Active` slot.
     pub fn set_failed(&mut self, instance: usize, failed: bool) {
-        self.failed[instance] = failed;
+        self.state[instance] = match (self.state[instance], failed) {
+            (InstanceState::Drained, true) => InstanceState::Failed { drained: true },
+            (InstanceState::Failed { drained }, true) => InstanceState::Failed { drained },
+            (_, true) => InstanceState::Failed { drained: false },
+            (InstanceState::Failed { drained: true }, false) => InstanceState::Drained,
+            (InstanceState::Failed { drained: false }, false) => InstanceState::Active,
+            (other, false) => other,
+        };
+    }
+
+    /// Mark an `Active` slot as an offload donor (§6.2.1), or return a
+    /// donor to plain `Active`. Offload may never be hosted on a drained
+    /// or failed slot — that is the point of unifying the masks.
+    pub fn set_donor(&mut self, instance: usize, donor: bool) {
+        if donor {
+            assert!(
+                self.state[instance] == InstanceState::Active,
+                "offload donor must be an Active prefill instance, not {:?}",
+                self.state[instance]
+            );
+            self.state[instance] = InstanceState::Donor;
+        } else if self.state[instance] == InstanceState::Donor {
+            self.state[instance] = InstanceState::Active;
+        }
     }
 
     pub fn is_failed(&self, instance: usize) -> bool {
-        self.failed[instance]
+        matches!(self.state[instance], InstanceState::Failed { .. })
     }
 
-    /// Routable: serving the prefill role *and* not marked failed.
+    /// Currently donating bandwidth to offloaded decode attention.
+    pub fn is_donor(&self, instance: usize) -> bool {
+        self.state[instance] == InstanceState::Donor
+    }
+
+    /// Routable: serving the prefill role *and* not marked failed. Donors
+    /// stay admissible for prefill traffic.
     pub fn is_active(&self, instance: usize) -> bool {
-        self.active[instance] && !self.failed[instance]
+        matches!(self.state[instance], InstanceState::Active | InstanceState::Donor)
     }
 
     pub fn active_instances(&self) -> usize {
-        (0..self.active.len()).filter(|&i| self.is_active(i)).count()
+        (0..self.state.len()).filter(|&i| self.is_active(i)).count()
     }
 
-    fn least_loaded(&self) -> usize {
+    fn least_loaded_where(&self, keep: impl Fn(usize) -> bool) -> Option<usize> {
         self.queued_tokens
             .iter()
             .enumerate()
-            .filter(|&(i, _)| self.is_active(i))
+            .filter(|&(i, _)| self.is_active(i) && keep(i))
             .min_by_key(|&(_, &q)| q)
             .map(|(i, _)| i)
-            .unwrap_or(0)
+    }
+
+    fn least_loaded(&self) -> usize {
+        self.least_loaded_where(|_| true).unwrap_or(0)
+    }
+
+    /// Route like [`Router::route`], but prefer instances that are NOT
+    /// offload donors: the recovery orchestrator re-homes stranded work
+    /// here, and a donor is already paying the §6.2.1 bandwidth tax — when
+    /// any pure-Active instance exists, the stranded work goes there.
+    /// Falls back to the plain least-loaded choice (donors included) when
+    /// every routable instance is donating.
+    pub fn route_avoiding_donors(&mut self, session: u64, tokens: u64) -> RouteDecision {
+        match self.least_loaded_where(|i| !self.is_donor(i)) {
+            Some(pick) => {
+                let decision = self.decide(session, tokens, pick);
+                self.commit(session, tokens, &decision);
+                decision
+            }
+            None => self.route(session, tokens),
+        }
     }
 
     /// Route a request; caller charges `tokens` of prefill work.
     pub fn route(&mut self, session: u64, tokens: u64) -> RouteDecision {
-        let decision = match self.kind {
+        let least = self.least_loaded();
+        let decision = self.decide(session, tokens, least);
+        self.commit(session, tokens, &decision);
+        decision
+    }
+
+    /// The routing decision given the preferred least-loaded pick.
+    fn decide(&self, session: u64, tokens: u64, least: usize) -> RouteDecision {
+        match self.kind {
             RouterKind::PeerToPeer => {
                 // stateless least-loaded; cache is in the shared pool, so
                 // it survives any placement.
-                RouteDecision { instance: self.least_loaded(), cache_usable: true }
+                RouteDecision { instance: least, cache_usable: true }
             }
             RouterKind::KvCentric { overload_factor } => {
-                let least = self.least_loaded();
                 match self.home.get(&session) {
                     // a drained or failed home instance lost its local
                     // cache with it
@@ -130,12 +218,15 @@ impl Router {
                     None => RouteDecision { instance: least, cache_usable: true },
                 }
             }
-        };
+        }
+    }
+
+    /// Record a decision: update KV-centric affinity and charge the queue.
+    fn commit(&mut self, session: u64, tokens: u64, decision: &RouteDecision) {
         if let RouterKind::KvCentric { .. } = self.kind {
             self.home.insert(session, decision.instance);
         }
         self.queued_tokens[decision.instance] += tokens;
-        decision
     }
 
     /// Work completed on an instance.
@@ -286,6 +377,80 @@ mod tests {
         assert!(!r.is_active(0), "recovered slot is still drained");
         r.set_active(0, true);
         assert!(r.is_active(0));
+    }
+
+    #[test]
+    fn donors_stay_admissible_for_prefill() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 2);
+        r.set_donor(0, true);
+        assert!(r.is_donor(0));
+        assert!(r.is_active(0), "a donor keeps serving prefill traffic");
+        assert_eq!(r.active_instances(), 2);
+        // least-loaded routing still reaches the donor
+        r.queued_tokens[1] = 10_000;
+        assert_eq!(r.route(1, 100).instance, 0);
+        r.set_donor(0, false);
+        assert_eq!(r.state(0), InstanceState::Active);
+    }
+
+    #[test]
+    fn rehoming_prefers_non_donor_instances() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 3);
+        r.set_donor(0, true);
+        // donor 0 is by far the least loaded, but re-homing avoids it
+        r.queued_tokens[1] = 5_000;
+        r.queued_tokens[2] = 6_000;
+        let d = r.route_avoiding_donors(9, 100);
+        assert_eq!(d.instance, 1, "stranded work must land on a non-donor");
+        // plain routing still honors pure least-loaded
+        assert_eq!(r.route(9, 100).instance, 0);
+    }
+
+    #[test]
+    fn rehoming_falls_back_when_every_instance_donates() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 2);
+        r.set_donor(0, true);
+        r.set_donor(1, true);
+        r.queued_tokens[1] = 50;
+        let d = r.route_avoiding_donors(3, 10);
+        assert_eq!(d.instance, 0, "all-donor pool falls back to least-loaded");
+    }
+
+    #[test]
+    #[should_panic(expected = "offload donor must be an Active prefill instance")]
+    fn offload_never_targets_a_drained_instance() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 2);
+        r.set_active(0, false);
+        r.set_donor(0, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "offload donor must be an Active prefill instance")]
+    fn offload_never_targets_a_failed_instance() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 2);
+        r.set_failed(1, true);
+        r.set_donor(1, true);
+    }
+
+    #[test]
+    fn failed_donor_recovers_as_plain_active() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 2);
+        r.set_donor(0, true);
+        r.set_failed(0, true);
+        assert!(r.is_failed(0));
+        assert!(!r.is_donor(0), "failure strips the donor role");
+        r.set_failed(0, false);
+        assert_eq!(r.state(0), InstanceState::Active, "recovery must not resurrect donor state");
+    }
+
+    #[test]
+    fn draining_a_donor_ends_its_donor_role() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 2);
+        r.set_donor(0, true);
+        r.set_active(0, false);
+        assert_eq!(r.state(0), InstanceState::Drained);
+        r.set_active(0, true);
+        assert_eq!(r.state(0), InstanceState::Active);
     }
 
     #[test]

@@ -13,33 +13,68 @@
 //! With [`SimOptions::autoscale`] set, the [`Autoscaler`] controller is in
 //! the loop as a periodic `ScaleEpoch` event: each epoch collects
 //! [`WorkloadStats`] from the window's arrivals/emissions plus live queue
-//! depths and slot occupancy, asks the controller for a [`SplitPlan`], and
-//! enacts it — draining prefill instances into the decode pool or pulling
-//! decode NPUs up as new prefill instances. Moved NPUs are offline for a
-//! modeled *role-switch latency* (weight reload through the shared model
-//! cache — the Table 2 EMS warm-switch path), and every move is logged as a
-//! [`ResplitEvent`] in the final [`ServingReport`].
+//! depths and slot occupancy, asks the controller for an [`ElasticAction`],
+//! and enacts it. A [`SplitPlan`] drains prefill instances into the decode
+//! pool or pulls decode NPUs up as new prefill instances; moved NPUs are
+//! offline for a modeled *role-switch latency* (weight reload through the
+//! shared model cache — the Table 2 EMS warm-switch path), and every move
+//! is logged as a [`ResplitEvent`] in the final [`ServingReport`].
+//!
+//! ## §6.2.1 attention offloading as a first-class elastic action
+//!
+//! When decode is memory-bound (long KV, saturated batch) and the prefill
+//! pool has measured idle NPU-seconds, the controller prefers an
+//! `Offload` over a resplit: a fraction of the decode FA core runs on
+//! *donor* prefill instances (Adrenaline-style). While engaged:
+//!
+//! * decode steps use the offloaded per-layer latency from
+//!   [`offload::model_offload`] (never slower than the local step — the
+//!   remote share runs concurrently),
+//! * donor instances stay admissible for prefill but pay the modeled
+//!   HBM-bandwidth tax on every batch (accounted as `donor_tax_us`),
+//! * the router tracks donors as a first-class
+//!   [`crate::coordinator::router::InstanceState`] so recovery re-homing
+//!   prefers non-donor instances.
+//!
+//! Faults thread through: a donor crash forces a `Recall` at detection —
+//! decode pulls the FA core back locally and pays a transient TPOT
+//! degradation window ([`RECALL_SPIKE_FACTOR`] for [`RECALL_SPIKE_US`])
+//! instead of stalling; a graceful recall (pressure resolved / resplit
+//! preempts) costs nothing. Every transition lands in the report's
+//! [`OffloadEvent`] log.
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
 
 use crate::cache::ContextCache;
 use crate::config::Config;
-use crate::coordinator::autoscale::{Autoscaler, SplitPlan, WorkloadStats};
+use crate::coordinator::autoscale::{
+    offload, Autoscaler, ElasticAction, OffloadSignals, RecallReason, SplitPlan, WorkloadStats,
+};
 use crate::coordinator::batcher::{plan_for_slo, AdmissionQueue};
 use crate::coordinator::decode::{DecodeInstance, Slot};
 use crate::coordinator::eplb;
 use crate::coordinator::prefill::{batch_latency_us, PrefillInstance};
 use crate::coordinator::request::{RequestPhase, RequestState};
-use crate::coordinator::router::{Router, RouterKind};
+use crate::coordinator::router::{InstanceState, Router, RouterKind};
 use crate::coordinator::transfer::{kv_transfer, TransferCost, TransferScheduler};
 use crate::faults::{FaultKind, FaultOptions, FaultRecord};
 use crate::mempool::{Key, MemPool, NamespaceId};
-use crate::metrics::{Histogram, ResplitEvent, Role, ServingReport, TierAttainment};
+use crate::metrics::{
+    Histogram, OffloadEvent, OffloadEventKind, ResplitEvent, Role, ServingReport, TierAttainment,
+};
 use crate::netsim::LinkDegradation;
-use crate::simnpu::pipeline::DecodePoint;
+use crate::simnpu::pipeline::{DecodePoint, STEP_OVERHEAD_US};
 use crate::workload::{ExpertActivation, Request};
 use crate::Micros;
+
+/// Transient TPOT degradation window after a *forced* (donor-failure)
+/// offload recall: the decode side re-stages the FA working set locally
+/// and re-plans its batches, so every step inside the window runs this
+/// factor slower. Graceful recalls pay nothing.
+pub const RECALL_SPIKE_FACTOR: f64 = 1.25;
+/// Length of the post-recall degradation window, µs.
+pub const RECALL_SPIKE_US: Micros = 2e6;
 
 /// Decode-side placement policy for the instance pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,6 +101,9 @@ pub struct AutoscaleOptions {
     pub min_decode_npus: usize,
     /// Controller hysteresis (don't move below this current:ideal ratio).
     pub hysteresis: f64,
+    /// §6.2.1 attention offloading as an elastic action (on by default;
+    /// `--no-offload` runs the resplit-only ablation).
+    pub offload: bool,
 }
 
 impl Default for AutoscaleOptions {
@@ -75,8 +113,22 @@ impl Default for AutoscaleOptions {
             switch_latency_us: default_switch_latency_us(),
             min_decode_npus: 0,
             hysteresis: 1.15,
+            offload: true,
         }
     }
+}
+
+/// Live state of an engaged §6.2.1 attention offload.
+#[derive(Debug, Clone)]
+struct ActiveOffload {
+    /// Fraction of the decode FA core running on donors.
+    frac: f64,
+    /// Donor prefill instance slots (router state `Donor`).
+    donors: Vec<usize>,
+    /// Donor prefill throughput retained (modeled at engagement).
+    prefill_retained: f64,
+    /// Virtual time the offload engaged.
+    engaged_us: Micros,
 }
 
 /// Modeled role-switch latency: a role change is an engine restart on a new
@@ -231,6 +283,28 @@ pub struct ServeSim {
     acc_prefill_npu_us: f64,
     acc_decode_npu_us: f64,
     last_npu_t: Micros,
+    // --- §6.2.1 offload state ---
+    /// Whether the controller may choose `Offload` actions at all.
+    offload_enabled: bool,
+    /// The engaged offload, if any.
+    offload: Option<ActiveOffload>,
+    offload_events: Vec<OffloadEvent>,
+    /// Integrated virtual time offload was engaged.
+    offload_active_us: f64,
+    /// Accumulated extra prefill batch latency paid by donors.
+    donor_tax_us: f64,
+    /// Accumulated extra decode step time inside recall-spike windows.
+    recall_spike_us: f64,
+    /// Post-recall TPOT degradation window (donor-failure recalls).
+    recall_spike: LinkDegradation,
+    /// Busy (executing) NPU-µs per role — idle = assigned − busy.
+    acc_prefill_busy_npu_us: f64,
+    acc_decode_busy_npu_us: f64,
+    /// Prefill busy NPU-µs accumulated in the current controller window,
+    /// and the assigned-integral mark at the window's start — together
+    /// they yield the measured per-window prefill idle fraction.
+    win_prefill_busy_npu_us: f64,
+    win_prefill_assigned_mark: f64,
     // --- chaos state ---
     /// Failure-detection heartbeat period (0 = no chaos).
     hb_us: Micros,
@@ -447,6 +521,17 @@ impl ServeSim {
             acc_prefill_npu_us: 0.0,
             acc_decode_npu_us: 0.0,
             last_npu_t: 0.0,
+            offload_enabled: opts.autoscale.as_ref().is_some_and(|a| a.offload),
+            offload: None,
+            offload_events: Vec::new(),
+            offload_active_us: 0.0,
+            donor_tax_us: 0.0,
+            recall_spike_us: 0.0,
+            recall_spike: LinkDegradation::default(),
+            acc_prefill_busy_npu_us: 0.0,
+            acc_decode_busy_npu_us: 0.0,
+            win_prefill_busy_npu_us: 0.0,
+            win_prefill_assigned_mark: 0.0,
             hb_us,
             recovery_enabled,
             recovery_latency_us,
@@ -635,7 +720,7 @@ impl ServeSim {
         let Some(batch) = self.prefills[inst].form_batch(self.opts.prefill_tokens_per_npu) else {
             return;
         };
-        let lat = batch_latency_us(
+        let mut lat = batch_latency_us(
             &self.cfg.die,
             &self.cfg.model,
             &self.cfg.serving,
@@ -643,6 +728,19 @@ impl ServeSim {
             self.cfg.serving.npus_per_prefill,
             self.eplb_imbalance,
         );
+        // §6.2.1 donor tax: an instance hosting offloaded decode attention
+        // donates HBM bandwidth, so its own batches run slower by the
+        // modeled retained-throughput factor
+        if let Some(o) = &self.offload {
+            if self.router.is_donor(inst) {
+                let extra = lat * (1.0 / o.prefill_retained - 1.0);
+                lat += extra;
+                self.donor_tax_us += extra;
+            }
+        }
+        let busy = lat * self.cfg.serving.npus_per_prefill as f64;
+        self.acc_prefill_busy_npu_us += busy;
+        self.win_prefill_busy_npu_us += busy;
         for &rid in &batch.requests {
             let st = &mut self.requests[rid as usize];
             st.phase = RequestPhase::Prefilling;
@@ -862,8 +960,30 @@ impl ServeSim {
             // EP degree, packs experts multiple-per-rank, and pays for it
             self.decode_eplb[inst],
         );
+        // §6.2.1 offload: the FA core's offloaded share runs concurrently
+        // on donor prefill NPUs, shrinking the step (reusing the layer
+        // breakdown the step model just computed). Never slower than the
+        // all-local step: at a point where the remote share + UB sync
+        // would dominate, the local share simply is the critical path.
+        let mut step_us = model.step_us;
+        if let Some(o) = &self.offload {
+            let point =
+                self.decodes[inst].decode_point(&self.cfg.serving, self.decode_eplb[inst]);
+            let off_layer =
+                offload::offloaded_layer_us(&self.cfg.model, &point, &model.layer, o.frac);
+            let off_step = off_layer * self.cfg.model.n_layers as f64 + STEP_OVERHEAD_US;
+            step_us = off_step.min(step_us);
+        }
+        // post-recall TPOT degradation window (donor-failure recalls): the
+        // decode side re-stages the FA working set it pulled back. The
+        // spike's accounted cost includes any concurrent straggler factor
+        // — it measures the actual extra wall time the recall inflicted.
+        let spike = self.recall_spike.multiplier(self.now);
         // a straggling instance (chaos) runs every step slower
-        let step_us = model.step_us * self.straggle[inst].multiplier(self.now);
+        let straggle = self.straggle[inst].multiplier(self.now);
+        self.recall_spike_us += step_us * straggle * (spike - 1.0);
+        let step_us = step_us * spike * straggle;
+        self.acc_decode_busy_npu_us += step_us * self.decodes[inst].npus as f64;
         let step_end = self.now + step_us;
         let emits = self.decodes[inst].step(&self.cfg.serving);
         for e in emits {
@@ -1011,14 +1131,36 @@ impl ServeSim {
         self.win_prompt_tokens = 0;
         self.win_output_tokens = 0;
 
-        if let Some(plan) = ctl.recommend(
+        // §6.2.1 signals: the decode pool's operating point plus the
+        // prefill idle headroom measured over this window (assigned minus
+        // busy NPU-µs). Busy is credited at batch start, so a batch that
+        // spills past the window edge would zero this window's idle AND
+        // inflate the next window's: the excess over assigned time is
+        // carried into the next window instead, conserving busy time
+        // across windows so idle is never overestimated either side.
+        self.integrate_npu_time();
+        let window_assigned =
+            (self.acc_prefill_npu_us - self.win_prefill_assigned_mark).max(0.0);
+        let busy_in_window = self.win_prefill_busy_npu_us.min(window_assigned);
+        let idle_npus = (window_assigned - busy_in_window) / self.scale_interval_us.max(1.0);
+        self.win_prefill_busy_npu_us -= busy_in_window; // spill carries over
+        self.win_prefill_assigned_mark = self.acc_prefill_npu_us;
+
+        let sig = self.offload_signals(idle_npus);
+
+        match ctl.recommend_action(
             &self.cfg.die,
             &self.cfg.model,
             &self.cfg.serving,
             &stats,
+            &sig,
             self.target_prefill_npus,
+            self.offload_enabled,
         ) {
-            self.enact(&plan);
+            Some(ElasticAction::Resplit(plan)) => self.enact(&plan),
+            Some(ElasticAction::Offload { frac, donors }) => self.engage_offload(frac, donors),
+            Some(ElasticAction::Recall { reason }) => self.recall_offload(reason),
+            None => {}
         }
         if self.finished + self.lost < self.requests.len() {
             let t = self.now + self.scale_interval_us;
@@ -1026,9 +1168,128 @@ impl ServeSim {
         }
     }
 
+    /// §6.2.1 signals at `now`: the decode pool's aggregate operating
+    /// point (slot-weighted mean KV, total slots over pool NPUs,
+    /// NPU-weighted per-instance EPLB) plus the prefill-side facts. The
+    /// single source both the controller's decision and the enactment's
+    /// donor-tax pricing read — they can never model different points.
+    fn offload_signals(&self, prefill_idle_npus: f64) -> OffloadSignals {
+        let total_slots: usize = self.decodes.iter().map(|d| d.slots.len()).sum();
+        let kv_sum: usize =
+            self.decodes.iter().flat_map(|d| d.slots.iter()).map(|s| s.kv_len).sum();
+        let dec_npus = self.decode_total_npus();
+        let eplb = if dec_npus == 0 {
+            1.0
+        } else {
+            self.decodes
+                .iter()
+                .enumerate()
+                .map(|(i, d)| self.decode_eplb[i] * d.npus as f64)
+                .sum::<f64>()
+                / dec_npus as f64
+        };
+        OffloadSignals {
+            decode_mean_kv: if total_slots == 0 { 0 } else { kv_sum / total_slots },
+            decode_batch_per_npu: total_slots.div_ceil(dec_npus.max(1)),
+            decode_npus: dec_npus,
+            prefill_npus: self.router.active_instances() * self.cfg.serving.npus_per_prefill,
+            prefill_idle_npus,
+            eplb_imbalance: eplb,
+            offload_active: self.offload.as_ref().map(|o| o.frac),
+        }
+    }
+
+    /// Engage §6.2.1 attention offloading: pick the most idle eligible
+    /// prefill instances as donors and mark them in the router. Engagement
+    /// is instantaneous — no weights move, and the FA core reads its KV
+    /// over UB — so the only ongoing cost is the donors' bandwidth tax.
+    /// Skipped (the controller retries next epoch) when the full donor set
+    /// the controller's feasibility model assumed cannot be formed — e.g.
+    /// a crashed-but-undetected slot shrank the candidate pool — or when
+    /// it would consume every active instance.
+    fn engage_offload(&mut self, frac: f64, donors_wanted: usize) {
+        debug_assert!(self.offload.is_none(), "double offload engagement");
+        debug_assert!(frac > 0.0 && frac <= 1.0, "offload frac out of [0,1]: {frac}");
+        let mut cands: Vec<usize> = (0..self.prefills.len())
+            .filter(|&i| {
+                self.router.state(i) == InstanceState::Active
+                    && !self.pf_pending_up[i]
+                    && !self.pf_draining[i]
+                    && !self.pf_failed[i]
+            })
+            .collect();
+        // most idle first: emptiest queue, earliest free, lowest id
+        cands.sort_by(|&a, &b| {
+            self.router.queued_tokens[a]
+                .cmp(&self.router.queued_tokens[b])
+                .then(self.prefills[a].busy_until.total_cmp(&self.prefills[b].busy_until))
+                .then(a.cmp(&b))
+        });
+        cands.truncate(donors_wanted);
+        if cands.is_empty()
+            || cands.len() < donors_wanted
+            || cands.len() >= self.router.active_instances()
+        {
+            return;
+        }
+        // donors' modeled retained throughput at the engagement-time
+        // operating point — the exact point the controller decided from
+        let sig = self.offload_signals(0.0);
+        let point = Autoscaler::offload_point(&self.cfg.serving, &sig);
+        let om = offload::model_offload(&self.cfg.die, &self.cfg.model, &point, frac);
+        for &d in &cands {
+            self.router.set_donor(d, true);
+        }
+        self.offload_events.push(OffloadEvent {
+            t_us: self.now,
+            kind: OffloadEventKind::Engage {
+                frac,
+                donors: cands.clone(),
+                prefill_retained: om.prefill_retained,
+            },
+        });
+        self.offload = Some(ActiveOffload {
+            frac,
+            donors: cands,
+            prefill_retained: om.prefill_retained,
+            engaged_us: self.now,
+        });
+    }
+
+    /// Recall an active offload: donors return to plain prefill service.
+    /// A donor-failure recall is forced — the decode side pulls the FA
+    /// core back locally and pays the transient TPOT degradation window
+    /// ([`RECALL_SPIKE_FACTOR`] for [`RECALL_SPIKE_US`]) rather than
+    /// stalling; graceful recalls (pressure resolved, resplit preempting)
+    /// cost nothing.
+    fn recall_offload(&mut self, reason: RecallReason) {
+        let Some(o) = self.offload.take() else {
+            return;
+        };
+        self.offload_active_us += self.now - o.engaged_us;
+        for &d in &o.donors {
+            // a failed donor already lost its donor state; this is a no-op
+            // for it and restores the healthy donors to plain Active
+            self.router.set_donor(d, false);
+        }
+        if reason == RecallReason::DonorFailure {
+            self.recall_spike =
+                self.recall_spike.extend(self.now, RECALL_SPIKE_FACTOR, RECALL_SPIKE_US);
+        }
+        self.offload_events
+            .push(OffloadEvent { t_us: self.now, kind: OffloadEventKind::Recall { reason } });
+    }
+
     /// Enact a recommended split: move NPU groups between roles, modeling
     /// the role-switch latency (the group is offline in between).
     fn enact(&mut self, plan: &SplitPlan) {
+        // Moving NPU groups while bandwidth is borrowed would invalidate
+        // the donor set — return it first. Defense in depth: the
+        // controller never recommends a resplit while an offload is
+        // active, but enact() must hold the invariant on its own.
+        if self.offload.is_some() {
+            self.recall_offload(RecallReason::Preempted);
+        }
         let quantum = self.cfg.serving.npus_per_prefill;
         let total = self.cfg.serving.total_npus();
         let cur = self.target_prefill_npus;
@@ -1370,10 +1631,12 @@ impl ServeSim {
                 st.recovering = true;
                 st.phase = RequestPhase::QueuedPrefill;
                 // full recompute: the prompt KV is gone, and the generated
-                // suffix must be rebuilt alongside it
+                // suffix must be rebuilt alongside it. Like every recovery
+                // re-home, prefer non-donor instances — least-loaded alone
+                // would land exactly on the (most idle) donors.
                 let ct = st.spec.prompt_tokens + st.generated;
                 let session = st.spec.session;
-                let d = self.router.route(session, ct as u64);
+                let d = self.router.route_avoiding_donors(session, ct as u64);
                 st.prefill_instance = Some(d.instance);
                 self.prefills[d.instance].enqueue(rid, ct, ct);
                 self.push(self.now, Event::PrefillKick(d.instance));
@@ -1387,6 +1650,12 @@ impl ServeSim {
     fn detect_prefill_crash(&mut self, idx: usize, rec: usize) {
         self.integrate_npu_time();
         self.router.set_failed(idx, true);
+        // §6.2.1 fault interplay: a crashed donor was hosting part of the
+        // decode FA core — decode pulls it back locally NOW (recall with a
+        // TPOT spike window) rather than stalling on a dead remote.
+        if self.offload.as_ref().is_some_and(|o| o.donors.contains(&idx)) {
+            self.recall_offload(RecallReason::DonorFailure);
+        }
         let inflight: Vec<u64> =
             self.inflight_batches[idx].take().map(|b| b.requests).unwrap_or_default();
         // the dead batch's pending PrefillDone must never complete a
@@ -1489,7 +1758,10 @@ impl ServeSim {
         };
         let session = st.spec.session;
         self.router.complete(from, charge as u64);
-        let d = self.router.route(session, charge as u64);
+        // recovery prefers non-donor homes: a donor is already paying the
+        // §6.2.1 bandwidth tax, so stranded work lands elsewhere when any
+        // pure-Active instance exists
+        let d = self.router.route_avoiding_donors(session, charge as u64);
         if !d.cache_usable && st.reused_tokens > 0 {
             self.recomputed_tokens += st.reused_tokens as u64;
             st.reused_tokens = 0;
@@ -1572,6 +1844,12 @@ impl ServeSim {
 
     fn report(&mut self) -> ServingReport {
         self.integrate_npu_time();
+        // close the books on a still-engaged offload (idempotent: the
+        // engagement clock restarts at `now`)
+        if let Some(o) = self.offload.as_mut() {
+            self.offload_active_us += self.now - o.engaged_us;
+            o.engaged_us = self.now;
+        }
         let duration = self
             .requests
             .iter()
@@ -1604,8 +1882,14 @@ impl ServeSim {
             decode_npus: self.cfg.serving.decode_npus,
             prefill_npu_seconds: self.acc_prefill_npu_us / 1e6,
             decode_npu_seconds: self.acc_decode_npu_us / 1e6,
+            prefill_busy_npu_seconds: self.acc_prefill_busy_npu_us / 1e6,
+            decode_busy_npu_seconds: self.acc_decode_busy_npu_us / 1e6,
             tier_attainment: self.tier_attainment(),
             resplits: self.resplits.clone(),
+            offload_events: self.offload_events.clone(),
+            offload_active_us: self.offload_active_us,
+            donor_tax_us: self.donor_tax_us,
+            recall_spike_us: self.recall_spike_us,
             faults: self.fault_records.clone(),
             requests_lost: self.lost as u64,
             tokens_lost,
@@ -1674,6 +1958,16 @@ impl ServeSim {
     /// The chaos fault log so far (also included in the final report).
     pub fn fault_log(&self) -> &[FaultRecord] {
         &self.fault_records
+    }
+
+    /// The §6.2.1 offload transition log so far (also in the report).
+    pub fn offload_log(&self) -> &[OffloadEvent] {
+        &self.offload_events
+    }
+
+    /// Currently engaged offload as `(frac, donor slots)`, if any.
+    pub fn active_offload(&self) -> Option<(f64, &[usize])> {
+        self.offload.as_ref().map(|o| (o.frac, o.donors.as_slice()))
     }
 
     /// Requests declared lost so far (recovery-disabled baseline).
@@ -1849,6 +2143,77 @@ mod tests {
         assert_eq!(a.output_tokens, b.output_tokens);
         assert_eq!(a.resplits.len(), b.resplits.len());
         assert_eq!(a.requests_completed, 200);
+    }
+
+    #[test]
+    fn healthy_run_measures_busy_vs_assigned_npu_time() {
+        let (report, _) = run_with(150, SimOptions::default());
+        assert!(report.prefill_busy_npu_seconds > 0.0);
+        assert!(report.decode_busy_npu_seconds > 0.0);
+        // busy can never exceed assigned role time on a healthy run — the
+        // gap is the idle headroom the offload controller borrows against
+        assert!(
+            report.prefill_busy_npu_seconds <= report.prefill_npu_seconds * 1.0001,
+            "prefill busy {} vs assigned {}",
+            report.prefill_busy_npu_seconds,
+            report.prefill_npu_seconds
+        );
+        assert!(
+            report.decode_busy_npu_seconds <= report.decode_npu_seconds * 1.0001,
+            "decode busy {} vs assigned {}",
+            report.decode_busy_npu_seconds,
+            report.decode_npu_seconds
+        );
+        // no autoscaler → §6.2.1 offload can never engage
+        assert!(report.offload_events.is_empty());
+        assert_eq!(report.offload_active_us, 0.0);
+        assert_eq!(report.donor_tax_us, 0.0);
+        assert_eq!(report.recall_spike_us, 0.0);
+    }
+
+    #[test]
+    fn offload_engage_and_recall_mechanics() {
+        let cfg = small_cfg();
+        let trace = generate(&WorkloadSpec::paper_default(1), 10);
+        let opts =
+            SimOptions { autoscale: Some(AutoscaleOptions::default()), ..SimOptions::default() };
+        let mut sim = ServeSim::new(cfg, opts, trace);
+        sim.engage_offload(0.3, 2);
+        {
+            let (frac, donors) = sim.active_offload().expect("offload engaged");
+            assert_eq!(frac, 0.3);
+            assert_eq!(donors.len(), 2);
+        }
+        assert_eq!(sim.offload_log().len(), 1);
+        // graceful recall: donors return to Active, no spike window opens
+        sim.recall_offload(RecallReason::PressureResolved);
+        assert!(sim.active_offload().is_none());
+        assert_eq!(sim.offload_log().len(), 2);
+        assert!(!sim.recall_spike.is_active(sim.now + 1.0));
+        assert_eq!(sim.recall_spike_us, 0.0);
+        // re-engagement works, and a forced (donor-failure) recall opens
+        // the transient TPOT degradation window
+        sim.engage_offload(0.2, 1);
+        sim.recall_offload(RecallReason::DonorFailure);
+        assert!(sim.recall_spike.is_active(sim.now + RECALL_SPIKE_US / 2.0));
+        // recalling with nothing active is a no-op
+        sim.recall_offload(RecallReason::Preempted);
+        assert_eq!(sim.offload_log().len(), 4);
+    }
+
+    #[test]
+    fn offload_engagement_requires_a_pure_instance() {
+        let mut cfg = small_cfg();
+        cfg.serving.prefill_instances = 1; // a single prefill instance
+        let trace = generate(&WorkloadSpec::paper_default(2), 10);
+        let opts =
+            SimOptions { autoscale: Some(AutoscaleOptions::default()), ..SimOptions::default() };
+        let mut sim = ServeSim::new(cfg, opts, trace);
+        // the sole active instance may not become a donor — the pool needs
+        // at least one untaxed prefill instance
+        sim.engage_offload(0.3, 1);
+        assert!(sim.active_offload().is_none());
+        assert!(sim.offload_log().is_empty());
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //! ([`metrics::ServingReport`]).
 //!
 //! Time-varying workloads come from the scenario layer
-//! ([`workload::ScenarioSpec`]) with four named presets:
+//! ([`workload::ScenarioSpec`]) with five named presets:
 //!
 //! * `diurnal` — sinusoidal arrival wave; prompt-heavy "day" flips to
 //!   output-heavy "night" (drives resplits in both directions),
@@ -40,7 +40,39 @@
 //! * `long_context_drift` — the prompt-length distribution drifts 1 K→12 K
 //!   mid-run,
 //! * `mixed_slo` — interleaved 50 ms / 15 ms TPOT tiers, enforced by
-//!   per-tier concurrency quotas in [`coordinator::batcher`].
+//!   per-tier concurrency quotas in [`coordinator::batcher`],
+//! * `memory_bound_decode` — long-context, decode-heavy, low-variance
+//!   traffic: the §6.2.1 attention-offload regime.
+//!
+//! ## Elastic actions and §6.2.1 attention offloading
+//!
+//! Each `ScaleEpoch` now recommends one
+//! [`coordinator::autoscale::ElasticAction`] — the unified elasticity
+//! state machine:
+//!
+//! ```text
+//!            ┌────────── Resplit(SplitPlan) ──────────┐
+//!            │   (move NPU groups; Table 2 warm        │
+//!            │    role-switch latency per group)       │
+//!   no offload active ──────────────────────────────►──┘
+//!        │         ▲
+//!        │ Offload { frac, donors }                 Recall { reason }
+//!        │   (decode memory-bound + measured           ▲
+//!        │    prefill idle; instant, no moves)         │
+//!        ▼         │                                   │
+//!   offload active ┴──── donor crash → DonorFailure ───┤ (TPOT spike
+//!                  ├──── pressure gone → PressureResolved (graceful)
+//!                  └──── resplit enacted → Preempted   │ window)
+//! ```
+//!
+//! While engaged, decode steps take the offloaded per-layer latency from
+//! [`coordinator::autoscale::offload::model_offload`]; donor prefill
+//! instances (a first-class [`coordinator::router::InstanceState`]) stay
+//! admissible for prefill but pay the modeled HBM-bandwidth tax; and a
+//! donor crash forces the decode side to pull the FA core back locally —
+//! a transient TPOT degradation window, never a stall. The report logs
+//! every transition ([`metrics::OffloadEvent`]) plus `donor_tax_us`,
+//! `recall_spike_us`, and per-role busy-vs-assigned NPU-seconds.
 //!
 //! ## Chaos (fault injection + recovery orchestration)
 //!

@@ -39,12 +39,17 @@ fn print_help() {
          \x20                           real prefill+decode through PJRT\n\
          \x20 simulate [--npus N] [--requests N] [--seed N]\n\
          \x20          [--scenario diurnal|burst_storm|long_context_drift|mixed_slo\n\
-         \x20                      |chaos_crashes|chaos_degraded]\n\
-         \x20          [--autoscale] [--no-recovery]\n\
+         \x20                      |memory_bound_decode|chaos_crashes|chaos_degraded]\n\
+         \x20          [--autoscale] [--no-offload] [--no-recovery]\n\
          \x20                           PDC serving simulation (CloudMatrix384);\n\
-         \x20                           --autoscale wires the elastic PD controller;\n\
-         \x20                           chaos_* presets inject faults (--no-recovery\n\
-         \x20                           disables the recovery orchestration baseline)\n\
+         \x20                           --autoscale wires the elastic PD controller\n\
+         \x20                           (resplits + the §6.2.1 attention-offload\n\
+         \x20                           action; --no-offload runs the resplit-only\n\
+         \x20                           ablation — try --scenario memory_bound_decode\n\
+         \x20                           --decode-npus 32 --autoscale to see offload\n\
+         \x20                           engage); chaos_* presets inject faults\n\
+         \x20                           (--no-recovery disables the recovery\n\
+         \x20                           orchestration baseline)\n\
          \n\
          Run `make artifacts` first; benches: `cargo bench` (paper tables)."
     );
@@ -145,6 +150,7 @@ fn simulate(args: &[String]) -> Result<()> {
     let seed: u64 = flag_val(args, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let kv_centric = has_flag(args, "--kv-centric");
     let autoscale = has_flag(args, "--autoscale");
+    let no_offload = has_flag(args, "--no-offload");
     let no_recovery = has_flag(args, "--no-recovery");
 
     let mut cfg = Config::default();
@@ -208,7 +214,8 @@ fn simulate(args: &[String]) -> Result<()> {
             RouterKind::PeerToPeer
         },
         seed,
-        autoscale: autoscale.then(AutoscaleOptions::default),
+        autoscale: autoscale
+            .then(|| AutoscaleOptions { offload: !no_offload, ..AutoscaleOptions::default() }),
         faults,
         ..SimOptions::default()
     };
@@ -272,6 +279,9 @@ fn simulate(args: &[String]) -> Result<()> {
                 e.decode_npus_after
             );
         }
+    }
+    if let Some(summary) = r.offload_summary() {
+        println!("{summary}");
     }
     if let Some(summary) = r.chaos_summary() {
         println!("{summary}");

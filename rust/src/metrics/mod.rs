@@ -155,6 +155,28 @@ pub struct ResplitEvent {
     pub decode_npus_after: usize,
 }
 
+/// One §6.2.1 attention-offload transition enacted by the elastic
+/// controller: either an engagement (a fraction of the decode FA core
+/// moves onto donor prefill instances) or a recall (it comes back — with
+/// a transient TPOT spike when forced by a donor crash).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OffloadEvent {
+    pub t_us: f64,
+    pub kind: OffloadEventKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum OffloadEventKind {
+    /// Offload engaged: `frac` of decode attention runs on the `donors`
+    /// prefill instances, each retaining `prefill_retained` of its
+    /// baseline prefill throughput (the §6.2.1 HBM-bandwidth tax).
+    Engage { frac: f64, donors: Vec<usize>, prefill_retained: f64 },
+    /// Offload recalled for the given reason. A `DonorFailure` recall is
+    /// the fault-interplay path: decode pulls the FA core back locally and
+    /// pays a transient TPOT degradation window instead of stalling.
+    Recall { reason: crate::coordinator::autoscale::RecallReason },
+}
+
 /// Per-SLO-tier attainment summary (mixed-SLO workloads, Table 5 tiers).
 #[derive(Debug, Clone, Copy)]
 pub struct TierAttainment {
@@ -192,8 +214,25 @@ pub struct ServingReport {
     pub decode_npu_seconds: f64,
     /// SLO attainment per tier (tier 0 = the deployment's base SLO).
     pub tier_attainment: Vec<TierAttainment>,
+    /// Integrated *busy* NPU-seconds per role (time the NPUs were actually
+    /// executing batches/steps, vs merely assigned to the role). The gap
+    /// `assigned − busy` is the idle headroom the §6.2.1 offload
+    /// controller borrows against.
+    pub prefill_busy_npu_seconds: f64,
+    pub decode_busy_npu_seconds: f64,
     /// Elastic resplit log, in enactment order (empty for frozen runs).
     pub resplits: Vec<ResplitEvent>,
+    /// §6.2.1 attention-offload log (engagements + recalls), in enactment
+    /// order (empty when offload never engaged).
+    pub offload_events: Vec<OffloadEvent>,
+    /// Total virtual time an offload was engaged, µs.
+    pub offload_active_us: f64,
+    /// Donor tax: extra prefill batch latency paid by donor instances
+    /// while their HBM bandwidth served offloaded decode attention, µs.
+    pub donor_tax_us: f64,
+    /// Recall spike: extra decode step time paid inside post-recall TPOT
+    /// degradation windows (donor-failure recalls only), µs.
+    pub recall_spike_us: f64,
     /// Chaos fault log, in injection order (empty for healthy runs).
     pub faults: Vec<crate::faults::FaultRecord>,
     /// Requests dropped by faults with recovery disabled (chaos baseline).
@@ -341,6 +380,74 @@ impl ServingReport {
         Some(out)
     }
 
+    /// Number of §6.2.1 offload engagements in the run.
+    pub fn offload_engagements(&self) -> usize {
+        self.offload_events
+            .iter()
+            .filter(|e| matches!(e.kind, OffloadEventKind::Engage { .. }))
+            .count()
+    }
+
+    /// Number of offload recalls, optionally filtered by reason.
+    pub fn offload_recalls(
+        &self,
+        reason: Option<crate::coordinator::autoscale::RecallReason>,
+    ) -> usize {
+        self.offload_events
+            .iter()
+            .filter(|e| match (&e.kind, reason) {
+                (OffloadEventKind::Recall { .. }, None) => true,
+                (OffloadEventKind::Recall { reason: r }, Some(want)) => *r == want,
+                _ => false,
+            })
+            .count()
+    }
+
+    /// Multi-line, indented, human-readable offload summary (active time,
+    /// donor tax, recall spikes, per-event log); `None` when offload never
+    /// engaged. Shared by the `simulate` CLI and the `slo_explorer`
+    /// example so the two never drift apart.
+    pub fn offload_summary(&self) -> Option<String> {
+        use std::fmt::Write;
+        if self.offload_events.is_empty() {
+            return None;
+        }
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "  offload: {} engagements / {} recalls  active {:.2} s  donor tax {:.2} s  recall spike {:.2} s",
+            self.offload_engagements(),
+            self.offload_recalls(None),
+            self.offload_active_us / 1e6,
+            self.donor_tax_us / 1e6,
+            self.recall_spike_us / 1e6,
+        );
+        for e in &self.offload_events {
+            match &e.kind {
+                OffloadEventKind::Engage { frac, donors, prefill_retained } => {
+                    let _ = writeln!(
+                        out,
+                        "    t={:7.2}s  engage  frac {:.1}  donors {:?}  prefill retained {:.0}%",
+                        e.t_us / 1e6,
+                        frac,
+                        donors,
+                        prefill_retained * 100.0
+                    );
+                }
+                OffloadEventKind::Recall { reason } => {
+                    let _ = writeln!(
+                        out,
+                        "    t={:7.2}s  recall  ({})",
+                        e.t_us / 1e6,
+                        reason.tag()
+                    );
+                }
+            }
+        }
+        out.pop(); // callers println! the block
+        Some(out)
+    }
+
     /// Overall SLO attainment across tiers (request-weighted); 1.0 when no
     /// tier data was collected.
     pub fn overall_attainment(&self) -> f64 {
@@ -459,6 +566,52 @@ mod tests {
             last = v;
         }
         assert!(h.quantile(1.0) <= h.max());
+    }
+
+    #[test]
+    fn offload_event_accounting() {
+        use crate::coordinator::autoscale::RecallReason;
+        let r = ServingReport {
+            offload_events: vec![
+                OffloadEvent {
+                    t_us: 1e6,
+                    kind: OffloadEventKind::Engage {
+                        frac: 0.3,
+                        donors: vec![1, 2],
+                        prefill_retained: 0.8,
+                    },
+                },
+                OffloadEvent {
+                    t_us: 5e6,
+                    kind: OffloadEventKind::Recall { reason: RecallReason::DonorFailure },
+                },
+                OffloadEvent {
+                    t_us: 6e6,
+                    kind: OffloadEventKind::Engage {
+                        frac: 0.2,
+                        donors: vec![3],
+                        prefill_retained: 0.9,
+                    },
+                },
+                OffloadEvent {
+                    t_us: 9e6,
+                    kind: OffloadEventKind::Recall { reason: RecallReason::PressureResolved },
+                },
+            ],
+            offload_active_us: 7e6,
+            donor_tax_us: 1e6,
+            recall_spike_us: 2e5,
+            ..Default::default()
+        };
+        assert_eq!(r.offload_engagements(), 2);
+        assert_eq!(r.offload_recalls(None), 2);
+        assert_eq!(r.offload_recalls(Some(RecallReason::DonorFailure)), 1);
+        assert_eq!(r.offload_recalls(Some(RecallReason::Preempted)), 0);
+        let summary = r.offload_summary().expect("events must render");
+        assert!(summary.contains("engage"));
+        assert!(summary.contains("donor-failure"));
+        // healthy report renders nothing
+        assert!(ServingReport::default().offload_summary().is_none());
     }
 
     #[test]

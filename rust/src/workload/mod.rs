@@ -308,11 +308,12 @@ fn ln_mean(target: f64, sigma: f64) -> f64 {
 
 impl ScenarioSpec {
     /// All preset names accepted by [`ScenarioSpec::by_name`].
-    pub const PRESETS: [&'static str; 6] = [
+    pub const PRESETS: [&'static str; 7] = [
         "diurnal",
         "burst_storm",
         "long_context_drift",
         "mixed_slo",
+        "memory_bound_decode",
         "chaos_crashes",
         "chaos_degraded",
     ];
@@ -323,6 +324,7 @@ impl ScenarioSpec {
             "burst_storm" => Some(Self::burst_storm(seed)),
             "long_context_drift" => Some(Self::long_context_drift(seed)),
             "mixed_slo" => Some(Self::mixed_slo(seed)),
+            "memory_bound_decode" => Some(Self::memory_bound_decode(seed)),
             "chaos_crashes" => Some(Self::chaos_crashes(seed)),
             "chaos_degraded" => Some(Self::chaos_degraded(seed)),
             _ => None,
@@ -439,6 +441,40 @@ impl ScenarioSpec {
             wave: None,
             tier_mix: vec![(0, 0.7), (1, 0.3)],
             tier_slos_ms: vec![(15.0, 1_500.0)],
+            fault_profile: None,
+        }
+    }
+
+    /// The §6.2.1 attention-offload regime: long-context, decode-heavy
+    /// traffic at a steady (low-variance) arrival rate. Prompts average
+    /// ~4 K tokens and outputs ~1.5 K, so decode slots attend over long KV
+    /// at deep batches — the memory-bound FA-core regime — while the
+    /// prompt token rate leaves the prefill pool with idle NPU-seconds.
+    /// This is where offloading a fraction of decode attention onto donor
+    /// prefill instances beats (or avoids) a full resplit. Pair it with a
+    /// decode-pressured slice (`--decode-npus 32` on the default config)
+    /// to saturate the decode batch.
+    pub fn memory_bound_decode(seed: u64) -> ScenarioSpec {
+        let mut base = WorkloadSpec::paper_default(seed);
+        base.mean_interarrival_us = 25_000.0; // steady ~40 req/s
+        base.burst_prob = 0.0; // low arrival variance
+        base.burst_mean = 1.0;
+        base.multi_turn_prob = 0.0; // every prompt fully computed
+        base.prompt_mu = ln_mean(4096.0, 0.2);
+        base.prompt_sigma = 0.2;
+        base.min_prompt = 1024;
+        base.max_prompt = 12_288;
+        base.output_mu = ln_mean(1536.0, 0.25);
+        base.output_sigma = 0.25;
+        base.min_output = 256;
+        base.max_output = 4096;
+        ScenarioSpec {
+            name: "memory_bound_decode",
+            base,
+            phases: Vec::new(),
+            wave: None,
+            tier_mix: Vec::new(),
+            tier_slos_ms: Vec::new(),
             fault_profile: None,
         }
     }
@@ -691,7 +727,9 @@ mod tests {
         assert_eq!(dp.decode_crashes + dp.prefill_crashes + dp.pool_failures, 0);
         assert!(dp.link_degrades > 0 && dp.stragglers > 0);
         // healthy presets carry none
-        for name in ["diurnal", "burst_storm", "long_context_drift", "mixed_slo"] {
+        for name in
+            ["diurnal", "burst_storm", "long_context_drift", "mixed_slo", "memory_bound_decode"]
+        {
             assert!(ScenarioSpec::by_name(name, 3).unwrap().fault_profile.is_none(), "{name}");
         }
         // the chaos workload is its base preset — faults ride alongside,
@@ -702,6 +740,35 @@ mod tests {
             assert_eq!(x.arrival_us, y.arrival_us);
             assert_eq!(x.prompt_tokens, y.prompt_tokens);
         }
+    }
+
+    #[test]
+    fn memory_bound_decode_is_long_context_decode_heavy_low_variance() {
+        let sc = ScenarioSpec::memory_bound_decode(8);
+        let trace = generate_scenario(&sc, 1000);
+        let mean = |f: fn(&Request) -> usize| {
+            trace.iter().map(|r| f(r) as f64).sum::<f64>() / trace.len() as f64
+        };
+        let mean_prompt = mean(|r| r.prompt_tokens);
+        let mean_output = mean(|r| r.output_tokens);
+        // long context: prompts land around 4 K
+        assert!((3000.0..6000.0).contains(&mean_prompt), "prompt {mean_prompt}");
+        // decode-heavy: outputs around 1.5 K — decode KV grows past 5 K
+        assert!((1100.0..2200.0).contains(&mean_output), "output {mean_output}");
+        // low arrival variance: no bursts, so the squared coefficient of
+        // variation of inter-arrivals stays near the Poisson baseline (1)
+        let gaps: Vec<f64> = trace.windows(2).map(|w| w[1].arrival_us - w[0].arrival_us).collect();
+        let mu = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mu) * (g - mu)).sum::<f64>() / gaps.len() as f64;
+        let cv2 = var / (mu * mu);
+        assert!(cv2 < 1.5, "bursty arrivals in a low-variance preset: cv² {cv2}");
+        // the burst-storm preset is far burstier by the same measure
+        let storm = generate_scenario(&ScenarioSpec::burst_storm(8), 1000);
+        let sgaps: Vec<f64> =
+            storm.windows(2).map(|w| w[1].arrival_us - w[0].arrival_us).collect();
+        let smu = sgaps.iter().sum::<f64>() / sgaps.len() as f64;
+        let svar = sgaps.iter().map(|g| (g - smu) * (g - smu)).sum::<f64>() / sgaps.len() as f64;
+        assert!(svar / (smu * smu) > cv2, "burst_storm must be burstier");
     }
 
     #[test]

@@ -23,14 +23,20 @@ struct Case {
     seed: u64,
     n: usize,
     autoscale: bool,
+    /// Override `serving.decode_npus` (0 = keep the preset deployment).
+    /// The §6.2.1 offload case runs on a decode-pressured slice.
+    decode_npus: usize,
 }
 
-const CASES: [Case; 4] = [
-    Case { preset: "diurnal", seed: 3, n: 500, autoscale: true },
-    Case { preset: "burst_storm", seed: 5, n: 500, autoscale: false },
-    Case { preset: "mixed_slo", seed: 9, n: 500, autoscale: false },
+const CASES: [Case; 5] = [
+    Case { preset: "diurnal", seed: 3, n: 500, autoscale: true, decode_npus: 0 },
+    Case { preset: "burst_storm", seed: 5, n: 500, autoscale: false, decode_npus: 0 },
+    Case { preset: "mixed_slo", seed: 9, n: 500, autoscale: false, decode_npus: 0 },
     // chaos: the preset's fault profile drawn at the case seed, recovery on
-    Case { preset: "chaos_crashes", seed: 4, n: 400, autoscale: false },
+    Case { preset: "chaos_crashes", seed: 4, n: 400, autoscale: false, decode_npus: 0 },
+    // §6.2.1 offload: memory-bound decode on a 96P/32D slice, elastic
+    // controller with the offload action enabled (its default)
+    Case { preset: "memory_bound_decode", seed: 6, n: 400, autoscale: true, decode_npus: 32 },
 ];
 
 fn run_case(c: &Case) -> Vec<(String, f64)> {
@@ -38,6 +44,9 @@ fn run_case(c: &Case) -> Vec<(String, f64)> {
     let trace = generate_scenario(&sc, c.n);
     let mut cfg = Config::default();
     cfg.serving.tier_slos = sc.tier_slo_configs();
+    if c.decode_npus > 0 {
+        cfg.serving.decode_npus = c.decode_npus;
+    }
     let opts = SimOptions {
         seed: c.seed,
         autoscale: c.autoscale.then(|| AutoscaleOptions {
@@ -67,6 +76,8 @@ fn run_case(c: &Case) -> Vec<(String, f64)> {
         (format!("{tag} faults"), r.faults.len() as f64),
         (format!("{tag} requests_lost"), r.requests_lost as f64),
         (format!("{tag} goodput_tokens"), r.goodput_tokens as f64),
+        (format!("{tag} offload_events"), r.offload_events.len() as f64),
+        (format!("{tag} offload_active_us"), r.offload_active_us),
     ]
 }
 

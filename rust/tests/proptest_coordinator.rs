@@ -5,18 +5,56 @@
 
 use std::collections::BTreeMap;
 
-use cm_infer::config::{Config, DeploymentPreset, ServingConfig};
+use cm_infer::config::{Ascend910cDie, Config, DeepSeekDims, DeploymentPreset, ServingConfig};
+use cm_infer::coordinator::autoscale::{
+    Autoscaler, ElasticAction, OffloadSignals, WorkloadStats,
+};
 use cm_infer::coordinator::batcher::AdmissionQueue;
 use cm_infer::coordinator::eplb::place_experts;
 use cm_infer::coordinator::router::{Router, RouterKind};
 use cm_infer::coordinator::sim::{AutoscaleOptions, DecodePlacement, ServeSim, SimOptions};
 use cm_infer::coordinator::transfer::{connection_histogram, prefill_source_rank};
 use cm_infer::coordinator::RequestPhase;
-use cm_infer::faults::{FaultOptions, FaultPlan, FaultProfile};
+use cm_infer::faults::{FaultEvent, FaultKind, FaultOptions, FaultPlan, FaultProfile};
 use cm_infer::mempool::{Key, MemPool};
+use cm_infer::metrics::{OffloadEventKind, ServingReport};
 use cm_infer::proptest::check;
 use cm_infer::topology::alloc::BlockAllocator;
 use cm_infer::workload::{generate_scenario, ScenarioSpec};
+
+/// §6.2.1 offload-log invariants shared by the chaos and offload props:
+/// every engage carries a bounded fraction, a non-empty distinct donor
+/// set, and a bounded retained-throughput factor; engages and recalls
+/// strictly alternate (never two borrowings outstanding).
+fn offload_log_is_sane(report: &ServingReport) -> bool {
+    let mut engaged = false;
+    for e in &report.offload_events {
+        match &e.kind {
+            OffloadEventKind::Engage { frac, donors, prefill_retained } => {
+                if engaged || *frac <= 0.0 || *frac > 1.0 || donors.is_empty() {
+                    return false;
+                }
+                if !(0.5..=1.0).contains(prefill_retained) {
+                    return false;
+                }
+                let mut d = donors.clone();
+                d.sort_unstable();
+                d.dedup();
+                if d.len() != donors.len() {
+                    return false;
+                }
+                engaged = true;
+            }
+            OffloadEventKind::Recall { .. } => {
+                if !engaged {
+                    return false;
+                }
+                engaged = false;
+            }
+        }
+    }
+    true
+}
 
 #[test]
 fn prop_router_token_conservation() {
@@ -265,7 +303,128 @@ fn prop_chaos_conservation_exactly_once() {
             .filter(|r| r.phase == RequestPhase::Lost)
             .map(|r| r.generated as u64)
             .sum();
-        report.goodput_tokens + report.tokens_lost + lost_partial == promised
+        if report.goodput_tokens + report.tokens_lost + lost_partial != promised {
+            return false;
+        }
+        // offload may opportunistically engage on these runs (autoscale
+        // defaults carry it): whenever it did, its log must be sane
+        offload_log_is_sane(&report)
+    });
+}
+
+#[test]
+fn prop_recommended_offload_fraction_bounded() {
+    // Over arbitrary workload stats and §6.2.1 signals, a recommended
+    // Offload action always carries a fraction in (0, 1], at least one
+    // donor, and a donor set strictly smaller than the prefill pool; with
+    // offload disabled the controller never recommends one.
+    check("offload-frac-bounds", 100, |g| {
+        let die = Ascend910cDie::default();
+        let m = DeepSeekDims::deepseek_r1();
+        let s = ServingConfig::paper_default();
+        let a = Autoscaler {
+            total_npus: 256,
+            prefill_quantum: 16,
+            min_prefill: 16,
+            min_decode: 48,
+            hysteresis: g.f64(1.05, 3.0),
+        };
+        let stats = WorkloadStats {
+            prompt_tokens: g.u64(0..=5_000_000),
+            output_tokens: g.u64(0..=5_000_000),
+            prefill_queue_tokens: g.f64(0.0, 1e6),
+            decode_occupancy: g.f64(0.0, 1.0),
+            window_us: 1e6,
+        };
+        let sig = OffloadSignals {
+            decode_mean_kv: g.usize(0..=16_384),
+            decode_batch_per_npu: g.usize(0..=128),
+            decode_npus: g.usize(0..=240),
+            prefill_npus: g.usize(16..=96),
+            prefill_idle_npus: g.f64(0.0, 96.0),
+            eplb_imbalance: g.f64(1.0, 1.6),
+            offload_active: if g.bool() { Some(g.f64(0.05, 0.6)) } else { None },
+        };
+        let enabled = g.bool();
+        match a.recommend_action(&die, &m, &s, &stats, &sig, 96, enabled) {
+            Some(ElasticAction::Offload { frac, donors }) => {
+                enabled
+                    && sig.offload_active.is_none()
+                    && frac > 0.0
+                    && frac <= 1.0
+                    && donors >= 1
+                    && donors * a.prefill_quantum < sig.prefill_npus
+            }
+            Some(ElasticAction::Recall { .. }) => sig.offload_active.is_some(),
+            _ => true,
+        }
+    });
+}
+
+#[test]
+fn prop_offload_chaos_conserves_books() {
+    // §6.2.1 offload under prefill crashes (donor crashes included): with
+    // recovery on, recall events must conserve the exactly-once
+    // completed-or-lost token books — nothing stalls, nothing
+    // double-counts, and the offload log stays sane. The decode slice is
+    // sized to pressure the batch so engagement actually happens on a
+    // fraction of the draws.
+    check("offload-chaos-books", 6, |g| {
+        let mut sc = ScenarioSpec::memory_bound_decode(g.u64(0..=1_000));
+        sc.base.mean_interarrival_us *= g.f64(1.0, 2.0);
+        sc.base.max_output = 1024;
+        let n = g.usize(60..=120);
+        let trace = generate_scenario(&sc, n);
+        let expected_output: u64 =
+            trace.iter().map(|r| r.output_tokens.max(1) as u64).sum();
+
+        let mut cfg = Config::default();
+        cfg.serving.decode_npus = g.usize(16..=32);
+        let crashes: Vec<FaultEvent> = (0..g.usize(1..=2))
+            .map(|i| FaultEvent {
+                t_us: g.f64(5e6, 3e7),
+                kind: FaultKind::PrefillCrash { instance: i },
+            })
+            .collect();
+        let opts = SimOptions {
+            seed: g.u64(0..=1_000),
+            autoscale: Some(AutoscaleOptions {
+                interval_us: 1e6,
+                hysteresis: g.f64(1.15, 10.0),
+                ..Default::default()
+            }),
+            faults: Some(FaultOptions {
+                plan: FaultPlan::new(crashes),
+                heartbeat_us: 250_000.0,
+                recovery: true,
+                recovery_latency_us: 2e6,
+            }),
+            ..SimOptions::default()
+        };
+        let mut sim = ServeSim::new(cfg, opts, trace);
+        let report = sim.run();
+
+        // recovery on + crash-only faults: everything completes, exactly
+        // once, with its exact token count
+        if report.requests_completed != n as u64 || report.requests_lost != 0 {
+            return false;
+        }
+        if sim.requests.iter().any(|r| {
+            r.phase != RequestPhase::Finished || r.generated != r.spec.output_tokens.max(1)
+        }) {
+            return false;
+        }
+        if report.output_tokens != expected_output {
+            return false;
+        }
+        // accounting is non-negative and the log alternates
+        if report.offload_active_us < 0.0
+            || report.donor_tax_us < 0.0
+            || report.recall_spike_us < 0.0
+        {
+            return false;
+        }
+        offload_log_is_sane(&report)
     });
 }
 
