@@ -14,11 +14,15 @@
 //! fraction of decode attention onto idle prefill NPUs wins. The `chaos_*`
 //! presets (chaos_crashes, chaos_degraded) inject their fault plan and
 //! compare recovery orchestration against the recovery-disabled baseline —
-//! the §4.4.1 fault-resilience experiment.
+//! the §4.4.1 fault-resilience experiment. `correlated_rack_loss` injects
+//! clustered rack/PSU domain incidents and adds the domain-aware
+//! resilience leg (donor spreading, mass recall, decode backfill) against
+//! independent per-fault recovery — the correlated-chaos experiment.
 
 use cm_infer::config::{Ascend910cDie, Config, DeepSeekDims, SloConfig};
 use cm_infer::coordinator::batcher::plan_for_slo;
 use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
+use cm_infer::domains::{FailureDomainMap, ResiliencePolicy};
 use cm_infer::faults::{FaultOptions, FaultPlan};
 use cm_infer::simnpu::pipeline::DecodePoint;
 use cm_infer::workload::{generate_scenario, ScenarioSpec};
@@ -38,35 +42,86 @@ fn explore_scenario(name: &str) {
         cfg.serving.decode_npus = 32;
     }
 
-    // (label, autoscale, offload, chaos recovery) legs: healthy presets
-    // compare frozen vs elastic vs the --no-offload ablation; chaos
-    // presets compare recovery vs baseline.
-    let legs: Vec<(&str, bool, bool, Option<bool>)> = match sc.fault_profile {
-        Some(_) => vec![
-            ("healthy (no faults)", false, true, None),
-            ("chaos + recovery", false, true, Some(true)),
-            ("chaos baseline (no recovery)", false, true, Some(false)),
-        ],
-        None => vec![
-            ("frozen", false, true, None),
-            ("elastic (offload on)", true, true, None),
-            ("elastic (--no-offload)", true, false, None),
-        ],
+    // (label, autoscale, offload, chaos recovery, resilience) legs:
+    // healthy presets compare frozen vs elastic vs the --no-offload
+    // ablation; independent-chaos presets compare recovery vs baseline;
+    // the correlated preset adds the domain-aware resilience leg against
+    // the independent-recovery one.
+    struct Leg {
+        label: &'static str,
+        autoscale: bool,
+        offload: bool,
+        chaos: Option<bool>,
+        resilience: ResiliencePolicy,
+    }
+    let leg = |label, autoscale, offload, chaos, resilience| Leg {
+        label,
+        autoscale,
+        offload,
+        chaos,
+        resilience,
+    };
+    let ind = ResiliencePolicy::independent();
+    let legs: Vec<Leg> = if sc.correlated.is_some() {
+        vec![
+            leg("healthy (no faults)", false, true, None, ind),
+            leg(
+                "correlated chaos + domain-aware resilience",
+                false,
+                true,
+                Some(true),
+                ResiliencePolicy::domain_aware(),
+            ),
+            leg("correlated chaos + independent recovery", false, true, Some(true), ind),
+            leg("correlated chaos baseline (no recovery)", false, true, Some(false), ind),
+        ]
+    } else if sc.fault_profile.is_some() {
+        vec![
+            leg("healthy (no faults)", false, true, None, ind),
+            leg("chaos + recovery", false, true, Some(true), ind),
+            leg("chaos baseline (no recovery)", false, true, Some(false), ind),
+        ]
+    } else {
+        vec![
+            leg("frozen", false, true, None, ind),
+            leg("elastic (offload on)", true, true, None, ind),
+            leg("elastic (--no-offload)", true, false, None, ind),
+        ]
     };
     println!("== scenario `{}` ({n} requests) ==\n", sc.name);
-    for (label, autoscale, offload, chaos) in legs {
-        let faults = match (chaos, sc.fault_profile) {
-            (Some(recovery), Some(profile)) => Some(FaultOptions {
-                plan: FaultPlan::generate(7, &profile),
-                recovery,
-                ..FaultOptions::default()
-            }),
+    for Leg { label, autoscale, offload, chaos, resilience } in legs {
+        let faults = match (chaos, sc.fault_profile, sc.correlated) {
+            (Some(recovery), profile, correlated)
+                if profile.is_some() || correlated.is_some() =>
+            {
+                // a preset carrying BOTH profiles gets the plans merged
+                let mut fo = match correlated {
+                    Some(cp) => {
+                        let map = FailureDomainMap::for_serving(
+                            &cfg.topo,
+                            &cfg.serving,
+                            cfg.serving.prefill_instances,
+                            1,
+                        );
+                        cp.fault_options(7, &map)
+                    }
+                    None => FaultOptions::default(),
+                };
+                if let Some(p) = profile {
+                    let mut events = std::mem::take(&mut fo.plan.events);
+                    events.extend(FaultPlan::generate(7, &p).events);
+                    fo.plan = FaultPlan::new(events);
+                }
+                fo.recovery = recovery;
+                Some(fo)
+            }
             _ => None,
         };
         let opts = SimOptions {
             autoscale: autoscale
                 .then(|| AutoscaleOptions { offload, ..AutoscaleOptions::default() }),
             faults,
+            resilience,
             ..SimOptions::default()
         };
         let r = ServeSim::new(cfg.clone(), opts, trace.clone()).run();

@@ -97,6 +97,9 @@ pub struct CloudMatrixTopo {
     pub cpus_per_node: usize,
     /// Dies per NPU package (2).
     pub dies_per_npu: usize,
+    /// Compute nodes per rack: the PSU/power failure domain (§2.2-style
+    /// correlated incidents take out a whole rack's NPU groups at once).
+    pub nodes_per_rack: usize,
     /// L1 UB switch chips on each node board (7).
     pub l1_switches_per_node: usize,
     /// L2 switch chips per sub-plane (16).
@@ -122,6 +125,7 @@ impl Default for CloudMatrixTopo {
             npus_per_node: 8,
             cpus_per_node: 4,
             dies_per_npu: 2,
+            nodes_per_rack: 4,
             l1_switches_per_node: UB_PLANES,
             l2_switches_per_plane: 16,
             ports_per_l2_chip: 48,
@@ -145,6 +149,16 @@ impl CloudMatrixTopo {
 
     pub fn total_cpus(&self) -> usize {
         self.nodes * self.cpus_per_node
+    }
+
+    /// Rack (PSU failure-domain) count.
+    pub fn racks(&self) -> usize {
+        self.nodes.div_ceil(self.nodes_per_rack.max(1))
+    }
+
+    /// Rack holding a compute node.
+    pub fn rack_of_node(&self, node: usize) -> usize {
+        node / self.nodes_per_rack.max(1)
     }
 
     /// Pooled DRAM across the supernode, GB (the disaggregated memory pool).

@@ -61,6 +61,12 @@ pub enum RecallReason {
     /// A resplit superseded the offload: NPUs are about to change roles,
     /// so the borrowed bandwidth goes back first.
     Preempted,
+    /// A domain-wide incident (e.g. a rack PSU loss) took out several
+    /// components — donors included — within one heartbeat: one mass
+    /// recall fires before the re-homing sweep, overlapped with it, with
+    /// the TPOT spike window scaled to the lost donor share
+    /// (domain-aware [`crate::domains::ResiliencePolicy::mass_recall`]).
+    DomainIncident,
 }
 
 impl RecallReason {
@@ -70,6 +76,7 @@ impl RecallReason {
             RecallReason::DonorFailure => "donor-failure",
             RecallReason::PressureResolved => "pressure-resolved",
             RecallReason::Preempted => "preempted",
+            RecallReason::DomainIncident => "domain-incident",
         }
     }
 }

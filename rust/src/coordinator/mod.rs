@@ -48,6 +48,33 @@
 //! leaves ≥ 1 pure-Active prefill instance; offload never targets a
 //! `Drained`/`Failed` slot (asserted in [`router::Router::set_donor`]);
 //! resplits and offloads never overlap.
+//!
+//! ## The domain-aware recovery state machine (§2.2 correlated incidents)
+//!
+//! With [`crate::domains::ResiliencePolicy::domain_aware`] in force, a
+//! correlated incident ([`crate::faults::FaultKind::RackLoss`], expanded
+//! against the [`crate::domains::FailureDomainMap`]) runs through one
+//! detection heartbeat as **incident → mass recall → overlapped re-home →
+//! backfill**:
+//!
+//! 1. donors lost in the sweep force ONE `Recall` (reason
+//!    `DomainIncident` when ≥ 2 same-domain crashes were detected
+//!    together), its TPOT spike window scaled by the lost-donor share —
+//!    domain-spread donors ([`crate::domains::ResilienceController`])
+//!    bound that share;
+//! 2. the same sweep re-homes every stranded batch/slot/queue (via the
+//!    donor-avoiding [`router::Router::route_avoiding_donors`] soft
+//!    preference), overlapped with — never serialized behind — the
+//!    recall;
+//! 3. each crashed decode instance is backfilled by draining the
+//!    least-loaded pure prefill group into the decode pool (a logged
+//!    loan `ResplitEvent`, warm role-switch latency) instead of idling
+//!    through the longer domain replacement latency; loans return when
+//!    replacements warm-load.
+//!
+//! `ResiliencePolicy::independent()` (default) disables all three and
+//! reproduces plain per-fault recovery. The full state machine with
+//! diagram lives in `coordinator/README.md`.
 
 pub mod autoscale;
 pub mod batcher;

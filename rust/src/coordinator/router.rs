@@ -165,6 +165,27 @@ impl Router {
         self.least_loaded_where(|_| true).unwrap_or(0)
     }
 
+    /// Route like [`Router::route`], restricted to active instances the
+    /// predicate keeps; falls back to the unrestricted least-loaded choice
+    /// when the predicate filters every routable instance out. The general
+    /// form behind soft placement preferences — a preference must degrade
+    /// gracefully rather than strand work.
+    pub fn route_where(
+        &mut self,
+        session: u64,
+        tokens: u64,
+        keep: impl Fn(usize) -> bool,
+    ) -> RouteDecision {
+        match self.least_loaded_where(keep) {
+            Some(pick) => {
+                let decision = self.decide(session, tokens, pick);
+                self.commit(session, tokens, &decision);
+                decision
+            }
+            None => self.route(session, tokens),
+        }
+    }
+
     /// Route like [`Router::route`], but prefer instances that are NOT
     /// offload donors: the recovery orchestrator re-homes stranded work
     /// here, and a donor is already paying the §6.2.1 bandwidth tax — when
@@ -391,6 +412,20 @@ mod tests {
         assert_eq!(r.route(1, 100).instance, 0);
         r.set_donor(0, false);
         assert_eq!(r.state(0), InstanceState::Active);
+    }
+
+    #[test]
+    fn route_where_honors_predicate_and_falls_back() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 3);
+        r.queued_tokens[0] = 10;
+        r.queued_tokens[1] = 5_000;
+        r.queued_tokens[2] = 6_000;
+        // least-loaded is 0, but the predicate excludes it
+        let d = r.route_where(1, 100, |i| i != 0);
+        assert_eq!(d.instance, 1);
+        // a predicate that excludes everything degrades to plain routing
+        let d = r.route_where(2, 100, |_| false);
+        assert_eq!(d.instance, 0);
     }
 
     #[test]

@@ -36,12 +36,29 @@
 //!   [`crate::coordinator::router::InstanceState`] so recovery re-homing
 //!   prefers non-donor instances.
 //!
-//! Faults thread through: a donor crash forces a `Recall` at detection —
-//! decode pulls the FA core back locally and pays a transient TPOT
-//! degradation window ([`RECALL_SPIKE_FACTOR`] for [`RECALL_SPIKE_US`])
-//! instead of stalling; a graceful recall (pressure resolved / resplit
-//! preempts) costs nothing. Every transition lands in the report's
-//! [`OffloadEvent`] log.
+//! Faults thread through: donors lost at a detection heartbeat force ONE
+//! `Recall` before that sweep's re-homing — decode pulls the FA core back
+//! locally and pays a transient TPOT degradation window
+//! ([`RECALL_SPIKE_FACTOR`] for [`RECALL_SPIKE_US`] scaled by the lost
+//! donor share) instead of stalling; a graceful recall (pressure resolved
+//! / resplit preempts) costs nothing. Every transition lands in the
+//! report's [`OffloadEvent`] log.
+//!
+//! ## Failure domains (correlated chaos)
+//!
+//! The sim owns a [`crate::domains::ResilienceController`]: the
+//! [`crate::domains::FailureDomainMap`] laying the deployment out over
+//! nested physical domains (node → rack/PSU → UB plane) plus the
+//! [`crate::domains::ResiliencePolicy`] in force. A
+//! [`FaultKind::RackLoss`] expands against the map at injection (member
+//! instances crash, member pool servers fail, rack links degrade in the
+//! per-(plane, node-pair) [`DegradationMap`]); with the domain-aware
+//! policy, detection runs the **incident → mass recall → overlapped
+//! re-home → backfill** state machine (see `coordinator/README.md`):
+//! §6.2.1 donors are spread across racks at engagement, a domain-wide
+//! incident recalls the offload once with a share-scaled spike, and each
+//! crashed decode instance is backfilled by a borrowed prefill NPU group
+//! (a logged loan [`ResplitEvent`]) until its replacement warm-loads.
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
@@ -58,13 +75,15 @@ use crate::coordinator::prefill::{batch_latency_us, PrefillInstance};
 use crate::coordinator::request::{RequestPhase, RequestState};
 use crate::coordinator::router::{InstanceState, Router, RouterKind};
 use crate::coordinator::transfer::{kv_transfer, TransferCost, TransferScheduler};
+use crate::domains::{FailureDomainMap, ResilienceController, ResiliencePolicy};
 use crate::faults::{FaultKind, FaultOptions, FaultRecord};
 use crate::mempool::{Key, MemPool, NamespaceId};
 use crate::metrics::{
     Histogram, OffloadEvent, OffloadEventKind, ResplitEvent, Role, ServingReport, TierAttainment,
 };
-use crate::netsim::LinkDegradation;
+use crate::netsim::{DegradationMap, LinkDegradation, LinkKey, Plane};
 use crate::simnpu::pipeline::{DecodePoint, STEP_OVERHEAD_US};
+use crate::util::split_even;
 use crate::workload::{ExpertActivation, Request};
 use crate::Micros;
 
@@ -164,6 +183,10 @@ pub struct SimOptions {
     /// Chaos: inject a [`crate::faults::FaultPlan`] and (optionally)
     /// orchestrate recovery. `None` runs the healthy system.
     pub faults: Option<FaultOptions>,
+    /// Domain-aware resilience behaviors (donor spreading, decode
+    /// backfill, mass recall). The default `independent()` policy
+    /// reproduces the plain per-fault recovery orchestration.
+    pub resilience: ResiliencePolicy,
 }
 
 impl Default for SimOptions {
@@ -177,6 +200,7 @@ impl Default for SimOptions {
             placement: DecodePlacement::LeastLoaded,
             autoscale: None,
             faults: None,
+            resilience: ResiliencePolicy::independent(),
         }
     }
 }
@@ -322,8 +346,15 @@ pub struct ServeSim {
     decode_failed: Vec<bool>,
     /// Per-decode-instance straggler window (step-latency multiplier).
     straggle: Vec<LinkDegradation>,
-    /// Fabric degradation window (KV transfers + pool fetches).
-    link: LinkDegradation,
+    /// Fabric degradation state (KV transfers + pool fetches): the legacy
+    /// whole-fabric window plus per-(plane, node-pair) windows scoped by
+    /// rack-loss cascades.
+    links: DegradationMap,
+    /// Failure-domain layout + the domain-aware recovery policy in force.
+    resilience: ResilienceController,
+    /// Prefill NPU groups on loan to the decode pool, backfilling crashed
+    /// decode capacity until the replacement warm-loads.
+    backfill_loans: Vec<BackfillLoan>,
     /// Record indices of crashes awaiting heartbeat detection.
     undetected: Vec<usize>,
     fault_records: Vec<FaultRecord>,
@@ -344,10 +375,17 @@ pub struct ServeSim {
     pub recomputed_tokens: u64,
 }
 
-/// Split `total` as evenly as possible across `n` bins.
-fn split_even(total: usize, n: usize) -> Vec<usize> {
-    let n = n.max(1);
-    (0..n).map(|i| total / n + usize::from(i < total % n)).collect()
+/// One prefill NPU group on loan to the decode pool (domain-aware
+/// backfill): `slot` drained into decode to cover the capacity destroyed
+/// by fault record `fault`, and returns to prefill when that fault's
+/// replacement group warm-loads.
+#[derive(Debug, Clone, Copy)]
+struct BackfillLoan {
+    slot: usize,
+    fault: usize,
+    /// The replacement arrived while the group was still mid role-switch:
+    /// bounce it straight back to prefill when its `DecodeUp` fires.
+    returning: bool,
 }
 
 /// Pool key under which a request's prompt-KV residency is tracked
@@ -435,7 +473,9 @@ impl ServeSim {
                 };
                 (Some(ctl), a.interval_us, a.switch_latency_us)
             }
-            None => (None, 0.0, 0.0),
+            // no autoscaler: the switch latency still prices domain-aware
+            // backfill loans (prefill groups borrowed into decode)
+            None => (None, 0.0, default_switch_latency_us()),
         };
         let max_pf_slots = match &autoscaler {
             Some(c) => ((c.total_npus - c.min_decode) / quantum).max(n_pf_initial),
@@ -489,6 +529,13 @@ impl ServeSim {
             .as_ref()
             .map(|_| pool.controller.create_namespace("chaos-kv"));
 
+        // failure-domain layout (node → rack/PSU) over the deployment's
+        // physical NPU placement + the domain-aware policy in force
+        let resilience = ResilienceController::new(
+            FailureDomainMap::for_serving(&cfg.topo, &cfg.serving, max_pf_slots, n_dec),
+            opts.resilience,
+        );
+
         let target_prefill_npus = n_pf_initial * quantum;
         let mut sim = ServeSim {
             router,
@@ -539,7 +586,9 @@ impl ServeSim {
             pf_epoch: vec![0; max_pf_slots],
             decode_failed: vec![false; n_dec],
             straggle: vec![LinkDegradation::default(); n_dec],
-            link: LinkDegradation::default(),
+            links: DegradationMap::default(),
+            resilience,
+            backfill_loans: Vec::new(),
             undetected: Vec::new(),
             fault_records: Vec::new(),
             lost: 0,
@@ -591,12 +640,28 @@ impl ServeSim {
         while let Some(Reverse(Timed { t, ev, .. })) = self.heap.pop() {
             // Once every request is terminally accounted, serving is over:
             // remaining planned faults would hit an empty system with no
-            // heartbeat left to detect them, and pending replacements are
-            // pure bookkeeping. Neither may advance virtual time — they
-            // would inflate the reported duration (and deflate goodput/s).
+            // heartbeat left to detect them, and pending replacements or
+            // in-flight role switches (elastic resplits, backfill-loan
+            // returns) are pure bookkeeping. None may advance virtual time
+            // — they would inflate the reported duration (and deflate
+            // goodput/s).
             if !self.requests.is_empty() && self.finished + self.lost >= self.requests.len() {
                 match ev {
                     Event::Fault(_) | Event::Heartbeat => continue,
+                    Event::PrefillUp(inst) => {
+                        self.integrate_npu_time();
+                        self.pf_pending_up[inst] = false;
+                        self.router.set_active(inst, true);
+                        continue;
+                    }
+                    Event::DecodeUp(inst) => {
+                        self.integrate_npu_time();
+                        self.pf_draining[inst] = false;
+                        // a loan already flagged for return dissolves here
+                        // — serving is over, no NPUs move
+                        self.backfill_loans.retain(|l| !(l.slot == inst && l.returning));
+                        continue;
+                    }
                     Event::DecodeRecover(rec) => {
                         if let FaultKind::DecodeCrash { instance } =
                             self.fault_records[rec].kind
@@ -605,6 +670,9 @@ impl ServeSim {
                             self.fault_records[rec].recovered_us = Some(t);
                             self.decode_failed[instance] = false;
                         }
+                        // the replacement obsoletes any backfill loan;
+                        // serving is over, so the loan just dissolves
+                        self.backfill_loans.retain(|l| l.fault != rec);
                         continue;
                     }
                     Event::PrefillRecover(rec) => {
@@ -686,8 +754,9 @@ impl ServeSim {
             }
         }
 
-        // a degraded fabric stretches pool fetches (chaos LinkDegrade)
-        fetch_us *= self.link.multiplier(self.now);
+        // a degraded fabric stretches pool fetches (chaos LinkDegrade /
+        // rack-loss cascades), at the worst multiplier on the pool plane
+        fetch_us *= self.links.plane_multiplier(self.pool_plane(), self.now);
 
         let compute = prompt_tokens - reused;
         let decision = self.router.route(session, compute as u64);
@@ -766,7 +835,13 @@ impl ServeSim {
         let Some(batch) = self.inflight_batches[inst].take() else {
             return;
         };
-        let link_mult = self.link.multiplier(self.now);
+        // RDMA KV push out of this instance: degraded when any link
+        // touching its home node is (rack-loss cascades scope this)
+        let link_mult = self.links.node_multiplier(
+            Plane::Rdma,
+            self.resilience.map.prefill_node(inst),
+            self.now,
+        );
         self.router.complete(inst, batch.compute_tokens as u64);
         // store the new KV blocks back to the context cache (async; cost
         // charged to the pool but does not extend the critical path)
@@ -861,6 +936,15 @@ impl ServeSim {
                 }
                 best
             }
+        }
+    }
+
+    /// Plane memory-pool fetches ride on (the Fig 23 UB-vs-VPC choice).
+    fn pool_plane(&self) -> Plane {
+        if self.cfg.serving.cache_over_ub {
+            Plane::Ub
+        } else {
+            Plane::Vpc
         }
     }
 
@@ -1225,7 +1309,13 @@ impl ServeSim {
                 .then(self.prefills[a].busy_until.total_cmp(&self.prefills[b].busy_until))
                 .then(a.cmp(&b))
         });
-        cands.truncate(donors_wanted);
+        // domain-aware donor selection: with spreading on and the
+        // candidate pool spanning ≥ 2 racks, pick donors round-robin
+        // across racks (engaging a second donor if the controller asked
+        // for one) so no single rack loss can fell the whole offloaded
+        // core; the independent policy takes the most idle verbatim
+        let wanted = self.resilience.donor_count(&cands, donors_wanted);
+        let cands = self.resilience.pick_donors(&cands, wanted);
         if cands.is_empty()
             || cands.len() < donors_wanted
             || cands.len() >= self.router.active_instances()
@@ -1263,6 +1353,22 @@ impl ServeSim {
     /// stalling; graceful recalls (pressure resolved, resplit preempting)
     /// cost nothing.
     fn recall_offload(&mut self, reason: RecallReason) {
+        let share = match reason {
+            RecallReason::DonorFailure | RecallReason::DomainIncident => 1.0,
+            _ => 0.0,
+        };
+        self.recall_offload_scaled(reason, share);
+    }
+
+    /// Recall with an explicit lost-donor share: the forced-recall TPOT
+    /// degradation window scales with the fraction of the offloaded FA
+    /// core that actually died — re-staging 1/k of the working set costs
+    /// 1/k of the window. `lost_share == 0` is a graceful (free) recall;
+    /// the independent (non-domain-aware) policy always passes 1.0, the
+    /// full PR-3 window. This is why domain-spread donors matter: a rack
+    /// loss fells at most one of a spread set, while a co-located set
+    /// dies wholesale.
+    fn recall_offload_scaled(&mut self, reason: RecallReason, lost_share: f64) {
         let Some(o) = self.offload.take() else {
             return;
         };
@@ -1272,9 +1378,12 @@ impl ServeSim {
             // for it and restores the healthy donors to plain Active
             self.router.set_donor(d, false);
         }
-        if reason == RecallReason::DonorFailure {
-            self.recall_spike =
-                self.recall_spike.extend(self.now, RECALL_SPIKE_FACTOR, RECALL_SPIKE_US);
+        if lost_share > 0.0 {
+            self.recall_spike = self.recall_spike.extend(
+                self.now,
+                RECALL_SPIKE_FACTOR,
+                RECALL_SPIKE_US * lost_share.min(1.0),
+            );
         }
         self.offload_events
             .push(OffloadEvent { t_us: self.now, kind: OffloadEventKind::Recall { reason } });
@@ -1414,6 +1523,14 @@ impl ServeSim {
     fn on_decode_up(&mut self, idx: usize) {
         self.integrate_npu_time();
         self.pf_draining[idx] = false;
+        // a backfill loan whose replacement already arrived mid-switch
+        // bounces straight back to prefill (paying the reverse switch)
+        // without ever joining the decode pool
+        if let Some(pos) = self.backfill_loans.iter().position(|l| l.slot == idx && l.returning) {
+            self.backfill_loans.remove(pos);
+            self.return_backfill_group(idx);
+            return;
+        }
         let new_total = self.decode_total_npus() + self.cfg.serving.npus_per_prefill;
         self.redistribute_decode(new_total);
     }
@@ -1440,6 +1557,7 @@ impl ServeSim {
                 };
                 self.integrate_npu_time();
                 self.decode_failed[inst] = true;
+                let domain = Some(self.resilience.map.decode_rack(inst));
                 self.fault_records.push(FaultRecord {
                     t_us: self.now,
                     kind: FaultKind::DecodeCrash { instance: inst },
@@ -1449,6 +1567,7 @@ impl ServeSim {
                     requests_lost: 0,
                     kv_refetched: 0,
                     reprefilled: 0,
+                    domain,
                 });
                 self.undetected.push(self.fault_records.len() - 1);
             }
@@ -1466,6 +1585,7 @@ impl ServeSim {
                 };
                 self.integrate_npu_time();
                 self.pf_failed[idx] = true;
+                let domain = Some(self.resilience.map.prefill_rack(idx));
                 self.fault_records.push(FaultRecord {
                     t_us: self.now,
                     kind: FaultKind::PrefillCrash { instance: idx },
@@ -1475,6 +1595,7 @@ impl ServeSim {
                     requests_lost: 0,
                     kv_refetched: 0,
                     reprefilled: 0,
+                    domain,
                 });
                 self.undetected.push(self.fault_records.len() - 1);
             }
@@ -1483,6 +1604,7 @@ impl ServeSim {
                 // DRAM contents are gone; EVS-persisted blocks keep serving
                 // from the SSD tier (§4.4.1) — no orchestration needed
                 self.pool.fail_server(sid);
+                let domain = Some(self.resilience.map.pool_rack(sid));
                 self.fault_records.push(FaultRecord {
                     t_us: self.now,
                     kind: FaultKind::PoolServerFail { server: sid },
@@ -1492,10 +1614,11 @@ impl ServeSim {
                     requests_lost: 0,
                     kv_refetched: 0,
                     reprefilled: 0,
+                    domain,
                 });
             }
             FaultKind::LinkDegrade { factor, duration_us } => {
-                self.link = self.link.extend(self.now, factor, duration_us);
+                self.links.degrade_global(self.now, factor, duration_us);
                 self.fault_records.push(FaultRecord {
                     t_us: self.now,
                     kind: ev.kind,
@@ -1505,6 +1628,7 @@ impl ServeSim {
                     requests_lost: 0,
                     kv_refetched: 0,
                     reprefilled: 0,
+                    domain: None,
                 });
             }
             FaultKind::Straggler { instance, factor, duration_us } => {
@@ -1515,6 +1639,7 @@ impl ServeSim {
                     return;
                 };
                 self.straggle[inst] = self.straggle[inst].extend(self.now, factor, duration_us);
+                let domain = Some(self.resilience.map.decode_rack(inst));
                 self.fault_records.push(FaultRecord {
                     t_us: self.now,
                     kind: FaultKind::Straggler { instance: inst, factor, duration_us },
@@ -1524,7 +1649,86 @@ impl ServeSim {
                     requests_lost: 0,
                     kv_refetched: 0,
                     reprefilled: 0,
+                    domain,
                 });
+            }
+            FaultKind::RackLoss { rack, factor, duration_us } => {
+                self.on_rack_loss(rack, factor, duration_us);
+            }
+        }
+    }
+
+    /// Expand a correlated rack/PSU loss against the failure-domain map:
+    /// every member prefill slot and decode instance crashes *now* (one
+    /// member record each, all sharing the injection timestamp and domain
+    /// — the incident's blast radius), member pool servers fail, and
+    /// every fabric link touching the rack's nodes degrades for the
+    /// power-restoration window. Detection and recovery then ride the
+    /// ordinary per-component machinery, so the coordinator notices the
+    /// whole incident at one heartbeat.
+    fn on_rack_loss(&mut self, rack: usize, factor: f64, duration_us: Micros) {
+        self.integrate_npu_time();
+        let map = self.resilience.map.clone();
+        for idx in map.prefill_members(rack) {
+            if idx < self.prefills.len()
+                && self.router.is_active(idx)
+                && !self.pf_failed[idx]
+                && !self.pf_draining[idx]
+                && !self.pf_pending_up[idx]
+            {
+                self.pf_failed[idx] = true;
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::PrefillCrash { instance: idx },
+                    detected_us: self.now,
+                    recovered_us: None,
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                    domain: Some(rack),
+                });
+                self.undetected.push(self.fault_records.len() - 1);
+            }
+        }
+        for d in map.decode_members(rack) {
+            if d < self.decodes.len() && !self.decode_failed[d] && self.decodes[d].npus > 0 {
+                self.decode_failed[d] = true;
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::DecodeCrash { instance: d },
+                    detected_us: self.now,
+                    recovered_us: None,
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                    domain: Some(rack),
+                });
+                self.undetected.push(self.fault_records.len() - 1);
+            }
+        }
+        for s in map.pool_members(rack) {
+            if s < self.pool.servers.len() {
+                self.pool.fail_server(s);
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::PoolServerFail { server: s },
+                    detected_us: self.now,
+                    recovered_us: Some(self.now),
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                    domain: Some(rack),
+                });
+            }
+        }
+        // cascade: the rack's fabric ports flap while power is restored —
+        // every UB/RDMA link touching its nodes runs degraded
+        for node in map.rack_nodes(rack) {
+            for plane in [Plane::Ub, Plane::Rdma] {
+                self.links.degrade(LinkKey::node(plane, node), self.now, factor, duration_us);
             }
         }
     }
@@ -1535,6 +1739,44 @@ impl ServeSim {
     /// model-load latency.
     fn on_heartbeat(&mut self) {
         let pending = std::mem::take(&mut self.undetected);
+        // §6.2.1 × domains: donors lost this sweep force ONE recall before
+        // the re-homing loop below — overlapped with it in the same epoch,
+        // never serial per-donor recalls — with the TPOT spike window
+        // scaled to the share of the offloaded FA core that actually died
+        // (domain-spread donors lose a fraction; co-located donors lose it
+        // all). A domain-wide incident (≥ 2 same-rack crashes in the
+        // sweep) is tagged with its own recall reason when the mass-recall
+        // policy is on.
+        let (lost_donors, total_donors) = match &self.offload {
+            Some(o) => {
+                let lost = pending
+                    .iter()
+                    .filter(|&&r| {
+                        matches!(self.fault_records[r].kind,
+                            FaultKind::PrefillCrash { instance } if o.donors.contains(&instance))
+                    })
+                    .count();
+                (lost, o.donors.len())
+            }
+            None => (0, 0),
+        };
+        if lost_donors > 0 {
+            let mass = self.resilience.policy.mass_recall && self.domain_incident_in(&pending);
+            let reason = if mass {
+                RecallReason::DomainIncident
+            } else {
+                RecallReason::DonorFailure
+            };
+            // share-scaling of the spike window is part of the domain-aware
+            // recall model; the independent baseline pays the full PR-3
+            // window regardless of how many donors actually died
+            let share = if self.resilience.policy.mass_recall {
+                lost_donors as f64 / total_donors as f64
+            } else {
+                1.0
+            };
+            self.recall_offload_scaled(reason, share);
+        }
         for rec in pending {
             self.fault_records[rec].detected_us = self.now;
             match self.fault_records[rec].kind {
@@ -1550,6 +1792,16 @@ impl ServeSim {
             let t = self.now + self.hb_us;
             self.push(t, Event::Heartbeat);
         }
+    }
+
+    /// Whether ≥ 2 crashes detected in this heartbeat sweep share a
+    /// failure domain — the signature of a correlated (rack-level)
+    /// incident rather than coincident independent faults.
+    fn domain_incident_in(&self, pending: &[usize]) -> bool {
+        let mut doms: Vec<usize> =
+            pending.iter().filter_map(|&r| self.fault_records[r].domain).collect();
+        doms.sort_unstable();
+        doms.windows(2).any(|w| w[0] == w[1])
     }
 
     /// A decode-instance crash is detected. In-flight slots lost their HBM
@@ -1583,6 +1835,12 @@ impl ServeSim {
             }
             let t = self.now + self.recovery_latency_us;
             self.push(t, Event::DecodeRecover(rec));
+            // domain-aware backfill: borrow a prefill NPU group into the
+            // decode pool for the replacement window instead of serving
+            // the whole outage on the survivors
+            if self.resilience.policy.backfill {
+                self.try_backfill(rec);
+            }
         } else {
             for s in slots {
                 if self.lose_request(s.request) {
@@ -1595,6 +1853,65 @@ impl ServeSim {
                 }
             }
         }
+    }
+
+    /// Backfill a crashed decode instance by draining the least-loaded
+    /// pure-Active prefill group into the decode pool now — it joins after
+    /// the Table 2 warm role-switch, bridging the (longer) domain
+    /// replacement window — and logging the move as a backfill
+    /// [`ResplitEvent`]. The loan is returned when fault `rec`'s
+    /// replacement warm-loads. Skipped when no pure instance can be
+    /// spared: ≥ 1 routable prefill instance must remain and donors are
+    /// never drained (that would force an offload recall — worse than the
+    /// trough the backfill bridges).
+    fn try_backfill(&mut self, rec: usize) {
+        if self.router.active_instances() <= 1 {
+            return;
+        }
+        let cand = (0..self.prefills.len())
+            .filter(|&i| {
+                self.router.state(i) == InstanceState::Active
+                    && !self.pf_failed[i]
+                    && !self.pf_draining[i]
+                    && !self.pf_pending_up[i]
+            })
+            .min_by_key(|&i| (self.router.queued_tokens[i], i));
+        let Some(idx) = cand else {
+            return;
+        };
+        self.integrate_npu_time();
+        let quantum = self.cfg.serving.npus_per_prefill;
+        self.drain_prefill(idx);
+        self.backfill_loans.push(BackfillLoan { slot: idx, fault: rec, returning: false });
+        self.target_prefill_npus = self.target_prefill_npus.saturating_sub(quantum);
+        let total = self.cfg.serving.total_npus();
+        self.resplits.push(ResplitEvent {
+            t_us: self.now,
+            from: Role::Prefill,
+            to: Role::Decode,
+            npus: quantum,
+            prefill_npus_after: self.target_prefill_npus,
+            decode_npus_after: total - self.target_prefill_npus,
+        });
+    }
+
+    /// Send a returned backfill group back to its prefill slot: offline
+    /// for the role switch, then `PrefillUp` reactivates the slot.
+    fn return_backfill_group(&mut self, idx: usize) {
+        let quantum = self.cfg.serving.npus_per_prefill;
+        self.pf_pending_up[idx] = true;
+        let t = self.now + self.switch_latency_us;
+        self.push(t, Event::PrefillUp(idx));
+        self.target_prefill_npus += quantum;
+        let total = self.cfg.serving.total_npus();
+        self.resplits.push(ResplitEvent {
+            t_us: self.now,
+            from: Role::Decode,
+            to: Role::Prefill,
+            npus: quantum,
+            prefill_npus_after: self.target_prefill_npus,
+            decode_npus_after: total - self.target_prefill_npus,
+        });
     }
 
     /// Re-home one in-flight decode slot after its instance crashed. The
@@ -1621,7 +1938,7 @@ impl ServeSim {
                 self.fault_records[rec].kv_refetched += 1;
                 let st = &mut self.requests[rid as usize];
                 st.phase = RequestPhase::Transferring;
-                let delay = fetch_us * self.link.multiplier(self.now);
+                let delay = fetch_us * self.links.plane_multiplier(self.pool_plane(), self.now);
                 let t = self.now + delay;
                 self.push(t, Event::TransferDone(rid));
             }
@@ -1649,13 +1966,15 @@ impl ServeSim {
     /// (or lose them in baseline mode), and schedule the replacement.
     fn detect_prefill_crash(&mut self, idx: usize, rec: usize) {
         self.integrate_npu_time();
+        // §6.2.1 fault interplay: crashed donors were handled by the
+        // heartbeat's mass-recall pre-scan before this sweep started, so
+        // the offload is already recalled by the time any donor's work is
+        // re-homed here.
+        debug_assert!(
+            !self.offload.as_ref().is_some_and(|o| o.donors.contains(&idx)),
+            "donor crash must be recalled before its detection sweep"
+        );
         self.router.set_failed(idx, true);
-        // §6.2.1 fault interplay: a crashed donor was hosting part of the
-        // decode FA core — decode pulls it back locally NOW (recall with a
-        // TPOT spike window) rather than stalling on a dead remote.
-        if self.offload.as_ref().is_some_and(|o| o.donors.contains(&idx)) {
-            self.recall_offload(RecallReason::DonorFailure);
-        }
         let inflight: Vec<u64> =
             self.inflight_batches[idx].take().map(|b| b.requests).unwrap_or_default();
         // the dead batch's pending PrefillDone must never complete a
@@ -1804,6 +2123,27 @@ impl ServeSim {
         self.integrate_npu_time();
         self.fault_records[rec].recovered_us = Some(self.now);
         self.decode_failed[inst] = false;
+        // the replacement obsoletes any backfill loan taken for this
+        // fault: the borrowed NPU group goes home (or bounces back on
+        // arrival if it is still mid role-switch; or the loan dissolves
+        // when the autoscaler already repurposed the slot)
+        if let Some(pos) = self.backfill_loans.iter().position(|l| l.fault == rec) {
+            let loan = self.backfill_loans[pos];
+            if self.pf_draining[loan.slot] {
+                self.backfill_loans[pos].returning = true;
+            } else {
+                self.backfill_loans.remove(pos);
+                if !self.router.is_active(loan.slot)
+                    && !self.pf_pending_up[loan.slot]
+                    && !self.pf_failed[loan.slot]
+                {
+                    let quantum = self.cfg.serving.npus_per_prefill;
+                    let new_total = self.decode_total_npus().saturating_sub(quantum);
+                    self.redistribute_decode(new_total);
+                    self.return_backfill_group(loan.slot);
+                }
+            }
+        }
         // a resplit may have shrunk the instance to zero while it was dark:
         // hand any parked queue to a live instance instead of stranding it
         if self.decodes[inst].max_concurrent == 0 && !self.decode_queues[inst].is_empty() {
@@ -1973,6 +2313,17 @@ impl ServeSim {
     /// Requests declared lost so far (recovery-disabled baseline).
     pub fn lost_requests(&self) -> usize {
         self.lost
+    }
+
+    /// The failure-domain layout this run is placed over (tests, tools).
+    pub fn domain_map(&self) -> &FailureDomainMap {
+        &self.resilience.map
+    }
+
+    /// Backfill loans currently out, as `(prefill slot, fault record)`
+    /// pairs (tests, tools).
+    pub fn backfill_loans(&self) -> Vec<(usize, usize)> {
+        self.backfill_loans.iter().map(|l| (l.slot, l.fault)).collect()
     }
 
     /// Per-decode-instance residual EPLB imbalance currently in effect

@@ -1,0 +1,481 @@
+//! Failure domains: the structured-fault model the CloudMatrix384
+//! resilience story actually runs against (paper §2.2, §6.2; DeepServe /
+//! xDeepServe production incident taxonomy).
+//!
+//! Supernode faults are not i.i.d. component crashes: a rack PSU takes out
+//! every NPU group it powers, a UB sub-plane brown-out degrades every link
+//! crossing it, and a pool server shares its power domain with the NPUs on
+//! its node. This module makes those domains first-class:
+//!
+//! * [`FailureDomainMap`] — a static physical-layout model partitioning
+//!   the deployment's components (prefill slots, decode instances, memory
+//!   pool servers) into nested domains: node → rack/PSU → UB plane. Built
+//!   from the [`crate::config::CloudMatrixTopo`] rack geometry and the
+//!   serving config's NPU layout (prefill instances from NPU 0 up, decode
+//!   pool at the top of the slice, one pool server per node).
+//! * [`CorrelatedProfile`] — the clustered counterpart of
+//!   [`crate::faults::FaultProfile`]: instead of drawing independent fault
+//!   times, it samples a *domain* and emits a
+//!   [`crate::faults::FaultKind::RackLoss`] that the simulator expands
+//!   against the map — every member crashes within one heartbeat and the
+//!   rack's fabric links degrade (the cascade), plus optional UB sub-plane
+//!   brown-outs.
+//! * [`ResiliencePolicy`] / [`ResilienceController`] — the domain-aware
+//!   recovery policy folded into the elastic loop: §6.2.1 offload donors
+//!   spread across ≥ 2 domains whenever the prefill pool spans ≥ 2, a
+//!   domain-wide incident triggers one mass `Recall` overlapped with the
+//!   same heartbeat's re-homing sweep, and a crashed decode instance is
+//!   backfilled by borrowing a prefill NPU group (role switch) instead of
+//!   idling through the full replacement latency.
+//!
+//! The simulator-side enactment lives in [`crate::coordinator::sim`]; the
+//! per-domain MTTR/blast-radius accounting in [`crate::metrics`].
+
+use crate::config::{CloudMatrixTopo, ServingConfig, UB_PLANES};
+use crate::faults::{FaultEvent, FaultKind, FaultOptions, FaultPlan};
+use crate::util::{split_even, Rng};
+use crate::Micros;
+
+/// Static physical layout of a PDC deployment over the supernode's failure
+/// domains. Component → node assignment follows the deployment's NPU
+/// layout at init (prefill slot `i` starts at NPU `i x quantum`; the
+/// decode pool occupies the top `decode_npus` NPUs; pool server `s` lives
+/// on node `s`); each component is charged to the rack of its *home*
+/// (first) node. The map is intentionally static: elastic resplits move
+/// roles between NPU groups but not the groups' physical placement.
+#[derive(Debug, Clone)]
+pub struct FailureDomainMap {
+    nodes: usize,
+    nodes_per_rack: usize,
+    pf_home_node: Vec<u16>,
+    dec_home_node: Vec<u16>,
+    pool_node: Vec<u16>,
+}
+
+impl FailureDomainMap {
+    /// Build the map for a deployment: `pf_slots` prefill instance slots
+    /// (including elastic scale-out slots), `decode_instances` decode-pool
+    /// instances over `serving.decode_npus`, and one pool server per node
+    /// of the slice (minimum two, matching the sim's pool sizing).
+    pub fn for_serving(
+        topo: &CloudMatrixTopo,
+        serving: &ServingConfig,
+        pf_slots: usize,
+        decode_instances: usize,
+    ) -> FailureDomainMap {
+        let npn = topo.npus_per_node.max(1);
+        let total = serving.total_npus();
+        let nodes = total.div_ceil(npn).max(1);
+        let quantum = serving.npus_per_prefill.max(1);
+        let home = |npu: usize| ((npu / npn).min(nodes - 1)) as u16;
+        let pf_home_node: Vec<u16> = (0..pf_slots).map(|i| home(i * quantum)).collect();
+        let dec_start = total.saturating_sub(serving.decode_npus);
+        let sizes = split_even(serving.decode_npus, decode_instances.max(1));
+        let mut at = dec_start;
+        let dec_home_node: Vec<u16> = sizes
+            .iter()
+            .map(|&sz| {
+                let n = home(at);
+                at += sz;
+                n
+            })
+            .collect();
+        let pool_servers = (total / npn).max(2);
+        let pool_node: Vec<u16> = (0..pool_servers).map(|s| (s % nodes) as u16).collect();
+        FailureDomainMap {
+            nodes,
+            nodes_per_rack: topo.nodes_per_rack.max(1),
+            pf_home_node,
+            dec_home_node,
+            pool_node,
+        }
+    }
+
+    /// Rack (PSU domain) count over the deployment's nodes.
+    pub fn racks(&self) -> usize {
+        self.nodes.div_ceil(self.nodes_per_rack)
+    }
+
+    /// Rack of a node.
+    pub fn rack_of_node(&self, node: u16) -> usize {
+        node as usize / self.nodes_per_rack
+    }
+
+    /// Primary UB sub-plane of a node's L1 uplinks (every node physically
+    /// connects to all [`UB_PLANES`] planes; the model charges a node's
+    /// brown-out exposure to one home plane).
+    pub fn ub_plane(&self, node: u16) -> usize {
+        node as usize % UB_PLANES
+    }
+
+    /// Home node of a prefill instance slot.
+    pub fn prefill_node(&self, slot: usize) -> u16 {
+        self.pf_home_node.get(slot).copied().unwrap_or(0)
+    }
+
+    /// Home node of a decode-pool instance.
+    pub fn decode_node(&self, instance: usize) -> u16 {
+        self.dec_home_node.get(instance).copied().unwrap_or(0)
+    }
+
+    /// Node of a memory-pool server.
+    pub fn pool_node(&self, server: usize) -> u16 {
+        self.pool_node.get(server).copied().unwrap_or(0)
+    }
+
+    /// Rack of a prefill instance slot.
+    pub fn prefill_rack(&self, slot: usize) -> usize {
+        self.rack_of_node(self.prefill_node(slot))
+    }
+
+    /// Rack of a decode-pool instance.
+    pub fn decode_rack(&self, instance: usize) -> usize {
+        self.rack_of_node(self.decode_node(instance))
+    }
+
+    /// Rack of a memory-pool server.
+    pub fn pool_rack(&self, server: usize) -> usize {
+        self.rack_of_node(self.pool_node(server))
+    }
+
+    /// Prefill slots homed in a rack.
+    pub fn prefill_members(&self, rack: usize) -> Vec<usize> {
+        (0..self.pf_home_node.len()).filter(|&i| self.prefill_rack(i) == rack).collect()
+    }
+
+    /// Decode instances homed in a rack.
+    pub fn decode_members(&self, rack: usize) -> Vec<usize> {
+        (0..self.dec_home_node.len()).filter(|&i| self.decode_rack(i) == rack).collect()
+    }
+
+    /// Pool servers homed in a rack.
+    pub fn pool_members(&self, rack: usize) -> Vec<usize> {
+        (0..self.pool_node.len()).filter(|&s| self.pool_rack(s) == rack).collect()
+    }
+
+    /// Node range `[start, end)` of a rack, clamped to the deployment.
+    pub fn rack_nodes(&self, rack: usize) -> std::ops::Range<u16> {
+        let start = (rack * self.nodes_per_rack).min(self.nodes);
+        let end = ((rack + 1) * self.nodes_per_rack).min(self.nodes);
+        start as u16..end as u16
+    }
+
+    /// Total components (prefill slots + decode instances + pool servers)
+    /// homed in a rack — zero means a rack loss there would be a no-op.
+    pub fn rack_population(&self, rack: usize) -> usize {
+        self.prefill_members(rack).len()
+            + self.decode_members(rack).len()
+            + self.pool_members(rack).len()
+    }
+
+    /// Distinct racks spanned by a set of prefill slots.
+    pub fn prefill_racks_spanned(&self, slots: &[usize]) -> usize {
+        let mut racks: Vec<usize> = slots.iter().map(|&s| self.prefill_rack(s)).collect();
+        racks.sort_unstable();
+        racks.dedup();
+        racks.len()
+    }
+}
+
+/// Clustered-incident generator: the correlated counterpart of
+/// [`crate::faults::FaultProfile`]. Where `FaultPlan::generate` draws
+/// independent fault times, this samples a failure *domain* per incident
+/// and emits one [`FaultKind::RackLoss`] the simulator expands into the
+/// full member cascade, plus optional whole-plane brown-outs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CorrelatedProfile {
+    /// Virtual-time window incidents are drawn from, µs.
+    pub horizon_us: Micros,
+    /// Rack/PSU loss incidents (each blasts every member component).
+    pub rack_incidents: usize,
+    /// UB sub-plane brown-outs: one of the [`UB_PLANES`] planes drops out,
+    /// shaving `1/planes` of aggregate all-to-all bandwidth — modeled as a
+    /// whole-fabric `LinkDegrade` at `planes/(planes-1)`.
+    pub plane_brownouts: usize,
+    /// Bandwidth division factor on the lost rack's links while power is
+    /// restored.
+    pub degrade_factor: f64,
+    /// Length of the cascade's link-degradation windows, µs.
+    pub degrade_duration_us: Micros,
+    /// Time to field a replacement for a domain incident's dead NPU
+    /// groups, µs. Deliberately above the Table 2 warm single-group reload
+    /// the independent profiles pay: a PSU swap gates the whole rack, which
+    /// is exactly the window prefill-borrowing backfill exists to bridge.
+    pub replacement_latency_us: Micros,
+}
+
+impl CorrelatedProfile {
+    /// The acceptance correlated-chaos profile: two rack losses and one
+    /// plane brown-out over the horizon.
+    pub fn rack_loss(horizon_us: Micros) -> CorrelatedProfile {
+        CorrelatedProfile {
+            horizon_us,
+            rack_incidents: 2,
+            plane_brownouts: 1,
+            degrade_factor: 4.0,
+            degrade_duration_us: horizon_us / 8.0,
+            replacement_latency_us: 2.0 * crate::coordinator::sim::default_switch_latency_us(),
+        }
+    }
+
+    /// Draw a reproducible clustered plan: incident times are uniform in
+    /// the middle 80% of the horizon (like the independent generator) and
+    /// racks are drawn uniformly over the *occupied* racks of the map, so
+    /// every incident has a real blast radius.
+    pub fn generate(&self, seed: u64, map: &FailureDomainMap) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xD03A);
+        let mut events = Vec::new();
+        let occupied: Vec<usize> =
+            (0..map.racks()).filter(|&r| map.rack_population(r) > 0).collect();
+        for _ in 0..self.rack_incidents {
+            let t_us = self.horizon_us * (0.1 + 0.8 * rng.f64());
+            let pick = rng.below(occupied.len().max(1) as u64) as usize;
+            let Some(&rack) = occupied.get(pick) else {
+                continue;
+            };
+            events.push(FaultEvent {
+                t_us,
+                kind: FaultKind::RackLoss {
+                    rack,
+                    factor: self.degrade_factor,
+                    duration_us: self.degrade_duration_us,
+                },
+            });
+        }
+        let planes = UB_PLANES as f64;
+        for _ in 0..self.plane_brownouts {
+            let t_us = self.horizon_us * (0.1 + 0.8 * rng.f64());
+            events.push(FaultEvent {
+                t_us,
+                kind: FaultKind::LinkDegrade {
+                    factor: planes / (planes - 1.0),
+                    duration_us: self.degrade_duration_us,
+                },
+            });
+        }
+        FaultPlan::new(events)
+    }
+
+    /// Ready-made sim knobs for this profile: the generated plan plus the
+    /// domain-incident replacement latency (heartbeat and recovery default
+    /// as for independent chaos).
+    pub fn fault_options(&self, seed: u64, map: &FailureDomainMap) -> FaultOptions {
+        FaultOptions {
+            plan: self.generate(seed, map),
+            recovery_latency_us: self.replacement_latency_us,
+            ..FaultOptions::default()
+        }
+    }
+}
+
+/// Which domain-aware behaviors the [`ResilienceController`] enacts.
+/// `independent()` (the default) reproduces the pre-domain recovery
+/// orchestration — per-fault handling, full-window forced-recall spikes,
+/// no backfill — and is the baseline every domain-aware experiment is
+/// measured against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResiliencePolicy {
+    /// Spread §6.2.1 offload donors across ≥ 2 failure domains whenever
+    /// the candidate prefill pool spans ≥ 2 (engaging a second donor if
+    /// the feasibility model asked for one): a rack loss then takes at
+    /// most a fraction of the offloaded FA core, shrinking the forced
+    /// recall's TPOT spike window proportionally.
+    pub spread_donors: bool,
+    /// Backfill a crashed decode instance by immediately draining a
+    /// prefill NPU group into the decode pool (paying the Table 2 warm
+    /// role-switch latency) instead of idling through the full
+    /// replacement latency; the loan is returned when the replacement
+    /// warm-loads.
+    pub backfill: bool,
+    /// Treat ≥ 2 same-domain crashes detected in one heartbeat as a
+    /// domain incident: a single mass `Recall` (reason `DomainIncident`)
+    /// fires before the re-homing sweep, overlapped with it in the same
+    /// epoch, instead of per-donor serial recalls.
+    pub mass_recall: bool,
+}
+
+impl ResiliencePolicy {
+    /// All domain-aware behaviors on.
+    pub fn domain_aware() -> ResiliencePolicy {
+        ResiliencePolicy { spread_donors: true, backfill: true, mass_recall: true }
+    }
+
+    /// The PR-2 style independent-recovery baseline: every fault is
+    /// handled in isolation.
+    pub fn independent() -> ResiliencePolicy {
+        ResiliencePolicy { spread_donors: false, backfill: false, mass_recall: false }
+    }
+}
+
+impl Default for ResiliencePolicy {
+    fn default() -> Self {
+        ResiliencePolicy::independent()
+    }
+}
+
+/// The domain-aware resilience controller: the [`FailureDomainMap`] plus
+/// the [`ResiliencePolicy`] in force. Owned by the serving simulation,
+/// which consults it at offload engagement (donor spreading) and at
+/// failure-detection heartbeats (mass recall, backfill).
+#[derive(Debug, Clone)]
+pub struct ResilienceController {
+    pub map: FailureDomainMap,
+    pub policy: ResiliencePolicy,
+}
+
+impl ResilienceController {
+    pub fn new(map: FailureDomainMap, policy: ResiliencePolicy) -> ResilienceController {
+        ResilienceController { map, policy }
+    }
+
+    /// How many donors to actually engage given the controller-requested
+    /// count and the candidate pool (in preference order): with donor
+    /// spreading on and candidates spanning ≥ 2 racks, at least two donors
+    /// are engaged so the offloaded core never has a single-rack blast
+    /// radius. Never exceeds the candidate count.
+    pub fn donor_count(&self, cands: &[usize], wanted: usize) -> usize {
+        if self.policy.spread_donors && self.map.prefill_racks_spanned(cands) >= 2 {
+            wanted.max(2).min(cands.len())
+        } else {
+            wanted
+        }
+    }
+
+    /// Pick `k` donors from `cands` (already in preference order). With
+    /// spreading on, candidates are drawn round-robin across racks —
+    /// racks ordered by their best candidate's position — so the picked
+    /// set spans as many distinct domains as it has members (up to the
+    /// candidate pool's rack diversity). Without spreading, the first `k`
+    /// candidates are taken verbatim (the naive baseline).
+    pub fn pick_donors(&self, cands: &[usize], k: usize) -> Vec<usize> {
+        if !self.policy.spread_donors {
+            return cands.iter().copied().take(k).collect();
+        }
+        // group candidates by rack, preserving preference order within and
+        // across groups (first-seen rack order == best-candidate order)
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+        for &c in cands {
+            let rack = self.map.prefill_rack(c);
+            match groups.iter_mut().find(|(r, _)| *r == rack) {
+                Some((_, g)) => g.push(c),
+                None => groups.push((rack, vec![c])),
+            }
+        }
+        let mut out = Vec::with_capacity(k.min(cands.len()));
+        let mut round = 0;
+        while out.len() < k && out.len() < cands.len() {
+            for (_, g) in &groups {
+                if out.len() == k {
+                    break;
+                }
+                if let Some(&c) = g.get(round) {
+                    out.push(c);
+                }
+            }
+            round += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_map(decode_instances: usize) -> FailureDomainMap {
+        let topo = CloudMatrixTopo::default();
+        let s = ServingConfig::paper_default();
+        FailureDomainMap::for_serving(&topo, &s, s.prefill_instances, decode_instances)
+    }
+
+    #[test]
+    fn paper_deployment_layout() {
+        // 256 NPUs / 8 per node = 32 nodes / 4 per rack = 8 racks
+        let map = paper_map(4);
+        assert_eq!(map.racks(), 8);
+        // prefill: 6 x 16 NPUs from NPU 0 → home nodes 0,2,4,...; two
+        // instances per rack
+        assert_eq!(map.prefill_rack(0), 0);
+        assert_eq!(map.prefill_rack(1), 0);
+        assert_eq!(map.prefill_rack(2), 1);
+        assert_eq!(map.prefill_rack(5), 2);
+        assert_eq!(map.prefill_members(0), vec![0, 1]);
+        // decode: 160 NPUs at the top (NPU 96..256) split 4 ways → home
+        // nodes 12, 17, 22, 27 → racks 3..=6
+        assert_eq!(map.decode_node(0), 12);
+        assert_eq!(map.decode_rack(0), 3);
+        assert_eq!(map.decode_rack(3), 6);
+        assert_eq!(map.decode_members(3), vec![0]);
+        // pool: one server per node
+        assert_eq!(map.pool_rack(0), 0);
+        assert_eq!(map.pool_members(3), vec![12, 13, 14, 15]);
+        // every rack of the slice is populated (pool servers everywhere)
+        for r in 0..map.racks() {
+            assert!(map.rack_population(r) > 0, "rack {r} empty");
+        }
+        assert_eq!(map.rack_nodes(3), 12..16);
+        assert!(map.ub_plane(5) < UB_PLANES);
+    }
+
+    #[test]
+    fn racks_spanned_counts_distinct_domains() {
+        let map = paper_map(1);
+        assert_eq!(map.prefill_racks_spanned(&[0, 1]), 1);
+        assert_eq!(map.prefill_racks_spanned(&[0, 2]), 2);
+        assert_eq!(map.prefill_racks_spanned(&[0, 1, 2, 3, 4, 5]), 3);
+        assert_eq!(map.prefill_racks_spanned(&[]), 0);
+    }
+
+    #[test]
+    fn correlated_plan_is_deterministic_clustered_and_occupied() {
+        let map = paper_map(4);
+        let p = CorrelatedProfile::rack_loss(24e6);
+        let a = p.generate(9, &map);
+        let b = p.generate(9, &map);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.len(), p.rack_incidents + p.plane_brownouts);
+        let mut racks_hit = 0;
+        for e in &a.events {
+            assert!(e.t_us >= 0.1 * 24e6 && e.t_us <= 0.9 * 24e6, "{e:?}");
+            match e.kind {
+                FaultKind::RackLoss { rack, factor, .. } => {
+                    racks_hit += 1;
+                    assert!(map.rack_population(rack) > 0, "incident on empty rack {rack}");
+                    assert_eq!(factor, p.degrade_factor);
+                }
+                FaultKind::LinkDegrade { factor, .. } => {
+                    // a 1-of-7 plane brown-out is a mild whole-fabric drag
+                    assert!(factor > 1.0 && factor < 1.3, "{factor}");
+                }
+                other => panic!("unexpected correlated event {other:?}"),
+            }
+        }
+        assert_eq!(racks_hit, p.rack_incidents);
+        // different seeds draw different plans
+        assert_ne!(p.generate(1, &map).events, p.generate(2, &map).events);
+        // the packaged FaultOptions carry the domain replacement latency
+        let fo = p.fault_options(9, &map);
+        assert_eq!(fo.recovery_latency_us, p.replacement_latency_us);
+        assert!(fo.recovery);
+    }
+
+    #[test]
+    fn donor_spreading_spans_racks() {
+        let map = paper_map(1);
+        let ctl = ResilienceController::new(map.clone(), ResiliencePolicy::domain_aware());
+        // candidates in idleness order, racks {0,0,1,1,2,2}
+        let cands = [0, 1, 2, 3, 4, 5];
+        let picked = ctl.pick_donors(&cands, 2);
+        assert_eq!(picked, vec![0, 2], "round-robin must cross racks");
+        assert!(ctl.map.prefill_racks_spanned(&picked) >= 2);
+        let picked = ctl.pick_donors(&cands, 4);
+        assert_eq!(picked, vec![0, 2, 4, 1], "all racks before any repeat");
+        // a single-donor request is widened to 2 when the pool spans racks
+        assert_eq!(ctl.donor_count(&cands, 1), 2);
+        assert_eq!(ctl.donor_count(&[0, 1], 1), 1, "single-rack pool cannot spread");
+        // the naive baseline takes the head of the preference order
+        let naive = ResilienceController::new(map, ResiliencePolicy::independent());
+        assert_eq!(naive.pick_donors(&cands, 2), vec![0, 1]);
+        assert_eq!(naive.donor_count(&cands, 1), 1);
+    }
+}

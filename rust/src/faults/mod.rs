@@ -52,6 +52,15 @@ pub enum FaultKind {
     /// One decode instance runs its steps `factor`× slower for
     /// `duration_us` (thermal throttling, a sick die, noisy neighbor).
     Straggler { instance: usize, factor: f64, duration_us: Micros },
+    /// A whole rack (PSU failure domain) goes down at once — the
+    /// correlated-incident class production availability is dominated by.
+    /// The simulator expands it against its
+    /// [`crate::domains::FailureDomainMap`]: every member prefill slot and
+    /// decode instance crashes within the same heartbeat, member
+    /// memory-pool servers fail, and every fabric link touching the rack's
+    /// nodes degrades at `1/factor` bandwidth for `duration_us` (the
+    /// switch ports land dark or flapping while power is restored).
+    RackLoss { rack: usize, factor: f64, duration_us: Micros },
 }
 
 impl FaultKind {
@@ -63,6 +72,7 @@ impl FaultKind {
             FaultKind::PoolServerFail { .. } => "pool-server-fail",
             FaultKind::LinkDegrade { .. } => "link-degrade",
             FaultKind::Straggler { .. } => "straggler",
+            FaultKind::RackLoss { .. } => "rack-loss",
         }
     }
 
@@ -70,11 +80,14 @@ impl FaultKind {
     /// orchestrate recovery. Only instance crashes strand work that needs
     /// re-dispatch; pool-server failures are absorbed by the pool itself
     /// (persisted blocks keep serving from EVS, §4.4.1) and degradations
-    /// are transient windows that expire on their own.
+    /// are transient windows that expire on their own. A rack loss expands
+    /// into member instance crashes, each of which needs detection.
     pub fn needs_detection(&self) -> bool {
         matches!(
             self,
-            FaultKind::DecodeCrash { .. } | FaultKind::PrefillCrash { .. }
+            FaultKind::DecodeCrash { .. }
+                | FaultKind::PrefillCrash { .. }
+                | FaultKind::RackLoss { .. }
         )
     }
 }
@@ -112,6 +125,15 @@ impl FaultPlan {
     /// faults at the very end outlive the run — both uninteresting), and
     /// target indices are drawn raw; the simulator retargets them onto
     /// whatever component is alive and eligible at injection time.
+    ///
+    /// Every fault is drawn **independently** — times and targets are
+    /// i.i.d., so two crashes landing in the same rack within one
+    /// heartbeat is a coincidence, never a modeled cause. Real supernode
+    /// incidents cluster (a rack PSU takes out every member NPU group, a
+    /// fabric brown-out correlates link degradation across a plane); for
+    /// clustered incidents with a shared root cause, generate the plan
+    /// from [`crate::domains::CorrelatedProfile`] instead, which samples a
+    /// failure *domain* and blasts all of its members at once.
     pub fn generate(seed: u64, profile: &FaultProfile) -> FaultPlan {
         let mut rng = Rng::new(seed ^ 0xFA17);
         let mut events = Vec::new();
@@ -267,6 +289,10 @@ pub struct FaultRecord {
     /// Re-homed decode requests whose KV was DRAM-only and lost — sent
     /// back through prefill for full recompute (expensive path).
     pub reprefilled: usize,
+    /// Failure domain (rack id) the faulted component lives in, per the
+    /// run's [`crate::domains::FailureDomainMap`]; `None` when the fault
+    /// class has no component placement (whole-fabric degradations).
+    pub domain: Option<usize>,
 }
 
 impl FaultRecord {
@@ -328,6 +354,8 @@ mod tests {
     fn only_instance_crashes_need_detection() {
         assert!(FaultKind::DecodeCrash { instance: 0 }.needs_detection());
         assert!(FaultKind::PrefillCrash { instance: 0 }.needs_detection());
+        // a rack loss expands into member crashes, which need detection
+        assert!(FaultKind::RackLoss { rack: 0, factor: 4.0, duration_us: 1e6 }.needs_detection());
         // self-absorbed: the pool serves persisted blocks from EVS without
         // any coordinator orchestration
         assert!(!FaultKind::PoolServerFail { server: 0 }.needs_detection());
@@ -349,6 +377,7 @@ mod tests {
             requests_lost: 0,
             kv_refetched: 2,
             reprefilled: 1,
+            domain: None,
         };
         assert_eq!(rec.mttr_us(), Some(5_500.0));
         let unrec = FaultRecord { recovered_us: None, ..rec };

@@ -92,6 +92,31 @@
 //! `simulate` CLI (`--scenario chaos_crashes [--no-recovery]`) and the
 //! `slo_explorer` example.
 //!
+//! ## Failure domains (correlated chaos + domain-aware resilience)
+//!
+//! Production supernode availability is dominated by *correlated*
+//! incidents, not independent crashes. The [`domains`] subsystem models
+//! them end to end: [`domains::FailureDomainMap`] partitions the
+//! deployment into nested physical domains (node → rack/PSU → UB plane),
+//! [`domains::CorrelatedProfile`] samples a domain per incident and emits
+//! [`faults::FaultKind::RackLoss`] events the sim expands into the full
+//! member cascade (every member instance crashes within one heartbeat,
+//! pool servers fail, and the rack's fabric links degrade via the
+//! per-(plane, node-pair) [`netsim::DegradationMap`] — windows merge,
+//! never shorten). The domain-aware recovery state machine (**incident →
+//! mass recall → overlapped re-home → backfill**, policy
+//! [`domains::ResiliencePolicy`]) folds the failure signals into the
+//! elastic loop: offload donors spread across ≥ 2 domains, a domain-wide
+//! incident triggers one mass `Recall` with a spike window scaled to the
+//! lost-donor share, and crashed decode instances are backfilled by
+//! borrowing prefill NPU groups instead of idling through the domain
+//! replacement latency. The report accounts per-domain MTTR and blast
+//! radius ([`metrics::DomainStats`]); the `correlated_rack_loss` scenario
+//! preset, the `simulate` CLI (`--scenario correlated_rack_loss
+//! [--no-resilience|--no-recovery]`) and `slo_explorer` run the
+//! experiment; `rust/src/coordinator/README.md` documents the state
+//! machine.
+//!
 //! See DESIGN.md for the full system inventory and the per-experiment index
 //! mapping every paper table/figure to a module and bench target.
 
@@ -99,6 +124,7 @@ pub mod benchlib;
 pub mod cache;
 pub mod config;
 pub mod coordinator;
+pub mod domains;
 pub mod faults;
 pub mod mempool;
 pub mod metrics;

@@ -39,17 +39,22 @@ fn print_help() {
          \x20                           real prefill+decode through PJRT\n\
          \x20 simulate [--npus N] [--requests N] [--seed N]\n\
          \x20          [--scenario diurnal|burst_storm|long_context_drift|mixed_slo\n\
-         \x20                      |memory_bound_decode|chaos_crashes|chaos_degraded]\n\
-         \x20          [--autoscale] [--no-offload] [--no-recovery]\n\
+         \x20                      |memory_bound_decode|chaos_crashes|chaos_degraded\n\
+         \x20                      |correlated_rack_loss]\n\
+         \x20          [--autoscale] [--no-offload] [--no-recovery] [--no-resilience]\n\
          \x20                           PDC serving simulation (CloudMatrix384);\n\
          \x20                           --autoscale wires the elastic PD controller\n\
          \x20                           (resplits + the §6.2.1 attention-offload\n\
          \x20                           action; --no-offload runs the resplit-only\n\
          \x20                           ablation — try --scenario memory_bound_decode\n\
          \x20                           --decode-npus 32 --autoscale to see offload\n\
-         \x20                           engage); chaos_* presets inject faults\n\
-         \x20                           (--no-recovery disables the recovery\n\
-         \x20                           orchestration baseline)\n\
+         \x20                           engage); chaos_* presets inject independent\n\
+         \x20                           faults, correlated_rack_loss injects clustered\n\
+         \x20                           rack/PSU domain incidents handled by the\n\
+         \x20                           domain-aware resilience controller\n\
+         \x20                           (--no-resilience falls back to independent\n\
+         \x20                           per-fault recovery; --no-recovery disables\n\
+         \x20                           recovery orchestration entirely)\n\
          \n\
          Run `make artifacts` first; benches: `cargo bench` (paper tables)."
     );
@@ -143,6 +148,7 @@ fn simulate(args: &[String]) -> Result<()> {
     use cm_infer::config::Config;
     use cm_infer::coordinator::router::RouterKind;
     use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
+    use cm_infer::domains::{FailureDomainMap, ResiliencePolicy};
     use cm_infer::faults::{FaultOptions, FaultPlan};
     use cm_infer::workload::{generate, generate_scenario, ScenarioSpec, WorkloadSpec};
 
@@ -152,6 +158,7 @@ fn simulate(args: &[String]) -> Result<()> {
     let autoscale = has_flag(args, "--autoscale");
     let no_offload = has_flag(args, "--no-offload");
     let no_recovery = has_flag(args, "--no-recovery");
+    let no_resilience = has_flag(args, "--no-resilience");
 
     let mut cfg = Config::default();
     if let Some(path) = flag_val(args, "--config") {
@@ -180,6 +187,7 @@ fn simulate(args: &[String]) -> Result<()> {
         cfg.serving.slo.tpot_ms
     );
     let mut fault_profile = None;
+    let mut correlated = None;
     let trace = match flag_val(args, "--scenario") {
         Some(name) => {
             let Some(sc) = ScenarioSpec::by_name(&name, seed) else {
@@ -190,21 +198,50 @@ fn simulate(args: &[String]) -> Result<()> {
             };
             cfg.serving.tier_slos = sc.tier_slo_configs();
             fault_profile = sc.fault_profile;
+            correlated = sc.correlated;
             println!("[simulate] scenario preset: {}", sc.name);
             generate_scenario(&sc, n)
         }
         None => generate(&WorkloadSpec::paper_default(seed), n),
     };
-    let faults = fault_profile.map(|p| FaultOptions {
-        plan: FaultPlan::generate(seed, &p),
-        recovery: !no_recovery,
-        ..FaultOptions::default()
-    });
+    let faults = match (fault_profile, correlated) {
+        (None, None) => None,
+        (profile, correlated) => {
+            // clustered incidents are drawn against the deployment's
+            // failure-domain layout (same geometry the sim builds); a
+            // scenario carrying BOTH profiles gets the independent plan
+            // merged on top of the correlated one
+            let mut fo = match correlated {
+                Some(cp) => {
+                    let map = FailureDomainMap::for_serving(
+                        &cfg.topo,
+                        &cfg.serving,
+                        cfg.serving.prefill_instances,
+                        1,
+                    );
+                    cp.fault_options(seed, &map)
+                }
+                None => FaultOptions::default(),
+            };
+            if let Some(p) = profile {
+                let mut events = std::mem::take(&mut fo.plan.events);
+                events.extend(FaultPlan::generate(seed, &p).events);
+                fo.plan = FaultPlan::new(events);
+            }
+            fo.recovery = !no_recovery;
+            Some(fo)
+        }
+    };
     if let Some(f) = &faults {
         println!(
-            "[simulate] chaos: {} faults planned, recovery {}",
+            "[simulate] chaos: {} faults planned, recovery {}{}",
             f.plan.len(),
-            if f.recovery { "ON" } else { "OFF (baseline)" }
+            if f.recovery { "ON" } else { "OFF (baseline)" },
+            if correlated.is_some() && !no_resilience && !no_recovery {
+                ", domain-aware resilience ON"
+            } else {
+                ""
+            }
         );
     }
     let opts = SimOptions {
@@ -217,6 +254,11 @@ fn simulate(args: &[String]) -> Result<()> {
         autoscale: autoscale
             .then(|| AutoscaleOptions { offload: !no_offload, ..AutoscaleOptions::default() }),
         faults,
+        resilience: if correlated.is_some() && !no_resilience && !no_recovery {
+            ResiliencePolicy::domain_aware()
+        } else {
+            ResiliencePolicy::independent()
+        },
         ..SimOptions::default()
     };
     let mut sim = ServeSim::new(cfg, opts, trace);

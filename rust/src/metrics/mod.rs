@@ -177,6 +177,26 @@ pub enum OffloadEventKind {
     Recall { reason: crate::coordinator::autoscale::RecallReason },
 }
 
+/// Per-failure-domain fault accounting (correlated chaos runs): how hard
+/// each rack/PSU domain was hit and how fast it came back. Derived from
+/// the domain-stamped [`crate::faults::FaultRecord`]s.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DomainStats {
+    /// Rack id per the run's [`crate::domains::FailureDomainMap`].
+    pub domain: usize,
+    /// All faults charged to the domain (crashes + pool failures + scoped
+    /// degradations).
+    pub faults: usize,
+    /// Instance crashes (the faults that strand work and need the
+    /// detect → re-home → replace cycle).
+    pub crashes: usize,
+    /// Requests re-dispatched off the domain's dead components.
+    pub rehomed: usize,
+    /// Mean time-to-recovery over the domain's orchestrated crash
+    /// repairs, µs; `None` when none recovered (baseline runs).
+    pub mean_mttr_us: Option<f64>,
+}
+
 /// Per-SLO-tier attainment summary (mixed-SLO workloads, Table 5 tiers).
 #[derive(Debug, Clone, Copy)]
 pub struct TierAttainment {
@@ -327,6 +347,73 @@ impl ServingReport {
         Some(mttrs.iter().sum::<f64>() / mttrs.len() as f64)
     }
 
+    /// Per-domain fault accounting over the domain-stamped fault records,
+    /// ordered by domain id; empty when no fault carried a domain (healthy
+    /// runs, or fault classes with no component placement).
+    pub fn domain_stats(&self) -> Vec<DomainStats> {
+        use crate::faults::FaultKind;
+        let mut out: Vec<DomainStats> = Vec::new();
+        for f in &self.faults {
+            let Some(domain) = f.domain else { continue };
+            let idx = match out.iter().position(|d| d.domain == domain) {
+                Some(i) => i,
+                None => {
+                    out.push(DomainStats {
+                        domain,
+                        faults: 0,
+                        crashes: 0,
+                        rehomed: 0,
+                        mean_mttr_us: None,
+                    });
+                    out.len() - 1
+                }
+            };
+            out[idx].faults += 1;
+            out[idx].rehomed += f.requests_rehomed;
+            if matches!(f.kind, FaultKind::DecodeCrash { .. } | FaultKind::PrefillCrash { .. }) {
+                out[idx].crashes += 1;
+            }
+        }
+        for d in &mut out {
+            let mttrs: Vec<f64> = self
+                .faults
+                .iter()
+                .filter(|f| {
+                    f.domain == Some(d.domain)
+                        && matches!(
+                            f.kind,
+                            crate::faults::FaultKind::DecodeCrash { .. }
+                                | crate::faults::FaultKind::PrefillCrash { .. }
+                        )
+                })
+                .filter_map(|f| f.mttr_us())
+                .collect();
+            if !mttrs.is_empty() {
+                d.mean_mttr_us = Some(mttrs.iter().sum::<f64>() / mttrs.len() as f64);
+            }
+        }
+        out.sort_by_key(|d| d.domain);
+        out
+    }
+
+    /// Blast radius of the worst single incident: the most components
+    /// (instance crashes + pool-server failures) felled by one injection
+    /// timestamp in one domain. Independent plans score 1; a rack loss
+    /// scores its member count.
+    pub fn max_blast_radius(&self) -> usize {
+        let mut best = 0;
+        for f in &self.faults {
+            let Some(domain) = f.domain else { continue };
+            let n = self
+                .faults
+                .iter()
+                .filter(|g| g.domain == Some(domain) && g.t_us.to_bits() == f.t_us.to_bits())
+                .count();
+            best = best.max(n);
+        }
+        best.max(usize::from(!self.faults.is_empty()))
+    }
+
     /// Goodput in output tokens/s: useful (completed-request) tokens over
     /// the run duration.
     pub fn goodput_tokens_per_s(&self) -> f64 {
@@ -364,17 +451,42 @@ impl ServingReport {
                 Some(t) => format!("recovered t={:.2}s", t / 1e6),
                 None => "never recovered".to_string(),
             };
+            let dom = match f.domain {
+                Some(d) => format!(" dom {d}"),
+                None => String::new(),
+            };
             let _ = writeln!(
                 out,
-                "    t={:7.2}s  {:<16} rehomed {:3} (refetch {} / reprefill {})  lost {:3}  {}",
+                "    t={:7.2}s  {:<16} rehomed {:3} (refetch {} / reprefill {})  lost {:3}  {}{}",
                 f.t_us / 1e6,
                 f.kind.tag(),
                 f.requests_rehomed,
                 f.kv_refetched,
                 f.reprefilled,
                 f.requests_lost,
-                outcome
+                outcome,
+                dom
             );
+        }
+        let domains = self.domain_stats();
+        if !domains.is_empty() {
+            let _ = writeln!(
+                out,
+                "  domains: {} hit, max blast radius {}",
+                domains.len(),
+                self.max_blast_radius()
+            );
+            for d in &domains {
+                let mttr = match d.mean_mttr_us {
+                    Some(m) => format!("  MTTR {:.2} s", m / 1e6),
+                    None => String::new(),
+                };
+                let _ = writeln!(
+                    out,
+                    "    domain {:2}: {} faults ({} crashes)  rehomed {:3}{}",
+                    d.domain, d.faults, d.crashes, d.rehomed, mttr
+                );
+            }
         }
         out.pop(); // callers println! the block
         Some(out)
@@ -650,6 +762,7 @@ mod tests {
                     requests_lost: 0,
                     kv_refetched: 3,
                     reprefilled: 1,
+                    domain: Some(3),
                 },
                 crate::faults::FaultRecord {
                     t_us: 500.0,
@@ -662,6 +775,7 @@ mod tests {
                     requests_lost: 0,
                     kv_refetched: 0,
                     reprefilled: 0,
+                    domain: Some(3),
                 },
             ],
             ..Default::default()
@@ -670,5 +784,47 @@ mod tests {
         // only orchestrated crash recoveries contribute to MTTR
         assert_eq!(r.mean_mttr_us(), Some(1_000.0));
         assert!((r.goodput_tokens_per_s() - 4_500.0).abs() < 1e-9);
+        // both records carry domain 3: one crash, one pool failure
+        let domains = r.domain_stats();
+        assert_eq!(domains.len(), 1);
+        assert_eq!(domains[0].domain, 3);
+        assert_eq!(domains[0].faults, 2);
+        assert_eq!(domains[0].crashes, 1);
+        assert_eq!(domains[0].rehomed, 4);
+        assert_eq!(domains[0].mean_mttr_us, Some(1_000.0));
+    }
+
+    #[test]
+    fn blast_radius_groups_same_incident() {
+        let rec = |t_us: f64, domain: Option<usize>| crate::faults::FaultRecord {
+            t_us,
+            kind: crate::faults::FaultKind::DecodeCrash { instance: 0 },
+            detected_us: t_us,
+            recovered_us: None,
+            requests_rehomed: 0,
+            requests_lost: 0,
+            kv_refetched: 0,
+            reprefilled: 0,
+            domain,
+        };
+        // a rack loss at t=100 fells three members of domain 2; an
+        // independent crash elsewhere scores 1
+        let r = ServingReport {
+            faults: vec![
+                rec(100.0, Some(2)),
+                rec(100.0, Some(2)),
+                rec(100.0, Some(2)),
+                rec(500.0, Some(4)),
+                rec(900.0, None),
+            ],
+            ..Default::default()
+        };
+        assert_eq!(r.max_blast_radius(), 3);
+        assert_eq!(r.domain_stats().len(), 2);
+        // un-stamped faults alone still score radius 1, never 0
+        let indep = ServingReport { faults: vec![rec(1.0, None)], ..Default::default() };
+        assert_eq!(indep.max_blast_radius(), 1);
+        assert!(indep.domain_stats().is_empty());
+        assert_eq!(ServingReport::default().max_blast_radius(), 0);
     }
 }

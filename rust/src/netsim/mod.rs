@@ -174,6 +174,127 @@ impl LinkDegradation {
     }
 }
 
+/// Wildcard node id for [`LinkKey`]: "every link touching node `a`" —
+/// the shape a rack-loss cascade degrades (all fabric ports of the lost
+/// rack's nodes), without enumerating every peer pair.
+pub const ANY_NODE: u16 = u16::MAX;
+
+fn plane_idx(p: Plane) -> u8 {
+    match p {
+        Plane::Ub => 0,
+        Plane::Rdma => 1,
+        Plane::Vpc => 2,
+    }
+}
+
+/// Identity of one degradable link: a network plane plus a (normalized)
+/// node pair. `b == ANY_NODE` is the wildcard "all links at node `a`".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LinkKey {
+    plane: u8,
+    a: u16,
+    b: u16,
+}
+
+impl LinkKey {
+    /// Key for the link between two specific nodes on a plane.
+    pub fn pair(plane: Plane, a: u16, b: u16) -> LinkKey {
+        LinkKey { plane: plane_idx(plane), a: a.min(b), b: a.max(b) }
+    }
+
+    /// Wildcard key: every link touching `node` on a plane.
+    pub fn node(plane: Plane, node: u16) -> LinkKey {
+        LinkKey { plane: plane_idx(plane), a: node, b: ANY_NODE }
+    }
+
+    fn touches(&self, node: u16) -> bool {
+        self.a == node || self.b == node
+    }
+}
+
+/// Partial-degradation state: one [`LinkDegradation`] window per
+/// `(plane, node-pair)` key plus a legacy whole-fabric window (the chaos
+/// `LinkDegrade` fault class). Windows merge per key — a second incident
+/// on the same key must never shorten or soften the first — and distinct
+/// keys never interact. Queries combine the global window with the scoped
+/// ones by worst-case `max` (degradations do not compound multiplicatively:
+/// a flow runs at the speed of its most degraded constraint).
+#[derive(Debug, Clone, Default)]
+pub struct DegradationMap {
+    global: LinkDegradation,
+    scoped: std::collections::BTreeMap<LinkKey, LinkDegradation>,
+}
+
+impl DegradationMap {
+    /// Open/extend the whole-fabric window (chaos `LinkDegrade`).
+    pub fn degrade_global(&mut self, now: Micros, factor: f64, duration_us: Micros) {
+        self.global = self.global.extend(now, factor, duration_us);
+    }
+
+    /// Open/extend the window for one `(plane, node-pair)` key, and prune
+    /// windows that have already expired (the map stays small under long
+    /// chaos runs).
+    pub fn degrade(&mut self, key: LinkKey, now: Micros, factor: f64, duration_us: Micros) {
+        self.scoped.retain(|_, w| w.is_active(now));
+        let merged =
+            self.scoped.get(&key).copied().unwrap_or_default().extend(now, factor, duration_us);
+        self.scoped.insert(key, merged);
+    }
+
+    /// The window currently stored for a key (healthy default when none).
+    pub fn window(&self, key: LinkKey) -> LinkDegradation {
+        self.scoped.get(&key).copied().unwrap_or_default()
+    }
+
+    /// The legacy whole-fabric window.
+    pub fn global_window(&self) -> LinkDegradation {
+        self.global
+    }
+
+    /// Latency multiplier the whole-fabric window alone imposes at `now` —
+    /// bit-identical to the pre-domain global `LinkDegradation` path.
+    pub fn global_multiplier(&self, now: Micros) -> f64 {
+        self.global.multiplier(now)
+    }
+
+    /// Multiplier for a transfer between two specific nodes on a plane:
+    /// worst of the exact pair key, either endpoint's wildcard key, and
+    /// the global window.
+    pub fn pair_multiplier(&self, plane: Plane, a: u16, b: u16, now: Micros) -> f64 {
+        let mut m = self.global.multiplier(now);
+        m = m.max(self.window(LinkKey::pair(plane, a, b)).multiplier(now));
+        m = m.max(self.window(LinkKey::node(plane, a)).multiplier(now));
+        m.max(self.window(LinkKey::node(plane, b)).multiplier(now))
+    }
+
+    /// Multiplier for transfers with one known endpoint: worst over every
+    /// scoped window on the plane touching the node, plus the global one.
+    pub fn node_multiplier(&self, plane: Plane, node: u16, now: Micros) -> f64 {
+        let p = plane_idx(plane);
+        self.scoped
+            .iter()
+            .filter(|(k, _)| k.plane == p && k.touches(node))
+            .map(|(_, w)| w.multiplier(now))
+            .fold(self.global.multiplier(now), f64::max)
+    }
+
+    /// Plane-wide worst multiplier (transfers with no node attribution,
+    /// e.g. pool fetches whose server placement is below the model).
+    pub fn plane_multiplier(&self, plane: Plane, now: Micros) -> f64 {
+        let p = plane_idx(plane);
+        self.scoped
+            .iter()
+            .filter(|(k, _)| k.plane == p)
+            .map(|(_, w)| w.multiplier(now))
+            .fold(self.global.multiplier(now), f64::max)
+    }
+
+    /// Whether any window (scoped or global) is active at `now`.
+    pub fn is_degraded(&self, now: Micros) -> bool {
+        self.global.is_active(now) || self.scoped.values().any(|w| w.is_active(now))
+    }
+}
+
 /// Fair-share contention on a shared link: `flows` concurrent transfers
 /// each get `bw/flows`; returns the per-flow transfer time.
 #[derive(Debug, Clone, Copy)]
@@ -275,6 +396,54 @@ mod tests {
         let fresh = a.extend(2_000.0, 2.0, 300.0);
         assert_eq!(fresh.factor, 2.0);
         assert_eq!(fresh.until_us, 2_300.0);
+    }
+
+    #[test]
+    fn degradation_map_scopes_by_plane_and_pair() {
+        let mut m = DegradationMap::default();
+        m.degrade(LinkKey::pair(Plane::Rdma, 3, 7), 0.0, 4.0, 1_000.0);
+        // the degraded pair (order-insensitive) is slow; others are not
+        assert_eq!(m.pair_multiplier(Plane::Rdma, 7, 3, 500.0), 4.0);
+        assert_eq!(m.pair_multiplier(Plane::Rdma, 3, 8, 500.0), 1.0);
+        // same pair on another plane is unaffected
+        assert_eq!(m.pair_multiplier(Plane::Ub, 3, 7, 500.0), 1.0);
+        // node attribution sees every window touching the node
+        assert_eq!(m.node_multiplier(Plane::Rdma, 7, 500.0), 4.0);
+        assert_eq!(m.node_multiplier(Plane::Rdma, 9, 500.0), 1.0);
+        // plane-wide worst
+        assert_eq!(m.plane_multiplier(Plane::Rdma, 500.0), 4.0);
+        assert_eq!(m.plane_multiplier(Plane::Vpc, 500.0), 1.0);
+        // expiry
+        assert_eq!(m.pair_multiplier(Plane::Rdma, 3, 7, 1_000.0), 1.0);
+        assert!(!m.is_degraded(1_000.0));
+    }
+
+    #[test]
+    fn degradation_map_wildcard_covers_all_links_of_a_node() {
+        let mut m = DegradationMap::default();
+        m.degrade(LinkKey::node(Plane::Ub, 5), 0.0, 3.0, 1_000.0);
+        // every pair touching node 5 is degraded, others untouched
+        assert_eq!(m.pair_multiplier(Plane::Ub, 5, 20, 100.0), 3.0);
+        assert_eq!(m.pair_multiplier(Plane::Ub, 2, 5, 100.0), 3.0);
+        assert_eq!(m.pair_multiplier(Plane::Ub, 2, 20, 100.0), 1.0);
+        assert_eq!(m.node_multiplier(Plane::Ub, 5, 100.0), 3.0);
+    }
+
+    #[test]
+    fn degradation_map_merges_per_key_and_composes_with_global_by_max() {
+        let mut m = DegradationMap::default();
+        let k = LinkKey::pair(Plane::Ub, 0, 1);
+        m.degrade(k, 0.0, 4.0, 1_000.0);
+        // a milder overlapping incident on the same key must not shorten
+        m.degrade(k, 500.0, 2.0, 100.0);
+        assert_eq!(m.window(k).factor, 4.0);
+        assert_eq!(m.window(k).until_us, 1_000.0);
+        // a global window composes by max, never by product
+        m.degrade_global(0.0, 6.0, 600.0);
+        assert_eq!(m.pair_multiplier(Plane::Ub, 0, 1, 500.0), 6.0);
+        assert_eq!(m.global_multiplier(500.0), 6.0);
+        // after global expiry the scoped window is still what it was
+        assert_eq!(m.pair_multiplier(Plane::Ub, 0, 1, 999.0), 4.0);
     }
 
     #[test]

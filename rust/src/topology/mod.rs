@@ -79,6 +79,17 @@ impl Supernode {
         id.node as usize * self.topo.cpus_per_node + id.socket as usize
     }
 
+    /// Rack (PSU failure domain) holding a die — the blast radius of a
+    /// power incident (see [`crate::domains::FailureDomainMap`]).
+    pub fn rack(&self, id: DieId) -> usize {
+        self.topo.rack_of_node(id.node as usize)
+    }
+
+    /// True iff two dies share a rack (correlated-failure domain).
+    pub fn same_rack(&self, a: DieId, b: DieId) -> bool {
+        self.rack(a) == self.rack(b)
+    }
+
     /// True iff two dies share a compute node (single-tier L1 UB path).
     pub fn same_node(&self, a: DieId, b: DieId) -> bool {
         a.node == b.node
@@ -114,6 +125,20 @@ mod tests {
         for idx in [0, 3, 4, 191] {
             assert_eq!(sn.cpu_index(sn.cpu(idx)), idx);
         }
+    }
+
+    #[test]
+    fn rack_domains_partition_nodes() {
+        let sn = Supernode::cloudmatrix384();
+        assert_eq!(sn.topo.racks(), 12); // 48 nodes / 4 per rack
+        let a = sn.die(0); // node 0
+        let b = sn.die(3 * 16); // node 3, same rack
+        let c = sn.die(4 * 16); // node 4, next rack
+        assert!(sn.same_rack(a, b));
+        assert!(!sn.same_rack(a, c));
+        assert_eq!(sn.rack(a), 0);
+        assert_eq!(sn.rack(c), 1);
+        assert_eq!(sn.rack(sn.die(767)), 11);
     }
 
     #[test]

@@ -9,3 +9,26 @@ pub mod rng;
 pub use error::{Context, Error, Result};
 pub use json::Json;
 pub use rng::Rng;
+
+/// Split `total` as evenly as possible across `n` bins — the decode-pool
+/// NPU layout rule, shared by the serving sim (instance sizing/resizing)
+/// and the failure-domain map (which must mirror that layout exactly to
+/// stamp the right rack on each instance).
+pub fn split_even(total: usize, n: usize) -> Vec<usize> {
+    let n = n.max(1);
+    (0..n).map(|i| total / n + usize::from(i < total % n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn split_even_partitions_exactly() {
+        for (total, n) in [(160, 4), (7, 3), (0, 5), (5, 1), (3, 8)] {
+            let parts = super::split_even(total, n);
+            assert_eq!(parts.len(), n.max(1));
+            assert_eq!(parts.iter().sum::<usize>(), total);
+            let (lo, hi) = (parts.iter().min().unwrap(), parts.iter().max().unwrap());
+            assert!(hi - lo <= 1, "{parts:?}");
+        }
+    }
+}

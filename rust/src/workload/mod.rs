@@ -299,6 +299,11 @@ pub struct ScenarioSpec {
     /// Trace generation ignores it; the sim layer builds a seeded
     /// [`crate::faults::FaultPlan`] from it.
     pub fault_profile: Option<crate::faults::FaultProfile>,
+    /// Correlated chaos: clustered domain incidents instead of (or on top
+    /// of) the independent `fault_profile`. Trace generation ignores it;
+    /// the sim layer expands it against the deployment's
+    /// [`crate::domains::FailureDomainMap`].
+    pub correlated: Option<crate::domains::CorrelatedProfile>,
 }
 
 /// ln-space mean so the log-normal's *mean* lands on `target`.
@@ -308,7 +313,7 @@ fn ln_mean(target: f64, sigma: f64) -> f64 {
 
 impl ScenarioSpec {
     /// All preset names accepted by [`ScenarioSpec::by_name`].
-    pub const PRESETS: [&'static str; 7] = [
+    pub const PRESETS: [&'static str; 8] = [
         "diurnal",
         "burst_storm",
         "long_context_drift",
@@ -316,6 +321,7 @@ impl ScenarioSpec {
         "memory_bound_decode",
         "chaos_crashes",
         "chaos_degraded",
+        "correlated_rack_loss",
     ];
 
     pub fn by_name(name: &str, seed: u64) -> Option<ScenarioSpec> {
@@ -327,6 +333,7 @@ impl ScenarioSpec {
             "memory_bound_decode" => Some(Self::memory_bound_decode(seed)),
             "chaos_crashes" => Some(Self::chaos_crashes(seed)),
             "chaos_degraded" => Some(Self::chaos_degraded(seed)),
+            "correlated_rack_loss" => Some(Self::correlated_rack_loss(seed)),
             _ => None,
         }
     }
@@ -375,6 +382,7 @@ impl ScenarioSpec {
             tier_mix: Vec::new(),
             tier_slos_ms: Vec::new(),
             fault_profile: None,
+            correlated: None,
         }
     }
 
@@ -394,6 +402,7 @@ impl ScenarioSpec {
             tier_mix: Vec::new(),
             tier_slos_ms: Vec::new(),
             fault_profile: None,
+            correlated: None,
         }
     }
 
@@ -425,6 +434,7 @@ impl ScenarioSpec {
             tier_mix: Vec::new(),
             tier_slos_ms: Vec::new(),
             fault_profile: None,
+            correlated: None,
         }
     }
 
@@ -442,6 +452,7 @@ impl ScenarioSpec {
             tier_mix: vec![(0, 0.7), (1, 0.3)],
             tier_slos_ms: vec![(15.0, 1_500.0)],
             fault_profile: None,
+            correlated: None,
         }
     }
 
@@ -476,6 +487,7 @@ impl ScenarioSpec {
             tier_mix: Vec::new(),
             tier_slos_ms: Vec::new(),
             fault_profile: None,
+            correlated: None,
         }
     }
 
@@ -497,6 +509,20 @@ impl ScenarioSpec {
         let mut sc = Self::burst_storm(seed);
         sc.name = "chaos_degraded";
         sc.fault_profile = Some(crate::faults::FaultProfile::degraded(8e6));
+        sc
+    }
+
+    /// Correlated chaos: the diurnal day hit by clustered *domain*
+    /// incidents — rack/PSU losses that fell every member component at
+    /// once (plus a UB sub-plane brown-out) — instead of independent
+    /// crashes. The scenario the domain-aware
+    /// [`crate::domains::ResilienceController`] (donor spreading, mass
+    /// recall, decode backfill) is measured on, against the independent
+    /// recovery baseline and `--no-recovery`.
+    pub fn correlated_rack_loss(seed: u64) -> ScenarioSpec {
+        let mut sc = Self::diurnal(seed);
+        sc.name = "correlated_rack_loss";
+        sc.correlated = Some(crate::domains::CorrelatedProfile::rack_loss(24e6));
         sc
     }
 
@@ -726,11 +752,19 @@ mod tests {
         let dp = d.fault_profile.unwrap();
         assert_eq!(dp.decode_crashes + dp.prefill_crashes + dp.pool_failures, 0);
         assert!(dp.link_degrades > 0 && dp.stragglers > 0);
+        // the correlated preset carries a clustered profile, not an
+        // independent one
+        let cr = ScenarioSpec::by_name("correlated_rack_loss", 3).unwrap();
+        assert!(cr.fault_profile.is_none());
+        let cp = cr.correlated.expect("correlated preset must carry a profile");
+        assert!(cp.rack_incidents > 0);
         // healthy presets carry none
         for name in
             ["diurnal", "burst_storm", "long_context_drift", "mixed_slo", "memory_bound_decode"]
         {
-            assert!(ScenarioSpec::by_name(name, 3).unwrap().fault_profile.is_none(), "{name}");
+            let sc = ScenarioSpec::by_name(name, 3).unwrap();
+            assert!(sc.fault_profile.is_none(), "{name}");
+            assert!(sc.correlated.is_none(), "{name}");
         }
         // the chaos workload is its base preset — faults ride alongside,
         // they don't change the trace

@@ -11,6 +11,7 @@
 
 use cm_infer::config::Config;
 use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
+use cm_infer::domains::{FailureDomainMap, ResiliencePolicy};
 use cm_infer::faults::{FaultOptions, FaultPlan};
 use cm_infer::workload::{generate_scenario, ScenarioSpec};
 
@@ -26,17 +27,73 @@ struct Case {
     /// Override `serving.decode_npus` (0 = keep the preset deployment).
     /// The §6.2.1 offload case runs on a decode-pressured slice.
     decode_npus: usize,
+    /// Decode-pool instance count (correlated chaos needs a real pool so
+    /// a rack loss has per-instance blast radius).
+    decode_instances: usize,
+    /// Domain-aware resilience (the correlated-chaos case).
+    domain_aware: bool,
 }
 
-const CASES: [Case; 5] = [
-    Case { preset: "diurnal", seed: 3, n: 500, autoscale: true, decode_npus: 0 },
-    Case { preset: "burst_storm", seed: 5, n: 500, autoscale: false, decode_npus: 0 },
-    Case { preset: "mixed_slo", seed: 9, n: 500, autoscale: false, decode_npus: 0 },
+const CASES: [Case; 6] = [
+    Case {
+        preset: "diurnal",
+        seed: 3,
+        n: 500,
+        autoscale: true,
+        decode_npus: 0,
+        decode_instances: 1,
+        domain_aware: false,
+    },
+    Case {
+        preset: "burst_storm",
+        seed: 5,
+        n: 500,
+        autoscale: false,
+        decode_npus: 0,
+        decode_instances: 1,
+        domain_aware: false,
+    },
+    Case {
+        preset: "mixed_slo",
+        seed: 9,
+        n: 500,
+        autoscale: false,
+        decode_npus: 0,
+        decode_instances: 1,
+        domain_aware: false,
+    },
     // chaos: the preset's fault profile drawn at the case seed, recovery on
-    Case { preset: "chaos_crashes", seed: 4, n: 400, autoscale: false, decode_npus: 0 },
+    Case {
+        preset: "chaos_crashes",
+        seed: 4,
+        n: 400,
+        autoscale: false,
+        decode_npus: 0,
+        decode_instances: 1,
+        domain_aware: false,
+    },
     // §6.2.1 offload: memory-bound decode on a 96P/32D slice, elastic
     // controller with the offload action enabled (its default)
-    Case { preset: "memory_bound_decode", seed: 6, n: 400, autoscale: true, decode_npus: 32 },
+    Case {
+        preset: "memory_bound_decode",
+        seed: 6,
+        n: 400,
+        autoscale: true,
+        decode_npus: 32,
+        decode_instances: 1,
+        domain_aware: false,
+    },
+    // correlated chaos: clustered rack/PSU incidents over a 4-instance
+    // decode pool, handled by the domain-aware resilience controller
+    Case {
+        preset: "correlated_rack_loss",
+        seed: 8,
+        n: 400,
+        autoscale: false,
+        decode_npus: 0,
+        decode_instances: 4,
+        domain_aware: true,
+    },
 ];
 
 fn run_case(c: &Case) -> Vec<(String, f64)> {
@@ -47,23 +104,62 @@ fn run_case(c: &Case) -> Vec<(String, f64)> {
     if c.decode_npus > 0 {
         cfg.serving.decode_npus = c.decode_npus;
     }
+    let faults = match (sc.fault_profile, sc.correlated) {
+        (None, None) => None,
+        (profile, correlated) => {
+            let mut fo = match correlated {
+                Some(mut cp) => {
+                    // clamp the preset's 24 s incident window into the
+                    // short golden trace so the incidents (and their
+                    // recoveries) land inside the run — the fixture then
+                    // pins real blast-radius and per-domain MTTR scalars,
+                    // not zeros
+                    cp.horizon_us = 6e6;
+                    cp.degrade_duration_us = 1e6;
+                    let map = FailureDomainMap::for_serving(
+                        &cfg.topo,
+                        &cfg.serving,
+                        cfg.serving.prefill_instances,
+                        c.decode_instances,
+                    );
+                    FaultOptions { recovery_latency_us: 2e6, ..cp.fault_options(c.seed, &map) }
+                }
+                None => FaultOptions {
+                    plan: FaultPlan::default(),
+                    heartbeat_us: 250_000.0,
+                    recovery: true,
+                    recovery_latency_us: 2e6,
+                },
+            };
+            // a preset carrying BOTH profiles gets the plans merged
+            if let Some(p) = profile {
+                let mut events = std::mem::take(&mut fo.plan.events);
+                events.extend(FaultPlan::generate(c.seed, &p).events);
+                fo.plan = FaultPlan::new(events);
+            }
+            Some(fo)
+        }
+    };
     let opts = SimOptions {
         seed: c.seed,
+        decode_instances: c.decode_instances,
         autoscale: c.autoscale.then(|| AutoscaleOptions {
             interval_us: 1e6,
             switch_latency_us: 2e6,
             ..AutoscaleOptions::default()
         }),
-        faults: sc.fault_profile.map(|p| FaultOptions {
-            plan: FaultPlan::generate(c.seed, &p),
-            heartbeat_us: 250_000.0,
-            recovery: true,
-            recovery_latency_us: 2e6,
-        }),
+        faults,
+        resilience: if c.domain_aware {
+            ResiliencePolicy::domain_aware()
+        } else {
+            ResiliencePolicy::independent()
+        },
         ..SimOptions::default()
     };
     let r = ServeSim::new(cfg, opts, trace).run();
     let tag = format!("{}-{}", c.preset, c.seed);
+    // per-domain MTTR scalar: sum of domain mean-MTTRs (order-free)
+    let domain_mttr_us: f64 = r.domain_stats().iter().filter_map(|d| d.mean_mttr_us).sum();
     vec![
         (format!("{tag} duration_us"), r.duration_us),
         (format!("{tag} requests_completed"), r.requests_completed as f64),
@@ -78,6 +174,9 @@ fn run_case(c: &Case) -> Vec<(String, f64)> {
         (format!("{tag} goodput_tokens"), r.goodput_tokens as f64),
         (format!("{tag} offload_events"), r.offload_events.len() as f64),
         (format!("{tag} offload_active_us"), r.offload_active_us),
+        (format!("{tag} blast_radius"), r.max_blast_radius() as f64),
+        (format!("{tag} domains_hit"), r.domain_stats().len() as f64),
+        (format!("{tag} domain_mttr_us"), domain_mttr_us),
     ]
 }
 

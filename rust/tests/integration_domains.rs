@@ -1,0 +1,309 @@
+//! End-to-end tests of the failure-domain subsystem: correlated rack/PSU
+//! incidents handled by the domain-aware `ResilienceController` vs the
+//! independent-recovery baseline and `--no-recovery`.
+//!
+//! Acceptance bars:
+//! * domain-spread §6.2.1 offload donors strictly beat naive (most-idle)
+//!   donor selection on goodput under a rack-loss incident, and donors sit
+//!   in ≥ 2 distinct failure domains whenever the prefill pool spans ≥ 2;
+//! * under `correlated_rack_loss`, the domain-aware controller (decode
+//!   backfill + mass recall + spreading) strictly beats both the
+//!   independent-recovery baseline and `--no-recovery` on
+//!   goodput/availability;
+//! * bit-exact reruns.
+
+use cm_infer::config::Config;
+use cm_infer::coordinator::autoscale::RecallReason;
+use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
+use cm_infer::domains::ResiliencePolicy;
+use cm_infer::faults::{FaultEvent, FaultKind, FaultOptions, FaultPlan};
+use cm_infer::metrics::{OffloadEventKind, Role, ServingReport};
+use cm_infer::workload::{generate_scenario, ScenarioSpec};
+
+const SEED: u64 = 7;
+
+// ---------------------------------------------------------------------------
+// Part 1: domain-spread donors vs naive donor selection under a rack loss
+// ---------------------------------------------------------------------------
+
+const N_OFFLOAD: usize = 1200;
+
+/// The §6.2.1 offload regime from `integration_offload`: a 96P/32D slice
+/// under memory-bound decode traffic; the elastic controller engages the
+/// offload, and the PD-ratio resplit is pinned off by hysteresis.
+fn offload_run(policy: ResiliencePolicy, fault: Option<FaultEvent>) -> (ServingReport, ServeSim) {
+    let sc = ScenarioSpec::memory_bound_decode(SEED);
+    let trace = generate_scenario(&sc, N_OFFLOAD);
+    let mut cfg = Config::default();
+    cfg.serving.decode_npus = 32;
+    let opts = SimOptions {
+        seed: SEED,
+        autoscale: Some(AutoscaleOptions {
+            interval_us: 1e6,
+            hysteresis: 10.0,
+            ..Default::default()
+        }),
+        faults: Some(FaultOptions {
+            plan: FaultPlan::new(fault.into_iter().collect()),
+            heartbeat_us: 250_000.0,
+            recovery: true,
+            recovery_latency_us: 2e6,
+        }),
+        resilience: policy,
+        ..SimOptions::default()
+    };
+    let mut sim = ServeSim::new(cfg, opts, trace);
+    let report = sim.run();
+    (report, sim)
+}
+
+/// First engagement of the offload log: `(engage_t_us, donor slots)`.
+fn first_engagement(report: &ServingReport) -> (f64, Vec<usize>) {
+    report
+        .offload_events
+        .iter()
+        .find_map(|e| match &e.kind {
+            OffloadEventKind::Engage { donors, .. } => Some((e.t_us, donors.clone())),
+            _ => None,
+        })
+        .expect("offload must engage in the memory-bound regime")
+}
+
+#[test]
+fn domain_spread_donors_beat_naive_under_rack_loss() {
+    // phase 1: probe with an unreachable fault (identical chaos plumbing)
+    // to locate the naive engagement and its donor's rack
+    let probe = offload_run(
+        ResiliencePolicy::independent(),
+        Some(FaultEvent {
+            t_us: 1e15,
+            kind: FaultKind::RackLoss { rack: 0, factor: 4.0, duration_us: 3e6 },
+        }),
+    );
+    let (engage_t, naive_donors) = first_engagement(&probe.0);
+    assert_eq!(naive_donors.len(), 1, "the 32-NPU decode pool needs one donor group");
+    let rack = probe.1.domain_map().prefill_rack(naive_donors[0]);
+    let loss = FaultEvent {
+        t_us: engage_t + 4e6,
+        kind: FaultKind::RackLoss { rack, factor: 4.0, duration_us: 3e6 },
+    };
+
+    // phase 2: the same rack loss against naive vs domain-spread donors
+    let (naive, naive_sim) = offload_run(ResiliencePolicy::independent(), Some(loss));
+    let (spread, spread_sim) = offload_run(ResiliencePolicy::domain_aware(), Some(loss));
+
+    // both runs survive the incident completely (recovery saves all)
+    assert_eq!(naive.requests_completed, N_OFFLOAD as u64);
+    assert_eq!(spread.requests_completed, N_OFFLOAD as u64);
+    assert_eq!(naive.availability(), 1.0);
+    assert_eq!(spread.availability(), 1.0);
+    assert_eq!(naive.output_tokens, spread.output_tokens);
+
+    // the incident fells multiple components of one domain in both legs
+    assert!(naive.max_blast_radius() >= 2, "radius {}", naive.max_blast_radius());
+    assert!(!naive.domain_stats().is_empty());
+
+    // acceptance: spread donors sit in ≥ 2 distinct failure domains on
+    // every engagement (the prefill pool spans 3 racks throughout), while
+    // naive selection keeps the single most-idle donor
+    let (_, first_spread_donors) = first_engagement(&spread);
+    assert!(
+        first_spread_donors.len() >= 2,
+        "spreading must engage a second donor: {first_spread_donors:?}"
+    );
+    for e in &spread.offload_events {
+        if let OffloadEventKind::Engage { donors, .. } = &e.kind {
+            let spanned = spread_sim.domain_map().prefill_racks_spanned(donors);
+            assert!(spanned >= 2, "donors {donors:?} span only {spanned} domain(s)");
+        }
+    }
+    let (_, naive_crash_donors) = first_engagement(&naive);
+    assert_eq!(naive_crash_donors.len(), 1);
+    assert_eq!(
+        naive_sim.domain_map().prefill_rack(naive_crash_donors[0]),
+        rack,
+        "the rack loss must hit the naive donor"
+    );
+
+    // the naive leg loses its whole donor set at once (full-window forced
+    // recall); the spread leg loses a fraction and is recalled as a
+    // domain incident with a proportionally shorter spike window
+    assert!(
+        naive.offload_recalls(Some(RecallReason::DonorFailure)) >= 1,
+        "{:?}",
+        naive.offload_events
+    );
+    assert!(
+        spread.offload_recalls(Some(RecallReason::DomainIncident)) >= 1,
+        "≥2 same-rack crashes in one heartbeat must tag a domain incident: {:?}",
+        spread.offload_events
+    );
+    assert!(naive.recall_spike_us > 0.0);
+    assert!(
+        spread.recall_spike_us < naive.recall_spike_us,
+        "losing 1-of-2 spread donors must cost less spike than 1-of-1: {} vs {}",
+        spread.recall_spike_us,
+        naive.recall_spike_us
+    );
+
+    // acceptance: strictly better goodput under the incident
+    assert!(
+        spread.goodput_tokens_per_s() > naive.goodput_tokens_per_s(),
+        "domain-spread donors must strictly beat naive selection on goodput: {:.0} vs {:.0}",
+        spread.goodput_tokens_per_s(),
+        naive.goodput_tokens_per_s()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Part 2: the resilience controller on correlated_rack_loss (backfill path)
+// ---------------------------------------------------------------------------
+
+const N_RACK: usize = 1600;
+
+/// A decode-pressured `correlated_rack_loss` deployment: the diurnal trace
+/// over 96P/64D (decode tight in the output-heavy night phase), with a
+/// rack loss felling half the decode pool mid-night and a domain
+/// replacement latency well above the warm role-switch — the window the
+/// prefill-borrowing backfill bridges.
+fn rack_loss_run(policy: ResiliencePolicy, recovery: bool) -> (ServingReport, ServeSim) {
+    let sc = ScenarioSpec::correlated_rack_loss(SEED);
+    let trace = generate_scenario(&sc, N_RACK);
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    cfg.serving.decode_npus = 64;
+    // rack 3 holds decode instances {0, 1} (home nodes 12 and 14) plus
+    // four pool servers — half the decode pool dies at t=13.5 s, in the
+    // decode-heavy night half of the diurnal day
+    let plan = FaultPlan::new(vec![FaultEvent {
+        t_us: 13.5e6,
+        kind: FaultKind::RackLoss { rack: 3, factor: 4.0, duration_us: 3e6 },
+    }]);
+    let opts = SimOptions {
+        seed: SEED,
+        decode_instances: 4,
+        faults: Some(FaultOptions {
+            plan,
+            heartbeat_us: 250_000.0,
+            recovery,
+            recovery_latency_us: 10e6,
+        }),
+        resilience: policy,
+        ..SimOptions::default()
+    };
+    let mut sim = ServeSim::new(cfg, opts, trace);
+    let report = sim.run();
+    (report, sim)
+}
+
+#[test]
+fn resilience_controller_beats_independent_and_no_recovery() {
+    let (aware, aware_sim) = rack_loss_run(ResiliencePolicy::domain_aware(), true);
+    let (indep, _) = rack_loss_run(ResiliencePolicy::independent(), true);
+    let (none, _) = rack_loss_run(ResiliencePolicy::independent(), false);
+
+    // the map places the incident as designed: decode instances 0 and 1
+    // in rack 3, so the loss fells half the pool plus its pool servers
+    let map = aware_sim.domain_map();
+    assert_eq!(map.decode_rack(0), 3);
+    assert_eq!(map.decode_rack(1), 3);
+    assert_eq!(map.decode_rack(2), 4);
+
+    // conservation + availability: recovery (either flavor) saves every
+    // request; the no-recovery baseline provably loses work
+    assert_eq!(aware.requests_completed, N_RACK as u64);
+    assert_eq!(indep.requests_completed, N_RACK as u64);
+    assert_eq!(aware.availability(), 1.0);
+    assert_eq!(indep.availability(), 1.0);
+    assert_eq!(none.requests_completed + none.requests_lost, N_RACK as u64);
+    assert!(none.requests_lost > 0, "half the decode pool dying must lose work");
+    assert!(none.availability() < 1.0);
+
+    // the cascade expanded into member records sharing one injection
+    // timestamp and domain: 2 decode crashes + 4 pool-server failures
+    assert_eq!(aware.max_blast_radius(), 6, "{:?}", aware.faults);
+    let domains = aware.domain_stats();
+    assert_eq!(domains.len(), 1);
+    assert_eq!(domains[0].domain, 3);
+    assert_eq!(domains[0].crashes, 2);
+    assert!(domains[0].mean_mttr_us.unwrap() >= 10e6, "{:?}", domains[0]);
+    for f in &aware.faults {
+        assert_eq!(f.domain, Some(3), "{f:?}");
+    }
+
+    // the backfill path ran: prefill groups loaned into decode at
+    // detection and returned (or dissolved at end of run) when the
+    // replacements warm-loaded
+    let out = aware.resplit_count(Role::Prefill, Role::Decode);
+    let back = aware.resplit_count(Role::Decode, Role::Prefill);
+    assert!(out >= 1, "backfill must borrow a prefill group: {:?}", aware.resplits);
+    assert!(back <= out, "returns cannot outnumber loans: {:?}", aware.resplits);
+    assert!(aware_sim.backfill_loans().is_empty(), "no loan may outlive its fault");
+    assert!(indep.resplits.is_empty(), "independent recovery never resplits");
+
+    // acceptance: the domain-aware controller strictly beats independent
+    // recovery on goodput (same tokens, shorter outage trough) and both
+    // crush the no-recovery baseline
+    assert_eq!(aware.goodput_tokens, indep.goodput_tokens);
+    assert!(
+        aware.goodput_tokens_per_s() > indep.goodput_tokens_per_s(),
+        "backfill must strictly beat waiting out the replacement: {:.0} vs {:.0} tok/s",
+        aware.goodput_tokens_per_s(),
+        indep.goodput_tokens_per_s()
+    );
+    assert!(aware.goodput_tokens > none.goodput_tokens);
+    assert!(indep.goodput_tokens > none.goodput_tokens);
+}
+
+#[test]
+fn correlated_runs_are_bit_exact() {
+    let (a, _) = rack_loss_run(ResiliencePolicy::domain_aware(), true);
+    let (b, _) = rack_loss_run(ResiliencePolicy::domain_aware(), true);
+    assert_eq!(a.duration_us.to_bits(), b.duration_us.to_bits());
+    assert_eq!(a.output_tokens, b.output_tokens);
+    assert_eq!(a.goodput_tokens, b.goodput_tokens);
+    assert_eq!(a.ttft_us.p99.to_bits(), b.ttft_us.p99.to_bits());
+    assert_eq!(a.tpot_us.p99.to_bits(), b.tpot_us.p99.to_bits());
+    assert_eq!(a.resplits.len(), b.resplits.len());
+    assert_eq!(a.faults.len(), b.faults.len());
+    for (x, y) in a.faults.iter().zip(&b.faults) {
+        assert_eq!(x.t_us.to_bits(), y.t_us.to_bits());
+        assert_eq!(x.detected_us.to_bits(), y.detected_us.to_bits());
+        assert_eq!(x.requests_rehomed, y.requests_rehomed);
+        assert_eq!(x.domain, y.domain);
+    }
+}
+
+/// The preset's generated plan end to end: `correlated_rack_loss` carries
+/// a `CorrelatedProfile`, the plan drawn from it lands clustered incidents
+/// with domain-stamped records, and recovery completes the run.
+#[test]
+fn correlated_preset_generated_plan_serves() {
+    let sc = ScenarioSpec::by_name("correlated_rack_loss", 11).unwrap();
+    let profile = sc.correlated.expect("preset must carry a correlated profile");
+    let trace = generate_scenario(&sc, 600);
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    // generation-side map mirrors the sim's geometry (same serving config,
+    // initial prefill slots, same decode split)
+    let map = cm_infer::domains::FailureDomainMap::for_serving(
+        &cfg.topo,
+        &cfg.serving,
+        cfg.serving.prefill_instances,
+        2,
+    );
+    let opts = SimOptions {
+        seed: 11,
+        decode_instances: 2,
+        faults: Some(FaultOptions { recovery: true, ..profile.fault_options(11, &map) }),
+        resilience: ResiliencePolicy::domain_aware(),
+        ..SimOptions::default()
+    };
+    let report = ServeSim::new(cfg, opts, trace).run();
+    assert_eq!(report.requests_completed + report.requests_lost, 600);
+    assert_eq!(report.requests_lost, 0, "recovery must save everything");
+    assert!(!report.faults.is_empty(), "the generated plan must land incidents");
+    // clustered: some injection felled more than one component
+    assert!(report.max_blast_radius() >= 2, "{:?}", report.faults);
+    assert!(!report.domain_stats().is_empty());
+}

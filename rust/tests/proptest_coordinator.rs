@@ -429,6 +429,71 @@ fn prop_offload_chaos_conserves_books() {
 }
 
 #[test]
+fn prop_link_degradation_merges_per_plane_node_pair_key() {
+    use cm_infer::netsim::{DegradationMap, LinkDegradation, LinkKey, Plane};
+    // Overlapping LinkDegradation windows must merge — never shorten,
+    // never soften — *per (plane, node-pair) key*, not just globally:
+    // a reference model tracks every key's worst factor and latest end
+    // independently, and a degrade on one key must never perturb another.
+    check("link-degradation-per-key-merge", 150, |g| {
+        let mut map = DegradationMap::default();
+        // reference: per-key (factor, until) of the active window
+        let mut model: BTreeMap<LinkKey, LinkDegradation> = BTreeMap::new();
+        let planes = [Plane::Ub, Plane::Rdma, Plane::Vpc];
+        let mut now = 0.0f64;
+        let ops = g.usize(1..=40);
+        for _ in 0..ops {
+            now += g.f64(0.0, 500.0);
+            let plane = planes[g.usize(0..=2)];
+            let a = g.usize(0..=4) as u16;
+            let key = if g.bool() {
+                LinkKey::pair(plane, a, g.usize(0..=4) as u16)
+            } else {
+                LinkKey::node(plane, a)
+            };
+            let factor = g.f64(1.0, 8.0);
+            let duration = g.f64(0.0, 2_000.0);
+            let before = map.window(key);
+            map.degrade(key, now, factor, duration);
+            let after = map.window(key);
+            // merge on THIS key: never shorten, never soften, and at
+            // least as bad as the incoming incident alone
+            if before.is_active(now)
+                && (after.until_us < before.until_us || after.factor < before.factor)
+            {
+                return false;
+            }
+            let fresh = LinkDegradation::begin(now, factor, duration);
+            if after.until_us < fresh.until_us || after.factor < fresh.factor {
+                return false;
+            }
+            // reference model agrees bit-for-bit on the merged window
+            let expect =
+                model.get(&key).copied().unwrap_or_default().extend(now, factor, duration);
+            model.insert(key, expect);
+            if after != expect {
+                return false;
+            }
+            // no cross-key interference: every OTHER tracked key still
+            // reports exactly what the model holds for it (expired keys
+            // may have been pruned — both then read as healthy defaults)
+            for (&k, &w) in &model {
+                if k != key && w.is_active(now) && map.window(k) != w {
+                    return false;
+                }
+            }
+        }
+        // multipliers agree with the surviving windows everywhere
+        for (&k, &w) in &model {
+            if w.is_active(now) && map.window(k).multiplier(now) != w.multiplier(now) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
 fn prop_mempool_get_after_put_hits() {
     check("mempool-get-after-put", 60, |g| {
         let servers = g.usize(1..=6);
