@@ -17,9 +17,11 @@
 //! the §4.4.1 fault-resilience experiment. `correlated_rack_loss` injects
 //! clustered rack/PSU domain incidents and adds the domain-aware
 //! resilience leg (donor spreading, mass recall, decode backfill) against
-//! independent per-fault recovery — the correlated-chaos experiment.
+//! independent per-fault recovery — plus the packed-vs-spread *placement*
+//! comparison: rack anti-affinity bounds the incident's blast radius at a
+//! priced healthy-run locality cost (the placement-planner experiment).
 
-use cm_infer::config::{Ascend910cDie, Config, DeepSeekDims, SloConfig};
+use cm_infer::config::{Ascend910cDie, Config, DeepSeekDims, PlacementObjective, SloConfig};
 use cm_infer::coordinator::batcher::plan_for_slo;
 use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
 use cm_infer::domains::{FailureDomainMap, ResiliencePolicy};
@@ -42,17 +44,19 @@ fn explore_scenario(name: &str) {
         cfg.serving.decode_npus = 32;
     }
 
-    // (label, autoscale, offload, chaos recovery, resilience) legs:
-    // healthy presets compare frozen vs elastic vs the --no-offload
+    // (label, autoscale, offload, chaos recovery, resilience, placement)
+    // legs: healthy presets compare frozen vs elastic vs the --no-offload
     // ablation; independent-chaos presets compare recovery vs baseline;
     // the correlated preset adds the domain-aware resilience leg against
-    // the independent-recovery one.
+    // the independent-recovery one, plus the packed-vs-spread placement
+    // comparison (blast radius bought at a priced locality cost).
     struct Leg {
         label: &'static str,
         autoscale: bool,
         offload: bool,
         chaos: Option<bool>,
         resilience: ResiliencePolicy,
+        placement: PlacementObjective,
     }
     let leg = |label, autoscale, offload, chaos, resilience| Leg {
         label,
@@ -60,13 +64,28 @@ fn explore_scenario(name: &str) {
         offload,
         chaos,
         resilience,
+        placement: PlacementObjective::Packed,
     };
     let ind = ResiliencePolicy::independent();
     let legs: Vec<Leg> = if sc.correlated.is_some() {
         vec![
-            leg("healthy (no faults)", false, true, None, ind),
+            leg("healthy (no faults, packed)", false, true, None, ind),
+            Leg {
+                placement: PlacementObjective::SpreadRacks,
+                ..leg("healthy (spread racks — locality cost)", false, true, None, ind)
+            },
+            Leg {
+                placement: PlacementObjective::SpreadRacks,
+                ..leg(
+                    "correlated chaos + domain-aware resilience + spread racks",
+                    false,
+                    true,
+                    Some(true),
+                    ResiliencePolicy::domain_aware(),
+                )
+            },
             leg(
-                "correlated chaos + domain-aware resilience",
+                "correlated chaos + domain-aware resilience (packed)",
                 false,
                 true,
                 Some(true),
@@ -89,12 +108,16 @@ fn explore_scenario(name: &str) {
         ]
     };
     println!("== scenario `{}` ({n} requests) ==\n", sc.name);
-    for Leg { label, autoscale, offload, chaos, resilience } in legs {
+    for Leg { label, autoscale, offload, chaos, resilience, placement } in legs {
+        let mut cfg = cfg.clone();
+        cfg.serving.placement = placement;
         let faults = match (chaos, sc.fault_profile, sc.correlated) {
             (Some(recovery), profile, correlated)
                 if profile.is_some() || correlated.is_some() =>
             {
-                // a preset carrying BOTH profiles gets the plans merged
+                // a preset carrying BOTH profiles gets the plans merged;
+                // the incident plan is drawn against the leg's own
+                // (placement-objective-aware) layout
                 let mut fo = match correlated {
                     Some(cp) => {
                         let map = FailureDomainMap::for_serving(
@@ -124,8 +147,18 @@ fn explore_scenario(name: &str) {
             resilience,
             ..SimOptions::default()
         };
-        let r = ServeSim::new(cfg.clone(), opts, trace.clone()).run();
+        let mut sim = ServeSim::new(cfg.clone(), opts, trace.clone());
+        let r = sim.run();
         println!("{label}:");
+        let pr = sim.placement_report();
+        println!(
+            "  placement {}: score {:.2} (locality {:.2}, blast {:.2}; max decode/rack {})",
+            placement.name(),
+            pr.placement_score,
+            pr.locality_score,
+            pr.blast_score,
+            pr.decode_rack_max
+        );
         println!(
             "  TTFT ms: p50 {:8.1}  p99 {:8.1}   TPOT ms: p50 {:6.1}  p99 {:6.1}",
             r.ttft_us.p50 / 1e3,

@@ -8,7 +8,7 @@ mod serving;
 pub mod toml;
 
 pub use hw::{Ascend910cDie, CloudMatrixTopo, DeepSeekDims, NetPlaneParams, UB_PLANES};
-pub use serving::{DeploymentPreset, ServingConfig, SloConfig};
+pub use serving::{DeploymentPreset, PlacementObjective, ServingConfig, SloConfig};
 
 use crate::util::Result;
 use std::path::Path;
@@ -85,6 +85,15 @@ impl Config {
             t.set_bool("microbatch", &mut cfg.serving.microbatch);
             t.set_bool("mtp", &mut cfg.serving.mtp);
             t.set_f64("mtp_acceptance", &mut cfg.serving.mtp_acceptance);
+            let mut placement = cfg.serving.placement.name().to_string();
+            t.set_string("placement", &mut placement);
+            match PlacementObjective::by_name(&placement) {
+                Some(obj) => cfg.serving.placement = obj,
+                None => crate::bail!(
+                    "unknown serving.placement `{placement}` \
+                     (packed | spread_racks | spread_planes)"
+                ),
+            }
         }
         if let Some(t) = doc.table("serving.slo") {
             t.set_f64("tpot_ms", &mut cfg.serving.slo.tpot_ms);
@@ -112,14 +121,17 @@ mod tests {
     fn toml_overrides() {
         let cfg = Config::from_toml(
             "[die]\nbf16_tflops = 400.0\n[serving]\nmtp = false\ndecode_npus = 32\n\
-             [serving.slo]\ntpot_ms = 15.0\n",
+             placement = \"spread_racks\"\n[serving.slo]\ntpot_ms = 15.0\n",
         )
         .unwrap();
         assert!((cfg.die.bf16_tflops - 400.0).abs() < 1e-9);
         assert!(!cfg.serving.mtp);
         assert_eq!(cfg.serving.decode_npus, 32);
+        assert_eq!(cfg.serving.placement, PlacementObjective::SpreadRacks);
         assert!((cfg.serving.slo.tpot_ms - 15.0).abs() < 1e-9);
         // untouched defaults survive
         assert_eq!(cfg.topo.nodes, 48);
+        // an unknown objective is a load-time error, not a silent default
+        assert!(Config::from_toml("[serving]\nplacement = \"striped\"\n").is_err());
     }
 }

@@ -1,5 +1,46 @@
 //! Serving deployment configuration (paper §4.1 / §5.1).
 
+/// Deployment-layout objective for the placement planner
+/// ([`crate::domains::PlacementPlanner`]): how prefill groups, decode
+/// instances, and memory-pool servers are laid out over the supernode's
+/// racks and UB sub-planes before the first request arrives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementObjective {
+    /// Maximal UB locality: components take contiguous NPU runs in
+    /// physical order (the calibrated §5.1 layout and the default).
+    #[default]
+    Packed,
+    /// Rack anti-affinity: component home nodes interleave across racks so
+    /// no rack's loss fells more components than under `Packed` — blast
+    /// radius bounded at a (marginal, modeled) cross-rack locality cost.
+    SpreadRacks,
+    /// `SpreadRacks` plus UB-plane striping: within each rack, nodes are
+    /// visited in home-plane order so an instance's nodes (and the
+    /// component home planes) additionally spread across the 7 sub-planes.
+    SpreadPlanes,
+}
+
+impl PlacementObjective {
+    /// Parse a CLI/TOML name (`packed`, `spread_racks`, `spread_planes`).
+    pub fn by_name(name: &str) -> Option<PlacementObjective> {
+        match name {
+            "packed" => Some(PlacementObjective::Packed),
+            "spread_racks" => Some(PlacementObjective::SpreadRacks),
+            "spread_planes" => Some(PlacementObjective::SpreadPlanes),
+            _ => None,
+        }
+    }
+
+    /// The canonical name accepted by [`PlacementObjective::by_name`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementObjective::Packed => "packed",
+            PlacementObjective::SpreadRacks => "spread_racks",
+            PlacementObjective::SpreadPlanes => "spread_planes",
+        }
+    }
+}
+
 /// Latency service-level objectives (paper Table 5).
 #[derive(Debug, Clone, Copy)]
 pub struct SloConfig {
@@ -59,6 +100,9 @@ pub struct ServingConfig {
     pub context_caching: bool,
     /// Route cache accesses over UB (true) or fall back to VPC (Fig 23).
     pub cache_over_ub: bool,
+    /// Deployment-layout objective the placement planner lays the PDC
+    /// roles out under ([`crate::domains::PlacementPlanner`]).
+    pub placement: PlacementObjective,
     /// Latency SLOs (tier 0).
     pub slo: SloConfig,
     /// Additional SLO tiers for mixed-SLO serving (Table 5 mechanism):
@@ -86,6 +130,7 @@ impl ServingConfig {
             early_quant: true,
             context_caching: true,
             cache_over_ub: true,
+            placement: PlacementObjective::Packed,
             slo: SloConfig::default(),
             tier_slos: Vec::new(),
         }
@@ -148,5 +193,19 @@ mod tests {
         assert_eq!(s.decode_ep_degree(), 320);
         assert_eq!(s.prefill_ep_degree(), 32);
         assert_eq!(s.total_npus(), 6 * 16 + 160); // 256-NPU slice (§5.1)
+        assert_eq!(s.placement, PlacementObjective::Packed);
+    }
+
+    #[test]
+    fn placement_objective_names_round_trip() {
+        for obj in [
+            PlacementObjective::Packed,
+            PlacementObjective::SpreadRacks,
+            PlacementObjective::SpreadPlanes,
+        ] {
+            assert_eq!(PlacementObjective::by_name(obj.name()), Some(obj));
+        }
+        assert_eq!(PlacementObjective::by_name("striped"), None);
+        assert_eq!(PlacementObjective::default(), PlacementObjective::Packed);
     }
 }

@@ -44,12 +44,27 @@
 //! / resplit preempts) costs nothing. Every transition lands in the
 //! report's [`OffloadEvent`] log.
 //!
-//! ## Failure domains (correlated chaos)
+//! ## Failure domains (correlated chaos) and planned placement
 //!
 //! The sim owns a [`crate::domains::ResilienceController`]: the
 //! [`crate::domains::FailureDomainMap`] laying the deployment out over
 //! nested physical domains (node → rack/PSU → UB plane) plus the
-//! [`crate::domains::ResiliencePolicy`] in force. A
+//! [`crate::domains::ResiliencePolicy`] in force. The layout itself is
+//! *chosen* by the [`crate::domains::PlacementPlanner`] under the serving
+//! config's [`crate::config::PlacementObjective`]: `Packed` (the default)
+//! reproduces the historical contiguous layout bit-for-bit; the spread
+//! objectives bound blast radius at a priced locality cost — every
+//! prefill batch and decode step is multiplied by the planner's
+//! per-component cross-rack tax (exactly 1.0 under `Packed`).
+//!
+//! Flows are *plane-attributed*: KV pushes, UB pool fetches, and the
+//! dispatch/combine share of steps/batches are homed on their component's
+//! UB sub-plane ([`FailureDomainMap::ub_plane`] of the home node). A
+//! [`FaultKind::PlaneBrownout`] opens a plane-scoped
+//! [`DegradationMap`] window that degrades only flows homed on the lost
+//! plane (with a single configured plane it degenerates to the legacy
+//! whole-fabric window); the extra time is accounted per plane in
+//! [`ServingReport::plane_exposure_us`]. A
 //! [`FaultKind::RackLoss`] expands against the map at injection (member
 //! instances crash, member pool servers fail, rack links degrade in the
 //! per-(plane, node-pair) [`DegradationMap`]); with the domain-aware
@@ -64,7 +79,7 @@ use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
 
 use crate::cache::ContextCache;
-use crate::config::Config;
+use crate::config::{Config, UB_PLANES};
 use crate::coordinator::autoscale::{
     offload, Autoscaler, ElasticAction, OffloadSignals, RecallReason, SplitPlan, WorkloadStats,
 };
@@ -75,7 +90,9 @@ use crate::coordinator::prefill::{batch_latency_us, PrefillInstance};
 use crate::coordinator::request::{RequestPhase, RequestState};
 use crate::coordinator::router::{InstanceState, Router, RouterKind};
 use crate::coordinator::transfer::{kv_transfer, TransferCost, TransferScheduler};
-use crate::domains::{FailureDomainMap, ResilienceController, ResiliencePolicy};
+use crate::domains::{
+    FailureDomainMap, PlacementPlanner, PlacementReport, ResilienceController, ResiliencePolicy,
+};
 use crate::faults::{FaultKind, FaultOptions, FaultRecord};
 use crate::mempool::{Key, MemPool, NamespaceId};
 use crate::metrics::{
@@ -352,6 +369,17 @@ pub struct ServeSim {
     links: DegradationMap,
     /// Failure-domain layout + the domain-aware recovery policy in force.
     resilience: ResilienceController,
+    /// Scored layout report from the placement planner (this run's
+    /// locality-vs-blast-radius trade).
+    placement: PlacementReport,
+    /// Per prefill-slot placement locality tax (≥ 1.0; exactly 1.0 under
+    /// the default `Packed` objective).
+    pf_tax: Vec<f64>,
+    /// Per decode-instance placement locality tax.
+    dec_tax: Vec<f64>,
+    /// Extra virtual µs charged by UB sub-plane brown-out windows to flows
+    /// homed on each plane (report: `plane_exposure_us`).
+    plane_exposure_us: Vec<f64>,
     /// Prefill NPU groups on loan to the decode pool, backfilling crashed
     /// decode capacity until the replacement warm-loads.
     backfill_loans: Vec<BackfillLoan>,
@@ -529,12 +557,17 @@ impl ServeSim {
             .as_ref()
             .map(|_| pool.controller.create_namespace("chaos-kv"));
 
-        // failure-domain layout (node → rack/PSU) over the deployment's
-        // physical NPU placement + the domain-aware policy in force
-        let resilience = ResilienceController::new(
-            FailureDomainMap::for_serving(&cfg.topo, &cfg.serving, max_pf_slots, n_dec),
-            opts.resilience,
-        );
+        // failure-domain layout (node → rack/PSU) *planned* under the
+        // serving config's placement objective (`Packed` reproduces the
+        // historical contiguous layout bit-for-bit) + the domain-aware
+        // policy in force; the plan also prices each component's marginal
+        // cross-rack locality tax
+        let plan = PlacementPlanner::new(&cfg.topo, cfg.serving.placement)
+            .plan(&cfg.serving, max_pf_slots, n_dec);
+        let resilience = ResilienceController::new(plan.map, opts.resilience);
+        let placement = plan.report;
+        let pf_tax = plan.prefill_tax;
+        let dec_tax = plan.decode_tax;
 
         let target_prefill_npus = n_pf_initial * quantum;
         let mut sim = ServeSim {
@@ -588,6 +621,10 @@ impl ServeSim {
             straggle: vec![LinkDegradation::default(); n_dec],
             links: DegradationMap::default(),
             resilience,
+            placement,
+            pf_tax,
+            dec_tax,
+            plane_exposure_us: vec![0.0; UB_PLANES],
             backfill_loans: Vec::new(),
             undetected: Vec::new(),
             fault_records: Vec::new(),
@@ -754,10 +791,6 @@ impl ServeSim {
             }
         }
 
-        // a degraded fabric stretches pool fetches (chaos LinkDegrade /
-        // rack-loss cascades), at the worst multiplier on the pool plane
-        fetch_us *= self.links.plane_multiplier(self.pool_plane(), self.now);
-
         let compute = prompt_tokens - reused;
         let decision = self.router.route(session, compute as u64);
         if !decision.cache_usable {
@@ -766,6 +799,11 @@ impl ServeSim {
             reused = 0;
             fetch_us = 0.0;
         }
+        // a degraded fabric stretches pool fetches (chaos LinkDegrade /
+        // rack-loss cascades), at the worst multiplier on the pool plane;
+        // a UB-riding fetch is additionally homed on the consuming
+        // instance's sub-plane (scoped brown-outs)
+        fetch_us = self.pool_fetch_cost(fetch_us, decision.instance);
         self.cache_fetch_us_total += fetch_us;
         self.peak_router_imbalance = self.peak_router_imbalance.max(self.router.imbalance());
 
@@ -797,6 +835,10 @@ impl ServeSim {
             self.cfg.serving.npus_per_prefill,
             self.eplb_imbalance,
         );
+        // placement locality: a spread slot's dispatch/combine crosses
+        // racks beyond the calibrated packed layout (tax == 1.0 under
+        // `Packed`)
+        lat *= self.pf_tax[inst];
         // §6.2.1 donor tax: an instance hosting offloaded decode attention
         // donates HBM bandwidth, so its own batches run slower by the
         // modeled retained-throughput factor
@@ -807,6 +849,11 @@ impl ServeSim {
                 self.donor_tax_us += extra;
             }
         }
+        // the batch's flows are homed on the slot's UB sub-plane: a scoped
+        // brown-out there stretches it for the window. Applied (and its
+        // exposure accounted) on the fully taxed latency, like the decode
+        // step's spike/straggle path — it measures actual extra wall time.
+        lat = self.ub_homed_cost(lat, self.resilience.map.prefill_node(inst));
         let busy = lat * self.cfg.serving.npus_per_prefill as f64;
         self.acc_prefill_busy_npu_us += busy;
         self.win_prefill_busy_npu_us += busy;
@@ -836,12 +883,12 @@ impl ServeSim {
             return;
         };
         // RDMA KV push out of this instance: degraded when any link
-        // touching its home node is (rack-loss cascades scope this)
-        let link_mult = self.links.node_multiplier(
-            Plane::Rdma,
-            self.resilience.map.prefill_node(inst),
-            self.now,
-        );
+        // touching its home node is (rack-loss cascades scope this); the
+        // push's striping is homed on the node's UB sub-plane, so a
+        // scoped brown-out there stretches it too (worst-case max, the
+        // DegradationMap convention)
+        let pf_node = self.resilience.map.prefill_node(inst);
+        let link_mult = self.links.node_multiplier(Plane::Rdma, pf_node, self.now);
         self.router.complete(inst, batch.compute_tokens as u64);
         // store the new KV blocks back to the context cache (async; cost
         // charged to the pool but does not extend the critical path)
@@ -876,7 +923,8 @@ impl ServeSim {
                 // suffix — all of it moves to the new decode instance
                 let kv_tokens = st.spec.prompt_tokens + st.generated;
                 let cost = kv_transfer(&self.pool.net, &self.cfg.model, kv_tokens);
-                let cost = TransferCost { rdma_us: cost.rdma_us * link_mult, ..cost };
+                let mult = self.ub_homed_multiplier(link_mult, pf_node, cost.rdma_us);
+                let cost = TransferCost { rdma_us: cost.rdma_us * mult, ..cost };
                 let done = self.transfers.begin(rid, self.now, &cost);
                 self.push(done, Event::TransferDone(rid));
                 continue;
@@ -896,7 +944,8 @@ impl ServeSim {
             }
             st.phase = RequestPhase::Transferring;
             let cost = kv_transfer(&self.pool.net, &self.cfg.model, st.spec.prompt_tokens);
-            let cost = TransferCost { rdma_us: cost.rdma_us * link_mult, ..cost };
+            let mult = self.ub_homed_multiplier(link_mult, pf_node, cost.rdma_us);
+            let cost = TransferCost { rdma_us: cost.rdma_us * mult, ..cost };
             let done = self.transfers.begin(rid, self.now, &cost);
             self.push(done, Event::TransferDone(rid));
         }
@@ -946,6 +995,51 @@ impl ServeSim {
         } else {
             Plane::Vpc
         }
+    }
+
+    /// Charge a compute-path cost (prefill batch, decode step) the
+    /// brown-out window of its home UB sub-plane: the component's
+    /// dispatch/combine flows re-stripe over the surviving planes while
+    /// the window is open. The excess over the undegraded cost is
+    /// accounted as that plane's degradation exposure. Bit-identical
+    /// pass-through when no brown-out window is active.
+    fn ub_homed_cost(&mut self, cost_us: f64, node: u16) -> f64 {
+        let plane = self.resilience.map.ub_plane(node);
+        let pm = self.links.ub_plane_multiplier(plane, self.now);
+        if pm > 1.0 {
+            self.plane_exposure_us[plane] += cost_us * (pm - 1.0);
+            cost_us * pm
+        } else {
+            cost_us
+        }
+    }
+
+    /// Combine a flow's already-computed link multiplier with the
+    /// brown-out window of its home UB sub-plane — worst-case `max`, the
+    /// [`DegradationMap`] convention — charging only the *excess* the
+    /// plane window adds (over `cost_us`) to that plane's exposure.
+    fn ub_homed_multiplier(&mut self, other: f64, node: u16, cost_us: f64) -> f64 {
+        let plane = self.resilience.map.ub_plane(node);
+        let pm = self.links.ub_plane_multiplier(plane, self.now);
+        if pm > other {
+            self.plane_exposure_us[plane] += cost_us * (pm - other);
+            pm
+        } else {
+            other
+        }
+    }
+
+    /// Pool-fetch cost under the current fabric state: the pool plane's
+    /// worst scoped/global multiplier, plus — when the fetch rides UB —
+    /// the brown-out window of the consuming prefill slot's home
+    /// sub-plane.
+    fn pool_fetch_cost(&mut self, fetch_us: f64, inst: usize) -> f64 {
+        let other = self.links.plane_multiplier(self.pool_plane(), self.now);
+        if !self.cfg.serving.cache_over_ub {
+            return fetch_us * other;
+        }
+        let node = self.resilience.map.prefill_node(inst);
+        fetch_us * self.ub_homed_multiplier(other, node, fetch_us)
     }
 
     /// Drop a terminal request's chaos-KV residency entry: its prompt KV no
@@ -1058,6 +1152,10 @@ impl ServeSim {
             let off_step = off_layer * self.cfg.model.n_layers as f64 + STEP_OVERHEAD_US;
             step_us = off_step.min(step_us);
         }
+        // placement locality: a spread instance's dispatch/combine crosses
+        // racks beyond the calibrated packed layout and pays the planner's
+        // marginal tax (exactly 1.0 under `Packed`)
+        let step_us = step_us * self.dec_tax[inst];
         // post-recall TPOT degradation window (donor-failure recalls): the
         // decode side re-stages the FA working set it pulled back. The
         // spike's accounted cost includes any concurrent straggler factor
@@ -1067,6 +1165,10 @@ impl ServeSim {
         let straggle = self.straggle[inst].multiplier(self.now);
         self.recall_spike_us += step_us * straggle * (spike - 1.0);
         let step_us = step_us * spike * straggle;
+        // the instance's dispatch/combine flows are homed on its node's UB
+        // sub-plane: a scoped brown-out re-stripes them over the surviving
+        // planes for the window (1.0 when no brown-out is active)
+        let step_us = self.ub_homed_cost(step_us, self.resilience.map.decode_node(inst));
         self.acc_decode_busy_npu_us += step_us * self.decodes[inst].npus as f64;
         let step_end = self.now + step_us;
         let emits = self.decodes[inst].step(&self.cfg.serving);
@@ -1619,17 +1721,14 @@ impl ServeSim {
             }
             FaultKind::LinkDegrade { factor, duration_us } => {
                 self.links.degrade_global(self.now, factor, duration_us);
-                self.fault_records.push(FaultRecord {
-                    t_us: self.now,
-                    kind: ev.kind,
-                    detected_us: self.now,
-                    recovered_us: Some(self.now + duration_us),
-                    requests_rehomed: 0,
-                    requests_lost: 0,
-                    kv_refetched: 0,
-                    reprefilled: 0,
-                    domain: None,
-                });
+                self.push_window_record(ev.kind, duration_us);
+            }
+            FaultKind::PlaneBrownout { plane, factor, duration_us } => {
+                // scoped window: only flows homed on the lost sub-plane
+                // degrade (a single-plane fabric degenerates to the legacy
+                // whole-fabric window inside `brownout`)
+                self.links.brownout(plane, UB_PLANES, self.now, factor, duration_us);
+                self.push_window_record(ev.kind, duration_us);
             }
             FaultKind::Straggler { instance, factor, duration_us } => {
                 let eligible: Vec<usize> = (0..self.decodes.len())
@@ -1731,6 +1830,23 @@ impl ServeSim {
                 self.links.degrade(LinkKey::node(plane, node), self.now, factor, duration_us);
             }
         }
+    }
+
+    /// Record a self-expiring degradation-window fault (`LinkDegrade` /
+    /// `PlaneBrownout`): nothing strands, nothing re-homes — the window
+    /// counts as recovered the instant it expires.
+    fn push_window_record(&mut self, kind: FaultKind, duration_us: Micros) {
+        self.fault_records.push(FaultRecord {
+            t_us: self.now,
+            kind,
+            detected_us: self.now,
+            recovered_us: Some(self.now + duration_us),
+            requests_rehomed: 0,
+            requests_lost: 0,
+            kv_refetched: 0,
+            reprefilled: 0,
+            domain: None,
+        });
     }
 
     /// Failure-detection epoch: newly-dead components are noticed, their
@@ -1938,6 +2054,9 @@ impl ServeSim {
                 self.fault_records[rec].kv_refetched += 1;
                 let st = &mut self.requests[rid as usize];
                 st.phase = RequestPhase::Transferring;
+                // recovery re-fetches take the plane-wide worst case, not
+                // a home sub-plane window: the consuming instance is only
+                // chosen at TransferDone, so the flow has no home yet
                 let delay = fetch_us * self.links.plane_multiplier(self.pool_plane(), self.now);
                 let t = self.now + delay;
                 self.push(t, Event::TransferDone(rid));
@@ -2234,6 +2353,9 @@ impl ServeSim {
             requests_lost: self.lost as u64,
             tokens_lost,
             goodput_tokens,
+            plane_exposure_us: self.plane_exposure_us.clone(),
+            placement_objective: self.cfg.serving.placement,
+            placement_score: self.placement.placement_score,
         }
     }
 
@@ -2318,6 +2440,18 @@ impl ServeSim {
     /// The failure-domain layout this run is placed over (tests, tools).
     pub fn domain_map(&self) -> &FailureDomainMap {
         &self.resilience.map
+    }
+
+    /// The scored placement-layout report this run was planned with
+    /// (tests, tools).
+    pub fn placement_report(&self) -> &PlacementReport {
+        &self.placement
+    }
+
+    /// Per-component placement locality taxes `(prefill slots, decode
+    /// instances)` in effect — all exactly 1.0 under `Packed` (tests).
+    pub fn placement_taxes(&self) -> (&[f64], &[f64]) {
+        (&self.pf_tax, &self.dec_tax)
     }
 
     /// Backfill loans currently out, as `(prefill slot, fault record)`
@@ -2728,6 +2862,63 @@ mod tests {
             report.duration_us,
             healthy.0.duration_us
         );
+    }
+
+    #[test]
+    fn plane_brownout_degrades_only_plane_homed_flows() {
+        let healthy = run_with(200, SimOptions { seed: 3, ..SimOptions::default() });
+        // the single decode instance homes at node 12 → UB sub-plane 5;
+        // prefill slots home on planes {0, 1, 2, 3, 4, 6}
+        let ev = vec![FaultEvent {
+            t_us: 1e5,
+            kind: FaultKind::PlaneBrownout { plane: 5, factor: 7.0 / 6.0, duration_us: 1e9 },
+        }];
+        let opts = SimOptions {
+            faults: Some(FaultOptions {
+                plan: FaultPlan::new(ev),
+                heartbeat_us: 1e5,
+                recovery: true,
+                recovery_latency_us: 1e6,
+            }),
+            seed: 3,
+            ..SimOptions::default()
+        };
+        let (report, sim) = run_with(200, opts);
+        assert_eq!(report.requests_completed, 200);
+        assert_eq!(sim.domain_map().ub_plane(sim.domain_map().decode_node(0)), 5);
+        // only flows homed on the browned-out plane paid for it
+        assert!(report.plane_exposure_us[5] > 0.0, "{:?}", report.plane_exposure_us);
+        for (p, &e) in report.plane_exposure_us.iter().enumerate() {
+            if p != 5 {
+                assert_eq!(e, 0.0, "plane {p} hosts no decode flows and must be untouched");
+            }
+        }
+        // the drag is real: every decode step inside the window ran slower
+        assert!(report.duration_us > healthy.0.duration_us);
+        assert_eq!(report.faults.len(), 1);
+        assert_eq!(report.requests_lost, 0);
+    }
+
+    #[test]
+    fn spread_placement_completes_and_reports_the_trade() {
+        use crate::config::PlacementObjective;
+        let mut cfg = small_cfg();
+        cfg.serving.placement = PlacementObjective::SpreadRacks;
+        let trace = generate(&WorkloadSpec::paper_default(4), 150);
+        let opts = SimOptions { seed: 4, decode_instances: 4, ..SimOptions::default() };
+        let mut sim = ServeSim::new(cfg, opts, trace);
+        let report = sim.run();
+        assert_eq!(report.requests_completed, 150);
+        assert_eq!(report.placement_objective, PlacementObjective::SpreadRacks);
+        assert!(report.placement_score > 0.0 && report.placement_score <= 1.0);
+        // the locality cost is priced but marginal (≤ the full tax rate)
+        let (pf_tax, dec_tax) = sim.placement_taxes();
+        assert!(pf_tax.iter().chain(dec_tax).all(|&t| (1.0..1.05).contains(&t)));
+        // the packed default prices no tax at all — bit-exact legacy path
+        let (_, packed) = run_with(50, SimOptions::default());
+        let (pf0, dec0) = packed.placement_taxes();
+        assert!(pf0.iter().chain(dec0).all(|&t| t == 1.0));
+        assert_eq!(packed.placement_report().locality_score, 1.0);
     }
 
     #[test]

@@ -28,12 +28,28 @@
 //!   backfilled by borrowing a prefill NPU group (role switch) instead of
 //!   idling through the full replacement latency.
 //!
+//! The layout itself is *chosen*, not given: [`PlacementPlanner`] (the
+//! [`placement`] module) lays the deployment out under a
+//! [`crate::config::PlacementObjective`] — `Packed` locality, `SpreadRacks`
+//! anti-affinity, or `SpreadPlanes` striping — and
+//! [`FailureDomainMap::for_serving`] is simply the planner run on the
+//! serving config's objective.
+//!
 //! The simulator-side enactment lives in [`crate::coordinator::sim`]; the
 //! per-domain MTTR/blast-radius accounting in [`crate::metrics`].
 
+pub mod placement;
+
+pub use placement::{CROSS_RACK_STEP_TAX, PlacementPlan, PlacementPlanner, PlacementReport};
+
+// placement's objective knob lives in `config` (it is deployment
+// configuration); re-exported here so placement users find it next to
+// the planner.
+pub use crate::config::PlacementObjective;
+
 use crate::config::{CloudMatrixTopo, ServingConfig, UB_PLANES};
 use crate::faults::{FaultEvent, FaultKind, FaultOptions, FaultPlan};
-use crate::util::{split_even, Rng};
+use crate::util::Rng;
 use crate::Micros;
 
 /// Static physical layout of a PDC deployment over the supernode's failure
@@ -56,35 +72,35 @@ impl FailureDomainMap {
     /// Build the map for a deployment: `pf_slots` prefill instance slots
     /// (including elastic scale-out slots), `decode_instances` decode-pool
     /// instances over `serving.decode_npus`, and one pool server per node
-    /// of the slice (minimum two, matching the sim's pool sizing).
+    /// of the slice (minimum two, matching the sim's pool sizing). The
+    /// layout is chosen by the [`PlacementPlanner`] under the serving
+    /// config's [`crate::config::PlacementObjective`]; the default
+    /// `Packed` objective reproduces the historical contiguous layout
+    /// bit-for-bit.
     pub fn for_serving(
         topo: &CloudMatrixTopo,
         serving: &ServingConfig,
         pf_slots: usize,
         decode_instances: usize,
     ) -> FailureDomainMap {
-        let npn = topo.npus_per_node.max(1);
-        let total = serving.total_npus();
-        let nodes = total.div_ceil(npn).max(1);
-        let quantum = serving.npus_per_prefill.max(1);
-        let home = |npu: usize| ((npu / npn).min(nodes - 1)) as u16;
-        let pf_home_node: Vec<u16> = (0..pf_slots).map(|i| home(i * quantum)).collect();
-        let dec_start = total.saturating_sub(serving.decode_npus);
-        let sizes = split_even(serving.decode_npus, decode_instances.max(1));
-        let mut at = dec_start;
-        let dec_home_node: Vec<u16> = sizes
-            .iter()
-            .map(|&sz| {
-                let n = home(at);
-                at += sz;
-                n
-            })
-            .collect();
-        let pool_servers = (total / npn).max(2);
-        let pool_node: Vec<u16> = (0..pool_servers).map(|s| (s % nodes) as u16).collect();
+        PlacementPlanner::new(topo, serving.placement)
+            .plan(serving, pf_slots, decode_instances)
+            .map
+    }
+
+    /// Assemble a map from an explicit component → node assignment (the
+    /// [`PlacementPlanner`] output path; tests may construct layouts
+    /// directly).
+    pub fn from_parts(
+        nodes: usize,
+        nodes_per_rack: usize,
+        pf_home_node: Vec<u16>,
+        dec_home_node: Vec<u16>,
+        pool_node: Vec<u16>,
+    ) -> FailureDomainMap {
         FailureDomainMap {
-            nodes,
-            nodes_per_rack: topo.nodes_per_rack.max(1),
+            nodes: nodes.max(1),
+            nodes_per_rack: nodes_per_rack.max(1),
             pf_home_node,
             dec_home_node,
             pool_node,
@@ -105,7 +121,7 @@ impl FailureDomainMap {
     /// connects to all [`UB_PLANES`] planes; the model charges a node's
     /// brown-out exposure to one home plane).
     pub fn ub_plane(&self, node: u16) -> usize {
-        node as usize % UB_PLANES
+        node_home_plane(node as usize)
     }
 
     /// Home node of a prefill instance slot.
@@ -188,9 +204,12 @@ pub struct CorrelatedProfile {
     pub horizon_us: Micros,
     /// Rack/PSU loss incidents (each blasts every member component).
     pub rack_incidents: usize,
-    /// UB sub-plane brown-outs: one of the [`UB_PLANES`] planes drops out,
-    /// shaving `1/planes` of aggregate all-to-all bandwidth — modeled as a
-    /// whole-fabric `LinkDegrade` at `planes/(planes-1)`.
+    /// UB sub-plane brown-outs: one of the [`UB_PLANES`] planes drops out.
+    /// Emitted as a plane-scoped [`FaultKind::PlaneBrownout`]: only flows
+    /// *homed* on the lost plane ([`FailureDomainMap::ub_plane`]) re-stripe
+    /// over the survivors and run at [`brownout_factor`]; every other flow
+    /// is untouched (the old model charged the same factor to the whole
+    /// fabric).
     pub plane_brownouts: usize,
     /// Bandwidth division factor on the lost rack's links while power is
     /// restored.
@@ -242,13 +261,14 @@ impl CorrelatedProfile {
                 },
             });
         }
-        let planes = UB_PLANES as f64;
         for _ in 0..self.plane_brownouts {
             let t_us = self.horizon_us * (0.1 + 0.8 * rng.f64());
+            let plane = rng.below(UB_PLANES as u64) as usize;
             events.push(FaultEvent {
                 t_us,
-                kind: FaultKind::LinkDegrade {
-                    factor: planes / (planes - 1.0),
+                kind: FaultKind::PlaneBrownout {
+                    plane,
+                    factor: brownout_factor(UB_PLANES),
                     duration_us: self.degrade_duration_us,
                 },
             });
@@ -266,6 +286,28 @@ impl CorrelatedProfile {
             ..FaultOptions::default()
         }
     }
+}
+
+/// The home-plane formula every plane-attributed consumer shares: the
+/// sub-plane a node's flows are charged to. [`FailureDomainMap::ub_plane`]
+/// (what brown-out windows degrade by) and the placement planner's
+/// plane-striping/score metrics all route through this single definition,
+/// so the objective being optimized can never decouple from the fault
+/// model.
+pub fn node_home_plane(node: usize) -> usize {
+    node % UB_PLANES
+}
+
+/// Per-flow slow-down for flows homed on a browned-out UB sub-plane: the
+/// flow loses its home lane and re-stripes over the `planes - 1`
+/// survivors. Numerically the same drag the pre-scoped model charged the
+/// *whole* fabric — now charged only where it belongs, so a brown-out's
+/// aggregate cost shrinks with plane-diverse placement. With `planes == 1`
+/// there are no survivors to re-stripe over and the caller
+/// ([`crate::netsim::DegradationMap::brownout`]) degenerates to the legacy
+/// whole-fabric window instead of using this factor.
+pub fn brownout_factor(planes: usize) -> f64 {
+    planes as f64 / (planes as f64 - 1.0)
 }
 
 /// Which domain-aware behaviors the [`ResilienceController`] enacts.
@@ -443,8 +485,13 @@ mod tests {
                     assert!(map.rack_population(rack) > 0, "incident on empty rack {rack}");
                     assert_eq!(factor, p.degrade_factor);
                 }
-                FaultKind::LinkDegrade { factor, .. } => {
-                    // a 1-of-7 plane brown-out is a mild whole-fabric drag
+                FaultKind::PlaneBrownout { plane, factor, .. } => {
+                    // scoped to one of the 7 sub-planes: flows homed there
+                    // re-stripe over the 6 survivors at 7/6; other flows
+                    // are untouched (the old model dragged the whole
+                    // fabric by this factor)
+                    assert!(plane < UB_PLANES, "{plane}");
+                    assert_eq!(factor, brownout_factor(UB_PLANES));
                     assert!(factor > 1.0 && factor < 1.3, "{factor}");
                 }
                 other => panic!("unexpected correlated event {other:?}"),

@@ -1,0 +1,565 @@
+//! Domain-aware placement planner: *choose* the deployment layout instead
+//! of accepting it (paper §2's physical structure as a first-class
+//! objective; the Huawei Cloud MaaS practice of rack/plane-aware
+//! deployment layout as the first line of defense before any recovery
+//! machinery runs).
+//!
+//! The [`crate::domains::FailureDomainMap`] describes *where* components
+//! live; this module decides it. A [`PlacementPlanner`] lays prefill NPU
+//! groups, decode-pool instances, and memory-pool servers out over the
+//! supernode slice under a [`PlacementObjective`]:
+//!
+//! * [`PlacementObjective::Packed`] — contiguous NPU runs in physical
+//!   order: maximal UB locality, the calibrated §5.1 layout, and exactly
+//!   the layout [`FailureDomainMap::for_serving`] has always produced.
+//! * [`PlacementObjective::SpreadRacks`] — rack anti-affinity: the node
+//!   visit order interleaves racks, so consecutive components home in
+//!   different racks and no single rack loss can fell a clustered set
+//!   (e.g. half the decode pool). If the topology is too constrained for
+//!   the interleave to help, the planner falls back to the packed layout —
+//!   spread placement is **never worse than packed on blast radius**
+//!   (checked on both the total per-rack population and the decode pool's
+//!   worst-rack clustering, proptest-held).
+//! * [`PlacementObjective::SpreadPlanes`] — the rack interleave with each
+//!   rack's nodes visited in UB home-plane order, additionally striping an
+//!   instance's nodes — and the component home planes a brown-out keys on
+//!   — across the [`UB_PLANES`] sub-planes.
+//!
+//! The locality side of the trade is priced, not asserted: every engine
+//! latency model in this crate was calibrated on the packed layout, so the
+//! planner charges each component a step-latency tax on its **excess**
+//! cross-rack NPU share over packed ([`CROSS_RACK_STEP_TAX`] per unit of
+//! excess — the L2-detour overhead on the comm-bound share, the same few
+//! percent Table 1 bounds inter-node UB degradation by). Packed layouts
+//! carry a tax of exactly 1.0 everywhere, keeping the default bit-exact.
+//! Both sides land in the scored [`PlacementReport`].
+//!
+//! Blast accounting rides the pre-existing [`FailureDomainMap`]
+//! simplification: a component is **home-charged** — it lives and dies
+//! with its home (first) node's rack. NPUs a spread instance stripes into
+//! *other* racks die with the instance, and a surviving instance's NPUs
+//! inside a lost rack are not individually felled (the rack's links still
+//! degrade every flow touching its nodes). For node-aligned decode pools
+//! — including every configuration the acceptance tests pin — the
+//! home-charged loss magnitude equals the physical in-rack NPU count, so
+//! the packed-vs-spread comparisons measure a real placement effect, not
+//! an accounting artifact.
+
+use crate::config::{CloudMatrixTopo, PlacementObjective, ServingConfig, UB_PLANES};
+use crate::domains::{node_home_plane, FailureDomainMap};
+use crate::util::split_even;
+
+/// Marginal step-latency tax per unit of *excess* cross-rack NPU share
+/// (share under the chosen objective minus share under packed, in [0, 1]).
+/// Calibrated to the order of Table 1's inter/intra-node UB delta (≤ 3%
+/// bandwidth, < 1 µs latency) applied to the comm-bound share of a step.
+pub const CROSS_RACK_STEP_TAX: f64 = 0.04;
+
+/// The locality-vs-blast-radius trade of a planned layout, scored.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementReport {
+    pub objective: PlacementObjective,
+    /// Racks the deployment's nodes span.
+    pub racks: usize,
+    /// Worst per-rack component population (prefill slots + decode
+    /// instances + pool servers) — the static blast radius of losing that
+    /// rack.
+    pub max_blast_radius: usize,
+    /// Most decode instances homed in any one rack (the pool's exposure).
+    pub decode_rack_max: usize,
+    /// Mean cross-rack NPU share across components (0 = every instance
+    /// fully rack-local).
+    pub mean_cross_rack_share: f64,
+    /// Mean fraction of reachable UB home planes an instance's nodes span.
+    pub mean_plane_stripe: f64,
+    /// Most component home planes charged to any one UB sub-plane — the
+    /// flows a single-plane brown-out can degrade at once.
+    pub max_plane_homes: usize,
+    /// 1 − mean *excess* cross-rack share over packed, in [0, 1]
+    /// (packed scores 1.0 by construction).
+    pub locality_score: f64,
+    /// Uniform-spread ideal over observed worst rack load, in (0, 1]
+    /// (1.0 = component homes perfectly level across racks).
+    pub blast_score: f64,
+    /// Blended trade score: the mean of locality and blast scores.
+    pub placement_score: f64,
+    /// The spread interleave would have *worsened* the blast radius on
+    /// this topology, so the planner kept the packed layout.
+    pub fell_back_to_packed: bool,
+}
+
+/// A planned deployment layout: the failure-domain map the sim runs
+/// against, per-component locality taxes, the NPU ownership table, and
+/// the scored report.
+#[derive(Debug, Clone)]
+pub struct PlacementPlan {
+    /// Component → node/rack layout (what the resilience machinery keys
+    /// on).
+    pub map: FailureDomainMap,
+    pub report: PlacementReport,
+    /// Per prefill-slot step-latency multiplier (≥ 1.0; exactly 1.0 under
+    /// packed). Indexed like the sim's prefill slots, including elastic
+    /// scale-out slots.
+    pub prefill_tax: Vec<f64>,
+    /// Per decode-instance step-latency multiplier (≥ 1.0; exactly 1.0
+    /// under packed).
+    pub decode_tax: Vec<f64>,
+    /// Physical NPUs owned by each *initial* prefill instance.
+    pf_npus: Vec<Vec<usize>>,
+    /// Physical NPUs owned by each decode instance.
+    dec_npus: Vec<Vec<usize>>,
+}
+
+impl PlacementPlan {
+    /// Physical NPUs of an initial prefill instance (empty for elastic
+    /// scale-out slots, which own no NPUs at deployment time).
+    pub fn prefill_npus(&self, slot: usize) -> &[usize] {
+        self.pf_npus.get(slot).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Physical NPUs of a decode-pool instance.
+    pub fn decode_npus(&self, instance: usize) -> &[usize] {
+        self.dec_npus.get(instance).map(Vec::as_slice).unwrap_or(&[])
+    }
+}
+
+/// The planner: a topology plus the objective in force. `plan` is a pure
+/// function of its inputs — same config, same layout, every time.
+#[derive(Debug, Clone)]
+pub struct PlacementPlanner<'a> {
+    topo: &'a CloudMatrixTopo,
+    objective: PlacementObjective,
+}
+
+/// Geometry shared by every layout computation in one `plan` call.
+struct Geometry {
+    npn: usize,
+    total: usize,
+    nodes: usize,
+    npr: usize,
+    quantum: usize,
+}
+
+impl Geometry {
+    fn rack_of(&self, node: usize) -> usize {
+        node / self.npr
+    }
+
+    fn racks(&self) -> usize {
+        self.nodes.div_ceil(self.npr)
+    }
+}
+
+/// One objective's concrete layout: the permuted physical-NPU visit order
+/// plus everything derived from it.
+#[derive(Clone)]
+struct Layout {
+    /// Physical NPU at each permuted position (a permutation of
+    /// `0..total`).
+    perm: Vec<usize>,
+    pf_home_node: Vec<u16>,
+    dec_home_node: Vec<u16>,
+    /// Cross-rack NPU share per prefill slot / decode instance.
+    pf_share: Vec<f64>,
+    dec_share: Vec<f64>,
+}
+
+impl<'a> PlacementPlanner<'a> {
+    pub fn new(topo: &'a CloudMatrixTopo, objective: PlacementObjective) -> PlacementPlanner<'a> {
+        PlacementPlanner { topo, objective }
+    }
+
+    /// Plan the layout for a deployment: `pf_slots` prefill instance slots
+    /// (including elastic scale-out slots), `decode_instances` decode-pool
+    /// instances over `serving.decode_npus`, and one pool server per node
+    /// of the slice (minimum two, matching the sim's pool sizing).
+    pub fn plan(
+        &self,
+        serving: &ServingConfig,
+        pf_slots: usize,
+        decode_instances: usize,
+    ) -> PlacementPlan {
+        let geo = Geometry {
+            npn: self.topo.npus_per_node.max(1),
+            total: serving.total_npus(),
+            nodes: serving.total_npus().div_ceil(self.topo.npus_per_node.max(1)).max(1),
+            npr: self.topo.nodes_per_rack.max(1),
+            quantum: serving.npus_per_prefill.max(1),
+        };
+        let n_dec = decode_instances.max(1);
+        let dec_sizes = split_even(serving.decode_npus, n_dec);
+
+        let packed = layout(&geo, serving, pf_slots, &dec_sizes, &identity_order(geo.nodes));
+        let as_map = |l: &Layout| {
+            FailureDomainMap::from_parts(
+                geo.nodes,
+                geo.npr,
+                l.pf_home_node.clone(),
+                l.dec_home_node.clone(),
+                pool_nodes(&geo),
+            )
+        };
+        let packed_map = as_map(&packed);
+        // spread placement is never worse than packed on blast radius —
+        // neither on total per-rack population nor on decode-pool
+        // clustering (pool servers are identical in every layout and can
+        // mask decode homes in the total, so both are checked, on the
+        // very `FailureDomainMap` accessors the resilience machinery and
+        // the proptests read): a topology too constrained for the
+        // interleave to help degrades to the packed layout (and to its
+        // zero locality tax)
+        let mut fell_back = false;
+        let (lay, map) = match self.objective {
+            PlacementObjective::Packed => (packed.clone(), packed_map.clone()),
+            obj => {
+                let stripe = obj == PlacementObjective::SpreadPlanes;
+                let order = interleaved_order(&geo, stripe);
+                let cand = layout(&geo, serving, pf_slots, &dec_sizes, &order);
+                let cand_map = as_map(&cand);
+                if max_rack_population(&cand_map) > max_rack_population(&packed_map)
+                    || max_decode_homes(&cand_map) > max_decode_homes(&packed_map)
+                {
+                    fell_back = true;
+                    (packed.clone(), packed_map.clone())
+                } else {
+                    (cand, cand_map)
+                }
+            }
+        };
+
+        // taxes: marginal cross-rack share over the calibrated packed layout
+        let tax = |obj: f64, base: f64| 1.0 + CROSS_RACK_STEP_TAX * (obj - base).max(0.0);
+        let prefill_tax: Vec<f64> =
+            lay.pf_share.iter().zip(&packed.pf_share).map(|(&o, &b)| tax(o, b)).collect();
+        let decode_tax: Vec<f64> =
+            lay.dec_share.iter().zip(&packed.dec_share).map(|(&o, &b)| tax(o, b)).collect();
+
+        let mut report = score(&geo, serving, self.objective, &lay, &packed, &dec_sizes, &map);
+        report.fell_back_to_packed = fell_back;
+        let pf_npus: Vec<Vec<usize>> = (0..serving.prefill_instances)
+            .map(|i| component_npus(&lay.perm, i * geo.quantum, geo.quantum))
+            .collect();
+        let mut at = geo.total - serving.decode_npus;
+        let dec_npus: Vec<Vec<usize>> = dec_sizes
+            .iter()
+            .map(|&sz| {
+                let npus = component_npus(&lay.perm, at, sz);
+                at += sz;
+                npus
+            })
+            .collect();
+
+        PlacementPlan { map, report, prefill_tax, decode_tax, pf_npus, dec_npus }
+    }
+}
+
+/// Identity node order — the packed layout's visit order.
+fn identity_order(nodes: usize) -> Vec<u16> {
+    (0..nodes as u16).collect()
+}
+
+/// Rack-interleaved node order: position p of every rack before position
+/// p+1 of any, so consecutive visits land in different racks. With
+/// `plane_stripe`, each rack's nodes are visited in UB home-plane order,
+/// additionally striping the sequence (and the component home planes a
+/// brown-out keys on) across sub-planes.
+fn interleaved_order(geo: &Geometry, plane_stripe: bool) -> Vec<u16> {
+    let racks = geo.racks();
+    let per_rack: Vec<Vec<u16>> = (0..racks)
+        .map(|r| {
+            let start = r * geo.npr;
+            let end = ((r + 1) * geo.npr).min(geo.nodes);
+            let mut v: Vec<u16> = (start as u16..end as u16).collect();
+            if plane_stripe {
+                v.sort_by_key(|&n| (node_home_plane(n as usize), n));
+            }
+            v
+        })
+        .collect();
+    let mut out = Vec::with_capacity(geo.nodes);
+    for p in 0..geo.npr {
+        for rack in &per_rack {
+            if let Some(&n) = rack.get(p) {
+                out.push(n);
+            }
+        }
+    }
+    out
+}
+
+/// Expand a node visit order into the permuted physical-NPU sequence,
+/// honoring a partial last node (total not divisible by npus/node).
+fn perm_npus(geo: &Geometry, order: &[u16]) -> Vec<usize> {
+    let mut perm = Vec::with_capacity(geo.total);
+    for &nd in order {
+        let nd = nd as usize;
+        let cap = geo.npn.min(geo.total.saturating_sub(nd * geo.npn));
+        for j in 0..cap {
+            perm.push(nd * geo.npn + j);
+        }
+    }
+    debug_assert_eq!(perm.len(), geo.total, "node order must cover the slice");
+    perm
+}
+
+/// The physical NPUs of a component spanning `len` permuted positions.
+fn component_npus(perm: &[usize], start: usize, len: usize) -> Vec<usize> {
+    perm[start.min(perm.len())..(start + len).min(perm.len())].to_vec()
+}
+
+/// Compute a full layout under one node visit order.
+fn layout(
+    geo: &Geometry,
+    serving: &ServingConfig,
+    pf_slots: usize,
+    dec_sizes: &[usize],
+    order: &[u16],
+) -> Layout {
+    let perm = perm_npus(geo, order);
+    // empty-slice guard: a zero-NPU config degenerates to node 0, like
+    // the legacy `for_serving` clamp did
+    let node_at = |pos: usize| {
+        if perm.is_empty() {
+            0
+        } else {
+            (perm[pos.min(perm.len() - 1)] / geo.npn) as u16
+        }
+    };
+    let share_of = |start: usize, len: usize| -> f64 {
+        if len == 0 {
+            return 0.0;
+        }
+        let home_rack = geo.rack_of(node_at(start) as usize);
+        let npus = component_npus(&perm, start, len);
+        let away = npus.iter().filter(|&&n| geo.rack_of(n / geo.npn) != home_rack).count();
+        away as f64 / npus.len().max(1) as f64
+    };
+    let pf_home_node: Vec<u16> = (0..pf_slots).map(|i| node_at(i * geo.quantum)).collect();
+    let pf_share: Vec<f64> =
+        (0..pf_slots).map(|i| share_of(i * geo.quantum, geo.quantum)).collect();
+    let dec_start = geo.total - serving.decode_npus;
+    let mut at = dec_start;
+    let mut dec_home_node = Vec::with_capacity(dec_sizes.len());
+    let mut dec_share = Vec::with_capacity(dec_sizes.len());
+    for &sz in dec_sizes {
+        dec_home_node.push(node_at(at));
+        dec_share.push(share_of(at, sz));
+        at += sz;
+    }
+    Layout { perm, pf_home_node, dec_home_node, pf_share, dec_share }
+}
+
+/// One pool server per node of the slice (minimum two) — per-node
+/// hardware, identical under every objective so comparisons stay fair.
+fn pool_nodes(geo: &Geometry) -> Vec<u16> {
+    let servers = (geo.total / geo.npn).max(2);
+    (0..servers).map(|s| (s % geo.nodes) as u16).collect()
+}
+
+/// Worst per-rack component population of a map — the same
+/// [`FailureDomainMap::rack_population`] the resilience machinery and the
+/// blast-radius proptests read, so the fallback guarantee, the report,
+/// and the runtime model can never diverge on what a rack holds.
+fn max_rack_population(map: &FailureDomainMap) -> usize {
+    (0..map.racks()).map(|r| map.rack_population(r)).max().unwrap_or(0)
+}
+
+/// Most decode instances homed in any one rack of a map.
+fn max_decode_homes(map: &FailureDomainMap) -> usize {
+    (0..map.racks()).map(|r| map.decode_members(r).len()).max().unwrap_or(0)
+}
+
+/// Score the locality-vs-blast-radius trade of a layout against packed
+/// (`fell_back_to_packed` is stamped by the caller, which owns the
+/// fallback decision).
+fn score(
+    geo: &Geometry,
+    serving: &ServingConfig,
+    objective: PlacementObjective,
+    l: &Layout,
+    packed: &Layout,
+    dec_sizes: &[usize],
+    map: &FailureDomainMap,
+) -> PlacementReport {
+    let racks = geo.racks();
+    // blast metrics read the same map accessors the fallback guarantee
+    // compares on, so score and guarantee can never diverge
+    let max_blast_radius = max_rack_population(map);
+    let decode_rack_max = max_decode_homes(map);
+
+    let shares: Vec<f64> = l.pf_share.iter().chain(&l.dec_share).copied().collect();
+    let base: Vec<f64> = packed.pf_share.iter().chain(&packed.dec_share).copied().collect();
+    let n_comp = shares.len().max(1) as f64;
+    let mean_cross_rack_share = shares.iter().sum::<f64>() / n_comp;
+    let mean_excess = shares
+        .iter()
+        .zip(&base)
+        .map(|(&o, &b)| (o - b).max(0.0))
+        .sum::<f64>()
+        / n_comp;
+
+    // plane striping: distinct home planes an instance's nodes span, over
+    // the most it could reach; plus how concentrated component *homes* are
+    // on any one sub-plane (what a brown-out keys on)
+    let dec_start = geo.total - serving.decode_npus;
+    let mut spans: Vec<f64> = Vec::new();
+    let mut stripe_of = |start: usize, len: usize| {
+        if len == 0 {
+            return;
+        }
+        let npus = component_npus(&l.perm, start, len);
+        let mut nodes: Vec<usize> = npus.iter().map(|&n| n / geo.npn).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        let mut planes: Vec<usize> = nodes.iter().map(|&n| node_home_plane(n)).collect();
+        planes.sort_unstable();
+        planes.dedup();
+        // distinct planes over the most this component could reach — its
+        // *actual* distinct node count, so the fraction stays in (0, 1]
+        // even for node-misaligned spans
+        let reachable = nodes.len().min(UB_PLANES).max(1);
+        spans.push(planes.len() as f64 / reachable as f64);
+    };
+    for i in 0..serving.prefill_instances {
+        stripe_of(i * geo.quantum, geo.quantum);
+    }
+    let mut at = dec_start;
+    let n_dec = dec_sizes.len();
+    for &sz in dec_sizes {
+        stripe_of(at, sz);
+        at += sz;
+    }
+    let mean_plane_stripe = spans.iter().sum::<f64>() / spans.len().max(1) as f64;
+    let mut plane_homes = vec![0usize; UB_PLANES];
+    for &n in l.pf_home_node.iter().take(serving.prefill_instances).chain(&l.dec_home_node) {
+        plane_homes[node_home_plane(n as usize)] += 1;
+    }
+    let max_plane_homes = plane_homes.into_iter().max().unwrap_or(0);
+
+    // component homes only: initial prefill + decode (pool servers are
+    // identical in every layout and elastic slots own no NPUs yet)
+    let comp_max = (0..racks)
+        .map(|r| {
+            let pf =
+                map.prefill_members(r).into_iter().filter(|&s| s < serving.prefill_instances);
+            pf.count() + map.decode_members(r).len()
+        })
+        .max()
+        .unwrap_or(0)
+        .max(1);
+    let comp_total = serving.prefill_instances + n_dec;
+    let blast_score = (comp_total as f64 / racks as f64 / comp_max as f64).min(1.0);
+    let locality_score = (1.0 - mean_excess).clamp(0.0, 1.0);
+
+    PlacementReport {
+        objective,
+        racks,
+        max_blast_radius,
+        decode_rack_max,
+        mean_cross_rack_share,
+        mean_plane_stripe,
+        max_plane_homes,
+        locality_score,
+        blast_score,
+        placement_score: 0.5 * (locality_score + blast_score),
+        fell_back_to_packed: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlacementObjective as Obj;
+
+    fn paper_cfg(decode_npus: usize) -> ServingConfig {
+        let mut s = ServingConfig::paper_default();
+        s.decode_npus = decode_npus;
+        s
+    }
+
+    #[test]
+    fn packed_plan_matches_legacy_for_serving_layout() {
+        // the layout `FailureDomainMap::for_serving` has always produced
+        // (pinned in domains::tests::paper_deployment_layout)
+        let topo = CloudMatrixTopo::default();
+        let s = paper_cfg(160);
+        let plan = PlacementPlanner::new(&topo, Obj::Packed).plan(&s, 6, 4);
+        assert_eq!(plan.map.racks(), 8);
+        assert_eq!(plan.map.prefill_rack(0), 0);
+        assert_eq!(plan.map.prefill_rack(5), 2);
+        assert_eq!(plan.map.decode_node(0), 12);
+        assert_eq!(plan.map.decode_rack(3), 6);
+        assert_eq!(plan.map.pool_members(3), vec![12, 13, 14, 15]);
+        // packed carries no locality tax anywhere — bit-exact default
+        assert!(plan.prefill_tax.iter().all(|&t| t == 1.0));
+        assert!(plan.decode_tax.iter().all(|&t| t == 1.0));
+        assert_eq!(plan.report.locality_score, 1.0);
+        assert!(!plan.report.fell_back_to_packed);
+    }
+
+    #[test]
+    fn spread_racks_separates_the_decode_pool() {
+        // 96P/64D over 20 nodes / 5 racks: packed clusters the 4 decode
+        // instances two-per-rack; the interleave homes them in 4 distinct
+        // racks at a priced cross-rack cost
+        let topo = CloudMatrixTopo::default();
+        let s = paper_cfg(64);
+        let packed = PlacementPlanner::new(&topo, Obj::Packed).plan(&s, 6, 4);
+        let spread = PlacementPlanner::new(&topo, Obj::SpreadRacks).plan(&s, 6, 4);
+        assert_eq!(packed.report.decode_rack_max, 2);
+        assert_eq!(spread.report.decode_rack_max, 1);
+        assert!(!spread.report.fell_back_to_packed);
+        // never worse than packed on blast radius (the planner guarantee)
+        assert!(spread.report.max_blast_radius <= packed.report.max_blast_radius);
+        // the locality cost is real and priced
+        assert!(spread.report.mean_cross_rack_share > packed.report.mean_cross_rack_share);
+        assert!(spread.report.locality_score < 1.0);
+        assert!(spread.decode_tax.iter().all(|&t| t > 1.0), "{:?}", spread.decode_tax);
+        assert!(spread.report.placement_score > 0.0 && spread.report.placement_score <= 1.0);
+        // hand-computed homes: decode at nodes 10, 18, 7, 15 → racks 2,4,1,3
+        assert_eq!(
+            (0..4).map(|i| spread.map.decode_rack(i)).collect::<Vec<_>>(),
+            vec![2, 4, 1, 3]
+        );
+    }
+
+    #[test]
+    fn all_objectives_partition_the_slice() {
+        let topo = CloudMatrixTopo::default();
+        let s = paper_cfg(160);
+        for obj in [Obj::Packed, Obj::SpreadRacks, Obj::SpreadPlanes] {
+            let plan = PlacementPlanner::new(&topo, obj).plan(&s, 6, 4);
+            let mut owned: Vec<usize> = (0..6)
+                .flat_map(|i| plan.prefill_npus(i).to_vec())
+                .chain((0..4).flat_map(|k| plan.decode_npus(k).to_vec()))
+                .collect();
+            owned.sort_unstable();
+            assert_eq!(owned, (0..s.total_npus()).collect::<Vec<_>>(), "{obj:?}");
+        }
+    }
+
+    #[test]
+    fn single_rack_topology_degenerates_to_packed() {
+        // one rack: nothing to spread across — layouts coincide, taxes
+        // stay at 1.0, and the guarantee holds trivially
+        let mut topo = CloudMatrixTopo::default();
+        topo.nodes_per_rack = 64;
+        let s = paper_cfg(160);
+        let packed = PlacementPlanner::new(&topo, Obj::Packed).plan(&s, 6, 4);
+        let spread = PlacementPlanner::new(&topo, Obj::SpreadRacks).plan(&s, 6, 4);
+        assert_eq!(spread.map.racks(), 1);
+        assert_eq!(spread.report.max_blast_radius, packed.report.max_blast_radius);
+        assert!(spread.decode_tax.iter().all(|&t| t == 1.0));
+    }
+
+    #[test]
+    fn spread_planes_stripes_component_homes() {
+        let topo = CloudMatrixTopo::default();
+        let s = paper_cfg(64);
+        let planes = PlacementPlanner::new(&topo, Obj::SpreadPlanes).plan(&s, 6, 4);
+        // still a valid spread layout with a plane-stripe measurement
+        assert!(planes.report.max_blast_radius > 0);
+        assert!(planes.report.mean_plane_stripe > 0.0 && planes.report.mean_plane_stripe <= 1.0);
+        assert!(planes.report.max_plane_homes >= 1);
+    }
+}

@@ -49,6 +49,14 @@ pub enum FaultKind {
     /// The inter-node fabric degrades: KV transfers and pool fetches run at
     /// `1/factor` of healthy bandwidth for `duration_us`.
     LinkDegrade { factor: f64, duration_us: Micros },
+    /// One UB sub-plane (an L1/L2 switch tier) browns out: only flows
+    /// *homed* on `plane` (per [`crate::domains::FailureDomainMap::ub_plane`])
+    /// re-stripe over the surviving planes and run `factor`× slower for
+    /// `duration_us`; flows homed elsewhere are untouched. With a single
+    /// configured plane the sim degrades the whole fabric instead (the
+    /// legacy global model — see
+    /// [`crate::netsim::DegradationMap::brownout`]).
+    PlaneBrownout { plane: usize, factor: f64, duration_us: Micros },
     /// One decode instance runs its steps `factor`× slower for
     /// `duration_us` (thermal throttling, a sick die, noisy neighbor).
     Straggler { instance: usize, factor: f64, duration_us: Micros },
@@ -71,6 +79,7 @@ impl FaultKind {
             FaultKind::PrefillCrash { .. } => "prefill-crash",
             FaultKind::PoolServerFail { .. } => "pool-server-fail",
             FaultKind::LinkDegrade { .. } => "link-degrade",
+            FaultKind::PlaneBrownout { .. } => "plane-brownout",
             FaultKind::Straggler { .. } => "straggler",
             FaultKind::RackLoss { .. } => "rack-loss",
         }
@@ -360,6 +369,11 @@ mod tests {
         // any coordinator orchestration
         assert!(!FaultKind::PoolServerFail { server: 0 }.needs_detection());
         assert!(!FaultKind::LinkDegrade { factor: 2.0, duration_us: 1e6 }.needs_detection());
+        // a brown-out window self-expires; nothing strands
+        assert!(
+            !FaultKind::PlaneBrownout { plane: 0, factor: 1.2, duration_us: 1e6 }
+                .needs_detection()
+        );
         assert!(
             !FaultKind::Straggler { instance: 0, factor: 2.0, duration_us: 1e6 }
                 .needs_detection()

@@ -117,6 +117,25 @@
 //! experiment; `rust/src/coordinator/README.md` documents the state
 //! machine.
 //!
+//! ## Domain-aware placement (blast radius as an objective)
+//!
+//! The layout those domains describe is *chosen*, not given:
+//! [`domains::PlacementPlanner`] plans the deployment under
+//! [`config::PlacementObjective`] (`Packed` locality — the bit-exact
+//! default — vs `SpreadRacks` rack anti-affinity vs `SpreadPlanes` UB
+//! sub-plane striping), guaranteeing spread is never worse than packed on
+//! blast radius while pricing the marginal cross-rack locality tax into
+//! every prefill batch and decode step; the trade lands in a scored
+//! [`domains::PlacementReport`]. Flows are plane-attributed (KV pushes,
+//! UB pool fetches, dispatch/combine are homed on their component's UB
+//! sub-plane), so [`faults::FaultKind::PlaneBrownout`] incidents degrade
+//! *only* plane-homed flows via scoped [`netsim::DegradationMap`] windows
+//! (single-plane fallback = the legacy whole-fabric model, bit-exact),
+//! accounted per plane in [`metrics::ServingReport::plane_exposure_us`].
+//! `simulate --placement spread_racks --scenario correlated_rack_loss`
+//! and the `slo_explorer` packed-vs-spread legs run the experiment;
+//! `integration_placement` holds the strict goodput/availability win.
+//!
 //! See DESIGN.md for the full system inventory and the per-experiment index
 //! mapping every paper table/figure to a module and bench target.
 

@@ -41,6 +41,7 @@ fn print_help() {
          \x20          [--scenario diurnal|burst_storm|long_context_drift|mixed_slo\n\
          \x20                      |memory_bound_decode|chaos_crashes|chaos_degraded\n\
          \x20                      |correlated_rack_loss]\n\
+         \x20          [--placement packed|spread_racks|spread_planes]\n\
          \x20          [--autoscale] [--no-offload] [--no-recovery] [--no-resilience]\n\
          \x20                           PDC serving simulation (CloudMatrix384);\n\
          \x20                           --autoscale wires the elastic PD controller\n\
@@ -54,7 +55,12 @@ fn print_help() {
          \x20                           domain-aware resilience controller\n\
          \x20                           (--no-resilience falls back to independent\n\
          \x20                           per-fault recovery; --no-recovery disables\n\
-         \x20                           recovery orchestration entirely)\n\
+         \x20                           recovery orchestration entirely); --placement\n\
+         \x20                           chooses the deployment layout: packed locality\n\
+         \x20                           (default), rack anti-affinity, or UB-plane\n\
+         \x20                           striping — try correlated_rack_loss packed vs\n\
+         \x20                           spread_racks to see blast radius traded against\n\
+         \x20                           locality\n\
          \n\
          Run `make artifacts` first; benches: `cargo bench` (paper tables)."
     );
@@ -166,6 +172,12 @@ fn simulate(args: &[String]) -> Result<()> {
     }
     if let Some(npus) = flag_val(args, "--decode-npus") {
         cfg.serving.decode_npus = npus.parse()?;
+    }
+    if let Some(name) = flag_val(args, "--placement") {
+        let Some(obj) = cm_infer::config::PlacementObjective::by_name(&name) else {
+            bail!("unknown placement `{name}` (packed | spread_racks | spread_planes)");
+        };
+        cfg.serving.placement = obj;
     }
     if let Some(slo) = flag_val(args, "--tpot-ms") {
         cfg.serving.slo.tpot_ms = slo.parse()?;
@@ -290,6 +302,17 @@ fn simulate(args: &[String]) -> Result<()> {
         sim.cache_hit_rate(),
         sim.peak_router_imbalance,
         sim.eplb_imbalance()
+    );
+    let pr = sim.placement_report();
+    println!(
+        "  placement {}: score {:.2} (locality {:.2}, blast {:.2}; max blast radius {}, \
+         max decode/rack {})",
+        r.placement_objective.name(),
+        pr.placement_score,
+        pr.locality_score,
+        pr.blast_score,
+        pr.max_blast_radius,
+        pr.decode_rack_max
     );
     println!(
         "  NPU-seconds: prefill {:.0}  decode {:.0}",

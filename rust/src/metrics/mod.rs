@@ -262,6 +262,18 @@ pub struct ServingReport {
     /// Output tokens delivered by *completed* requests (goodput): partial
     /// streams of lost requests don't count as useful work.
     pub goodput_tokens: u64,
+    /// Extra virtual µs charged by UB sub-plane brown-out windows to flows
+    /// homed on each plane (decode steps, prefill batches, KV pushes, and
+    /// prefill-side UB pool fetches; recovery re-fetches have no home
+    /// until placement and take the plane-wide worst case instead),
+    /// indexed by sub-plane. Empty/zero when no brown-out landed — only
+    /// plane-homed flows ever pay.
+    pub plane_exposure_us: Vec<f64>,
+    /// The placement objective the deployment was laid out under.
+    pub placement_objective: crate::config::PlacementObjective,
+    /// Blended locality-vs-blast-radius score of the planned layout
+    /// ([`crate::domains::PlacementReport::placement_score`], in [0, 1]).
+    pub placement_score: f64,
 }
 
 /// Cheap copyable histogram summary.
@@ -487,6 +499,23 @@ impl ServingReport {
                     d.domain, d.faults, d.crashes, d.rehomed, mttr
                 );
             }
+        }
+        let exposed: f64 = self.plane_exposure_us.iter().sum();
+        if exposed > 0.0 {
+            let worst = self
+                .plane_exposure_us
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(p, _)| p)
+                .unwrap_or(0);
+            let _ = writeln!(
+                out,
+                "  UB sub-plane brown-out exposure {:.3} s (worst: plane {} at {:.3} s)",
+                exposed / 1e6,
+                worst,
+                self.plane_exposure_us[worst] / 1e6
+            );
         }
         out.pop(); // callers println! the block
         Some(out)

@@ -213,7 +213,8 @@ impl LinkKey {
 }
 
 /// Partial-degradation state: one [`LinkDegradation`] window per
-/// `(plane, node-pair)` key plus a legacy whole-fabric window (the chaos
+/// `(plane, node-pair)` key, one per UB *sub-plane* (brown-outs scoped to
+/// a flow's home plane), plus a legacy whole-fabric window (the chaos
 /// `LinkDegrade` fault class). Windows merge per key — a second incident
 /// on the same key must never shorten or soften the first — and distinct
 /// keys never interact. Queries combine the global window with the scoped
@@ -223,6 +224,9 @@ impl LinkKey {
 pub struct DegradationMap {
     global: LinkDegradation,
     scoped: std::collections::BTreeMap<LinkKey, LinkDegradation>,
+    /// Brown-out windows per UB sub-plane index (`0..UB_PLANES`): only
+    /// flows *homed* on a browned-out plane take its multiplier.
+    ub_planes: std::collections::BTreeMap<usize, LinkDegradation>,
 }
 
 impl DegradationMap {
@@ -244,6 +248,47 @@ impl DegradationMap {
     /// The window currently stored for a key (healthy default when none).
     pub fn window(&self, key: LinkKey) -> LinkDegradation {
         self.scoped.get(&key).copied().unwrap_or_default()
+    }
+
+    /// Open/extend a UB sub-plane brown-out window. With `planes_total`
+    /// ≤ 1 there is no sub-plane structure to scope to, so the brown-out
+    /// degenerates to the legacy whole-fabric window — bit-identical to
+    /// the pre-scoped global model (the single-plane fallback).
+    pub fn brownout(
+        &mut self,
+        plane: usize,
+        planes_total: usize,
+        now: Micros,
+        factor: f64,
+        duration_us: Micros,
+    ) {
+        if planes_total <= 1 {
+            self.degrade_global(now, factor, duration_us);
+            return;
+        }
+        self.ub_planes.retain(|_, w| w.is_active(now));
+        let merged = self
+            .ub_planes
+            .get(&plane)
+            .copied()
+            .unwrap_or_default()
+            .extend(now, factor, duration_us);
+        self.ub_planes.insert(plane, merged);
+    }
+
+    /// The brown-out window stored for a UB sub-plane (healthy default
+    /// when none).
+    pub fn ub_plane_window(&self, plane: usize) -> LinkDegradation {
+        self.ub_planes.get(&plane).copied().unwrap_or_default()
+    }
+
+    /// Multiplier a flow *homed* on `plane` takes from that plane's
+    /// brown-out window alone (1.0 when healthy). Callers combine it with
+    /// the flow's node/pair/global multiplier by `max` — the single-plane
+    /// fallback already routed through the global window, so this term is
+    /// purely the scoped model's addition.
+    pub fn ub_plane_multiplier(&self, plane: usize, now: Micros) -> f64 {
+        self.ub_plane_window(plane).multiplier(now)
     }
 
     /// The legacy whole-fabric window.
@@ -289,9 +334,11 @@ impl DegradationMap {
             .fold(self.global.multiplier(now), f64::max)
     }
 
-    /// Whether any window (scoped or global) is active at `now`.
+    /// Whether any window (scoped, sub-plane, or global) is active at `now`.
     pub fn is_degraded(&self, now: Micros) -> bool {
-        self.global.is_active(now) || self.scoped.values().any(|w| w.is_active(now))
+        self.global.is_active(now)
+            || self.scoped.values().any(|w| w.is_active(now))
+            || self.ub_planes.values().any(|w| w.is_active(now))
     }
 }
 
@@ -444,6 +491,53 @@ mod tests {
         assert_eq!(m.global_multiplier(500.0), 6.0);
         // after global expiry the scoped window is still what it was
         assert_eq!(m.pair_multiplier(Plane::Ub, 0, 1, 999.0), 4.0);
+    }
+
+    #[test]
+    fn brownout_windows_scope_to_the_lost_plane() {
+        let mut m = DegradationMap::default();
+        m.brownout(3, 7, 0.0, 7.0 / 6.0, 1_000.0);
+        // flows homed on plane 3 re-stripe; every other plane is untouched
+        assert_eq!(m.ub_plane_multiplier(3, 500.0), 7.0 / 6.0);
+        for p in [0, 1, 2, 4, 5, 6] {
+            assert_eq!(m.ub_plane_multiplier(p, 500.0), 1.0, "plane {p}");
+        }
+        // scoped brown-outs never leak into the global / pair windows
+        assert_eq!(m.global_multiplier(500.0), 1.0);
+        assert_eq!(m.pair_multiplier(Plane::Ub, 0, 1, 500.0), 1.0);
+        assert!(m.is_degraded(500.0));
+        // windows merge per plane — never shorten, never soften
+        m.brownout(3, 7, 500.0, 1.05, 100.0);
+        assert_eq!(m.ub_plane_window(3).factor, 7.0 / 6.0);
+        assert_eq!(m.ub_plane_window(3).until_us, 1_000.0);
+        // expiry
+        assert_eq!(m.ub_plane_multiplier(3, 1_000.0), 1.0);
+        assert!(!m.is_degraded(1_000.0));
+    }
+
+    #[test]
+    fn single_plane_brownout_falls_back_to_global_bit_exactly() {
+        // regression pin: with one UB plane there is no sub-plane
+        // structure, and `brownout` must reproduce the legacy whole-fabric
+        // `degrade_global` path bit-for-bit
+        let mut scoped = DegradationMap::default();
+        let mut legacy = DegradationMap::default();
+        for (now, factor, dur) in [(0.0, 1.75, 800.0), (400.0, 2.5, 100.0), (900.0, 1.2, 500.0)] {
+            scoped.brownout(0, 1, now, factor, dur);
+            legacy.degrade_global(now, factor, dur);
+        }
+        for t in [0.0, 250.0, 750.0, 1_050.0, 1_500.0] {
+            assert_eq!(
+                scoped.global_multiplier(t).to_bits(),
+                legacy.global_multiplier(t).to_bits()
+            );
+            assert_eq!(
+                scoped.pair_multiplier(Plane::Rdma, 1, 2, t).to_bits(),
+                legacy.pair_multiplier(Plane::Rdma, 1, 2, t).to_bits()
+            );
+        }
+        // the fallback opens no scoped sub-plane window at all
+        assert_eq!(scoped.ub_plane_multiplier(0, 100.0), 1.0);
     }
 
     #[test]

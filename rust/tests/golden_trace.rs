@@ -9,7 +9,7 @@
 //! regenerating after an *intentional* model change is: delete the value
 //! lines, re-run, commit the diff.
 
-use cm_infer::config::Config;
+use cm_infer::config::{Config, PlacementObjective};
 use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
 use cm_infer::domains::{FailureDomainMap, ResiliencePolicy};
 use cm_infer::faults::{FaultOptions, FaultPlan};
@@ -32,9 +32,12 @@ struct Case {
     decode_instances: usize,
     /// Domain-aware resilience (the correlated-chaos case).
     domain_aware: bool,
+    /// Deployment-layout objective (the placement-planner case runs the
+    /// correlated incident over a `SpreadRacks` layout).
+    placement: PlacementObjective,
 }
 
-const CASES: [Case; 6] = [
+const CASES: [Case; 7] = [
     Case {
         preset: "diurnal",
         seed: 3,
@@ -43,6 +46,7 @@ const CASES: [Case; 6] = [
         decode_npus: 0,
         decode_instances: 1,
         domain_aware: false,
+        placement: PlacementObjective::Packed,
     },
     Case {
         preset: "burst_storm",
@@ -52,6 +56,7 @@ const CASES: [Case; 6] = [
         decode_npus: 0,
         decode_instances: 1,
         domain_aware: false,
+        placement: PlacementObjective::Packed,
     },
     Case {
         preset: "mixed_slo",
@@ -61,6 +66,7 @@ const CASES: [Case; 6] = [
         decode_npus: 0,
         decode_instances: 1,
         domain_aware: false,
+        placement: PlacementObjective::Packed,
     },
     // chaos: the preset's fault profile drawn at the case seed, recovery on
     Case {
@@ -71,6 +77,7 @@ const CASES: [Case; 6] = [
         decode_npus: 0,
         decode_instances: 1,
         domain_aware: false,
+        placement: PlacementObjective::Packed,
     },
     // §6.2.1 offload: memory-bound decode on a 96P/32D slice, elastic
     // controller with the offload action enabled (its default)
@@ -82,6 +89,7 @@ const CASES: [Case; 6] = [
         decode_npus: 32,
         decode_instances: 1,
         domain_aware: false,
+        placement: PlacementObjective::Packed,
     },
     // correlated chaos: clustered rack/PSU incidents over a 4-instance
     // decode pool, handled by the domain-aware resilience controller
@@ -93,6 +101,20 @@ const CASES: [Case; 6] = [
         decode_npus: 0,
         decode_instances: 4,
         domain_aware: true,
+        placement: PlacementObjective::Packed,
+    },
+    // placement planner: the same correlated-chaos class over a
+    // SpreadRacks layout — pins the scoped plane-brown-out exposure, the
+    // bounded blast radius, and the layout's placement score
+    Case {
+        preset: "correlated_rack_loss",
+        seed: 12,
+        n: 400,
+        autoscale: false,
+        decode_npus: 0,
+        decode_instances: 4,
+        domain_aware: true,
+        placement: PlacementObjective::SpreadRacks,
     },
 ];
 
@@ -101,6 +123,7 @@ fn run_case(c: &Case) -> Vec<(String, f64)> {
     let trace = generate_scenario(&sc, c.n);
     let mut cfg = Config::default();
     cfg.serving.tier_slos = sc.tier_slo_configs();
+    cfg.serving.placement = c.placement;
     if c.decode_npus > 0 {
         cfg.serving.decode_npus = c.decode_npus;
     }
@@ -157,7 +180,10 @@ fn run_case(c: &Case) -> Vec<(String, f64)> {
         ..SimOptions::default()
     };
     let r = ServeSim::new(cfg, opts, trace).run();
-    let tag = format!("{}-{}", c.preset, c.seed);
+    let tag = match c.placement {
+        PlacementObjective::Packed => format!("{}-{}", c.preset, c.seed),
+        other => format!("{}-{}-{}", c.preset, c.seed, other.name()),
+    };
     // per-domain MTTR scalar: sum of domain mean-MTTRs (order-free)
     let domain_mttr_us: f64 = r.domain_stats().iter().filter_map(|d| d.mean_mttr_us).sum();
     vec![
@@ -177,6 +203,10 @@ fn run_case(c: &Case) -> Vec<(String, f64)> {
         (format!("{tag} blast_radius"), r.max_blast_radius() as f64),
         (format!("{tag} domains_hit"), r.domain_stats().len() as f64),
         (format!("{tag} domain_mttr_us"), domain_mttr_us),
+        // placement planner: per-plane brown-out exposure (scoped model)
+        // and the layout's locality-vs-blast-radius score
+        (format!("{tag} plane_exposure_us"), r.plane_exposure_us.iter().sum()),
+        (format!("{tag} placement_score"), r.placement_score),
     ]
 }
 

@@ -428,6 +428,149 @@ fn prop_offload_chaos_conserves_books() {
     });
 }
 
+/// Random-but-sane deployment shapes for the placement props.
+fn placement_shape(
+    g: &mut cm_infer::proptest::Gen,
+) -> (cm_infer::config::CloudMatrixTopo, ServingConfig, usize) {
+    let mut topo = cm_infer::config::CloudMatrixTopo::default();
+    topo.npus_per_node = g.usize(1..=8);
+    topo.nodes_per_rack = g.usize(1..=6);
+    let mut s = ServingConfig::paper_default();
+    s.prefill_instances = g.usize(1..=6);
+    s.npus_per_prefill = g.usize(1..=16);
+    s.decode_npus = g.usize(1..=64);
+    let n_dec = g.usize(1..=4).min(s.decode_npus);
+    (topo, s, n_dec)
+}
+
+#[test]
+fn prop_placement_partitions_npus_exactly_once() {
+    use cm_infer::config::PlacementObjective;
+    use cm_infer::domains::PlacementPlanner;
+    // Under every objective, the initial components' NPU sets tile the
+    // whole slice: every NPU assigned exactly once, none invented, none
+    // dropped.
+    check("placement-npu-partition", 120, |g| {
+        let (topo, s, n_dec) = placement_shape(g);
+        for obj in [
+            PlacementObjective::Packed,
+            PlacementObjective::SpreadRacks,
+            PlacementObjective::SpreadPlanes,
+        ] {
+            let plan = PlacementPlanner::new(&topo, obj).plan(&s, s.prefill_instances, n_dec);
+            let mut owned: Vec<usize> = (0..s.prefill_instances)
+                .flat_map(|i| plan.prefill_npus(i).to_vec())
+                .chain((0..n_dec).flat_map(|k| plan.decode_npus(k).to_vec()))
+                .collect();
+            owned.sort_unstable();
+            if owned != (0..s.total_npus()).collect::<Vec<_>>() {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_placement_spread_blast_radius_le_packed() {
+    use cm_infer::config::PlacementObjective;
+    use cm_infer::domains::PlacementPlanner;
+    // For any occupied topology, SpreadRacks never homes more components
+    // in any one rack than Packed does — neither in total nor counting
+    // decode instances alone (pool servers could mask decode clustering
+    // in the total) — and packed layouts never pay a locality tax.
+    check("placement-blast-radius", 120, |g| {
+        let (topo, s, n_dec) = placement_shape(g);
+        let pf_slots = s.prefill_instances + g.usize(0..=4); // elastic slots too
+        let packed =
+            PlacementPlanner::new(&topo, PlacementObjective::Packed).plan(&s, pf_slots, n_dec);
+        let spread = PlacementPlanner::new(&topo, PlacementObjective::SpreadRacks)
+            .plan(&s, pf_slots, n_dec);
+        let max_pop = |map: &cm_infer::domains::FailureDomainMap| {
+            (0..map.racks()).map(|r| map.rack_population(r)).max().unwrap_or(0)
+        };
+        let dec_max = |map: &cm_infer::domains::FailureDomainMap| {
+            (0..map.racks()).map(|r| map.decode_members(r).len()).max().unwrap_or(0)
+        };
+        max_pop(&spread.map) <= max_pop(&packed.map)
+            && dec_max(&spread.map) <= dec_max(&packed.map)
+            && packed.prefill_tax.iter().all(|&t| t == 1.0)
+            && packed.decode_tax.iter().all(|&t| t == 1.0)
+            && spread.prefill_tax.iter().chain(&spread.decode_tax).all(|&t| t >= 1.0)
+    });
+}
+
+#[test]
+fn prop_placement_plane_brownout_scoped_and_single_plane_fallback() {
+    use cm_infer::netsim::DegradationMap;
+    // A plane-scoped brown-out never degrades a flow homed on another
+    // plane, windows merge per plane, and with a single configured plane
+    // the scoped model reproduces the old global multiplier bit-exactly.
+    check("placement-plane-brownout", 150, |g| {
+        let planes_total = g.usize(2..=8);
+        let mut m = DegradationMap::default();
+        let mut model: BTreeMap<usize, cm_infer::netsim::LinkDegradation> = BTreeMap::new();
+        let mut now = 0.0f64;
+        for _ in 0..g.usize(1..=30) {
+            now += g.f64(0.0, 500.0);
+            let plane = g.usize(0..=planes_total - 1);
+            let factor = g.f64(1.0, 3.0);
+            let dur = g.f64(0.0, 2_000.0);
+            m.brownout(plane, planes_total, now, factor, dur);
+            let expect =
+                model.get(&plane).copied().unwrap_or_default().extend(now, factor, dur);
+            model.insert(plane, expect);
+            // the touched plane agrees with the reference merge; every
+            // other plane — and the global/pair windows — stay untouched
+            if m.ub_plane_multiplier(plane, now).to_bits()
+                != expect.multiplier(now).to_bits()
+            {
+                return false;
+            }
+            for (&p, w) in &model {
+                if p != plane
+                    && w.is_active(now)
+                    && m.ub_plane_multiplier(p, now).to_bits() != w.multiplier(now).to_bits()
+                {
+                    return false;
+                }
+            }
+            for p in 0..planes_total {
+                if !model.get(&p).is_some_and(|w| w.is_active(now))
+                    && m.ub_plane_multiplier(p, now) != 1.0
+                {
+                    return false;
+                }
+            }
+            if m.global_multiplier(now) != 1.0 {
+                return false;
+            }
+        }
+        // single-plane fallback: bit-exact against the legacy global path
+        let mut scoped = DegradationMap::default();
+        let mut legacy = DegradationMap::default();
+        let mut t = 0.0f64;
+        for _ in 0..g.usize(1..=10) {
+            t += g.f64(0.0, 500.0);
+            let factor = g.f64(1.0, 4.0);
+            let dur = g.f64(0.0, 1_500.0);
+            scoped.brownout(0, 1, t, factor, dur);
+            legacy.degrade_global(t, factor, dur);
+            let probe = t + g.f64(0.0, 1_000.0);
+            if scoped.global_multiplier(probe).to_bits()
+                != legacy.global_multiplier(probe).to_bits()
+            {
+                return false;
+            }
+            // and the fallback opens no scoped sub-plane window at all
+            if scoped.ub_plane_multiplier(0, t) != 1.0 {
+                return false;
+            }
+        }
+        true
+    });
+}
+
 #[test]
 fn prop_link_degradation_merges_per_plane_node_pair_key() {
     use cm_infer::netsim::{DegradationMap, LinkDegradation, LinkKey, Plane};
