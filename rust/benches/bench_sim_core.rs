@@ -1,0 +1,115 @@
+//! BENCH_sim_core — the sim-core perf-trajectory harness.
+//!
+//! Runs `ServeSim` on one pinned mega-scenario (`mixed_slo`, seed 42,
+//! 1 M requests, 8-instance decode pool, frozen split, no chaos) and
+//! measures *events dispatched per wall-clock second* — the metric the
+//! event-loop split and the hot-path index work are judged against. The
+//! scenario is run twice: the second run both sharpens the timing (best
+//! of two) and pins same-seed determinism at mega size — the report
+//! scalars and the event count must be bit-identical across runs.
+//!
+//! Emits `BENCH_sim_core.json` at the repo root (CI uploads it as the
+//! perf-trajectory artifact; `rust/tests/perf_smoke.rs` gates a
+//! scaled-down variant of the same scenario against a committed
+//! baseline). `CM_BENCH_QUICK=1` drops to 50 K requests for smoke runs.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use cm_infer::benchlib::{finding, quick, Table};
+use cm_infer::config::Config;
+use cm_infer::coordinator::sim::{ServeSim, SimOptions};
+use cm_infer::util::json::Json;
+use cm_infer::workload::{generate_scenario, ScenarioSpec};
+
+const SEED: u64 = 42;
+const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_sim_core.json");
+
+/// FNV-1a fold over the IEEE-754 bit patterns of the report scalars that
+/// the golden-trace harness also pins — any arithmetic drift between the
+/// two runs (or across seeds) changes this digest.
+fn report_digest(r: &cm_infer::metrics::ServingReport) -> u64 {
+    let scalars = [
+        r.duration_us,
+        r.requests_completed as f64,
+        r.prompt_tokens as f64,
+        r.output_tokens as f64,
+        r.goodput_tokens as f64,
+        r.ttft_us.p50,
+        r.ttft_us.p99,
+        r.tpot_us.p50,
+        r.tpot_us.p99,
+        r.requests_lost as f64,
+    ];
+    scalars.iter().fold(0xcbf2_9ce4_8422_2325u64, |h, v| {
+        (h ^ v.to_bits()).wrapping_mul(0x0000_0100_0000_01b3)
+    })
+}
+
+fn main() {
+    let n: usize = if quick() { 50_000 } else { 1_000_000 };
+    let sc = ScenarioSpec::by_name("mixed_slo", SEED).unwrap();
+    let trace = generate_scenario(&sc, n);
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    let opts = SimOptions {
+        seed: SEED,
+        decode_instances: 8,
+        max_events: usize::MAX,
+        ..SimOptions::default()
+    };
+
+    let mut elapsed = Vec::new();
+    let mut runs = Vec::new();
+    for _ in 0..2 {
+        let mut sim = ServeSim::new(cfg.clone(), opts.clone(), trace.clone());
+        let t0 = Instant::now();
+        let r = sim.run();
+        elapsed.push(t0.elapsed().as_secs_f64());
+        runs.push((sim.events_processed(), report_digest(&r), r));
+    }
+    assert_eq!(
+        runs[0].0, runs[1].0,
+        "same seed, different event count: the sim core is non-deterministic"
+    );
+    assert_eq!(
+        runs[0].1, runs[1].1,
+        "same seed, different report digest at mega size: f64 accumulation drifted"
+    );
+
+    let events = runs[0].0;
+    let best = elapsed.iter().copied().fold(f64::INFINITY, f64::min);
+    let events_per_sec = events as f64 / best;
+    let r = &runs[0].2;
+
+    let mut t = Table::new(
+        "Sim-core event-loop throughput — mixed_slo mega-scenario",
+        &["requests", "events", "best wall s", "events/s", "completed", "digest"],
+    );
+    t.row(&[
+        format!("{n}"),
+        format!("{events}"),
+        format!("{best:.3}"),
+        format!("{events_per_sec:.0}"),
+        format!("{}", r.requests_completed),
+        format!("{:#018x}", runs[0].1),
+    ]);
+    t.print();
+    finding("per-event work is independent of deployment size: placement taxes, UB home planes, tier caps, and live-instance sets are indexed at layout time, and degradation lookups exit in O(1) when no window is active");
+
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str("sim_core".to_string()));
+    obj.insert("scenario".to_string(), Json::Str("mixed_slo".to_string()));
+    obj.insert("seed".to_string(), Json::Num(SEED as f64));
+    obj.insert("requests".to_string(), Json::Num(n as f64));
+    obj.insert("events".to_string(), Json::Num(events as f64));
+    obj.insert("elapsed_s".to_string(), Json::Num(best));
+    obj.insert("events_per_sec".to_string(), Json::Num(events_per_sec));
+    obj.insert("digest".to_string(), Json::Str(format!("{:#018x}", runs[0].1)));
+    obj.insert("quick".to_string(), Json::Bool(quick()));
+    let doc = Json::Obj(obj).to_string();
+    match std::fs::write(OUT, &doc) {
+        Ok(()) => println!("  -> wrote {OUT}"),
+        Err(e) => eprintln!("  -> could not write {OUT}: {e}"),
+    }
+}

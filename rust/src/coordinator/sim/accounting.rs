@@ -1,0 +1,304 @@
+//! Accounting and read-side helpers: NPU-time integrals, degradation /
+//! plane-exposure charging, the EPLB memo, the final report, and the
+//! public accessors.
+//!
+//! Bit-exactness note (golden traces): every f64 accumulator here is
+//! order-pinned. `integrate_npu_time` adds one product per event, in
+//! event order, from integer-valued counts — the module split moved the
+//! code but not a single operation. The `report()` duration fold is a
+//! `max` over non-NaN values (order-free by IEEE-754 semantics), and the
+//! token sums iterate `requests` in its fixed construction order.
+
+use super::*;
+
+impl ServeSim {
+    /// Fold elapsed virtual time into the per-role NPU-second integrals.
+    /// Must be called before any change to the active split.
+    pub(super) fn integrate_npu_time(&mut self) {
+        let dt = self.now - self.last_npu_t;
+        if dt > 0.0 {
+            // failed components count to neither pool from the instant of
+            // the crash: their NPUs are dark until a replacement warm-loads
+            // (pf_failed covers the crash-to-detection window, before the
+            // router's failed mask catches up)
+            let pf = (0..self.prefills.len())
+                .filter(|&i| self.router.is_active(i) && !self.pf_failed[i])
+                .count()
+                * self.cfg.serving.npus_per_prefill;
+            let dc: usize = self
+                .decodes
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| !self.decode_failed[i])
+                .map(|(_, d)| d.npus)
+                .sum();
+            self.acc_prefill_npu_us += pf as f64 * dt;
+            self.acc_decode_npu_us += dc as f64 * dt;
+        }
+        self.last_npu_t = self.now;
+    }
+
+    pub(super) fn decode_total_npus(&self) -> usize {
+        self.decodes.iter().map(|d| d.npus).sum()
+    }
+
+    /// Memoized per-size instance imbalance (resplits revisit sizes).
+    ///
+    /// The memo is keyed by NPU count alone, which is sound only because
+    /// `expert_hist` is frozen after construction — the debug assertion
+    /// below watches that invariant via the init-time digest.
+    pub(super) fn eplb_for_npus(&mut self, npus: usize) -> f64 {
+        debug_assert_eq!(
+            hist_digest(&self.expert_hist),
+            self.eplb_hist_digest,
+            "expert_hist mutated after init: the npus-keyed eplb_cache is stale"
+        );
+        if let Some(&v) = self.eplb_cache.get(&npus) {
+            return v;
+        }
+        let v = instance_eplb(
+            &self.expert_hist,
+            npus,
+            self.cfg.serving.decode_redundant_experts,
+        );
+        self.eplb_cache.insert(npus, v);
+        v
+    }
+
+    /// Plane memory-pool fetches ride on (the Fig 23 UB-vs-VPC choice).
+    pub(super) fn pool_plane(&self) -> Plane {
+        if self.cfg.serving.cache_over_ub {
+            Plane::Ub
+        } else {
+            Plane::Vpc
+        }
+    }
+
+    /// Charge a compute-path cost (prefill batch, decode step) the
+    /// brown-out window of its home UB sub-plane: the component's
+    /// dispatch/combine flows re-stripe over the surviving planes while
+    /// the window is open. The excess over the undegraded cost is
+    /// accounted as that plane's degradation exposure. Bit-identical
+    /// pass-through when no brown-out window is active. The caller passes
+    /// the component's home plane from the layout-time `pf_plane` /
+    /// `dec_plane` caches.
+    pub(super) fn ub_homed_cost(&mut self, cost_us: f64, plane: usize) -> f64 {
+        let pm = self.links.ub_plane_multiplier(plane, self.now);
+        if pm > 1.0 {
+            self.plane_exposure_us[plane] += cost_us * (pm - 1.0);
+            cost_us * pm
+        } else {
+            cost_us
+        }
+    }
+
+    /// Combine a flow's already-computed link multiplier with the
+    /// brown-out window of its home UB sub-plane — worst-case `max`, the
+    /// [`DegradationMap`] convention — charging only the *excess* the
+    /// plane window adds (over `cost_us`) to that plane's exposure.
+    pub(super) fn ub_homed_multiplier(&mut self, other: f64, plane: usize, cost_us: f64) -> f64 {
+        let pm = self.links.ub_plane_multiplier(plane, self.now);
+        if pm > other {
+            self.plane_exposure_us[plane] += cost_us * (pm - other);
+            pm
+        } else {
+            other
+        }
+    }
+
+    /// Pool-fetch cost under the current fabric state: the pool plane's
+    /// worst scoped/global multiplier, plus — when the fetch rides UB —
+    /// the brown-out window of the consuming prefill slot's home
+    /// sub-plane.
+    pub(super) fn pool_fetch_cost(&mut self, fetch_us: f64, inst: usize) -> f64 {
+        let other = self.links.plane_multiplier(self.pool_plane(), self.now);
+        if !self.cfg.serving.cache_over_ub {
+            return fetch_us * other;
+        }
+        fetch_us * self.ub_homed_multiplier(other, self.pf_plane[inst], fetch_us)
+    }
+
+    pub(super) fn report(&mut self) -> ServingReport {
+        self.integrate_npu_time();
+        // close the books on a still-engaged offload (idempotent: the
+        // engagement clock restarts at `now`)
+        if let Some(o) = self.offload.as_mut() {
+            self.offload_active_us += self.now - o.engaged_us;
+            o.engaged_us = self.now;
+        }
+        let duration = self
+            .requests
+            .iter()
+            .filter_map(|r| r.t_finished)
+            .fold(0.0f64, f64::max)
+            .max(self.now);
+        let prompt_tokens: u64 =
+            self.requests.iter().filter(|r| r.t_first_token.is_some()).map(|r| r.spec.prompt_tokens as u64).sum();
+        let output_tokens: u64 = self.requests.iter().map(|r| r.generated as u64).sum();
+        let goodput_tokens: u64 = self
+            .requests
+            .iter()
+            .filter(|r| r.phase == RequestPhase::Finished)
+            .map(|r| r.generated as u64)
+            .sum();
+        let tokens_lost: u64 = self
+            .requests
+            .iter()
+            .filter(|r| r.phase == RequestPhase::Lost)
+            .map(|r| r.undelivered_tokens())
+            .sum();
+        ServingReport {
+            duration_us: duration,
+            requests_completed: self.finished as u64,
+            prompt_tokens,
+            output_tokens,
+            ttft_us: (&self.ttft).into(),
+            tpot_us: (&self.tpot).into(),
+            prefill_npus: self.cfg.serving.prefill_instances * self.cfg.serving.npus_per_prefill,
+            decode_npus: self.cfg.serving.decode_npus,
+            prefill_npu_seconds: self.acc_prefill_npu_us / 1e6,
+            decode_npu_seconds: self.acc_decode_npu_us / 1e6,
+            prefill_busy_npu_seconds: self.acc_prefill_busy_npu_us / 1e6,
+            decode_busy_npu_seconds: self.acc_decode_busy_npu_us / 1e6,
+            tier_attainment: self.tier_attainment(),
+            resplits: self.resplits.clone(),
+            offload_events: self.offload_events.clone(),
+            offload_active_us: self.offload_active_us,
+            donor_tax_us: self.donor_tax_us,
+            recall_spike_us: self.recall_spike_us,
+            faults: self.fault_records.clone(),
+            requests_lost: self.lost as u64,
+            tokens_lost,
+            goodput_tokens,
+            plane_exposure_us: self.plane_exposure_us.clone(),
+            placement_objective: self.cfg.serving.placement,
+            placement_score: self.placement.placement_score,
+        }
+    }
+
+    /// Per-tier SLO attainment over finished requests.
+    pub(super) fn tier_attainment(&self) -> Vec<TierAttainment> {
+        let n_tiers = self.cfg.serving.n_tiers();
+        let mut out = Vec::with_capacity(n_tiers);
+        for tier in 0..n_tiers {
+            let slo = self.cfg.serving.slo_for_tier(tier);
+            let mut requests = 0u64;
+            let (mut ttft_ok, mut tpot_ok, mut both_ok) = (0u64, 0u64, 0u64);
+            for r in &self.requests {
+                if r.spec.slo_tier.min(n_tiers - 1) != tier || r.t_finished.is_none() {
+                    continue;
+                }
+                requests += 1;
+                let t_ok = r.ttft_us().is_some_and(|t| t <= slo.ttft_ms * 1000.0);
+                let p_ok = if r.generated > 1 {
+                    let span = r.t_finished.unwrap() - r.t_first_token.unwrap();
+                    span / (r.generated - 1) as f64 <= slo.tpot_ms * 1000.0
+                } else {
+                    true
+                };
+                ttft_ok += u64::from(t_ok);
+                tpot_ok += u64::from(p_ok);
+                both_ok += u64::from(t_ok && p_ok);
+            }
+            let frac = |n: u64| if requests == 0 { 1.0 } else { n as f64 / requests as f64 };
+            out.push(TierAttainment {
+                tier,
+                tpot_slo_ms: slo.tpot_ms,
+                ttft_slo_ms: slo.ttft_ms,
+                requests,
+                ttft_attained: frac(ttft_ok),
+                tpot_attained: frac(tpot_ok),
+                attained: frac(both_ok),
+            });
+        }
+        out
+    }
+
+    /// Events dispatched by the last `run()` (the BENCH_sim_core metric).
+    pub fn events_processed(&self) -> usize {
+        self.events_processed
+    }
+
+    /// Context-cache hit rate observed during the run.
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.context_cache.as_ref().map(|c| c.hit_rate()).unwrap_or(0.0)
+    }
+
+    /// Router queue imbalance at end of run.
+    pub fn router_imbalance(&self) -> f64 {
+        self.router.imbalance()
+    }
+
+    /// Measured EPLB residual imbalance used by the engine models.
+    pub fn eplb_imbalance(&self) -> f64 {
+        self.eplb_imbalance
+    }
+
+    /// The resplit log so far (also included in the final report).
+    pub fn resplit_log(&self) -> &[ResplitEvent] {
+        &self.resplits
+    }
+
+    /// The chaos fault log so far (also included in the final report).
+    pub fn fault_log(&self) -> &[FaultRecord] {
+        &self.fault_records
+    }
+
+    /// The §6.2.1 offload transition log so far (also in the report).
+    pub fn offload_log(&self) -> &[OffloadEvent] {
+        &self.offload_events
+    }
+
+    /// Currently engaged offload as `(frac, donor slots)`, if any.
+    pub fn active_offload(&self) -> Option<(f64, &[usize])> {
+        self.offload.as_ref().map(|o| (o.frac, o.donors.as_slice()))
+    }
+
+    /// Requests declared lost so far (recovery-disabled baseline).
+    pub fn lost_requests(&self) -> usize {
+        self.lost
+    }
+
+    /// The failure-domain layout this run is placed over (tests, tools).
+    pub fn domain_map(&self) -> &FailureDomainMap {
+        &self.resilience.map
+    }
+
+    /// The scored placement-layout report this run was planned with
+    /// (tests, tools).
+    pub fn placement_report(&self) -> &PlacementReport {
+        &self.placement
+    }
+
+    /// Per-component placement locality taxes `(prefill slots, decode
+    /// instances)` in effect — all exactly 1.0 under `Packed` (tests).
+    pub fn placement_taxes(&self) -> (&[f64], &[f64]) {
+        (&self.pf_tax, &self.dec_tax)
+    }
+
+    /// Backfill loans currently out, as `(prefill slot, fault record)`
+    /// pairs (tests, tools).
+    pub fn backfill_loans(&self) -> Vec<(usize, usize)> {
+        self.backfill_loans.iter().map(|l| (l.slot, l.fault)).collect()
+    }
+
+    /// Per-decode-instance residual EPLB imbalance currently in effect
+    /// (recomputed on every resplit resize — tests, tools).
+    pub fn decode_eplb(&self) -> &[f64] {
+        &self.decode_eplb
+    }
+
+    /// Read-only view of the decode-instance pool (tests, tools).
+    pub fn decode_pool(&self) -> &[DecodeInstance] {
+        &self.decodes
+    }
+
+    /// Current (instantaneous) NPU split as (prefill, decode); NPUs mid
+    /// role-switch belong to neither side.
+    pub fn current_split(&self) -> (usize, usize) {
+        (
+            self.router.active_instances() * self.cfg.serving.npus_per_prefill,
+            self.decode_total_npus(),
+        )
+    }
+}

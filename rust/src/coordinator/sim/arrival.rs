@@ -1,0 +1,210 @@
+//! Arrival-side event handlers: request arrival (context-cache lookup +
+//! routing), prefill batch formation/launch, and batch completion (KV
+//! push-out into the decode pool).
+
+use super::*;
+
+impl ServeSim {
+    pub(super) fn on_arrival(&mut self, idx: usize) {
+        // context-cache lookup (prefix reuse) before routing: the P2P
+        // architecture lets ANY instance use the shared cache.
+        let prompt = self.requests[idx].spec.prompt.clone();
+        let prompt_tokens = self.requests[idx].spec.prompt_tokens;
+        let session = self.requests[idx].spec.session;
+        self.win_prompt_tokens += prompt_tokens as u64;
+
+        let mut reused = 0usize;
+        let mut fetch_us = 0.0;
+        if let Some(cc) = self.context_cache.as_mut() {
+            if !prompt.is_empty() {
+                let hit = cc.lookup(&mut self.pool, &prompt);
+                reused = hit.reused_tokens.min(prompt_tokens.saturating_sub(1));
+                fetch_us = hit.fetch_us;
+            } else {
+                // length-only trace: model reuse via session turns (each
+                // prior turn's prompt prefix is cached)
+                let turn = self.requests[idx].spec.turn;
+                if turn > 0 {
+                    reused = (prompt_tokens * 3 / 4).min(prompt_tokens - 1);
+                    let bytes = reused as u64 * self.cfg.model.kv_bytes_per_token();
+                    let over_ub = cc.over_ub;
+                    let got = self.pool.net.transfer_us(
+                        if over_ub {
+                            crate::netsim::Plane::Ub
+                        } else {
+                            crate::netsim::Plane::Vpc
+                        },
+                        crate::netsim::PathKind::NpuToCpu,
+                        crate::netsim::OpKind::Read,
+                        crate::netsim::Locality::InterNode,
+                        bytes,
+                    );
+                    fetch_us = got;
+                    cc.block_hits += (reused / cc.block_tokens) as u64;
+                    cc.block_misses += 1;
+                }
+            }
+        }
+
+        let compute = prompt_tokens - reused;
+        let decision = self.router.route(session, compute as u64);
+        if !decision.cache_usable {
+            // KV-centric reroute: the local cache is on the wrong node
+            self.recomputed_tokens += reused as u64;
+            reused = 0;
+            fetch_us = 0.0;
+        }
+        // a degraded fabric stretches pool fetches (chaos LinkDegrade /
+        // rack-loss cascades), at the worst multiplier on the pool plane;
+        // a UB-riding fetch is additionally homed on the consuming
+        // instance's sub-plane (scoped brown-outs)
+        fetch_us = self.pool_fetch_cost(fetch_us, decision.instance);
+        self.cache_fetch_us_total += fetch_us;
+        self.peak_router_imbalance = self.peak_router_imbalance.max(self.router.imbalance());
+
+        let st = &mut self.requests[idx];
+        st.reused_tokens = reused;
+        st.prefill_instance = Some(decision.instance);
+        st.phase = RequestPhase::QueuedPrefill;
+        let ct = st.compute_tokens();
+        let pl = st.spec.prompt_tokens;
+        self.prefills[decision.instance].enqueue(idx as u64, ct, pl);
+        self.push(self.now + fetch_us, Event::PrefillKick(decision.instance));
+    }
+
+    pub(super) fn kick_prefill(&mut self, inst: usize) {
+        if self.pf_failed[inst] {
+            return; // dark NPUs; the queue re-homes at detection/recovery
+        }
+        if self.inflight_batches[inst].is_some() {
+            return; // busy; PrefillDone will re-kick
+        }
+        let Some(batch) = self.prefills[inst].form_batch(self.opts.prefill_tokens_per_npu) else {
+            return;
+        };
+        let mut lat = batch_latency_us(
+            &self.cfg.die,
+            &self.cfg.model,
+            &self.cfg.serving,
+            &batch,
+            self.cfg.serving.npus_per_prefill,
+            self.eplb_imbalance,
+        );
+        // placement locality: a spread slot's dispatch/combine crosses
+        // racks beyond the calibrated packed layout (tax == 1.0 under
+        // `Packed`)
+        lat *= self.pf_tax[inst];
+        // §6.2.1 donor tax: an instance hosting offloaded decode attention
+        // donates HBM bandwidth, so its own batches run slower by the
+        // modeled retained-throughput factor
+        if let Some(o) = &self.offload {
+            if self.router.is_donor(inst) {
+                let extra = lat * (1.0 / o.prefill_retained - 1.0);
+                lat += extra;
+                self.donor_tax_us += extra;
+            }
+        }
+        // the batch's flows are homed on the slot's UB sub-plane: a scoped
+        // brown-out there stretches it for the window. Applied (and its
+        // exposure accounted) on the fully taxed latency, like the decode
+        // step's spike/straggle path — it measures actual extra wall time.
+        lat = self.ub_homed_cost(lat, self.pf_plane[inst]);
+        let busy = lat * self.cfg.serving.npus_per_prefill as f64;
+        self.acc_prefill_busy_npu_us += busy;
+        self.win_prefill_busy_npu_us += busy;
+        for &rid in &batch.requests {
+            let st = &mut self.requests[rid as usize];
+            st.phase = RequestPhase::Prefilling;
+            st.t_prefill_start = Some(self.now);
+        }
+        self.inflight_batches[inst] = Some(batch);
+        self.prefills[inst].busy_until = self.now + lat;
+        let epoch = self.pf_epoch[inst];
+        self.push(self.now + lat, Event::PrefillDone(inst, epoch));
+    }
+
+    pub(super) fn on_prefill_done(&mut self, inst: usize, epoch: u64) {
+        if epoch != self.pf_epoch[inst] {
+            // completion of a batch that a crash already discarded
+            return;
+        }
+        if self.pf_failed[inst] {
+            // the instance died mid-batch: the batch is lost, not done.
+            // Its requests stay in `inflight_batches` until the failure
+            // detector re-homes (or loses) them at the next heartbeat.
+            return;
+        }
+        let Some(batch) = self.inflight_batches[inst].take() else {
+            return;
+        };
+        // RDMA KV push out of this instance: degraded when any link
+        // touching its home node is (rack-loss cascades scope this); the
+        // push's striping is homed on the node's UB sub-plane, so a
+        // scoped brown-out there stretches it too (worst-case max, the
+        // DegradationMap convention)
+        let pf_node = self.pf_node[inst];
+        let link_mult = self.links.node_multiplier(Plane::Rdma, pf_node, self.now);
+        self.router.complete(inst, batch.compute_tokens as u64);
+        // store the new KV blocks back to the context cache (async; cost
+        // charged to the pool but does not extend the critical path)
+        if let Some(cc) = self.context_cache.as_mut() {
+            for &rid in &batch.requests {
+                let prompt = self.requests[rid as usize].spec.prompt.clone();
+                if !prompt.is_empty() {
+                    cc.store(&mut self.pool, &prompt);
+                }
+            }
+        }
+        // chaos: record prompt-KV pool residency per request (write-behind,
+        // off the critical path) — a later decode crash re-fetches from
+        // here when the blocks survive, or re-prefills when they are gone
+        if let Some(ns) = self.kv_ns {
+            for &rid in &batch.requests {
+                let bytes = self.requests[rid as usize].spec.prompt_tokens as u64
+                    * self.cfg.model.kv_bytes_per_token();
+                self.pool.put(ns, chaos_kv_key(rid), bytes);
+            }
+        }
+        for &rid in &batch.requests {
+            let st = &mut self.requests[rid as usize];
+            if st.recovering {
+                // KV rebuild after a decode crash: the tokens streamed
+                // before the crash are durable, so no first token, no
+                // TTFT sample, no token counting — the rebuilt KV just
+                // transfers back to a live decode instance.
+                st.recovering = false;
+                st.phase = RequestPhase::Transferring;
+                // the rebuilt KV covers prompt AND the already-generated
+                // suffix — all of it moves to the new decode instance
+                let kv_tokens = st.spec.prompt_tokens + st.generated;
+                let cost = kv_transfer(&self.pool.net, &self.cfg.model, kv_tokens);
+                let mult = self.ub_homed_multiplier(link_mult, self.pf_plane[inst], cost.rdma_us);
+                let cost = TransferCost { rdma_us: cost.rdma_us * mult, ..cost };
+                let done = self.transfers.begin(rid, self.now, &cost);
+                self.push(done, Event::TransferDone(rid));
+                continue;
+            }
+            // prefill emits the request's first output token
+            st.t_first_token = Some(self.now);
+            st.t_last_token = Some(self.now);
+            st.generated = 1;
+            self.ttft.record(st.ttft_us().unwrap());
+            self.win_output_tokens += 1;
+            if st.is_done() {
+                st.phase = RequestPhase::Finished;
+                st.t_finished = Some(self.now);
+                self.finished += 1;
+                self.drop_chaos_kv(rid);
+                continue;
+            }
+            st.phase = RequestPhase::Transferring;
+            let cost = kv_transfer(&self.pool.net, &self.cfg.model, st.spec.prompt_tokens);
+            let mult = self.ub_homed_multiplier(link_mult, self.pf_plane[inst], cost.rdma_us);
+            let cost = TransferCost { rdma_us: cost.rdma_us * mult, ..cost };
+            let done = self.transfers.begin(rid, self.now, &cost);
+            self.push(done, Event::TransferDone(rid));
+        }
+        // more work queued?
+        self.push(self.now, Event::PrefillKick(inst));
+    }
+}

@@ -1,0 +1,280 @@
+//! Decode-side event handlers: pool placement, transfer completion,
+//! tiered admission + the continuous-batching step loop, and the
+//! post-resplit NPU redistribution — plus the rebuild helpers for the
+//! `dec_caps` / `live_decodes` hot-path indexes.
+
+use super::*;
+
+impl ServeSim {
+    /// Decode-side placement: pick the pool instance for a ready request.
+    /// Zero-capacity instances (shrunk away by a resplit) and failed ones
+    /// (chaos) are never picked; `None` means no live instance exists
+    /// right now (every instance crashed — possible only mid-chaos).
+    pub(super) fn place_decode(&mut self) -> Option<usize> {
+        match self.opts.placement {
+            DecodePlacement::RoundRobin => {
+                for _ in 0..self.decodes.len() {
+                    let i = self.rr_next % self.decodes.len();
+                    self.rr_next = self.rr_next.wrapping_add(1);
+                    if self.decodes[i].max_concurrent > 0 && !self.decode_failed[i] {
+                        return Some(i);
+                    }
+                }
+                None
+            }
+            DecodePlacement::LeastLoaded => {
+                // scan the prebuilt live set (ascending indices) instead of
+                // re-filtering the whole pool per placement; strict `<`
+                // keeps the first minimum at the lowest index, exactly as
+                // the full enumerate-and-skip scan chose it
+                let mut best = None;
+                let mut best_score = f64::INFINITY;
+                for &i in &self.live_decodes {
+                    let d = &self.decodes[i];
+                    debug_assert!(
+                        d.max_concurrent > 0 && !self.decode_failed[i],
+                        "stale live_decodes entry {i}"
+                    );
+                    let load = d.slots.len() + self.decode_queues[i].len();
+                    let score = load as f64 / d.max_concurrent as f64;
+                    if score < best_score {
+                        best_score = score;
+                        best = Some(i);
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Queue to park work on when no live decode instance exists: a failed
+    /// instance (its replacement recovery is — or will be — scheduled, and
+    /// its recovery drains the queue). `place_decode() == None` implies at
+    /// least one instance is failed, because the decode-pool floor keeps
+    /// capacity on some instance otherwise.
+    pub(super) fn park_decode_target(&self) -> usize {
+        (0..self.decodes.len()).find(|&i| self.decode_failed[i]).unwrap_or(0)
+    }
+
+    pub(super) fn on_transfer_done(&mut self, rid: u64) {
+        self.transfers.poll(self.now);
+        let inst = match self.place_decode() {
+            Some(i) => i,
+            None if self.recovery_enabled => {
+                // every live-capacity instance is down but replacements are
+                // coming: park on a failed instance; recovery drains it
+                self.park_decode_target()
+            }
+            None => {
+                // recovery disabled and the whole pool is dead
+                self.lose_request(rid);
+                return;
+            }
+        };
+        let st = &mut self.requests[rid as usize];
+        st.phase = RequestPhase::QueuedDecode;
+        let tier = st.spec.slo_tier.min(self.tier_batch_per_npu.len() - 1);
+        self.decode_queues[inst].push_tier(rid, tier);
+        if !self.decode_failed[inst] && !self.decode_step_pending[inst] {
+            self.decode_step_pending[inst] = true;
+            self.push(self.now, Event::DecodeStep(inst));
+        }
+    }
+
+    pub(super) fn on_decode_step(&mut self, inst: usize) {
+        if self.decode_failed[inst] {
+            // the instance went dark: drop this (sole) outstanding step
+            // chain; detection re-homes its work, recovery restarts steps.
+            self.decode_step_pending[inst] = false;
+            return;
+        }
+        // admit waiting requests into free slots: continuous batching with a
+        // per-tier slot quota of `batch_for_slo(tier) x npus` (Table 5's
+        // SLO-adaptive cap, applied per tier so a saturated loose tier can
+        // never crowd a tight tier out of its quota, and vice versa). The
+        // per-tier caps come from the prebuilt `dec_caps` index and the
+        // occupancy vector is a reused scratch buffer — the per-step
+        // allocation and cap recomputation were pure hot-path overhead.
+        let free = self.decodes[inst].free_slots();
+        let mut occ = std::mem::take(&mut self.occ_scratch);
+        occ.clear();
+        occ.resize(self.dec_caps[inst].len(), 0);
+        for s in &self.decodes[inst].slots {
+            occ[s.slo_tier.min(occ.len() - 1)] += 1;
+        }
+        let caps = &self.dec_caps[inst];
+        let admitted = self.decode_queues[inst].admit_where(free, |tier| {
+            if occ[tier] < caps[tier] {
+                occ[tier] += 1;
+                true
+            } else {
+                false
+            }
+        });
+        self.occ_scratch = occ;
+        for (rid, tier) in admitted {
+            let st = &mut self.requests[rid as usize];
+            debug_assert!(
+                st.phase == RequestPhase::QueuedDecode,
+                "request {rid} admitted twice into the decode pool"
+            );
+            st.phase = RequestPhase::Decoding;
+            let remaining = st.spec.output_tokens.saturating_sub(st.generated).max(1);
+            self.decodes[inst].admit_tiered(
+                rid,
+                st.spec.prompt_tokens + st.generated,
+                remaining,
+                tier,
+            );
+        }
+        if self.decodes[inst].slots.is_empty() {
+            self.decode_step_pending[inst] = false;
+            return;
+        }
+        let model = self.decodes[inst].step_model(
+            &self.cfg.die,
+            &self.cfg.model,
+            &self.cfg.serving,
+            // per-instance imbalance: a resplit-shrunk instance has a lower
+            // EP degree, packs experts multiple-per-rank, and pays for it
+            self.decode_eplb[inst],
+        );
+        // §6.2.1 offload: the FA core's offloaded share runs concurrently
+        // on donor prefill NPUs, shrinking the step (reusing the layer
+        // breakdown the step model just computed). Never slower than the
+        // all-local step: at a point where the remote share + UB sync
+        // would dominate, the local share simply is the critical path.
+        let mut step_us = model.step_us;
+        if let Some(o) = &self.offload {
+            let point =
+                self.decodes[inst].decode_point(&self.cfg.serving, self.decode_eplb[inst]);
+            let off_layer =
+                offload::offloaded_layer_us(&self.cfg.model, &point, &model.layer, o.frac);
+            let off_step = off_layer * self.cfg.model.n_layers as f64 + STEP_OVERHEAD_US;
+            step_us = off_step.min(step_us);
+        }
+        // placement locality: a spread instance's dispatch/combine crosses
+        // racks beyond the calibrated packed layout and pays the planner's
+        // marginal tax (exactly 1.0 under `Packed`)
+        let step_us = step_us * self.dec_tax[inst];
+        // post-recall TPOT degradation window (donor-failure recalls): the
+        // decode side re-stages the FA working set it pulled back. The
+        // spike's accounted cost includes any concurrent straggler factor
+        // — it measures the actual extra wall time the recall inflicted.
+        let spike = self.recall_spike.multiplier(self.now);
+        // a straggling instance (chaos) runs every step slower
+        let straggle = self.straggle[inst].multiplier(self.now);
+        self.recall_spike_us += step_us * straggle * (spike - 1.0);
+        let step_us = step_us * spike * straggle;
+        // the instance's dispatch/combine flows are homed on its node's UB
+        // sub-plane: a scoped brown-out re-stripes them over the surviving
+        // planes for the window (1.0 when no brown-out is active)
+        let step_us = self.ub_homed_cost(step_us, self.dec_plane[inst]);
+        self.acc_decode_busy_npu_us += step_us * self.decodes[inst].npus as f64;
+        let step_end = self.now + step_us;
+        let emits = self.decodes[inst].step(&self.cfg.serving);
+        for e in emits {
+            let st = &mut self.requests[e.request as usize];
+            let last = st.t_last_token.unwrap_or(self.now);
+            let per_tok = (step_end - last) / e.tokens as f64;
+            for _ in 0..e.tokens {
+                self.tpot.record(per_tok);
+            }
+            st.generated += e.tokens;
+            self.win_output_tokens += e.tokens as u64;
+            st.t_last_token = Some(step_end);
+            if e.finished {
+                st.phase = RequestPhase::Finished;
+                st.t_finished = Some(step_end);
+                self.finished += 1;
+                self.drop_chaos_kv(e.request);
+            }
+        }
+        self.push(step_end, Event::DecodeStep(inst));
+    }
+
+    /// Re-spread the decode pool's NPUs across its instances after a move.
+    /// When the pool shrinks below one NPU per instance, NPUs go to the
+    /// instances holding the most slots (then deepest queue, then lowest
+    /// index — deterministic), so compute is never credited to an empty
+    /// instance while a loaded one sits at zero.
+    pub(super) fn redistribute_decode(&mut self, new_total: usize) {
+        let batch0 = self.tier_batch_per_npu[0];
+        let n = self.decodes.len();
+        let sizes = split_even(new_total, n.min(new_total.max(1)));
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| {
+            (
+                std::cmp::Reverse(self.decodes[i].slots.len()),
+                std::cmp::Reverse(self.decode_queues[i].len()),
+                i,
+            )
+        });
+        for (rank, &i) in order.iter().enumerate() {
+            let npus = sizes.get(rank).copied().unwrap_or(0);
+            self.decodes[i].resize(npus, batch0);
+        }
+        // EPLB follows the new per-instance EP degrees (satellite: elastic
+        // moves pay the real post-resize imbalance in step_model)
+        for i in 0..self.decodes.len() {
+            let npus = self.decodes[i].npus;
+            let imb = self.eplb_for_npus(npus);
+            self.decode_eplb[i] = imb;
+        }
+        // the resize changed NPU counts (and possibly which instances have
+        // capacity): refresh the hot-path indexes before anything places
+        // or admits against them
+        self.rebuild_dec_caps();
+        self.rebuild_live_decodes();
+        // rescue queued work stranded on a zero-capacity (or failed)
+        // instance
+        let best = (0..self.decodes.len())
+            .filter(|&i| !self.decode_failed[i])
+            .max_by_key(|&i| self.decodes[i].max_concurrent)
+            .unwrap_or(0);
+        for i in 0..self.decodes.len() {
+            if self.decodes[i].max_concurrent == 0
+                && i != best
+                && !self.decode_queues[i].is_empty()
+            {
+                for (rid, tier) in self.decode_queues[i].admit_where(usize::MAX, |_| true) {
+                    self.decode_queues[best].push_tier(rid, tier);
+                }
+            }
+        }
+        // grown capacity may unblock queued admissions
+        for i in 0..self.decodes.len() {
+            if !self.decode_failed[i]
+                && !self.decode_step_pending[i]
+                && (!self.decode_queues[i].is_empty() || !self.decodes[i].slots.is_empty())
+            {
+                self.decode_step_pending[i] = true;
+                self.push(self.now, Event::DecodeStep(i));
+            }
+        }
+    }
+
+    /// Rebuild the per-instance per-tier slot-cap index
+    /// (`tier_batch_per_npu[t] * npus` — pure integer math, so the cached
+    /// values are exactly what `on_decode_step` used to recompute).
+    /// Call after any resize that changes an instance's NPU count.
+    pub(super) fn rebuild_dec_caps(&mut self) {
+        self.dec_caps = self
+            .decodes
+            .iter()
+            .map(|d| self.tier_batch_per_npu.iter().map(|b| b * d.npus).collect())
+            .collect();
+    }
+
+    /// Rebuild the ascending-index list of placeable decode instances
+    /// (capacity > 0, not failed). Call after any change to instance
+    /// capacity (`redistribute_decode`) or failure state (crash/recovery).
+    pub(super) fn rebuild_live_decodes(&mut self) {
+        self.live_decodes.clear();
+        for i in 0..self.decodes.len() {
+            if self.decodes[i].max_concurrent > 0 && !self.decode_failed[i] {
+                self.live_decodes.push(i);
+            }
+        }
+    }
+}

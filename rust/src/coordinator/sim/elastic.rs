@@ -1,0 +1,350 @@
+//! Elastic-PDC event handlers: the autoscaler epoch, §6.2.1 attention
+//! offload engagement/recall, resplit enactment, and the role-switch
+//! completions.
+
+use super::*;
+
+impl ServeSim {
+    pub(super) fn on_scale_epoch(&mut self) {
+        let Some(ctl) = self.autoscaler.clone() else {
+            return;
+        };
+        // live pressure signals
+        let queue_tokens: u64 = (0..self.prefills.len())
+            .filter(|&i| self.router.is_active(i))
+            .map(|i| self.router.queued_tokens[i])
+            .sum();
+        let (slots, caps) = self
+            .decodes
+            .iter()
+            .fold((0usize, 0usize), |(s, c), d| (s + d.slots.len(), c + d.max_concurrent));
+        let stats = WorkloadStats {
+            prompt_tokens: self.win_prompt_tokens,
+            output_tokens: self.win_output_tokens,
+            prefill_queue_tokens: queue_tokens as f64,
+            decode_occupancy: if caps == 0 { 0.0 } else { slots as f64 / caps as f64 },
+            window_us: self.scale_interval_us,
+        };
+        self.win_prompt_tokens = 0;
+        self.win_output_tokens = 0;
+
+        // §6.2.1 signals: the decode pool's operating point plus the
+        // prefill idle headroom measured over this window (assigned minus
+        // busy NPU-µs). Busy is credited at batch start, so a batch that
+        // spills past the window edge would zero this window's idle AND
+        // inflate the next window's: the excess over assigned time is
+        // carried into the next window instead, conserving busy time
+        // across windows so idle is never overestimated either side.
+        self.integrate_npu_time();
+        let window_assigned =
+            (self.acc_prefill_npu_us - self.win_prefill_assigned_mark).max(0.0);
+        let busy_in_window = self.win_prefill_busy_npu_us.min(window_assigned);
+        let idle_npus = (window_assigned - busy_in_window) / self.scale_interval_us.max(1.0);
+        self.win_prefill_busy_npu_us -= busy_in_window; // spill carries over
+        self.win_prefill_assigned_mark = self.acc_prefill_npu_us;
+
+        let sig = self.offload_signals(idle_npus);
+
+        match ctl.recommend_action(
+            &self.cfg.die,
+            &self.cfg.model,
+            &self.cfg.serving,
+            &stats,
+            &sig,
+            self.target_prefill_npus,
+            self.offload_enabled,
+        ) {
+            Some(ElasticAction::Resplit(plan)) => self.enact(&plan),
+            Some(ElasticAction::Offload { frac, donors }) => self.engage_offload(frac, donors),
+            Some(ElasticAction::Recall { reason }) => self.recall_offload(reason),
+            None => {}
+        }
+        if self.finished + self.lost < self.requests.len() {
+            let t = self.now + self.scale_interval_us;
+            self.push(t, Event::ScaleEpoch);
+        }
+    }
+
+    /// §6.2.1 signals at `now`: the decode pool's aggregate operating
+    /// point (slot-weighted mean KV, total slots over pool NPUs,
+    /// NPU-weighted per-instance EPLB) plus the prefill-side facts. The
+    /// single source both the controller's decision and the enactment's
+    /// donor-tax pricing read — they can never model different points.
+    pub(super) fn offload_signals(&self, prefill_idle_npus: f64) -> OffloadSignals {
+        let total_slots: usize = self.decodes.iter().map(|d| d.slots.len()).sum();
+        let kv_sum: usize =
+            self.decodes.iter().flat_map(|d| d.slots.iter()).map(|s| s.kv_len).sum();
+        let dec_npus = self.decode_total_npus();
+        let eplb = if dec_npus == 0 {
+            1.0
+        } else {
+            self.decodes
+                .iter()
+                .enumerate()
+                .map(|(i, d)| self.decode_eplb[i] * d.npus as f64)
+                .sum::<f64>()
+                / dec_npus as f64
+        };
+        OffloadSignals {
+            decode_mean_kv: if total_slots == 0 { 0 } else { kv_sum / total_slots },
+            decode_batch_per_npu: total_slots.div_ceil(dec_npus.max(1)),
+            decode_npus: dec_npus,
+            prefill_npus: self.router.active_instances() * self.cfg.serving.npus_per_prefill,
+            prefill_idle_npus,
+            eplb_imbalance: eplb,
+            offload_active: self.offload.as_ref().map(|o| o.frac),
+        }
+    }
+
+    /// Engage §6.2.1 attention offloading: pick the most idle eligible
+    /// prefill instances as donors and mark them in the router. Engagement
+    /// is instantaneous — no weights move, and the FA core reads its KV
+    /// over UB — so the only ongoing cost is the donors' bandwidth tax.
+    /// Skipped (the controller retries next epoch) when the full donor set
+    /// the controller's feasibility model assumed cannot be formed — e.g.
+    /// a crashed-but-undetected slot shrank the candidate pool — or when
+    /// it would consume every active instance.
+    pub(super) fn engage_offload(&mut self, frac: f64, donors_wanted: usize) {
+        debug_assert!(self.offload.is_none(), "double offload engagement");
+        debug_assert!(frac > 0.0 && frac <= 1.0, "offload frac out of [0,1]: {frac}");
+        let mut cands: Vec<usize> = (0..self.prefills.len())
+            .filter(|&i| {
+                self.router.state(i) == InstanceState::Active
+                    && !self.pf_pending_up[i]
+                    && !self.pf_draining[i]
+                    && !self.pf_failed[i]
+            })
+            .collect();
+        // most idle first: emptiest queue, earliest free, lowest id
+        cands.sort_by(|&a, &b| {
+            self.router.queued_tokens[a]
+                .cmp(&self.router.queued_tokens[b])
+                .then(self.prefills[a].busy_until.total_cmp(&self.prefills[b].busy_until))
+                .then(a.cmp(&b))
+        });
+        // domain-aware donor selection: with spreading on and the
+        // candidate pool spanning ≥ 2 racks, pick donors round-robin
+        // across racks (engaging a second donor if the controller asked
+        // for one) so no single rack loss can fell the whole offloaded
+        // core; the independent policy takes the most idle verbatim
+        let wanted = self.resilience.donor_count(&cands, donors_wanted);
+        let cands = self.resilience.pick_donors(&cands, wanted);
+        if cands.is_empty()
+            || cands.len() < donors_wanted
+            || cands.len() >= self.router.active_instances()
+        {
+            return;
+        }
+        // donors' modeled retained throughput at the engagement-time
+        // operating point — the exact point the controller decided from
+        let sig = self.offload_signals(0.0);
+        let point = Autoscaler::offload_point(&self.cfg.serving, &sig);
+        let om = offload::model_offload(&self.cfg.die, &self.cfg.model, &point, frac);
+        for &d in &cands {
+            self.router.set_donor(d, true);
+        }
+        self.offload_events.push(OffloadEvent {
+            t_us: self.now,
+            kind: OffloadEventKind::Engage {
+                frac,
+                donors: cands.clone(),
+                prefill_retained: om.prefill_retained,
+            },
+        });
+        self.offload = Some(ActiveOffload {
+            frac,
+            donors: cands,
+            prefill_retained: om.prefill_retained,
+            engaged_us: self.now,
+        });
+    }
+
+    /// Recall an active offload: donors return to plain prefill service.
+    /// A donor-failure recall is forced — the decode side pulls the FA
+    /// core back locally and pays the transient TPOT degradation window
+    /// ([`RECALL_SPIKE_FACTOR`] for [`RECALL_SPIKE_US`]) rather than
+    /// stalling; graceful recalls (pressure resolved, resplit preempting)
+    /// cost nothing.
+    pub(super) fn recall_offload(&mut self, reason: RecallReason) {
+        let share = match reason {
+            RecallReason::DonorFailure | RecallReason::DomainIncident => 1.0,
+            _ => 0.0,
+        };
+        self.recall_offload_scaled(reason, share);
+    }
+
+    /// Recall with an explicit lost-donor share: the forced-recall TPOT
+    /// degradation window scales with the fraction of the offloaded FA
+    /// core that actually died — re-staging 1/k of the working set costs
+    /// 1/k of the window. `lost_share == 0` is a graceful (free) recall;
+    /// the independent (non-domain-aware) policy always passes 1.0, the
+    /// full PR-3 window. This is why domain-spread donors matter: a rack
+    /// loss fells at most one of a spread set, while a co-located set
+    /// dies wholesale.
+    pub(super) fn recall_offload_scaled(&mut self, reason: RecallReason, lost_share: f64) {
+        let Some(o) = self.offload.take() else {
+            return;
+        };
+        self.offload_active_us += self.now - o.engaged_us;
+        for &d in &o.donors {
+            // a failed donor already lost its donor state; this is a no-op
+            // for it and restores the healthy donors to plain Active
+            self.router.set_donor(d, false);
+        }
+        if lost_share > 0.0 {
+            self.recall_spike = self.recall_spike.extend(
+                self.now,
+                RECALL_SPIKE_FACTOR,
+                RECALL_SPIKE_US * lost_share.min(1.0),
+            );
+        }
+        self.offload_events
+            .push(OffloadEvent { t_us: self.now, kind: OffloadEventKind::Recall { reason } });
+    }
+
+    /// Enact a recommended split: move NPU groups between roles, modeling
+    /// the role-switch latency (the group is offline in between).
+    pub(super) fn enact(&mut self, plan: &SplitPlan) {
+        // Moving NPU groups while bandwidth is borrowed would invalidate
+        // the donor set — return it first. Defense in depth: the
+        // controller never recommends a resplit while an offload is
+        // active, but enact() must hold the invariant on its own.
+        if self.offload.is_some() {
+            self.recall_offload(RecallReason::Preempted);
+        }
+        let quantum = self.cfg.serving.npus_per_prefill;
+        let total = self.cfg.serving.total_npus();
+        let cur = self.target_prefill_npus;
+        if plan.prefill_npus > cur {
+            // decode → prefill: NPUs leave the decode pool now, come up as
+            // prefill instances after the role switch. Clamp the move to
+            // the usable slot count BEFORE taking NPUs from decode, so a
+            // partial enactment can never strand NPUs between roles.
+            let usable_slots = (0..self.prefills.len())
+                .filter(|&i| {
+                    !self.router.is_active(i)
+                        && !self.pf_pending_up[i]
+                        && !self.pf_draining[i]
+                        && !self.pf_failed[i]
+                })
+                .count();
+            let avail = self.decode_total_npus().saturating_sub(quantum); // keep decode alive
+            let k = ((plan.prefill_npus - cur) / quantum)
+                .min(avail / quantum)
+                .min(usable_slots);
+            if k == 0 {
+                return;
+            }
+            self.integrate_npu_time();
+            let new_decode = self.decode_total_npus() - k * quantum;
+            self.redistribute_decode(new_decode);
+            let mut started = 0usize;
+            for idx in 0..self.prefills.len() {
+                if started == k {
+                    break;
+                }
+                if !self.router.is_active(idx)
+                    && !self.pf_pending_up[idx]
+                    && !self.pf_draining[idx]
+                    && !self.pf_failed[idx]
+                {
+                    self.pf_pending_up[idx] = true;
+                    let t = self.now + self.switch_latency_us;
+                    self.push(t, Event::PrefillUp(idx));
+                    started += 1;
+                }
+            }
+            debug_assert_eq!(started, k, "usable prefill slots vanished mid-enactment");
+            self.target_prefill_npus = cur + started * quantum;
+            self.resplits.push(ResplitEvent {
+                t_us: self.now,
+                from: Role::Decode,
+                to: Role::Prefill,
+                npus: started * quantum,
+                prefill_npus_after: self.target_prefill_npus,
+                // post-move split once every in-flight switch lands (the
+                // instantaneous decode reading would under-count quanta
+                // still mid drain from earlier moves)
+                decode_npus_after: total - self.target_prefill_npus,
+            });
+        } else if plan.prefill_npus < cur {
+            // prefill → decode: drain instances now (queues reassigned, any
+            // inflight batch completes), NPUs join decode after the switch
+            let k = (cur - plan.prefill_npus) / quantum;
+            let active = self.router.active_instances();
+            let k = k.min(active.saturating_sub(1)); // keep prefill alive
+            if k == 0 {
+                return;
+            }
+            self.integrate_npu_time();
+            let mut drained = 0usize;
+            for idx in (0..self.prefills.len()).rev() {
+                if drained == k {
+                    break;
+                }
+                // never drain a crashed-but-undetected slot: its NPUs are
+                // dead and must not be converted into decode capacity
+                if self.router.is_active(idx) && !self.pf_failed[idx] {
+                    self.drain_prefill(idx);
+                    drained += 1;
+                }
+            }
+            self.target_prefill_npus = cur - drained * quantum;
+            self.resplits.push(ResplitEvent {
+                t_us: self.now,
+                from: Role::Prefill,
+                to: Role::Decode,
+                npus: drained * quantum,
+                prefill_npus_after: self.target_prefill_npus,
+                decode_npus_after: total - self.target_prefill_npus,
+            });
+        }
+    }
+
+    /// Stop routing to a prefill instance, hand its queue to the remaining
+    /// active instances, and schedule its NPUs to join the decode pool once
+    /// any inflight batch and the role switch complete.
+    pub(super) fn drain_prefill(&mut self, idx: usize) {
+        self.router.set_active(idx, false);
+        self.pf_draining[idx] = true;
+        let queued = std::mem::take(&mut self.prefills[idx].queue);
+        for (rid, ct, pl) in queued {
+            self.router.complete(idx, ct as u64);
+            let session = self.requests[rid as usize].spec.session;
+            // reassignment keeps the already-fetched prefix reuse (the KV
+            // blocks live in the shared pool, P2P property §4.1)
+            let d = self.router.route(session, ct as u64);
+            self.requests[rid as usize].prefill_instance = Some(d.instance);
+            self.prefills[d.instance].enqueue(rid, ct, pl);
+            self.push(self.now, Event::PrefillKick(d.instance));
+        }
+        let free_at = self.prefills[idx].busy_until.max(self.now);
+        let t = free_at + self.switch_latency_us;
+        self.push(t, Event::DecodeUp(idx));
+    }
+
+    pub(super) fn on_prefill_up(&mut self, idx: usize) {
+        self.integrate_npu_time();
+        self.pf_pending_up[idx] = false;
+        self.router.set_active(idx, true);
+        self.prefills[idx].busy_until = self.now;
+        // a fresh instance may be the first routable one in a while
+        // (chaos): rescue anything parked on dead slots
+        self.resweep_stranded_prefill();
+    }
+
+    pub(super) fn on_decode_up(&mut self, idx: usize) {
+        self.integrate_npu_time();
+        self.pf_draining[idx] = false;
+        // a backfill loan whose replacement already arrived mid-switch
+        // bounces straight back to prefill (paying the reverse switch)
+        // without ever joining the decode pool
+        if let Some(pos) = self.backfill_loans.iter().position(|l| l.slot == idx && l.returning) {
+            self.backfill_loans.remove(pos);
+            self.return_backfill_group(idx);
+            return;
+        }
+        let new_total = self.decode_total_npus() + self.cfg.serving.npus_per_prefill;
+        self.redistribute_decode(new_total);
+    }
+}

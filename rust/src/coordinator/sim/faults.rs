@@ -1,0 +1,679 @@
+//! Chaos event handlers: fault injection (including correlated rack/PSU
+//! incidents), heartbeat detection, stranded-work re-homing, backfill
+//! loans, and replacement recovery.
+
+use super::*;
+
+impl ServeSim {
+    /// Injected fault `i` of the plan takes hardware effect. Crash classes
+    /// stay invisible to the coordinator until the next heartbeat epoch;
+    /// transient degradations apply immediately and self-expire. Raw target
+    /// indices are retargeted deterministically onto a live, eligible
+    /// component so every planned fault lands whenever at all possible.
+    pub(super) fn on_fault(&mut self, i: usize) {
+        let Some(ev) = self.opts.faults.as_ref().and_then(|f| f.plan.events.get(i).copied())
+        else {
+            return;
+        };
+        match ev.kind {
+            FaultKind::DecodeCrash { instance } => {
+                let eligible: Vec<usize> = (0..self.decodes.len())
+                    .filter(|&d| !self.decode_failed[d] && self.decodes[d].npus > 0)
+                    .collect();
+                let Some(&inst) = eligible.get(instance % eligible.len().max(1)) else {
+                    return; // nothing left to crash
+                };
+                self.integrate_npu_time();
+                self.decode_failed[inst] = true;
+                self.rebuild_live_decodes();
+                let domain = Some(self.resilience.map.decode_rack(inst));
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::DecodeCrash { instance: inst },
+                    detected_us: self.now, // provisional; set at detection
+                    recovered_us: None,
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                    domain,
+                });
+                self.undetected.push(self.fault_records.len() - 1);
+            }
+            FaultKind::PrefillCrash { instance } => {
+                let eligible: Vec<usize> = (0..self.prefills.len())
+                    .filter(|&p| {
+                        self.router.is_active(p)
+                            && !self.pf_failed[p]
+                            && !self.pf_draining[p]
+                            && !self.pf_pending_up[p]
+                    })
+                    .collect();
+                let Some(&idx) = eligible.get(instance % eligible.len().max(1)) else {
+                    return;
+                };
+                self.integrate_npu_time();
+                self.pf_failed[idx] = true;
+                let domain = Some(self.resilience.map.prefill_rack(idx));
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::PrefillCrash { instance: idx },
+                    detected_us: self.now,
+                    recovered_us: None,
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                    domain,
+                });
+                self.undetected.push(self.fault_records.len() - 1);
+            }
+            FaultKind::PoolServerFail { server } => {
+                let sid = server % self.pool.servers.len().max(1);
+                // DRAM contents are gone; EVS-persisted blocks keep serving
+                // from the SSD tier (§4.4.1) — no orchestration needed
+                self.pool.fail_server(sid);
+                let domain = Some(self.resilience.map.pool_rack(sid));
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::PoolServerFail { server: sid },
+                    detected_us: self.now,
+                    recovered_us: Some(self.now),
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                    domain,
+                });
+            }
+            FaultKind::LinkDegrade { factor, duration_us } => {
+                self.links.degrade_global(self.now, factor, duration_us);
+                self.push_window_record(ev.kind, duration_us);
+            }
+            FaultKind::PlaneBrownout { plane, factor, duration_us } => {
+                // scoped window: only flows homed on the lost sub-plane
+                // degrade (a single-plane fabric degenerates to the legacy
+                // whole-fabric window inside `brownout`)
+                self.links.brownout(plane, UB_PLANES, self.now, factor, duration_us);
+                self.push_window_record(ev.kind, duration_us);
+            }
+            FaultKind::Straggler { instance, factor, duration_us } => {
+                let eligible: Vec<usize> = (0..self.decodes.len())
+                    .filter(|&d| !self.decode_failed[d] && self.decodes[d].npus > 0)
+                    .collect();
+                let Some(&inst) = eligible.get(instance % eligible.len().max(1)) else {
+                    return;
+                };
+                self.straggle[inst] = self.straggle[inst].extend(self.now, factor, duration_us);
+                let domain = Some(self.resilience.map.decode_rack(inst));
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::Straggler { instance: inst, factor, duration_us },
+                    detected_us: self.now,
+                    recovered_us: Some(self.now + duration_us),
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                    domain,
+                });
+            }
+            FaultKind::RackLoss { rack, factor, duration_us } => {
+                self.on_rack_loss(rack, factor, duration_us);
+            }
+        }
+    }
+
+    /// Expand a correlated rack/PSU loss against the failure-domain map:
+    /// every member prefill slot and decode instance crashes *now* (one
+    /// member record each, all sharing the injection timestamp and domain
+    /// — the incident's blast radius), member pool servers fail, and
+    /// every fabric link touching the rack's nodes degrades for the
+    /// power-restoration window. Detection and recovery then ride the
+    /// ordinary per-component machinery, so the coordinator notices the
+    /// whole incident at one heartbeat.
+    pub(super) fn on_rack_loss(&mut self, rack: usize, factor: f64, duration_us: Micros) {
+        self.integrate_npu_time();
+        let map = self.resilience.map.clone();
+        for idx in map.prefill_members(rack) {
+            if idx < self.prefills.len()
+                && self.router.is_active(idx)
+                && !self.pf_failed[idx]
+                && !self.pf_draining[idx]
+                && !self.pf_pending_up[idx]
+            {
+                self.pf_failed[idx] = true;
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::PrefillCrash { instance: idx },
+                    detected_us: self.now,
+                    recovered_us: None,
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                    domain: Some(rack),
+                });
+                self.undetected.push(self.fault_records.len() - 1);
+            }
+        }
+        for d in map.decode_members(rack) {
+            if d < self.decodes.len() && !self.decode_failed[d] && self.decodes[d].npus > 0 {
+                self.decode_failed[d] = true;
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::DecodeCrash { instance: d },
+                    detected_us: self.now,
+                    recovered_us: None,
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                    domain: Some(rack),
+                });
+                self.undetected.push(self.fault_records.len() - 1);
+            }
+        }
+        self.rebuild_live_decodes();
+        for s in map.pool_members(rack) {
+            if s < self.pool.servers.len() {
+                self.pool.fail_server(s);
+                self.fault_records.push(FaultRecord {
+                    t_us: self.now,
+                    kind: FaultKind::PoolServerFail { server: s },
+                    detected_us: self.now,
+                    recovered_us: Some(self.now),
+                    requests_rehomed: 0,
+                    requests_lost: 0,
+                    kv_refetched: 0,
+                    reprefilled: 0,
+                    domain: Some(rack),
+                });
+            }
+        }
+        // cascade: the rack's fabric ports flap while power is restored —
+        // every UB/RDMA link touching its nodes runs degraded
+        for node in map.rack_nodes(rack) {
+            for plane in [Plane::Ub, Plane::Rdma] {
+                self.links.degrade(LinkKey::node(plane, node), self.now, factor, duration_us);
+            }
+        }
+    }
+
+    /// Record a self-expiring degradation-window fault (`LinkDegrade` /
+    /// `PlaneBrownout`): nothing strands, nothing re-homes — the window
+    /// counts as recovered the instant it expires.
+    pub(super) fn push_window_record(&mut self, kind: FaultKind, duration_us: Micros) {
+        self.fault_records.push(FaultRecord {
+            t_us: self.now,
+            kind,
+            detected_us: self.now,
+            recovered_us: Some(self.now + duration_us),
+            requests_rehomed: 0,
+            requests_lost: 0,
+            kv_refetched: 0,
+            reprefilled: 0,
+            domain: None,
+        });
+    }
+
+    /// Failure-detection epoch: newly-dead components are noticed, their
+    /// stranded work re-dispatched (or declared lost when recovery is
+    /// disabled), and replacement NPU groups scheduled at the warm
+    /// model-load latency.
+    pub(super) fn on_heartbeat(&mut self) {
+        let pending = std::mem::take(&mut self.undetected);
+        // §6.2.1 × domains: donors lost this sweep force ONE recall before
+        // the re-homing loop below — overlapped with it in the same epoch,
+        // never serial per-donor recalls — with the TPOT spike window
+        // scaled to the share of the offloaded FA core that actually died
+        // (domain-spread donors lose a fraction; co-located donors lose it
+        // all). A domain-wide incident (≥ 2 same-rack crashes in the
+        // sweep) is tagged with its own recall reason when the mass-recall
+        // policy is on.
+        let (lost_donors, total_donors) = match &self.offload {
+            Some(o) => {
+                let lost = pending
+                    .iter()
+                    .filter(|&&r| {
+                        matches!(self.fault_records[r].kind,
+                            FaultKind::PrefillCrash { instance } if o.donors.contains(&instance))
+                    })
+                    .count();
+                (lost, o.donors.len())
+            }
+            None => (0, 0),
+        };
+        if lost_donors > 0 {
+            let mass = self.resilience.policy.mass_recall && self.domain_incident_in(&pending);
+            let reason = if mass {
+                RecallReason::DomainIncident
+            } else {
+                RecallReason::DonorFailure
+            };
+            // share-scaling of the spike window is part of the domain-aware
+            // recall model; the independent baseline pays the full PR-3
+            // window regardless of how many donors actually died
+            let share = if self.resilience.policy.mass_recall {
+                lost_donors as f64 / total_donors as f64
+            } else {
+                1.0
+            };
+            self.recall_offload_scaled(reason, share);
+        }
+        for rec in pending {
+            self.fault_records[rec].detected_us = self.now;
+            match self.fault_records[rec].kind {
+                FaultKind::DecodeCrash { instance } => self.detect_decode_crash(instance, rec),
+                FaultKind::PrefillCrash { instance } => self.detect_prefill_crash(instance, rec),
+                _ => {}
+            }
+        }
+        if !self.recovery_enabled {
+            self.sweep_failed_queues();
+        }
+        if self.finished + self.lost < self.requests.len() {
+            let t = self.now + self.hb_us;
+            self.push(t, Event::Heartbeat);
+        }
+    }
+
+    /// Whether ≥ 2 crashes detected in this heartbeat sweep share a
+    /// failure domain — the signature of a correlated (rack-level)
+    /// incident rather than coincident independent faults.
+    pub(super) fn domain_incident_in(&self, pending: &[usize]) -> bool {
+        let mut doms: Vec<usize> =
+            pending.iter().filter_map(|&r| self.fault_records[r].domain).collect();
+        doms.sort_unstable();
+        doms.windows(2).any(|w| w[0] == w[1])
+    }
+
+    /// A decode-instance crash is detected. In-flight slots lost their HBM
+    /// KV state; queued requests lost nothing but their home. With recovery
+    /// on, queued work re-homes across the live pool, slot requests take
+    /// the KV re-fetch or re-prefill path, and a replacement group starts
+    /// its warm model load. With recovery off, everything on the instance
+    /// is lost and its NPUs never come back.
+    pub(super) fn detect_decode_crash(&mut self, inst: usize, rec: usize) {
+        let slots: Vec<Slot> = std::mem::take(&mut self.decodes[inst].slots);
+        let queued = self.decode_queues[inst].admit_where(usize::MAX, |_| true);
+        if self.recovery_enabled {
+            for s in slots {
+                self.rehome_decode_slot(s, rec);
+            }
+            for (rid, tier) in queued {
+                match self.place_decode() {
+                    Some(target) => {
+                        // actually moved — counted as re-dispatch work
+                        self.fault_records[rec].requests_rehomed += 1;
+                        self.decode_queues[target].push_tier(rid, tier);
+                        if !self.decode_step_pending[target] {
+                            self.decode_step_pending[target] = true;
+                            self.push(self.now, Event::DecodeStep(target));
+                        }
+                    }
+                    // the whole pool is down: park here until recovery
+                    // (not a re-home — the request never moved)
+                    None => self.decode_queues[inst].push_tier(rid, tier),
+                }
+            }
+            let t = self.now + self.recovery_latency_us;
+            self.push(t, Event::DecodeRecover(rec));
+            // domain-aware backfill: borrow a prefill NPU group into the
+            // decode pool for the replacement window instead of serving
+            // the whole outage on the survivors
+            if self.resilience.policy.backfill {
+                self.try_backfill(rec);
+            }
+        } else {
+            for s in slots {
+                if self.lose_request(s.request) {
+                    self.fault_records[rec].requests_lost += 1;
+                }
+            }
+            for (rid, _) in queued {
+                if self.lose_request(rid) {
+                    self.fault_records[rec].requests_lost += 1;
+                }
+            }
+        }
+    }
+
+    /// Backfill a crashed decode instance by draining the least-loaded
+    /// pure-Active prefill group into the decode pool now — it joins after
+    /// the Table 2 warm role-switch, bridging the (longer) domain
+    /// replacement window — and logging the move as a backfill
+    /// [`ResplitEvent`]. The loan is returned when fault `rec`'s
+    /// replacement warm-loads. Skipped when no pure instance can be
+    /// spared: ≥ 1 routable prefill instance must remain and donors are
+    /// never drained (that would force an offload recall — worse than the
+    /// trough the backfill bridges).
+    pub(super) fn try_backfill(&mut self, rec: usize) {
+        if self.router.active_instances() <= 1 {
+            return;
+        }
+        let cand = (0..self.prefills.len())
+            .filter(|&i| {
+                self.router.state(i) == InstanceState::Active
+                    && !self.pf_failed[i]
+                    && !self.pf_draining[i]
+                    && !self.pf_pending_up[i]
+            })
+            .min_by_key(|&i| (self.router.queued_tokens[i], i));
+        let Some(idx) = cand else {
+            return;
+        };
+        self.integrate_npu_time();
+        let quantum = self.cfg.serving.npus_per_prefill;
+        self.drain_prefill(idx);
+        self.backfill_loans.push(BackfillLoan { slot: idx, fault: rec, returning: false });
+        self.target_prefill_npus = self.target_prefill_npus.saturating_sub(quantum);
+        let total = self.cfg.serving.total_npus();
+        self.resplits.push(ResplitEvent {
+            t_us: self.now,
+            from: Role::Prefill,
+            to: Role::Decode,
+            npus: quantum,
+            prefill_npus_after: self.target_prefill_npus,
+            decode_npus_after: total - self.target_prefill_npus,
+        });
+    }
+
+    /// Send a returned backfill group back to its prefill slot: offline
+    /// for the role switch, then `PrefillUp` reactivates the slot.
+    pub(super) fn return_backfill_group(&mut self, idx: usize) {
+        let quantum = self.cfg.serving.npus_per_prefill;
+        self.pf_pending_up[idx] = true;
+        let t = self.now + self.switch_latency_us;
+        self.push(t, Event::PrefillUp(idx));
+        self.target_prefill_npus += quantum;
+        let total = self.cfg.serving.total_npus();
+        self.resplits.push(ResplitEvent {
+            t_us: self.now,
+            from: Role::Decode,
+            to: Role::Prefill,
+            npus: quantum,
+            prefill_npus_after: self.target_prefill_npus,
+            decode_npus_after: total - self.target_prefill_npus,
+        });
+    }
+
+    /// Re-home one in-flight decode slot after its instance crashed. The
+    /// tokens already streamed to the user are durable; what died with the
+    /// instance is the KV state in HBM. If the prompt KV still lives in the
+    /// memory pool (survived eviction and server crashes — §4.4.1), it is
+    /// re-fetched and the request rejoins the decode queue after the fetch;
+    /// otherwise everything the new instance needs (prompt + generated
+    /// suffix) is recomputed through prefill.
+    pub(super) fn rehome_decode_slot(&mut self, slot: Slot, rec: usize) {
+        let rid = slot.request;
+        self.fault_records[rec].requests_rehomed += 1;
+        self.requests[rid as usize].restarts += 1;
+        let survived = match self.kv_ns {
+            Some(ns) => {
+                let over_ub = self.cfg.serving.cache_over_ub;
+                let got = self.pool.get(ns, chaos_kv_key(rid), over_ub);
+                got.hit.then_some(got.latency_us)
+            }
+            None => None,
+        };
+        match survived {
+            Some(fetch_us) => {
+                self.fault_records[rec].kv_refetched += 1;
+                let st = &mut self.requests[rid as usize];
+                st.phase = RequestPhase::Transferring;
+                // recovery re-fetches take the plane-wide worst case, not
+                // a home sub-plane window: the consuming instance is only
+                // chosen at TransferDone, so the flow has no home yet
+                let delay = fetch_us * self.links.plane_multiplier(self.pool_plane(), self.now);
+                let t = self.now + delay;
+                self.push(t, Event::TransferDone(rid));
+            }
+            None => {
+                self.fault_records[rec].reprefilled += 1;
+                let st = &mut self.requests[rid as usize];
+                st.recovering = true;
+                st.phase = RequestPhase::QueuedPrefill;
+                // full recompute: the prompt KV is gone, and the generated
+                // suffix must be rebuilt alongside it. Like every recovery
+                // re-home, prefer non-donor instances — least-loaded alone
+                // would land exactly on the (most idle) donors.
+                let ct = st.spec.prompt_tokens + st.generated;
+                let session = st.spec.session;
+                let d = self.router.route_avoiding_donors(session, ct as u64);
+                st.prefill_instance = Some(d.instance);
+                self.prefills[d.instance].enqueue(rid, ct, ct);
+                self.push(self.now, Event::PrefillKick(d.instance));
+            }
+        }
+    }
+
+    /// A prefill-instance crash is detected: mask it out of the router
+    /// (forfeiting KV-centric homes), re-home its in-flight batch and queue
+    /// (or lose them in baseline mode), and schedule the replacement.
+    pub(super) fn detect_prefill_crash(&mut self, idx: usize, rec: usize) {
+        self.integrate_npu_time();
+        // §6.2.1 fault interplay: crashed donors were handled by the
+        // heartbeat's mass-recall pre-scan before this sweep started, so
+        // the offload is already recalled by the time any donor's work is
+        // re-homed here.
+        debug_assert!(
+            !self.offload.as_ref().is_some_and(|o| o.donors.contains(&idx)),
+            "donor crash must be recalled before its detection sweep"
+        );
+        self.router.set_failed(idx, true);
+        let inflight: Vec<u64> =
+            self.inflight_batches[idx].take().map(|b| b.requests).unwrap_or_default();
+        // the dead batch's pending PrefillDone must never complete a
+        // replacement batch started after recovery
+        self.pf_epoch[idx] += 1;
+        let queued = std::mem::take(&mut self.prefills[idx].queue);
+        if self.recovery_enabled {
+            // in-flight batch requests and queued ones re-home the same
+            // way: the batch ones just also lose their mid-compute work
+            for rid in inflight.into_iter().chain(queued.into_iter().map(|(rid, _, _)| rid)) {
+                self.fault_records[rec].requests_rehomed += 1;
+                self.rehome_prefill_request(rid, idx);
+            }
+            let t = self.now + self.recovery_latency_us;
+            self.push(t, Event::PrefillRecover(rec));
+        } else {
+            for rid in inflight {
+                let ct = self.requests[rid as usize].compute_tokens();
+                self.router.complete(idx, ct as u64);
+                if self.lose_request(rid) {
+                    self.fault_records[rec].requests_lost += 1;
+                }
+            }
+            for (rid, ct, _) in queued {
+                self.router.complete(idx, ct as u64);
+                if self.lose_request(rid) {
+                    self.fault_records[rec].requests_lost += 1;
+                }
+            }
+        }
+    }
+
+    /// Terminal loss accounting: the request will never finish, and the
+    /// conservation invariant becomes `finished + lost == admitted`.
+    /// Returns whether the request was actually lost now (false if it
+    /// already reached a terminal state — never double-counted).
+    pub(super) fn lose_request(&mut self, rid: u64) -> bool {
+        let st = &mut self.requests[rid as usize];
+        if matches!(st.phase, RequestPhase::Finished | RequestPhase::Lost) {
+            return false;
+        }
+        st.phase = RequestPhase::Lost;
+        st.t_lost = Some(self.now);
+        self.lost += 1;
+        self.drop_chaos_kv(rid);
+        true
+    }
+
+    /// Drop a terminal request's chaos-KV residency entry: its prompt KV no
+    /// longer needs crash recovery, and dead entries would otherwise
+    /// pressure the pool's LRU against live context-cache blocks.
+    pub(super) fn drop_chaos_kv(&mut self, rid: u64) {
+        if let Some(ns) = self.kv_ns {
+            self.pool.delete(ns, chaos_kv_key(rid));
+        }
+    }
+
+    /// Recovery-disabled baseline: work that lands on (or was left on) dead
+    /// components has no orchestrator to save it — declare it lost at each
+    /// heartbeat so the run terminates with every request accounted.
+    pub(super) fn sweep_failed_queues(&mut self) {
+        for idx in 0..self.prefills.len() {
+            if !self.pf_failed[idx] {
+                continue;
+            }
+            if let Some(batch) = self.inflight_batches[idx].take() {
+                self.pf_epoch[idx] += 1;
+                self.router.complete(idx, batch.compute_tokens as u64);
+                for rid in batch.requests {
+                    self.lose_request(rid);
+                }
+            }
+            let queued = std::mem::take(&mut self.prefills[idx].queue);
+            for (rid, ct, _) in queued {
+                self.router.complete(idx, ct as u64);
+                self.lose_request(rid);
+            }
+        }
+        for i in 0..self.decodes.len() {
+            if !self.decode_failed[i] {
+                continue;
+            }
+            let slots: Vec<Slot> = std::mem::take(&mut self.decodes[i].slots);
+            for s in slots {
+                self.lose_request(s.request);
+            }
+            for (rid, _) in self.decode_queues[i].admit_where(usize::MAX, |_| true) {
+                self.lose_request(rid);
+            }
+        }
+    }
+
+    /// Re-route one request out of prefill slot `from` (crashed or
+    /// stranded): release its routing charge, pick a new home, and —
+    /// exactly like `on_arrival` — forfeit the cached-prefix discount when
+    /// the router says the reuse did not survive the move (a KV-centric
+    /// home's local cache died with it; P2P reuse lives in the shared
+    /// pool and always survives).
+    pub(super) fn rehome_prefill_request(&mut self, rid: u64, from: usize) {
+        let st = &mut self.requests[rid as usize];
+        if st.phase == RequestPhase::Prefilling {
+            st.restarts += 1; // mid-compute work was lost with the batch
+        }
+        st.phase = RequestPhase::QueuedPrefill;
+        let charge = if st.recovering {
+            st.spec.prompt_tokens + st.generated
+        } else {
+            st.compute_tokens()
+        };
+        let session = st.spec.session;
+        self.router.complete(from, charge as u64);
+        // recovery prefers non-donor homes: a donor is already paying the
+        // §6.2.1 bandwidth tax, so stranded work lands elsewhere when any
+        // pure-Active instance exists
+        let d = self.router.route_avoiding_donors(session, charge as u64);
+        if !d.cache_usable && st.reused_tokens > 0 {
+            self.recomputed_tokens += st.reused_tokens as u64;
+            st.reused_tokens = 0;
+        }
+        let (ct, pl) = if st.recovering {
+            let t = st.spec.prompt_tokens + st.generated;
+            (t, t)
+        } else {
+            (st.compute_tokens(), st.spec.prompt_tokens)
+        };
+        st.prefill_instance = Some(d.instance);
+        self.prefills[d.instance].enqueue(rid, ct, pl);
+        self.push(self.now, Event::PrefillKick(d.instance));
+    }
+
+    /// Re-route queued work stranded on slots that are not currently
+    /// routable (e.g. parked there while every prefill instance was down).
+    pub(super) fn resweep_stranded_prefill(&mut self) {
+        if self.router.active_instances() == 0 {
+            return;
+        }
+        for idx in 0..self.prefills.len() {
+            if self.router.is_active(idx) || self.prefills[idx].queue.is_empty() {
+                continue;
+            }
+            let queued = std::mem::take(&mut self.prefills[idx].queue);
+            for (rid, _, _) in queued {
+                self.rehome_prefill_request(rid, idx);
+            }
+        }
+    }
+
+    /// The replacement NPU group for a crashed decode instance is up
+    /// (warm model load complete): the instance rejoins the pool and
+    /// drains whatever parked on it meanwhile.
+    pub(super) fn on_decode_recover(&mut self, rec: usize) {
+        let FaultKind::DecodeCrash { instance: inst } = self.fault_records[rec].kind else {
+            return;
+        };
+        self.integrate_npu_time();
+        self.fault_records[rec].recovered_us = Some(self.now);
+        self.decode_failed[inst] = false;
+        self.rebuild_live_decodes();
+        // the replacement obsoletes any backfill loan taken for this
+        // fault: the borrowed NPU group goes home (or bounces back on
+        // arrival if it is still mid role-switch; or the loan dissolves
+        // when the autoscaler already repurposed the slot)
+        if let Some(pos) = self.backfill_loans.iter().position(|l| l.fault == rec) {
+            let loan = self.backfill_loans[pos];
+            if self.pf_draining[loan.slot] {
+                self.backfill_loans[pos].returning = true;
+            } else {
+                self.backfill_loans.remove(pos);
+                if !self.router.is_active(loan.slot)
+                    && !self.pf_pending_up[loan.slot]
+                    && !self.pf_failed[loan.slot]
+                {
+                    let quantum = self.cfg.serving.npus_per_prefill;
+                    let new_total = self.decode_total_npus().saturating_sub(quantum);
+                    self.redistribute_decode(new_total);
+                    self.return_backfill_group(loan.slot);
+                }
+            }
+        }
+        // a resplit may have shrunk the instance to zero while it was dark:
+        // hand any parked queue to a live instance instead of stranding it
+        if self.decodes[inst].max_concurrent == 0 && !self.decode_queues[inst].is_empty() {
+            if let Some(target) = self.place_decode() {
+                for (rid, tier) in self.decode_queues[inst].admit_where(usize::MAX, |_| true) {
+                    self.decode_queues[target].push_tier(rid, tier);
+                }
+                if !self.decode_step_pending[target] {
+                    self.decode_step_pending[target] = true;
+                    self.push(self.now, Event::DecodeStep(target));
+                }
+            }
+        }
+        if !self.decode_step_pending[inst]
+            && (!self.decode_queues[inst].is_empty() || !self.decodes[inst].slots.is_empty())
+        {
+            self.decode_step_pending[inst] = true;
+            self.push(self.now, Event::DecodeStep(inst));
+        }
+    }
+
+    /// The replacement NPU group for a crashed prefill slot is up: clear
+    /// the failure masks, resume routing, and rescue anything stranded.
+    pub(super) fn on_prefill_recover(&mut self, rec: usize) {
+        let FaultKind::PrefillCrash { instance: idx } = self.fault_records[rec].kind else {
+            return;
+        };
+        self.integrate_npu_time();
+        self.fault_records[rec].recovered_us = Some(self.now);
+        self.pf_failed[idx] = false;
+        self.router.set_failed(idx, false);
+        self.prefills[idx].busy_until = self.now;
+        self.resweep_stranded_prefill();
+        self.push(self.now, Event::PrefillKick(idx));
+    }
+}

@@ -1,0 +1,837 @@
+//! Discrete-event PDC serving simulation (paper §4.1 end-to-end).
+//!
+//! Glues the coordinator components over the substrate models: requests
+//! arrive (workload), are routed (router) to prefill instances (prefill),
+//! reuse cached prefixes (cache::context over mempool), transfer KV over
+//! the RDMA plane (transfer), and decode in a *pool* of LEP instances
+//! (decode) behind a decode-side placement policy, under SLO-adaptive,
+//! SLO-tiered batching (batcher). Time is virtual (µs); engine latencies
+//! come from the calibrated simnpu/netsim models.
+//!
+//! ## Module layout
+//!
+//! This file is the event-loop core: options, the [`Event`] heap, the
+//! [`ServeSim`] state, construction, and the `run()` dispatch loop. The
+//! domain logic lives in sibling modules, each an `impl ServeSim` block:
+//!
+//! * [`arrival`] — request arrival, prefill batching, KV push-out
+//! * [`decode`] — decode placement, admission, the step loop, pool resizes
+//! * [`elastic`] — the autoscaler epoch, §6.2.1 offload, resplit enactment
+//! * [`faults`] — chaos injection, detection, re-homing, recovery
+//! * [`accounting`] — NPU-time integrals, degradation helpers, the report
+//!
+//! The hot per-event lookups are *indexed at layout time*: each
+//! component's home node and UB sub-plane (immutable for the life of a
+//! run) are cached in `pf_node`/`pf_plane`/`dec_plane`, per-instance tier
+//! slot caps in `dec_caps`, and the live decode-instance list in
+//! `live_decodes` — so per-event work no longer scales with deployment
+//! size. All of it is value-preserving: the cached quantities are exactly
+//! what the per-event derivations produced, and degradation/tax
+//! composition is by `max`/product in unchanged arithmetic order, keeping
+//! golden traces bit-identical.
+//!
+//! ## Elastic PDC (paper §4.1 "Dynamic Adjustment", §6.2.2)
+//!
+//! With [`SimOptions::autoscale`] set, the [`Autoscaler`] controller is in
+//! the loop as a periodic `ScaleEpoch` event: each epoch collects
+//! [`WorkloadStats`] from the window's arrivals/emissions plus live queue
+//! depths and slot occupancy, asks the controller for an [`ElasticAction`],
+//! and enacts it. A [`SplitPlan`] drains prefill instances into the decode
+//! pool or pulls decode NPUs up as new prefill instances; moved NPUs are
+//! offline for a modeled *role-switch latency* (weight reload through the
+//! shared model cache — the Table 2 EMS warm-switch path), and every move
+//! is logged as a [`ResplitEvent`] in the final [`ServingReport`].
+//!
+//! ## §6.2.1 attention offloading as a first-class elastic action
+//!
+//! When decode is memory-bound (long KV, saturated batch) and the prefill
+//! pool has measured idle NPU-seconds, the controller prefers an
+//! `Offload` over a resplit: a fraction of the decode FA core runs on
+//! *donor* prefill instances (Adrenaline-style). While engaged:
+//!
+//! * decode steps use the offloaded per-layer latency from
+//!   [`offload::model_offload`] (never slower than the local step — the
+//!   remote share runs concurrently),
+//! * donor instances stay admissible for prefill but pay the modeled
+//!   HBM-bandwidth tax on every batch (accounted as `donor_tax_us`),
+//! * the router tracks donors as a first-class
+//!   [`crate::coordinator::router::InstanceState`] so recovery re-homing
+//!   prefers non-donor instances.
+//!
+//! Faults thread through: donors lost at a detection heartbeat force ONE
+//! `Recall` before that sweep's re-homing — decode pulls the FA core back
+//! locally and pays a transient TPOT degradation window
+//! ([`RECALL_SPIKE_FACTOR`] for [`RECALL_SPIKE_US`] scaled by the lost
+//! donor share) instead of stalling; a graceful recall (pressure resolved
+//! / resplit preempts) costs nothing. Every transition lands in the
+//! report's [`OffloadEvent`] log.
+//!
+//! ## Failure domains (correlated chaos) and planned placement
+//!
+//! The sim owns a [`crate::domains::ResilienceController`]: the
+//! [`crate::domains::FailureDomainMap`] laying the deployment out over
+//! nested physical domains (node → rack/PSU → UB plane) plus the
+//! [`crate::domains::ResiliencePolicy`] in force. The layout itself is
+//! *chosen* by the [`crate::domains::PlacementPlanner`] under the serving
+//! config's [`crate::config::PlacementObjective`]: `Packed` (the default)
+//! reproduces the historical contiguous layout bit-for-bit; the spread
+//! objectives bound blast radius at a priced locality cost — every
+//! prefill batch and decode step is multiplied by the planner's
+//! per-component cross-rack tax (exactly 1.0 under `Packed`).
+//!
+//! Flows are *plane-attributed*: KV pushes, UB pool fetches, and the
+//! dispatch/combine share of steps/batches are homed on their component's
+//! UB sub-plane ([`FailureDomainMap::ub_plane`] of the home node). A
+//! [`FaultKind::PlaneBrownout`] opens a plane-scoped
+//! [`DegradationMap`] window that degrades only flows homed on the lost
+//! plane (with a single configured plane it degenerates to the legacy
+//! whole-fabric window); the extra time is accounted per plane in
+//! [`ServingReport::plane_exposure_us`]. A
+//! [`FaultKind::RackLoss`] expands against the map at injection (member
+//! instances crash, member pool servers fail, rack links degrade in the
+//! per-(plane, node-pair) [`DegradationMap`]); with the domain-aware
+//! policy, detection runs the **incident → mass recall → overlapped
+//! re-home → backfill** state machine (see `coordinator/README.md`):
+//! §6.2.1 donors are spread across racks at engagement, a domain-wide
+//! incident recalls the offload once with a share-scaled spike, and each
+//! crashed decode instance is backfilled by a borrowed prefill NPU group
+//! (a logged loan [`ResplitEvent`]) until its replacement warm-loads.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+
+use crate::cache::ContextCache;
+use crate::config::{Config, UB_PLANES};
+use crate::coordinator::autoscale::{
+    offload, Autoscaler, ElasticAction, OffloadSignals, RecallReason, SplitPlan, WorkloadStats,
+};
+use crate::coordinator::batcher::{plan_for_slo, AdmissionQueue};
+use crate::coordinator::decode::{DecodeInstance, Slot};
+use crate::coordinator::eplb;
+use crate::coordinator::prefill::{batch_latency_us, PrefillInstance};
+use crate::coordinator::request::{RequestPhase, RequestState};
+use crate::coordinator::router::{InstanceState, Router, RouterKind};
+use crate::coordinator::transfer::{kv_transfer, TransferCost, TransferScheduler};
+use crate::domains::{
+    FailureDomainMap, PlacementPlanner, PlacementReport, ResilienceController, ResiliencePolicy,
+};
+use crate::faults::{FaultKind, FaultOptions, FaultRecord};
+use crate::mempool::{Key, MemPool, NamespaceId};
+use crate::metrics::{
+    Histogram, OffloadEvent, OffloadEventKind, ResplitEvent, Role, ServingReport, TierAttainment,
+};
+use crate::netsim::{DegradationMap, LinkDegradation, LinkKey, Plane};
+use crate::simnpu::pipeline::{DecodePoint, STEP_OVERHEAD_US};
+use crate::util::split_even;
+use crate::workload::{ExpertActivation, Request};
+use crate::Micros;
+
+mod accounting;
+mod arrival;
+mod decode;
+mod elastic;
+mod faults;
+#[cfg(test)]
+mod tests;
+
+/// Transient TPOT degradation window after a *forced* (donor-failure)
+/// offload recall: the decode side re-stages the FA working set locally
+/// and re-plans its batches, so every step inside the window runs this
+/// factor slower. Graceful recalls pay nothing.
+pub const RECALL_SPIKE_FACTOR: f64 = 1.25;
+/// Length of the post-recall degradation window, µs.
+pub const RECALL_SPIKE_US: Micros = 2e6;
+
+/// Decode-side placement policy for the instance pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodePlacement {
+    /// Send each transfer-complete request to the instance with the lowest
+    /// (active + queued) / capacity ratio.
+    LeastLoaded,
+    /// Rotate across instances regardless of load.
+    RoundRobin,
+}
+
+/// Elastic-autoscaling knobs (see module docs).
+#[derive(Debug, Clone)]
+pub struct AutoscaleOptions {
+    /// Controller epoch length, µs.
+    pub interval_us: f64,
+    /// Role-switch latency, µs: the time a moved NPU group is offline
+    /// between roles (engine teardown + weight reload). Defaults to the
+    /// model-cache warm-switch latency ([`default_switch_latency_us`]).
+    pub switch_latency_us: f64,
+    /// Floor on decode-pool NPUs; 0 derives `max(quantum, decode_npus/4)`
+    /// from the deployment, rounded so the prefill side stays
+    /// instance-quantized.
+    pub min_decode_npus: usize,
+    /// Controller hysteresis (don't move below this current:ideal ratio).
+    pub hysteresis: f64,
+    /// §6.2.1 attention offloading as an elastic action (on by default;
+    /// `--no-offload` runs the resplit-only ablation).
+    pub offload: bool,
+}
+
+impl Default for AutoscaleOptions {
+    fn default() -> Self {
+        AutoscaleOptions {
+            interval_us: 1e6,
+            switch_latency_us: default_switch_latency_us(),
+            min_decode_npus: 0,
+            hysteresis: 1.15,
+            offload: true,
+        }
+    }
+}
+
+/// Live state of an engaged §6.2.1 attention offload.
+#[derive(Debug, Clone)]
+struct ActiveOffload {
+    /// Fraction of the decode FA core running on donors.
+    frac: f64,
+    /// Donor prefill instance slots (router state `Donor`).
+    donors: Vec<usize>,
+    /// Donor prefill throughput retained (modeled at engagement).
+    prefill_retained: f64,
+    /// Virtual time the offload engaged.
+    engaged_us: Micros,
+}
+
+/// Modeled role-switch latency: a role change is an engine restart on a new
+/// graph, so the dominant cost is streaming the (already pool-resident)
+/// weights back into NPU memory — the Table 2 EMS warm model-switch path
+/// (§4.4.3), ~5 s for the 671 GB model.
+pub fn default_switch_latency_us() -> Micros {
+    let net = crate::netsim::NetSim::default();
+    let row = crate::cache::model::table2_row(
+        &net,
+        &crate::cache::model::Table2Params::default(),
+        crate::cache::LoadStrategy::Ems,
+    );
+    row.switch_latency_s * 1e6
+}
+
+/// Simulation options beyond the base [`Config`].
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    pub router: RouterKind,
+    /// Prefill batch budget, tokens per NPU (paper: 16 K).
+    pub prefill_tokens_per_npu: usize,
+    /// Hard cap on simulated events (runaway guard).
+    pub max_events: usize,
+    pub seed: u64,
+    /// Number of decode instances the decode NPUs are split across.
+    pub decode_instances: usize,
+    /// Placement policy over the decode pool.
+    pub placement: DecodePlacement,
+    /// Elastic PDC: wire the autoscaler into the event loop. `None` runs
+    /// the classic frozen split.
+    pub autoscale: Option<AutoscaleOptions>,
+    /// Chaos: inject a [`crate::faults::FaultPlan`] and (optionally)
+    /// orchestrate recovery. `None` runs the healthy system.
+    pub faults: Option<FaultOptions>,
+    /// Domain-aware resilience behaviors (donor spreading, decode
+    /// backfill, mass recall). The default `independent()` policy
+    /// reproduces the plain per-fault recovery orchestration.
+    pub resilience: ResiliencePolicy,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            router: RouterKind::PeerToPeer,
+            prefill_tokens_per_npu: 16384,
+            max_events: 2_000_000,
+            seed: 0,
+            decode_instances: 1,
+            placement: DecodePlacement::LeastLoaded,
+            autoscale: None,
+            faults: None,
+            resilience: ResiliencePolicy::independent(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Event {
+    Arrival(usize),
+    PrefillKick(usize),
+    /// Batch completion on slot `.0`, valid only for batch epoch `.1` —
+    /// a crash discards the in-flight batch and bumps the slot's epoch, so
+    /// the stale completion of the dead batch can never terminate a
+    /// replacement batch early.
+    PrefillDone(usize, u64),
+    TransferDone(u64),
+    DecodeStep(usize),
+    /// Autoscaler epoch: collect stats, recommend, enact.
+    ScaleEpoch,
+    /// A converted NPU group finishes its role switch into prefill slot i.
+    PrefillUp(usize),
+    /// Prefill slot i's drained NPU group finishes its switch into decode.
+    DecodeUp(usize),
+    /// Fault i of the plan takes hardware effect (chaos runs).
+    Fault(usize),
+    /// Failure-detection heartbeat epoch (chaos runs).
+    Heartbeat,
+    /// The replacement NPU group for fault record i (a decode crash)
+    /// finishes its warm model load and rejoins the pool.
+    DecodeRecover(usize),
+    /// The replacement NPU group for fault record i (a prefill crash)
+    /// finishes its warm model load and resumes serving.
+    PrefillRecover(usize),
+}
+
+/// Heap entry ordered by virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Timed {
+    t: Micros,
+    seq: u64,
+    ev: Event,
+}
+
+impl Eq for Timed {}
+
+impl Ord for Timed {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for Timed {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The assembled serving simulation.
+pub struct ServeSim {
+    pub cfg: Config,
+    pub opts: SimOptions,
+    pub requests: Vec<RequestState>,
+    router: Router,
+    prefills: Vec<PrefillInstance>,
+    /// Prefill slots mid-role-switch (decode→prefill conversion pending).
+    pf_pending_up: Vec<bool>,
+    /// Prefill slots draining toward decode (NPUs promised away; the slot
+    /// may not be re-activated until its `DecodeUp` completes).
+    pf_draining: Vec<bool>,
+    decodes: Vec<DecodeInstance>,
+    decode_queues: Vec<AdmissionQueue>,
+    decode_step_pending: Vec<bool>,
+    /// SLO-derived decode batch per NPU, per tier (tier 0 = base SLO).
+    tier_batch_per_npu: Vec<usize>,
+    rr_next: usize,
+    transfers: TransferScheduler,
+    pool: MemPool,
+    context_cache: Option<ContextCache>,
+    /// Per-prefill-instance batch in flight: (requests, completion handled
+    /// at PrefillDone).
+    inflight_batches: Vec<Option<crate::coordinator::prefill::PrefillBatch>>,
+    /// Global residual EPLB imbalance measured at init for the full
+    /// deployment (prefill engines and SLO planning use this).
+    eplb_imbalance: f64,
+    /// Per-decode-instance residual imbalance, recomputed whenever a
+    /// resplit changes an instance's EP degree (ROADMAP: elastic moves pay
+    /// the real EPLB cost).
+    decode_eplb: Vec<f64>,
+    /// The measured expert-activation histogram the imbalances derive from.
+    /// Frozen after init — `eplb_cache` memoizes on NPU count alone, which
+    /// is sound only under this invariant (checked via `eplb_hist_digest`
+    /// in debug builds).
+    expert_hist: Vec<u64>,
+    /// npus → imbalance memo (resplits revisit the same sizes).
+    eplb_cache: BTreeMap<usize, f64>,
+    /// Init-time digest of `expert_hist`, pinning the immutability
+    /// invariant the `eplb_cache` memoization key relies on.
+    eplb_hist_digest: u64,
+    heap: BinaryHeap<Reverse<Timed>>,
+    seq: u64,
+    now: Micros,
+    /// Events dispatched by the last `run()` (the BENCH_sim_core metric).
+    events_processed: usize,
+    // --- layout-time hot-path caches (all derived from immutable state) ---
+    /// Home node per prefill slot (`resilience.map.prefill_node`, cached:
+    /// the failure-domain map never changes during a run).
+    pf_node: Vec<u16>,
+    /// Home UB sub-plane per prefill slot (`map.ub_plane(pf_node)`).
+    pf_plane: Vec<usize>,
+    /// Home UB sub-plane per decode instance.
+    dec_plane: Vec<usize>,
+    /// Per-instance per-tier slot caps (`tier_batch_per_npu[t] * npus`),
+    /// rebuilt whenever a resize changes an instance's NPU count.
+    dec_caps: Vec<Vec<usize>>,
+    /// Scratch occupancy vector reused across `on_decode_step` calls (the
+    /// per-event allocation was the hot-path cost).
+    occ_scratch: Vec<usize>,
+    /// Ascending indices of decode instances with capacity and no failure
+    /// — the `LeastLoaded` placement scan set, rebuilt on every pool
+    /// membership change instead of re-filtering per placement.
+    live_decodes: Vec<usize>,
+    // --- elastic state ---
+    autoscaler: Option<Autoscaler>,
+    scale_interval_us: Micros,
+    switch_latency_us: Micros,
+    /// Committed (post-enactment) prefill NPU target the controller sees.
+    target_prefill_npus: usize,
+    win_prompt_tokens: u64,
+    win_output_tokens: u64,
+    resplits: Vec<ResplitEvent>,
+    /// NPU-seconds integration.
+    acc_prefill_npu_us: f64,
+    acc_decode_npu_us: f64,
+    last_npu_t: Micros,
+    // --- §6.2.1 offload state ---
+    /// Whether the controller may choose `Offload` actions at all.
+    offload_enabled: bool,
+    /// The engaged offload, if any.
+    offload: Option<ActiveOffload>,
+    offload_events: Vec<OffloadEvent>,
+    /// Integrated virtual time offload was engaged.
+    offload_active_us: f64,
+    /// Accumulated extra prefill batch latency paid by donors.
+    donor_tax_us: f64,
+    /// Accumulated extra decode step time inside recall-spike windows.
+    recall_spike_us: f64,
+    /// Post-recall TPOT degradation window (donor-failure recalls).
+    recall_spike: LinkDegradation,
+    /// Busy (executing) NPU-µs per role — idle = assigned − busy.
+    acc_prefill_busy_npu_us: f64,
+    acc_decode_busy_npu_us: f64,
+    /// Prefill busy NPU-µs accumulated in the current controller window,
+    /// and the assigned-integral mark at the window's start — together
+    /// they yield the measured per-window prefill idle fraction.
+    win_prefill_busy_npu_us: f64,
+    win_prefill_assigned_mark: f64,
+    // --- chaos state ---
+    /// Failure-detection heartbeat period (0 = no chaos).
+    hb_us: Micros,
+    /// Whether recovery orchestration is enabled (false = baseline).
+    recovery_enabled: bool,
+    /// Replacement warm model-load latency (Table 2).
+    recovery_latency_us: Micros,
+    /// Prefill slots whose NPU group crashed (hardware view; the router's
+    /// failed mask follows at detection).
+    pf_failed: Vec<bool>,
+    /// Per-slot batch epoch: bumped whenever an in-flight batch is
+    /// discarded by a crash, invalidating its pending `PrefillDone`.
+    pf_epoch: Vec<u64>,
+    /// Decode instances whose NPU group crashed.
+    decode_failed: Vec<bool>,
+    /// Per-decode-instance straggler window (step-latency multiplier).
+    straggle: Vec<LinkDegradation>,
+    /// Fabric degradation state (KV transfers + pool fetches): the legacy
+    /// whole-fabric window plus per-(plane, node-pair) windows scoped by
+    /// rack-loss cascades.
+    links: DegradationMap,
+    /// Failure-domain layout + the domain-aware recovery policy in force.
+    resilience: ResilienceController,
+    /// Scored layout report from the placement planner (this run's
+    /// locality-vs-blast-radius trade).
+    placement: PlacementReport,
+    /// Per prefill-slot placement locality tax (≥ 1.0; exactly 1.0 under
+    /// the default `Packed` objective).
+    pf_tax: Vec<f64>,
+    /// Per decode-instance placement locality tax.
+    dec_tax: Vec<f64>,
+    /// Extra virtual µs charged by UB sub-plane brown-out windows to flows
+    /// homed on each plane (report: `plane_exposure_us`).
+    plane_exposure_us: Vec<f64>,
+    /// Prefill NPU groups on loan to the decode pool, backfilling crashed
+    /// decode capacity until the replacement warm-loads.
+    backfill_loans: Vec<BackfillLoan>,
+    /// Record indices of crashes awaiting heartbeat detection.
+    undetected: Vec<usize>,
+    fault_records: Vec<FaultRecord>,
+    /// Requests dropped by faults (recovery-disabled baseline).
+    lost: usize,
+    /// Pool namespace tracking each request's prompt-KV residency (chaos
+    /// runs only): decides re-fetch vs re-prefill after a decode crash.
+    kv_ns: Option<NamespaceId>,
+    // --- metrics ---
+    ttft: Histogram,
+    tpot: Histogram,
+    pub cache_fetch_us_total: f64,
+    pub finished: usize,
+    /// Peak prefill-queue imbalance observed across arrivals.
+    pub peak_router_imbalance: f64,
+    /// Prompt tokens recomputed because a KV-centric reroute forfeited
+    /// the locally-cached prefix.
+    pub recomputed_tokens: u64,
+}
+
+/// One prefill NPU group on loan to the decode pool (domain-aware
+/// backfill): `slot` drained into decode to cover the capacity destroyed
+/// by fault record `fault`, and returns to prefill when that fault's
+/// replacement group warm-loads.
+#[derive(Debug, Clone, Copy)]
+struct BackfillLoan {
+    slot: usize,
+    fault: usize,
+    /// The replacement arrived while the group was still mid role-switch:
+    /// bounce it straight back to prefill when its `DecodeUp` fires.
+    returning: bool,
+}
+
+/// Pool key under which a request's prompt-KV residency is tracked
+/// (chaos runs): decides the re-fetch vs re-prefill recovery path.
+fn chaos_kv_key(rid: u64) -> Key {
+    Key::of_bytes(&rid.to_le_bytes())
+}
+
+/// Residual EPLB imbalance of a decode instance sized `npus` (2 dies/NPU =
+/// `2·npus` EP ranks) under the measured activation histogram. Shrinking an
+/// instance drops its EP degree below one-expert-per-rank, so experts pack
+/// multiple-per-rank (LPT) and the residual imbalance grows — the real
+/// EPLB cost an elastic resplit pays.
+fn instance_eplb(hist: &[u64], npus: usize, redundant_budget: usize) -> f64 {
+    if npus == 0 {
+        return 1.0;
+    }
+    let ranks = npus * 2;
+    let redundant = redundant_budget.min(ranks.saturating_sub(hist.len()));
+    eplb::deployment_imbalance(hist, ranks, redundant).min(1.6)
+}
+
+/// FNV-1a fold of the expert-activation histogram: the cheap debug-build
+/// witness that `expert_hist` stayed frozen after init (the invariant the
+/// NPU-count-keyed `eplb_cache` memo depends on).
+fn hist_digest(hist: &[u64]) -> u64 {
+    hist.iter()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, &v| (h ^ v).wrapping_mul(0x0000_0100_0000_01b3))
+}
+
+impl ServeSim {
+    pub fn new(cfg: Config, opts: SimOptions, trace: Vec<Request>) -> ServeSim {
+        let s = &cfg.serving;
+        let quantum = s.npus_per_prefill;
+        let n_pf_initial = s.prefill_instances;
+
+        // memory pool across all host CPUs of the deployment's nodes
+        let pool_nodes = (s.total_npus() / cfg.topo.npus_per_node).max(2);
+        let dram_per_server = 64u64 << 30;
+        let ssd_per_server = 256u64 << 30;
+        let mut pool = MemPool::new(pool_nodes, dram_per_server, ssd_per_server);
+
+        let context_cache = if s.context_caching {
+            Some(ContextCache::new(
+                &mut pool,
+                256,
+                cfg.model.kv_bytes_per_token(),
+                s.cache_over_ub,
+            ))
+        } else {
+            None
+        };
+
+        // EPLB: measure skewed activation, place experts, derive imbalance
+        let mut ea = ExpertActivation::new(opts.seed ^ 0xE9, cfg.model.n_routed_experts, 1.05);
+        let hist = ea.batch_histogram(8192, cfg.model.top_k);
+        let eplb_imbalance = instance_eplb(&hist, s.decode_npus, s.decode_redundant_experts);
+        let eplb_hist_digest = hist_digest(&hist);
+
+        // per-tier SLO-adaptive decode batch caps (Table 5 mechanism)
+        let base_point = DecodePoint {
+            kv_len: 4096,
+            ep: s.decode_ep_degree(),
+            microbatch: s.microbatch,
+            mtp: s.mtp,
+            mtp_acceptance: s.mtp_acceptance,
+            eplb_imbalance,
+            batch_per_npu: 1,
+        };
+        let tier_batch_per_npu: Vec<usize> = (0..s.n_tiers())
+            .map(|t| {
+                plan_for_slo(&cfg.die, &cfg.model, &base_point, &s.slo_for_tier(t), 1)
+                    .batch_per_npu
+            })
+            .collect();
+
+        // the elastic controller (optional) and the prefill slot budget
+        let (autoscaler, scale_interval_us, switch_latency_us) = match &opts.autoscale {
+            Some(a) => {
+                let total = s.total_npus();
+                let raw_min_dec = if a.min_decode_npus > 0 {
+                    a.min_decode_npus
+                } else {
+                    (s.decode_npus / 4).max(quantum)
+                };
+                // keep the prefill side instance-quantized at max scale-out
+                let min_dec = total - (total.saturating_sub(raw_min_dec)) / quantum * quantum;
+                let ctl = Autoscaler {
+                    total_npus: total,
+                    prefill_quantum: quantum,
+                    min_prefill: quantum,
+                    min_decode: min_dec,
+                    hysteresis: a.hysteresis,
+                };
+                (Some(ctl), a.interval_us, a.switch_latency_us)
+            }
+            // no autoscaler: the switch latency still prices domain-aware
+            // backfill loans (prefill groups borrowed into decode)
+            None => (None, 0.0, default_switch_latency_us()),
+        };
+        let max_pf_slots = match &autoscaler {
+            Some(c) => ((c.total_npus - c.min_decode) / quantum).max(n_pf_initial),
+            None => n_pf_initial,
+        };
+
+        let prefills = (0..max_pf_slots).map(|i| PrefillInstance::new(i, quantum)).collect();
+        let mut router = Router::new(opts.router, max_pf_slots);
+        for idx in n_pf_initial..max_pf_slots {
+            router.set_active(idx, false);
+        }
+
+        // decode pool: split the decode NPUs across the instances (never
+        // more instances than NPUs — every instance needs capacity)
+        let n_dec = opts.decode_instances.clamp(1, s.decode_npus.max(1));
+        let batch0 = tier_batch_per_npu[0];
+        let sizes = split_even(s.decode_npus, n_dec);
+        let decodes: Vec<DecodeInstance> = sizes
+            .iter()
+            .copied()
+            .enumerate()
+            .map(|(i, npus)| {
+                DecodeInstance::new(
+                    npus,
+                    batch0 * npus,
+                    opts.seed ^ 0xD ^ (i as u64).wrapping_mul(0x9E37_79B9),
+                )
+            })
+            .collect();
+        // per-instance EPLB at the initial sizes (== the global value when
+        // the pool is one full-size instance)
+        let mut eplb_cache = BTreeMap::new();
+        eplb_cache.insert(s.decode_npus, eplb_imbalance);
+        let decode_eplb: Vec<f64> = sizes
+            .iter()
+            .map(|&n| {
+                *eplb_cache
+                    .entry(n)
+                    .or_insert_with(|| instance_eplb(&hist, n, s.decode_redundant_experts))
+            })
+            .collect();
+
+        // chaos wiring: detection/recovery knobs + the KV-residency
+        // namespace that decides re-fetch vs re-prefill after a crash
+        let (hb_us, recovery_enabled, recovery_latency_us) = match &opts.faults {
+            Some(f) => (f.heartbeat_us, f.recovery, f.recovery_latency_us),
+            None => (0.0, true, 0.0),
+        };
+        let kv_ns = opts
+            .faults
+            .as_ref()
+            .map(|_| pool.controller.create_namespace("chaos-kv"));
+
+        // failure-domain layout (node → rack/PSU) *planned* under the
+        // serving config's placement objective (`Packed` reproduces the
+        // historical contiguous layout bit-for-bit) + the domain-aware
+        // policy in force; the plan also prices each component's marginal
+        // cross-rack locality tax
+        let plan = PlacementPlanner::new(&cfg.topo, cfg.serving.placement)
+            .plan(&cfg.serving, max_pf_slots, n_dec);
+        let resilience = ResilienceController::new(plan.map, opts.resilience);
+        let placement = plan.report;
+        let pf_tax = plan.prefill_tax;
+        let dec_tax = plan.decode_tax;
+
+        let target_prefill_npus = n_pf_initial * quantum;
+        let mut sim = ServeSim {
+            router,
+            prefills,
+            pf_pending_up: vec![false; max_pf_slots],
+            pf_draining: vec![false; max_pf_slots],
+            decode_queues: (0..n_dec).map(|_| AdmissionQueue::default()).collect(),
+            decode_step_pending: vec![false; n_dec],
+            decodes,
+            tier_batch_per_npu,
+            rr_next: 0,
+            transfers: TransferScheduler::default(),
+            pool,
+            context_cache,
+            inflight_batches: vec![None; max_pf_slots],
+            eplb_imbalance,
+            decode_eplb,
+            expert_hist: hist,
+            eplb_cache,
+            eplb_hist_digest,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            events_processed: 0,
+            pf_node: Vec::new(),
+            pf_plane: Vec::new(),
+            dec_plane: Vec::new(),
+            dec_caps: Vec::new(),
+            occ_scratch: Vec::new(),
+            live_decodes: Vec::new(),
+            autoscaler,
+            scale_interval_us,
+            switch_latency_us,
+            target_prefill_npus,
+            win_prompt_tokens: 0,
+            win_output_tokens: 0,
+            resplits: Vec::new(),
+            acc_prefill_npu_us: 0.0,
+            acc_decode_npu_us: 0.0,
+            last_npu_t: 0.0,
+            offload_enabled: opts.autoscale.as_ref().is_some_and(|a| a.offload),
+            offload: None,
+            offload_events: Vec::new(),
+            offload_active_us: 0.0,
+            donor_tax_us: 0.0,
+            recall_spike_us: 0.0,
+            recall_spike: LinkDegradation::default(),
+            acc_prefill_busy_npu_us: 0.0,
+            acc_decode_busy_npu_us: 0.0,
+            win_prefill_busy_npu_us: 0.0,
+            win_prefill_assigned_mark: 0.0,
+            hb_us,
+            recovery_enabled,
+            recovery_latency_us,
+            pf_failed: vec![false; max_pf_slots],
+            pf_epoch: vec![0; max_pf_slots],
+            decode_failed: vec![false; n_dec],
+            straggle: vec![LinkDegradation::default(); n_dec],
+            links: DegradationMap::default(),
+            resilience,
+            placement,
+            pf_tax,
+            dec_tax,
+            plane_exposure_us: vec![0.0; UB_PLANES],
+            backfill_loans: Vec::new(),
+            undetected: Vec::new(),
+            fault_records: Vec::new(),
+            lost: 0,
+            kv_ns,
+            ttft: Histogram::new(),
+            tpot: Histogram::new(),
+            cache_fetch_us_total: 0.0,
+            finished: 0,
+            peak_router_imbalance: 1.0,
+            recomputed_tokens: 0,
+            requests: trace.into_iter().map(RequestState::new).collect(),
+            cfg,
+            opts,
+        };
+        // layout-time hot-path caches: the failure-domain map is immutable
+        // for the life of a run (`on_rack_loss` clones it to iterate), so
+        // each component's home node / UB sub-plane resolves once here
+        // instead of per batch/step inside the event loop
+        sim.pf_node = (0..max_pf_slots).map(|i| sim.resilience.map.prefill_node(i)).collect();
+        sim.pf_plane = sim.pf_node.iter().map(|&n| sim.resilience.map.ub_plane(n)).collect();
+        sim.dec_plane = (0..n_dec)
+            .map(|i| sim.resilience.map.ub_plane(sim.resilience.map.decode_node(i)))
+            .collect();
+        sim.rebuild_dec_caps();
+        sim.rebuild_live_decodes();
+        for i in 0..sim.requests.len() {
+            let t = sim.requests[i].spec.arrival_us;
+            sim.push(t, Event::Arrival(i));
+        }
+        if sim.autoscaler.is_some() {
+            let t = sim.scale_interval_us;
+            sim.push(t, Event::ScaleEpoch);
+        }
+        // chaos: schedule every planned fault, plus the detection heartbeat
+        let fault_times: Vec<(Micros, usize)> = sim
+            .opts
+            .faults
+            .as_ref()
+            .map(|f| f.plan.events.iter().enumerate().map(|(i, e)| (e.t_us, i)).collect())
+            .unwrap_or_default();
+        let any_faults = !fault_times.is_empty();
+        for (t, i) in fault_times {
+            sim.push(t, Event::Fault(i));
+        }
+        if any_faults {
+            let t = sim.hb_us;
+            sim.push(t, Event::Heartbeat);
+        }
+        sim
+    }
+
+    fn push(&mut self, t: Micros, ev: Event) {
+        self.seq += 1;
+        self.heap.push(Reverse(Timed { t, seq: self.seq, ev }));
+    }
+
+    /// Run to completion (or the event cap). Returns the serving report.
+    pub fn run(&mut self) -> ServingReport {
+        self.events_processed = 0;
+        while let Some(Reverse(Timed { t, ev, .. })) = self.heap.pop() {
+            // Once every request is terminally accounted, serving is over:
+            // remaining planned faults would hit an empty system with no
+            // heartbeat left to detect them, and pending replacements or
+            // in-flight role switches (elastic resplits, backfill-loan
+            // returns) are pure bookkeeping. None may advance virtual time
+            // — they would inflate the reported duration (and deflate
+            // goodput/s).
+            if !self.requests.is_empty() && self.finished + self.lost >= self.requests.len() {
+                match ev {
+                    Event::Fault(_) | Event::Heartbeat => continue,
+                    Event::PrefillUp(inst) => {
+                        self.integrate_npu_time();
+                        self.pf_pending_up[inst] = false;
+                        self.router.set_active(inst, true);
+                        continue;
+                    }
+                    Event::DecodeUp(inst) => {
+                        self.integrate_npu_time();
+                        self.pf_draining[inst] = false;
+                        // a loan already flagged for return dissolves here
+                        // — serving is over, no NPUs move
+                        self.backfill_loans.retain(|l| !(l.slot == inst && l.returning));
+                        continue;
+                    }
+                    Event::DecodeRecover(rec) => {
+                        if let FaultKind::DecodeCrash { instance } =
+                            self.fault_records[rec].kind
+                        {
+                            self.integrate_npu_time();
+                            self.fault_records[rec].recovered_us = Some(t);
+                            self.decode_failed[instance] = false;
+                            self.rebuild_live_decodes();
+                        }
+                        // the replacement obsoletes any backfill loan;
+                        // serving is over, so the loan just dissolves
+                        self.backfill_loans.retain(|l| l.fault != rec);
+                        continue;
+                    }
+                    Event::PrefillRecover(rec) => {
+                        if let FaultKind::PrefillCrash { instance } =
+                            self.fault_records[rec].kind
+                        {
+                            self.integrate_npu_time();
+                            self.fault_records[rec].recovered_us = Some(t);
+                            self.pf_failed[instance] = false;
+                            self.router.set_failed(instance, false);
+                        }
+                        continue;
+                    }
+                    _ => {}
+                }
+            }
+            self.now = t;
+            self.events_processed += 1;
+            if self.events_processed > self.opts.max_events {
+                eprintln!("warning: event cap reached at t={t}");
+                break;
+            }
+            match ev {
+                Event::Arrival(idx) => self.on_arrival(idx),
+                Event::PrefillKick(inst) => self.kick_prefill(inst),
+                Event::PrefillDone(inst, epoch) => self.on_prefill_done(inst, epoch),
+                Event::TransferDone(req) => self.on_transfer_done(req),
+                Event::DecodeStep(inst) => self.on_decode_step(inst),
+                Event::ScaleEpoch => self.on_scale_epoch(),
+                Event::PrefillUp(inst) => self.on_prefill_up(inst),
+                Event::DecodeUp(inst) => self.on_decode_up(inst),
+                Event::Fault(i) => self.on_fault(i),
+                Event::Heartbeat => self.on_heartbeat(),
+                Event::DecodeRecover(rec) => self.on_decode_recover(rec),
+                Event::PrefillRecover(rec) => self.on_prefill_recover(rec),
+            }
+        }
+        self.report()
+    }
+}

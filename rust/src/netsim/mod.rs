@@ -220,13 +220,49 @@ impl LinkKey {
 /// keys never interact. Queries combine the global window with the scoped
 /// ones by worst-case `max` (degradations do not compound multiplicatively:
 /// a flow runs at the speed of its most degraded constraint).
-#[derive(Debug, Clone, Default)]
+///
+/// Hot-path design: queries are indexed, never linear in the window count.
+/// `node_index` maps `(plane, node)` to the scoped keys touching that node
+/// (so [`node_multiplier`](Self::node_multiplier) visits only relevant
+/// windows), `scoped_last_expiry` — the exact max `until_us` over stored
+/// windows — gives every query a constant-time "nothing active" fast path,
+/// and expired entries are pruned *amortized* (only when virtual time
+/// passes `scoped_next_expiry`) rather than on every insert. Leaving an
+/// expired window in the map is semantics-preserving: windows self-expire
+/// in `multiplier`/`is_active`, and `extend` replaces (never merges with)
+/// an expired window.
+#[derive(Debug, Clone)]
 pub struct DegradationMap {
     global: LinkDegradation,
     scoped: std::collections::BTreeMap<LinkKey, LinkDegradation>,
     /// Brown-out windows per UB sub-plane index (`0..UB_PLANES`): only
     /// flows *homed* on a browned-out plane take its multiplier.
     ub_planes: std::collections::BTreeMap<usize, LinkDegradation>,
+    /// `(plane, node)` → scoped keys touching that node. Every key in the
+    /// index is present in `scoped` (rebuilt together at prune time).
+    node_index: std::collections::BTreeMap<(u8, u16), Vec<LinkKey>>,
+    /// Lower bound on the earliest `until_us` in `scoped` — the next
+    /// moment a prune could reclaim anything (∞ when empty).
+    scoped_next_expiry: Micros,
+    /// Exact max `until_us` over stored scoped windows: `now` at or past
+    /// this means no scoped window is active (the query fast path).
+    scoped_last_expiry: Micros,
+    /// Lower bound on the earliest `until_us` in `ub_planes`.
+    ub_next_expiry: Micros,
+}
+
+impl Default for DegradationMap {
+    fn default() -> Self {
+        DegradationMap {
+            global: LinkDegradation::default(),
+            scoped: std::collections::BTreeMap::new(),
+            ub_planes: std::collections::BTreeMap::new(),
+            node_index: std::collections::BTreeMap::new(),
+            scoped_next_expiry: f64::INFINITY,
+            scoped_last_expiry: 0.0,
+            ub_next_expiry: f64::INFINITY,
+        }
+    }
 }
 
 impl DegradationMap {
@@ -235,14 +271,45 @@ impl DegradationMap {
         self.global = self.global.extend(now, factor, duration_us);
     }
 
-    /// Open/extend the window for one `(plane, node-pair)` key, and prune
-    /// windows that have already expired (the map stays small under long
-    /// chaos runs).
+    /// Open/extend the window for one `(plane, node-pair)` key. Expired
+    /// windows are pruned *amortized* — only once virtual time passes the
+    /// earliest stored expiry — so the insert is O(log n), not O(n), while
+    /// the map still stays small under long chaos runs. Merging against a
+    /// possibly-expired stored window is identical to merging after a
+    /// prune, because `extend` replaces an expired window outright.
     pub fn degrade(&mut self, key: LinkKey, now: Micros, factor: f64, duration_us: Micros) {
-        self.scoped.retain(|_, w| w.is_active(now));
+        if now >= self.scoped_next_expiry {
+            self.prune_scoped(now);
+        }
         let merged =
             self.scoped.get(&key).copied().unwrap_or_default().extend(now, factor, duration_us);
-        self.scoped.insert(key, merged);
+        if self.scoped.insert(key, merged).is_none() {
+            self.node_index.entry((key.plane, key.a)).or_default().push(key);
+            if key.b != ANY_NODE && key.b != key.a {
+                self.node_index.entry((key.plane, key.b)).or_default().push(key);
+            }
+        }
+        self.scoped_next_expiry = self.scoped_next_expiry.min(merged.until_us);
+        self.scoped_last_expiry = self.scoped_last_expiry.max(merged.until_us);
+    }
+
+    /// Drop expired scoped windows and rebuild the node index plus the
+    /// exact expiry bounds.
+    fn prune_scoped(&mut self, now: Micros) {
+        self.scoped.retain(|_, w| w.is_active(now));
+        self.node_index.clear();
+        let mut next = f64::INFINITY;
+        let mut last = 0.0f64;
+        for (key, w) in &self.scoped {
+            next = next.min(w.until_us);
+            last = last.max(w.until_us);
+            self.node_index.entry((key.plane, key.a)).or_default().push(*key);
+            if key.b != ANY_NODE && key.b != key.a {
+                self.node_index.entry((key.plane, key.b)).or_default().push(*key);
+            }
+        }
+        self.scoped_next_expiry = next;
+        self.scoped_last_expiry = last;
     }
 
     /// The window currently stored for a key (healthy default when none).
@@ -266,7 +333,13 @@ impl DegradationMap {
             self.degrade_global(now, factor, duration_us);
             return;
         }
-        self.ub_planes.retain(|_, w| w.is_active(now));
+        // Amortized prune, same argument as `degrade`: expired windows are
+        // inert for every query and merge.
+        if now >= self.ub_next_expiry {
+            self.ub_planes.retain(|_, w| w.is_active(now));
+            self.ub_next_expiry =
+                self.ub_planes.values().fold(f64::INFINITY, |m, w| m.min(w.until_us));
+        }
         let merged = self
             .ub_planes
             .get(&plane)
@@ -274,6 +347,7 @@ impl DegradationMap {
             .unwrap_or_default()
             .extend(now, factor, duration_us);
         self.ub_planes.insert(plane, merged);
+        self.ub_next_expiry = self.ub_next_expiry.min(merged.until_us);
     }
 
     /// The brown-out window stored for a UB sub-plane (healthy default
@@ -314,30 +388,50 @@ impl DegradationMap {
 
     /// Multiplier for transfers with one known endpoint: worst over every
     /// scoped window on the plane touching the node, plus the global one.
+    /// Indexed: visits only the windows touching `(plane, node)`, with a
+    /// constant-time exit once every scoped window has expired. `max` over
+    /// non-NaN f64 is order-free, so reordering the fold via the index is
+    /// bit-exact against the old full scan.
     pub fn node_multiplier(&self, plane: Plane, node: u16, now: Micros) -> f64 {
-        let p = plane_idx(plane);
-        self.scoped
-            .iter()
-            .filter(|(k, _)| k.plane == p && k.touches(node))
-            .map(|(_, w)| w.multiplier(now))
-            .fold(self.global.multiplier(now), f64::max)
+        if now >= self.scoped_last_expiry {
+            return self.global.multiplier(now);
+        }
+        let mut m = self.global.multiplier(now);
+        if let Some(keys) = self.node_index.get(&(plane_idx(plane), node)) {
+            for key in keys {
+                debug_assert!(key.touches(node), "node_index entry does not touch its node");
+                if let Some(w) = self.scoped.get(key) {
+                    m = m.max(w.multiplier(now));
+                }
+            }
+        }
+        m
     }
 
     /// Plane-wide worst multiplier (transfers with no node attribution,
     /// e.g. pool fetches whose server placement is below the model).
+    /// `LinkKey` orders by `(plane, a, b)`, so one plane's windows are a
+    /// contiguous `range` of the map — no cross-plane scan.
     pub fn plane_multiplier(&self, plane: Plane, now: Micros) -> f64 {
+        if now >= self.scoped_last_expiry {
+            return self.global.multiplier(now);
+        }
         let p = plane_idx(plane);
+        let lo = LinkKey { plane: p, a: 0, b: 0 };
+        let hi = LinkKey { plane: p, a: u16::MAX, b: u16::MAX };
         self.scoped
-            .iter()
-            .filter(|(k, _)| k.plane == p)
+            .range(lo..=hi)
             .map(|(_, w)| w.multiplier(now))
             .fold(self.global.multiplier(now), f64::max)
     }
 
     /// Whether any window (scoped, sub-plane, or global) is active at `now`.
+    /// `scoped_last_expiry` is the exact max `until_us` over stored scoped
+    /// windows, so `now < scoped_last_expiry` ⇔ some scoped window is
+    /// still active — no scan.
     pub fn is_degraded(&self, now: Micros) -> bool {
         self.global.is_active(now)
-            || self.scoped.values().any(|w| w.is_active(now))
+            || now < self.scoped_last_expiry
             || self.ub_planes.values().any(|w| w.is_active(now))
     }
 }

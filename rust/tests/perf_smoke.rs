@@ -1,0 +1,137 @@
+//! Perf smoke: a scaled-down cut of the `BENCH_sim_core` mega-scenario
+//! (same preset, seed, and pool shape — 25 K requests instead of 1 M),
+//! run on every `cargo test`:
+//!
+//! 1. Determinism: two same-seed runs must dispatch the *identical*
+//!    number of events and produce bit-identical report scalars — the
+//!    same invariant the bench asserts at mega size.
+//! 2. Trajectory gate: events/sec must stay within 20 % of the committed
+//!    baseline (`rust/tests/fixtures/bench_sim_core_baseline.json`).
+//!    The fixture follows the golden-trace bootstrap idiom: a sentinel
+//!    (`events_per_sec: 0`) makes the first run write the measured
+//!    baseline in place for committing. The gate only compares runs from
+//!    the same build profile (a debug measurement never gates a release
+//!    one, and vice versa).
+
+use std::time::Instant;
+
+use cm_infer::config::Config;
+use cm_infer::coordinator::sim::{ServeSim, SimOptions};
+use cm_infer::util::json::Json;
+use cm_infer::workload::{generate_scenario, ScenarioSpec};
+
+const SEED: u64 = 42;
+const N: usize = 25_000;
+const BASELINE: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/rust/tests/fixtures/bench_sim_core_baseline.json"
+);
+
+fn profile() -> &'static str {
+    if cfg!(debug_assertions) {
+        "debug"
+    } else {
+        "release"
+    }
+}
+
+/// Same FNV-1a scalar fold as `rust/benches/bench_sim_core.rs`.
+fn report_digest(r: &cm_infer::metrics::ServingReport) -> u64 {
+    let scalars = [
+        r.duration_us,
+        r.requests_completed as f64,
+        r.prompt_tokens as f64,
+        r.output_tokens as f64,
+        r.goodput_tokens as f64,
+        r.ttft_us.p50,
+        r.ttft_us.p99,
+        r.tpot_us.p50,
+        r.tpot_us.p99,
+        r.requests_lost as f64,
+    ];
+    scalars.iter().fold(0xcbf2_9ce4_8422_2325u64, |h, v| {
+        (h ^ v.to_bits()).wrapping_mul(0x0000_0100_0000_01b3)
+    })
+}
+
+/// One timed run of the pinned scenario: (events, digest, elapsed s).
+fn run_once(trace: &[cm_infer::workload::Request], cfg: &Config) -> (usize, u64, f64) {
+    let opts = SimOptions {
+        seed: SEED,
+        decode_instances: 8,
+        max_events: usize::MAX,
+        ..SimOptions::default()
+    };
+    let mut sim = ServeSim::new(cfg.clone(), opts, trace.to_vec());
+    let t0 = Instant::now();
+    let r = sim.run();
+    let dt = t0.elapsed().as_secs_f64();
+    (sim.events_processed(), report_digest(&r), dt)
+}
+
+#[test]
+fn sim_core_smoke_deterministic_and_no_regression() {
+    let sc = ScenarioSpec::by_name("mixed_slo", SEED).unwrap();
+    let trace = generate_scenario(&sc, N);
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+
+    let (e1, d1, t1) = run_once(&trace, &cfg);
+    let (e2, d2, t2) = run_once(&trace, &cfg);
+    assert!(e1 > 0, "pinned scenario dispatched no events");
+    assert_eq!(e1, e2, "same seed, different event count: sim core is non-deterministic");
+    assert_eq!(
+        d1, d2,
+        "same seed, different report digest: f64 accumulation is order-unstable"
+    );
+
+    let best = t1.min(t2);
+    let events_per_sec = e1 as f64 / best;
+    eprintln!(
+        "perf_smoke: {e1} events in {best:.3}s = {events_per_sec:.0} events/s ({})",
+        profile()
+    );
+
+    let committed = std::fs::read_to_string(BASELINE)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok());
+    let baseline = committed.as_ref().and_then(|j| {
+        let eps = j.get("events_per_sec")?.as_f64().ok()?;
+        let prof = j.get("profile")?.as_str().ok()?.to_string();
+        Some((eps, prof))
+    });
+    match baseline {
+        Some((eps, prof)) if eps > 0.0 && prof == profile() => {
+            assert!(
+                events_per_sec >= 0.8 * eps,
+                "sim-core throughput regressed >20%: measured {events_per_sec:.0} \
+                 events/s vs baseline {eps:.0} ({prof}). If the slowdown is \
+                 intentional, reset {BASELINE} to the sentinel (events_per_sec: 0) \
+                 and re-run to regenerate."
+            );
+        }
+        Some((eps, prof)) if eps > 0.0 => {
+            eprintln!(
+                "NOTE: baseline profile `{prof}` != current `{}`; skipping the \
+                 regression gate (determinism still checked)",
+                profile()
+            );
+        }
+        _ => {
+            // bootstrap: sentinel (or unreadable) baseline — write the
+            // measured snapshot in place, golden-fixture style
+            let mut obj = std::collections::BTreeMap::new();
+            obj.insert("bench".to_string(), Json::Str("sim_core_smoke".to_string()));
+            obj.insert("scenario".to_string(), Json::Str("mixed_slo".to_string()));
+            obj.insert("seed".to_string(), Json::Num(SEED as f64));
+            obj.insert("requests".to_string(), Json::Num(N as f64));
+            obj.insert("events".to_string(), Json::Num(e1 as f64));
+            obj.insert("events_per_sec".to_string(), Json::Num(events_per_sec));
+            obj.insert("profile".to_string(), Json::Str(profile().to_string()));
+            match std::fs::write(BASELINE, Json::Obj(obj).to_string()) {
+                Ok(()) => eprintln!("NOTE: wrote perf baseline {BASELINE}; commit it"),
+                Err(e) => eprintln!("NOTE: could not write perf baseline: {e}"),
+            }
+        }
+    }
+}
