@@ -4,6 +4,11 @@
 //!
 //!   cargo run --release --offline --example slo_explorer [--kv N]
 //!
+//! `--trace-out BASE` (scenario mode) records telemetry for every leg and
+//! writes `BASE.leg<i>.trace.json` (Perfetto-loadable Chrome trace) plus
+//! `BASE.leg<i>.metrics.jsonl` — compare the frozen vs elastic legs side
+//! by side on the same timeline.
+//!
 //! With `--scenario NAME` (diurnal, burst_storm, long_context_drift,
 //! mixed_slo, memory_bound_decode) it instead runs the full serving
 //! simulation on that preset, frozen split vs elastic autoscaling (with
@@ -29,7 +34,7 @@ use cm_infer::faults::{FaultOptions, FaultPlan};
 use cm_infer::simnpu::pipeline::DecodePoint;
 use cm_infer::workload::{generate_scenario, ScenarioSpec};
 
-fn explore_scenario(name: &str) {
+fn explore_scenario(name: &str, trace_base: Option<&str>) {
     let Some(sc) = ScenarioSpec::by_name(name, 7) else {
         eprintln!("unknown scenario `{name}`; presets: {}", ScenarioSpec::PRESETS.join(", "));
         std::process::exit(2);
@@ -108,7 +113,9 @@ fn explore_scenario(name: &str) {
         ]
     };
     println!("== scenario `{}` ({n} requests) ==\n", sc.name);
-    for Leg { label, autoscale, offload, chaos, resilience, placement } in legs {
+    for (li, Leg { label, autoscale, offload, chaos, resilience, placement }) in
+        legs.into_iter().enumerate()
+    {
         let mut cfg = cfg.clone();
         cfg.serving.placement = placement;
         let faults = match (chaos, sc.fault_profile, sc.correlated) {
@@ -145,6 +152,7 @@ fn explore_scenario(name: &str) {
                 .then(|| AutoscaleOptions { offload, ..AutoscaleOptions::default() }),
             faults,
             resilience,
+            telemetry: trace_base.is_some().then(cm_infer::telemetry::TelemetryOptions::default),
             ..SimOptions::default()
         };
         let mut sim = ServeSim::new(cfg.clone(), opts, trace.clone());
@@ -195,6 +203,16 @@ fn explore_scenario(name: &str) {
                 e.decode_npus_after
             );
         }
+        if let (Some(base), Some(tel)) = (trace_base, sim.take_telemetry()) {
+            let tpath = format!("{base}.leg{li}.trace.json");
+            let mpath = format!("{base}.leg{li}.metrics.jsonl");
+            match std::fs::write(&tpath, tel.trace_json(&r))
+                .and_then(|()| std::fs::write(&mpath, tel.metrics_jsonl()))
+            {
+                Ok(()) => println!("  telemetry → {tpath}, {mpath}"),
+                Err(e) => eprintln!("  telemetry export failed: {e}"),
+            }
+        }
         println!();
     }
 }
@@ -204,7 +222,12 @@ fn main() {
     if let Some(name) =
         args.iter().position(|a| a == "--scenario").and_then(|i| args.get(i + 1))
     {
-        explore_scenario(name);
+        let trace_base = args
+            .iter()
+            .position(|a| a == "--trace-out")
+            .and_then(|i| args.get(i + 1))
+            .cloned();
+        explore_scenario(name, trace_base.as_deref());
         return;
     }
     let kv: usize = args

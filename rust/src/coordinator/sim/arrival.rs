@@ -69,6 +69,7 @@ impl ServeSim {
         let ct = st.compute_tokens();
         let pl = st.spec.prompt_tokens;
         self.prefills[decision.instance].enqueue(idx as u64, ct, pl);
+        self.tel_phase(idx as u64, crate::telemetry::SpanKind::PrefillQueue);
         self.push(self.now + fetch_us, Event::PrefillKick(decision.instance));
     }
 
@@ -116,6 +117,15 @@ impl ServeSim {
             let st = &mut self.requests[rid as usize];
             st.phase = RequestPhase::Prefilling;
             st.t_prefill_start = Some(self.now);
+            let recovering = st.recovering;
+            self.tel_phase(
+                rid,
+                if recovering {
+                    crate::telemetry::SpanKind::Reprefill
+                } else {
+                    crate::telemetry::SpanKind::Prefill
+                },
+            );
         }
         self.inflight_batches[inst] = Some(batch);
         self.prefills[inst].busy_until = self.now + lat;
@@ -177,6 +187,7 @@ impl ServeSim {
                 // the rebuilt KV covers prompt AND the already-generated
                 // suffix — all of it moves to the new decode instance
                 let kv_tokens = st.spec.prompt_tokens + st.generated;
+                self.tel_phase(rid, crate::telemetry::SpanKind::KvTransfer);
                 let cost = kv_transfer(&self.pool.net, &self.cfg.model, kv_tokens);
                 let mult = self.ub_homed_multiplier(link_mult, self.pf_plane[inst], cost.rdma_us);
                 let cost = TransferCost { rdma_us: cost.rdma_us * mult, ..cost };
@@ -195,10 +206,16 @@ impl ServeSim {
                 st.t_finished = Some(self.now);
                 self.finished += 1;
                 self.drop_chaos_kv(rid);
+                self.tel_tokens(1);
+                self.tel_mark(rid, "first_token");
+                self.tel_finished(rid);
                 continue;
             }
             st.phase = RequestPhase::Transferring;
             let cost = kv_transfer(&self.pool.net, &self.cfg.model, st.spec.prompt_tokens);
+            self.tel_tokens(1);
+            self.tel_mark(rid, "first_token");
+            self.tel_phase(rid, crate::telemetry::SpanKind::KvTransfer);
             let mult = self.ub_homed_multiplier(link_mult, self.pf_plane[inst], cost.rdma_us);
             let cost = TransferCost { rdma_us: cost.rdma_us * mult, ..cost };
             let done = self.transfers.begin(rid, self.now, &cost);

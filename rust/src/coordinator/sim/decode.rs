@@ -75,6 +75,7 @@ impl ServeSim {
         st.phase = RequestPhase::QueuedDecode;
         let tier = st.spec.slo_tier.min(self.tier_batch_per_npu.len() - 1);
         self.decode_queues[inst].push_tier(rid, tier);
+        self.tel_phase(rid, crate::telemetry::SpanKind::DecodeQueue);
         if !self.decode_failed[inst] && !self.decode_step_pending[inst] {
             self.decode_step_pending[inst] = true;
             self.push(self.now, Event::DecodeStep(inst));
@@ -126,6 +127,7 @@ impl ServeSim {
                 remaining,
                 tier,
             );
+            self.tel_phase(rid, crate::telemetry::SpanKind::Decode);
         }
         if self.decodes[inst].slots.is_empty() {
             self.decode_step_pending[inst] = false;
@@ -188,7 +190,9 @@ impl ServeSim {
                 st.t_finished = Some(step_end);
                 self.finished += 1;
                 self.drop_chaos_kv(e.request);
+                self.tel_finished(e.request);
             }
+            self.tel_tokens(e.tokens as u64);
         }
         self.push(step_end, Event::DecodeStep(inst));
     }

@@ -307,6 +307,7 @@ impl ServeSim {
                         // actually moved — counted as re-dispatch work
                         self.fault_records[rec].requests_rehomed += 1;
                         self.decode_queues[target].push_tier(rid, tier);
+                        self.tel_mark(rid, "rehome");
                         if !self.decode_step_pending[target] {
                             self.decode_step_pending[target] = true;
                             self.push(self.now, Event::DecodeStep(target));
@@ -427,6 +428,8 @@ impl ServeSim {
                 // chosen at TransferDone, so the flow has no home yet
                 let delay = fetch_us * self.links.plane_multiplier(self.pool_plane(), self.now);
                 let t = self.now + delay;
+                self.tel_mark(rid, "rehome");
+                self.tel_phase(rid, crate::telemetry::SpanKind::KvRefetch);
                 self.push(t, Event::TransferDone(rid));
             }
             None => {
@@ -443,6 +446,8 @@ impl ServeSim {
                 let d = self.router.route_avoiding_donors(session, ct as u64);
                 st.prefill_instance = Some(d.instance);
                 self.prefills[d.instance].enqueue(rid, ct, ct);
+                self.tel_mark(rid, "rehome");
+                self.tel_phase(rid, crate::telemetry::SpanKind::ReprefillQueue);
                 self.push(self.now, Event::PrefillKick(d.instance));
             }
         }
@@ -507,6 +512,7 @@ impl ServeSim {
         st.t_lost = Some(self.now);
         self.lost += 1;
         self.drop_chaos_kv(rid);
+        self.tel_lost(rid);
         true
     }
 
@@ -587,8 +593,18 @@ impl ServeSim {
         } else {
             (st.compute_tokens(), st.spec.prompt_tokens)
         };
+        let recovering = st.recovering;
         st.prefill_instance = Some(d.instance);
         self.prefills[d.instance].enqueue(rid, ct, pl);
+        self.tel_mark(rid, "rehome");
+        self.tel_phase(
+            rid,
+            if recovering {
+                crate::telemetry::SpanKind::ReprefillQueue
+            } else {
+                crate::telemetry::SpanKind::PrefillQueue
+            },
+        );
         self.push(self.now, Event::PrefillKick(d.instance));
     }
 

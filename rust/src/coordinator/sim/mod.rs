@@ -122,6 +122,7 @@ use crate::metrics::{
 };
 use crate::netsim::{DegradationMap, LinkDegradation, LinkKey, Plane};
 use crate::simnpu::pipeline::{DecodePoint, STEP_OVERHEAD_US};
+use crate::telemetry::{Telemetry, TelemetryOptions};
 use crate::util::split_even;
 use crate::workload::{ExpertActivation, Request};
 use crate::Micros;
@@ -131,6 +132,7 @@ mod arrival;
 mod decode;
 mod elastic;
 mod faults;
+mod telemetry;
 #[cfg(test)]
 mod tests;
 
@@ -234,6 +236,11 @@ pub struct SimOptions {
     /// backfill, mass recall). The default `independent()` policy
     /// reproduces the plain per-fault recovery orchestration.
     pub resilience: ResiliencePolicy,
+    /// Observability: record per-request span timelines, interval
+    /// samples, and incident annotations (see [`crate::telemetry`]).
+    /// `None` (the default) compiles every hook down to a null check —
+    /// same-seed reports are bit-identical with telemetry on or off.
+    pub telemetry: Option<TelemetryOptions>,
 }
 
 impl Default for SimOptions {
@@ -248,6 +255,7 @@ impl Default for SimOptions {
             autoscale: None,
             faults: None,
             resilience: ResiliencePolicy::independent(),
+            telemetry: None,
         }
     }
 }
@@ -447,6 +455,11 @@ pub struct ServeSim {
     /// Pool namespace tracking each request's prompt-KV residency (chaos
     /// runs only): decides re-fetch vs re-prefill after a decode crash.
     kv_ns: Option<NamespaceId>,
+    // --- observability ---
+    /// Span/sample/mark recorder; `None` (the default) keeps every hook a
+    /// null check on the hot path. Boxed so the disabled sim carries one
+    /// pointer, not the recorder's buffers.
+    telemetry: Option<Box<Telemetry>>,
     // --- metrics ---
     ttft: Histogram,
     tpot: Histogram,
@@ -634,6 +647,8 @@ impl ServeSim {
         let pf_tax = plan.prefill_tax;
         let dec_tax = plan.decode_tax;
 
+        let telemetry = opts.telemetry.clone().map(|o| Box::new(Telemetry::new(o, s.n_tiers())));
+
         let target_prefill_npus = n_pf_initial * quantum;
         let mut sim = ServeSim {
             router,
@@ -703,6 +718,7 @@ impl ServeSim {
             fault_records: Vec::new(),
             lost: 0,
             kv_ns,
+            telemetry,
             ttft: Histogram::new(),
             tpot: Histogram::new(),
             cache_fetch_us_total: 0.0,
@@ -811,6 +827,13 @@ impl ServeSim {
                     _ => {}
                 }
             }
+            // telemetry sampler: piggybacks on the dispatch loop rather
+            // than the event heap, so heap contents, seq numbers, RNG
+            // draws, and `events_processed` are identical with telemetry
+            // on or off (the bit-exactness contract)
+            if self.telemetry.is_some() {
+                self.flush_samples(t);
+            }
             self.now = t;
             self.events_processed += 1;
             if self.events_processed > self.opts.max_events {
@@ -831,6 +854,9 @@ impl ServeSim {
                 Event::DecodeRecover(rec) => self.on_decode_recover(rec),
                 Event::PrefillRecover(rec) => self.on_prefill_recover(rec),
             }
+        }
+        if self.telemetry.is_some() {
+            self.sample_final();
         }
         self.report()
     }

@@ -1,0 +1,156 @@
+//! Telemetry hooks: the sim side of [`crate::telemetry`].
+//!
+//! Every `tel_*` method is a null check on `self.telemetry` when
+//! observability is off — the hooks never touch the event heap, the
+//! RNG, or any accounted state, so same-seed reports are bit-identical
+//! with telemetry on or off (`tests/telemetry.rs` pins this).
+//!
+//! The interval sampler rides the *dispatch loop*, not the heap:
+//! `run()` calls [`ServeSim::flush_samples`] before advancing `now` to
+//! the next event's time, emitting one [`Sample`] per elapsed period
+//! boundary (and [`ServeSim::sample_final`] closes the series at the
+//! run horizon). Scheduling sampler events on the heap instead would
+//! perturb `seq` numbers and the event count — the exact things the
+//! determinism contract freezes.
+
+use super::*;
+use crate::telemetry::{Sample, SpanKind};
+
+impl ServeSim {
+    /// Transition request `rid` into phase `kind` at the current virtual
+    /// time (closes the previously open span).
+    pub(super) fn tel_phase(&mut self, rid: u64, kind: SpanKind) {
+        let now = self.now;
+        if let Some(tel) = self.telemetry.as_mut() {
+            tel.phase(rid, now, kind);
+        }
+    }
+
+    /// Drop an instant mark (`"first_token"`, `"rehome"`, …) on `rid`'s
+    /// track.
+    pub(super) fn tel_mark(&mut self, rid: u64, label: &'static str) {
+        let now = self.now;
+        if let Some(tel) = self.telemetry.as_mut() {
+            tel.mark(rid, now, label);
+        }
+    }
+
+    /// Terminal: the request was dropped by a fault (recovery-disabled
+    /// baseline). Closes its open span with a `"lost"` mark.
+    pub(super) fn tel_lost(&mut self, rid: u64) {
+        let now = self.now;
+        if let Some(tel) = self.telemetry.as_mut() {
+            tel.close(rid, now, "lost");
+        }
+    }
+
+    /// Terminal: the request completed. Closes its open span at the
+    /// recorded finish time (decode emits report finish times at the step
+    /// *end*, which is ahead of `now`) and feeds the rolling per-tier SLO
+    /// window with the same both-SLOs check the end-of-run
+    /// [`ServeSim::tier_attainment`] applies.
+    pub(super) fn tel_finished(&mut self, rid: u64) {
+        if self.telemetry.is_none() {
+            return;
+        }
+        let st = &self.requests[rid as usize];
+        let t_end = st.t_finished.unwrap_or(self.now);
+        let n_tiers = self.cfg.serving.n_tiers();
+        let tier = st.spec.slo_tier.min(n_tiers - 1);
+        let slo = self.cfg.serving.slo_for_tier(tier);
+        let ttft_ok = st.ttft_us().is_some_and(|t| t <= slo.ttft_ms * 1000.0);
+        let tpot_ok = if st.generated > 1 {
+            let span = t_end - st.t_first_token.unwrap_or(t_end);
+            span / (st.generated - 1) as f64 <= slo.tpot_ms * 1000.0
+        } else {
+            true
+        };
+        let tel = self.telemetry.as_mut().expect("checked above");
+        tel.close(rid, t_end, "complete");
+        tel.request_finished(tier, ttft_ok && tpot_ok);
+    }
+
+    /// Count emitted output tokens into the current sample window.
+    pub(super) fn tel_tokens(&mut self, n: u64) {
+        if let Some(tel) = self.telemetry.as_mut() {
+            tel.tokens(n);
+        }
+    }
+
+    /// Emit one [`Sample`] per period boundary strictly before `upto`
+    /// (the next event's dispatch time). Called from `run()` before `now`
+    /// advances, so each sample reads the system state as of its
+    /// boundary: no event at t ≥ boundary has been applied yet.
+    pub(super) fn flush_samples(&mut self, upto: Micros) {
+        let Some(mut tel) = self.telemetry.take() else { return };
+        while let Some(t) = tel.sample_due(upto) {
+            tel.push_sample(self.build_sample(t));
+        }
+        self.telemetry = Some(tel);
+    }
+
+    /// Close the sample series with one final snapshot at the run horizon
+    /// (the tail partial window would otherwise be dropped).
+    pub(super) fn sample_final(&mut self) {
+        let Some(mut tel) = self.telemetry.take() else { return };
+        let now = self.now;
+        tel.push_sample(self.build_sample(now));
+        self.telemetry = Some(tel);
+    }
+
+    /// Detach the recorder (with its spans/samples/marks) after a run —
+    /// callers export via [`crate::telemetry::Telemetry::trace_json`] /
+    /// [`crate::telemetry::Telemetry::metrics_jsonl`]. Returns `None` when
+    /// the run had telemetry disabled.
+    pub fn take_telemetry(&mut self) -> Option<Box<crate::telemetry::Telemetry>> {
+        self.telemetry.take()
+    }
+
+    /// Snapshot the serving system at virtual time `t`. Read-only: every
+    /// query here is a `&self` accessor (pool stats, degradation windows,
+    /// router queues), so sampling cannot perturb the simulation.
+    fn build_sample(&self, t: Micros) -> Sample {
+        let prefill_queued_reqs: usize = self
+            .prefills
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| self.router.is_active(i))
+            .map(|(_, p)| p.queue.len())
+            .sum();
+        let prefill_queued_tokens: u64 = self
+            .router
+            .queued_tokens
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| self.router.is_active(i))
+            .map(|(_, &q)| q)
+            .sum();
+        let decode_queued_reqs: usize = self.decode_queues.iter().map(|q| q.len()).sum();
+        let decode_active_slots: usize = self.decodes.iter().map(|d| d.slots.len()).sum();
+        let (prefill_npus, decode_npus) = self.current_split();
+        let pool = self.pool.stats();
+        Sample {
+            t_us: t,
+            prefill_queued_reqs,
+            prefill_queued_tokens,
+            decode_queued_reqs,
+            decode_active_slots,
+            live_prefill: self.router.active_instances(),
+            live_decode: self.live_decodes.len(),
+            prefill_npus,
+            decode_npus,
+            offload_frac: self.offload.as_ref().map_or(0.0, |o| o.frac),
+            pool_dram_used: pool.dram_used,
+            pool_ssd_used: pool.ssd_used,
+            finished: self.finished as u64,
+            lost: self.lost as u64,
+            // win_* drained from the recorder's rolling counters in
+            // `push_sample`
+            win_output_tokens: 0,
+            win_tier_finished: Vec::new(),
+            win_tier_attained: Vec::new(),
+            degraded: self.links.is_degraded(t),
+            brownout_planes: self.links.active_ub_planes(t),
+        }
+    }
+}

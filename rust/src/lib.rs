@@ -136,6 +136,21 @@
 //! and the `slo_explorer` packed-vs-spread legs run the experiment;
 //! `integration_placement` holds the strict goodput/availability win.
 //!
+//! ## Observability (span traces, samplers, incident annotations)
+//!
+//! The [`telemetry`] subsystem keeps the *timeline* the end-of-run
+//! [`metrics::ServingReport`] collapses away: per-request phase spans
+//! (prefill queue → prefill → KV transfer → decode, plus the re-home /
+//! re-prefill / KV-re-fetch recovery sub-spans), interval samples of
+//! queue depths / live instances / pool occupancy / rolling per-tier SLO
+//! attainment, and fault / resplit / offload annotations on the same
+//! clock — exported as Chrome trace-event JSON (loadable in Perfetto)
+//! and JSONL via `simulate --trace-out t.json --metrics-out m.jsonl`.
+//! Recording is opt-in ([`coordinator::sim::SimOptions::telemetry`]) and
+//! zero-cost when off: hooks are a null check, the sampler rides the
+//! dispatch loop instead of the event heap, and same-seed runs are
+//! bit-identical with telemetry on or off (`tests/telemetry.rs`).
+//!
 //! See DESIGN.md for the full system inventory and the per-experiment index
 //! mapping every paper table/figure to a module and bench target.
 
@@ -151,6 +166,7 @@ pub mod netsim;
 pub mod proptest;
 pub mod runtime;
 pub mod simnpu;
+pub mod telemetry;
 pub mod topology;
 pub mod util;
 pub mod workload;

@@ -43,6 +43,7 @@ fn print_help() {
          \x20                      |correlated_rack_loss]\n\
          \x20          [--placement packed|spread_racks|spread_planes]\n\
          \x20          [--autoscale] [--no-offload] [--no-recovery] [--no-resilience]\n\
+         \x20          [--trace-out PATH] [--metrics-out PATH] [--sample-period-us N]\n\
          \x20                           PDC serving simulation (CloudMatrix384);\n\
          \x20                           --autoscale wires the elastic PD controller\n\
          \x20                           (resplits + the §6.2.1 attention-offload\n\
@@ -60,7 +61,11 @@ fn print_help() {
          \x20                           (default), rack anti-affinity, or UB-plane\n\
          \x20                           striping — try correlated_rack_loss packed vs\n\
          \x20                           spread_racks to see blast radius traded against\n\
-         \x20                           locality\n\
+         \x20                           locality; --trace-out writes a Perfetto-loadable\n\
+         \x20                           Chrome trace (request spans + fault/resplit/\n\
+         \x20                           offload annotations), --metrics-out a JSONL time\n\
+         \x20                           series sampled every --sample-period-us of\n\
+         \x20                           virtual time (default 250000)\n\
          \n\
          Run `make artifacts` first; benches: `cargo bench` (paper tables)."
     );
@@ -160,6 +165,12 @@ fn simulate(args: &[String]) -> Result<()> {
 
     let n: usize = flag_val(args, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(500);
     let seed: u64 = flag_val(args, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let trace_out = flag_val(args, "--trace-out");
+    let metrics_out = flag_val(args, "--metrics-out");
+    let sample_period_us: f64 = flag_val(args, "--sample-period-us")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(cm_infer::telemetry::TelemetryOptions::default().sample_period_us);
     let kv_centric = has_flag(args, "--kv-centric");
     let autoscale = has_flag(args, "--autoscale");
     let no_offload = has_flag(args, "--no-offload");
@@ -271,6 +282,8 @@ fn simulate(args: &[String]) -> Result<()> {
         } else {
             ResiliencePolicy::independent()
         },
+        telemetry: (trace_out.is_some() || metrics_out.is_some())
+            .then(|| cm_infer::telemetry::TelemetryOptions { sample_period_us }),
         ..SimOptions::default()
     };
     let mut sim = ServeSim::new(cfg, opts, trace);
@@ -350,6 +363,20 @@ fn simulate(args: &[String]) -> Result<()> {
     }
     if let Some(summary) = r.chaos_summary() {
         println!("{summary}");
+    }
+    if let Some(tel) = sim.take_telemetry() {
+        if let Some(path) = &trace_out {
+            std::fs::write(path, tel.trace_json(&r))?;
+            println!(
+                "  trace: {} spans, {} marks → {path} (open in ui.perfetto.dev)",
+                tel.spans().len(),
+                tel.marks().len()
+            );
+        }
+        if let Some(path) = &metrics_out {
+            std::fs::write(path, tel.metrics_jsonl())?;
+            println!("  metrics: {} samples → {path}", tel.samples().len());
+        }
     }
     Ok(())
 }

@@ -693,6 +693,26 @@ mod tests {
     }
 
     #[test]
+    fn quantile_extremes_pin_min_and_max() {
+        // q=0 reads the lowest occupied bucket and q=1 the highest; both
+        // are clamped into [min, max], so the extremes are within one
+        // log-bucket (2^(1/16)) of the exact min/max on a populated
+        // histogram, and never outside the observed range.
+        let one_bucket = 2f64.powf(1.0 / 16.0);
+        let mut h = Histogram::new();
+        for v in [10.0, 250.0, 4_000.0, 90_000.0, 2_000_000.0] {
+            h.record(v);
+        }
+        let lo = h.quantile(0.0);
+        let hi = h.quantile(1.0);
+        assert!((10.0..10.0 * one_bucket).contains(&lo), "q=0 → {lo}");
+        assert!((2_000_000.0 / one_bucket..=2_000_000.0).contains(&hi), "q=1 → {hi}");
+        // out-of-range q clamps rather than panics
+        assert_eq!(h.quantile(-3.0), lo);
+        assert_eq!(h.quantile(7.0), hi);
+    }
+
+    #[test]
     fn quantiles_monotone_in_q() {
         let mut rng = crate::util::Rng::new(3);
         let mut h = Histogram::new();

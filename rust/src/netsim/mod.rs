@@ -434,6 +434,16 @@ impl DegradationMap {
             || now < self.scoped_last_expiry
             || self.ub_planes.values().any(|w| w.is_active(now))
     }
+
+    /// UB sub-planes with an active brown-out window at `now`, ascending
+    /// (telemetry samplers annotate these on the run timeline).
+    pub fn active_ub_planes(&self, now: Micros) -> Vec<usize> {
+        self.ub_planes
+            .iter()
+            .filter(|(_, w)| w.is_active(now))
+            .map(|(&p, _)| p)
+            .collect()
+    }
 }
 
 /// Fair-share contention on a shared link: `flows` concurrent transfers

@@ -1,0 +1,553 @@
+//! Telemetry: per-request span timelines, interval samplers, and
+//! incident annotations for the serving sim — exported as Chrome
+//! trace-event JSON (loadable in Perfetto / `chrome://tracing`) and
+//! JSONL time series, both built on [`crate::util::json`].
+//!
+//! The paper's production story (§2.3, §8) is told through time-resolved
+//! telemetry: TTFT/TPOT under load waves, fault windows lining up with
+//! TPOT spikes, rolling SLO attainment. The end-of-run
+//! [`ServingReport`] collapses a million-event run into scalars; this
+//! module keeps the *timeline*:
+//!
+//! * **Request spans** — each request accumulates phase spans
+//!   (prefill queue → prefill batch → KV transfer → decode queue →
+//!   decode steps → complete/lost, with re-home / re-prefill /
+//!   KV-re-fetch recovery sub-spans) on its own Perfetto track, plus
+//!   instant marks (`first_token`, `rehome`, `complete`, `lost`).
+//! * **Interval samples** — every `sample_period_us` of virtual time
+//!   the sim snapshots queue depths, live prefill/decode instances,
+//!   pool occupancy, offload engagement, active degradation windows,
+//!   and per-tier rolling SLO attainment into a [`Sample`], exported
+//!   one JSON object per line.
+//! * **Incident annotations** — fault injections (with their
+//!   detection→recovery windows), resplits, and §6.2.1 offload
+//!   engage/recall intervals are derived from the [`ServingReport`]
+//!   logs at export time and land on dedicated `incidents` / `elastic`
+//!   tracks of the same timeline, so cause and effect are visually
+//!   aligned against the affected requests' spans.
+//!
+//! ## Zero-cost when disabled — the key correctness property
+//!
+//! The sim holds an `Option<Telemetry>`; every hook is a branch on it.
+//! Telemetry never pushes events into the sim's heap (samples are
+//! flushed *between* event dispatches, at period boundaries of virtual
+//! time), never draws from the RNG, and only ever *reads* sim state —
+//! so a same-seed run produces a bit-identical [`ServingReport`] and
+//! event count with telemetry on or off (`tests/telemetry.rs` pins
+//! this; `tests/perf_smoke.rs` gates the disabled-branch overhead).
+
+use std::collections::BTreeMap;
+
+use crate::metrics::{OffloadEventKind, ServingReport};
+use crate::util::json::Json;
+use crate::Micros;
+
+/// Telemetry knobs (beyond "on": everything is recorded when enabled).
+#[derive(Debug, Clone)]
+pub struct TelemetryOptions {
+    /// Interval-sampler period, µs of virtual time.
+    pub sample_period_us: Micros,
+}
+
+impl Default for TelemetryOptions {
+    fn default() -> Self {
+        TelemetryOptions { sample_period_us: 250_000.0 }
+    }
+}
+
+/// Request-lifecycle phase a span covers. `Reprefill*` / `KvRefetch`
+/// are the recovery sub-phases a re-homed request goes through after a
+/// crash.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    PrefillQueue,
+    Prefill,
+    ReprefillQueue,
+    Reprefill,
+    KvTransfer,
+    KvRefetch,
+    DecodeQueue,
+    Decode,
+}
+
+impl SpanKind {
+    pub fn tag(self) -> &'static str {
+        match self {
+            SpanKind::PrefillQueue => "prefill_queue",
+            SpanKind::Prefill => "prefill",
+            SpanKind::ReprefillQueue => "reprefill_queue",
+            SpanKind::Reprefill => "reprefill",
+            SpanKind::KvTransfer => "kv_transfer",
+            SpanKind::KvRefetch => "kv_refetch",
+            SpanKind::DecodeQueue => "decode_queue",
+            SpanKind::Decode => "decode",
+        }
+    }
+}
+
+/// One closed request-phase span.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub rid: u64,
+    pub kind: SpanKind,
+    pub t0: Micros,
+    pub t1: Micros,
+}
+
+/// An instant mark on a request's track (`first_token`, `rehome`,
+/// `complete`, `lost`).
+#[derive(Debug, Clone, Copy)]
+pub struct Mark {
+    pub rid: u64,
+    pub t: Micros,
+    pub label: &'static str,
+}
+
+/// One interval-sampler snapshot of the serving system.
+#[derive(Debug, Clone, Default)]
+pub struct Sample {
+    pub t_us: Micros,
+    /// Requests queued for (or mid-) prefill batch formation.
+    pub prefill_queued_reqs: usize,
+    /// Router-tracked queued compute tokens over active instances.
+    pub prefill_queued_tokens: u64,
+    /// Requests parked in decode admission queues.
+    pub decode_queued_reqs: usize,
+    /// Occupied decode slots (in-flight continuous-batching lanes).
+    pub decode_active_slots: usize,
+    /// Routable prefill instances.
+    pub live_prefill: usize,
+    /// Placeable (capacity > 0, not failed) decode instances.
+    pub live_decode: usize,
+    /// Instantaneous NPU split (mid-switch NPUs belong to neither).
+    pub prefill_npus: usize,
+    pub decode_npus: usize,
+    /// Engaged §6.2.1 offload fraction (0 when none).
+    pub offload_frac: f64,
+    /// Memory-pool occupancy across servers.
+    pub pool_dram_used: u64,
+    pub pool_ssd_used: u64,
+    /// Cumulative terminal counts at the sample instant.
+    pub finished: u64,
+    pub lost: u64,
+    /// Output tokens emitted since the previous sample.
+    pub win_output_tokens: u64,
+    /// Per-tier requests finished since the previous sample.
+    pub win_tier_finished: Vec<u64>,
+    /// Per-tier requests finished within BOTH their SLOs in the window.
+    pub win_tier_attained: Vec<u64>,
+    /// Whether any `DegradationMap` window (global, scoped, or
+    /// sub-plane) is active at the sample instant.
+    pub degraded: bool,
+    /// UB sub-planes with an active brown-out window.
+    pub brownout_planes: Vec<usize>,
+}
+
+/// Recording state: collected during a run, exported afterwards. Held
+/// by the sim as `Option<Telemetry>` — see the module docs for the
+/// zero-cost / read-only contract every hook obeys.
+#[derive(Debug)]
+pub struct Telemetry {
+    pub opts: TelemetryOptions,
+    /// Closed request-phase spans, in close order.
+    spans: Vec<Span>,
+    /// Currently open span per request (closed at export against the
+    /// report duration if the run ends with the request in flight).
+    open: BTreeMap<u64, (SpanKind, Micros)>,
+    marks: Vec<Mark>,
+    samples: Vec<Sample>,
+    /// Next sample boundary, µs of virtual time.
+    next_sample_us: Micros,
+    // rolling window counters, drained into each pushed Sample
+    win_tokens: u64,
+    win_tier_finished: Vec<u64>,
+    win_tier_attained: Vec<u64>,
+}
+
+impl Telemetry {
+    pub fn new(opts: TelemetryOptions, n_tiers: usize) -> Telemetry {
+        let period = opts.sample_period_us.max(1.0);
+        Telemetry {
+            opts: TelemetryOptions { sample_period_us: period },
+            spans: Vec::new(),
+            open: BTreeMap::new(),
+            marks: Vec::new(),
+            samples: Vec::new(),
+            next_sample_us: period,
+            win_tokens: 0,
+            win_tier_finished: vec![0; n_tiers.max(1)],
+            win_tier_attained: vec![0; n_tiers.max(1)],
+        }
+    }
+
+    /// Transition request `rid` into phase `kind` at `now`: closes any
+    /// open span and opens the new one.
+    pub fn phase(&mut self, rid: u64, now: Micros, kind: SpanKind) {
+        if let Some((prev, t0)) = self.open.insert(rid, (kind, now)) {
+            self.spans.push(Span { rid, kind: prev, t0, t1: now });
+        }
+    }
+
+    /// Terminal transition: close the open span and drop the mark
+    /// (`"complete"` / `"lost"`).
+    pub fn close(&mut self, rid: u64, now: Micros, outcome: &'static str) {
+        if let Some((prev, t0)) = self.open.remove(&rid) {
+            self.spans.push(Span { rid, kind: prev, t0, t1: now });
+        }
+        self.marks.push(Mark { rid, t: now, label: outcome });
+    }
+
+    /// Instant mark on a request's track.
+    pub fn mark(&mut self, rid: u64, now: Micros, label: &'static str) {
+        self.marks.push(Mark { rid, t: now, label });
+    }
+
+    /// Count emitted output tokens into the current sample window.
+    pub fn tokens(&mut self, n: u64) {
+        self.win_tokens += n;
+    }
+
+    /// Count a finished request into the rolling per-tier SLO window.
+    pub fn request_finished(&mut self, tier: usize, attained: bool) {
+        let t = tier.min(self.win_tier_finished.len() - 1);
+        self.win_tier_finished[t] += 1;
+        self.win_tier_attained[t] += u64::from(attained);
+    }
+
+    /// The next sample boundary strictly before `upto`, if one is due.
+    pub fn sample_due(&self, upto: Micros) -> Option<Micros> {
+        (self.next_sample_us < upto).then_some(self.next_sample_us)
+    }
+
+    /// Record a snapshot (the sim fills the state fields; the rolling
+    /// window counters are drained here) and advance the boundary.
+    pub fn push_sample(&mut self, mut s: Sample) {
+        s.win_output_tokens = std::mem::take(&mut self.win_tokens);
+        s.win_tier_finished = self.win_tier_finished.clone();
+        s.win_tier_attained = self.win_tier_attained.clone();
+        self.win_tier_finished.iter_mut().for_each(|c| *c = 0);
+        self.win_tier_attained.iter_mut().for_each(|c| *c = 0);
+        if s.t_us >= self.next_sample_us {
+            self.next_sample_us =
+                (s.t_us / self.opts.sample_period_us).floor() * self.opts.sample_period_us
+                    + self.opts.sample_period_us;
+        }
+        self.samples.push(s);
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn marks(&self) -> &[Mark] {
+        &self.marks
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    /// Export the run as a Chrome trace-event JSON document (the
+    /// `{"traceEvents": [...]}` object form; open it in Perfetto or
+    /// `chrome://tracing`). Incident and elastic annotations are
+    /// derived from the report's fault / resplit / offload logs so
+    /// they always agree with the scalars the report prints.
+    pub fn trace_json(&self, report: &ServingReport) -> String {
+        let mut events: Vec<Json> = Vec::new();
+        for (pid, name) in
+            [(PID_REQUESTS, "requests"), (PID_INCIDENTS, "incidents"), (PID_ELASTIC, "elastic")]
+        {
+            events.push(meta(pid, 0, "process_name", name));
+        }
+        for s in &self.spans {
+            events.push(complete(
+                PID_REQUESTS,
+                s.rid as f64,
+                s.kind.tag(),
+                s.t0,
+                s.t1 - s.t0,
+                None,
+            ));
+        }
+        // requests still in flight when the run ended (event cap, lost
+        // heartbeats): close their open span at the report horizon
+        for (&rid, &(kind, t0)) in &self.open {
+            let t1 = report.duration_us.max(t0);
+            events.push(complete(PID_REQUESTS, rid as f64, kind.tag(), t0, t1 - t0, None));
+        }
+        for m in &self.marks {
+            events.push(instant(PID_REQUESTS, m.rid as f64, m.label, m.t));
+        }
+
+        // incidents: one lane per fault class, each fault an interval
+        // from injection to recovery (an instant when never recovered)
+        let mut lanes: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for f in &report.faults {
+            let tag = f.kind.tag();
+            let next = lanes.len() + 1;
+            let lane = *lanes.entry(tag).or_insert(next);
+            let mut args = BTreeMap::new();
+            args.insert("detected_us".to_string(), Json::Num(f.detected_us));
+            args.insert("requests_rehomed".to_string(), Json::Num(f.requests_rehomed as f64));
+            args.insert("requests_lost".to_string(), Json::Num(f.requests_lost as f64));
+            args.insert("kv_refetched".to_string(), Json::Num(f.kv_refetched as f64));
+            args.insert("reprefilled".to_string(), Json::Num(f.reprefilled as f64));
+            if let Some(d) = f.domain {
+                args.insert("domain".to_string(), Json::Num(d as f64));
+            }
+            match f.recovered_us {
+                Some(rec) => events.push(complete(
+                    PID_INCIDENTS,
+                    lane as f64,
+                    tag,
+                    f.t_us,
+                    (rec - f.t_us).max(0.0),
+                    Some(args),
+                )),
+                None => events.push(instant(PID_INCIDENTS, lane as f64, tag, f.t_us)),
+            }
+        }
+        for (tag, lane) in &lanes {
+            events.push(meta(PID_INCIDENTS, *lane as f64, "thread_name", tag));
+        }
+
+        // elastic: resplit instants + offload engage→recall intervals
+        events.push(meta(PID_ELASTIC, TID_RESPLIT, "thread_name", "resplits"));
+        events.push(meta(PID_ELASTIC, TID_OFFLOAD, "thread_name", "offload"));
+        for r in &report.resplits {
+            let mut args = BTreeMap::new();
+            args.insert("npus".to_string(), Json::Num(r.npus as f64));
+            args.insert("prefill_after".to_string(), Json::Num(r.prefill_npus_after as f64));
+            args.insert("decode_after".to_string(), Json::Num(r.decode_npus_after as f64));
+            let name = format!("resplit {:?}→{:?}", r.from, r.to);
+            events.push(instant_owned(PID_ELASTIC, TID_RESPLIT, name, r.t_us, Some(args)));
+        }
+        let mut engaged: Option<(Micros, BTreeMap<String, Json>)> = None;
+        for e in &report.offload_events {
+            match &e.kind {
+                OffloadEventKind::Engage { frac, donors, prefill_retained } => {
+                    let mut args = BTreeMap::new();
+                    args.insert("frac".to_string(), Json::Num(*frac));
+                    args.insert(
+                        "donors".to_string(),
+                        Json::Arr(donors.iter().map(|&d| Json::Num(d as f64)).collect()),
+                    );
+                    args.insert("prefill_retained".to_string(), Json::Num(*prefill_retained));
+                    engaged = Some((e.t_us, args));
+                }
+                OffloadEventKind::Recall { reason } => {
+                    if let Some((t0, mut args)) = engaged.take() {
+                        args.insert("recall".to_string(), Json::Str(format!("{reason:?}")));
+                        events.push(complete(
+                            PID_ELASTIC,
+                            TID_OFFLOAD,
+                            "offload",
+                            t0,
+                            (e.t_us - t0).max(0.0),
+                            Some(args),
+                        ));
+                    }
+                }
+            }
+        }
+        if let Some((t0, args)) = engaged {
+            let dur = (report.duration_us - t0).max(0.0);
+            events.push(complete(PID_ELASTIC, TID_OFFLOAD, "offload", t0, dur, Some(args)));
+        }
+
+        let mut doc = BTreeMap::new();
+        doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        doc.insert("traceEvents".to_string(), Json::Arr(events));
+        Json::Obj(doc).to_string()
+    }
+
+    /// Export the interval samples as JSONL: one JSON object per line,
+    /// ascending `t_us`.
+    pub fn metrics_jsonl(&self) -> String {
+        let mut out = String::new();
+        for s in &self.samples {
+            let mut m = BTreeMap::new();
+            m.insert("t_us".to_string(), Json::Num(s.t_us));
+            m.insert("prefill_queued_reqs".to_string(), Json::Num(s.prefill_queued_reqs as f64));
+            m.insert(
+                "prefill_queued_tokens".to_string(),
+                Json::Num(s.prefill_queued_tokens as f64),
+            );
+            m.insert("decode_queued_reqs".to_string(), Json::Num(s.decode_queued_reqs as f64));
+            m.insert("decode_active_slots".to_string(), Json::Num(s.decode_active_slots as f64));
+            m.insert("live_prefill".to_string(), Json::Num(s.live_prefill as f64));
+            m.insert("live_decode".to_string(), Json::Num(s.live_decode as f64));
+            m.insert("prefill_npus".to_string(), Json::Num(s.prefill_npus as f64));
+            m.insert("decode_npus".to_string(), Json::Num(s.decode_npus as f64));
+            m.insert("offload_frac".to_string(), Json::Num(s.offload_frac));
+            m.insert("pool_dram_used".to_string(), Json::Num(s.pool_dram_used as f64));
+            m.insert("pool_ssd_used".to_string(), Json::Num(s.pool_ssd_used as f64));
+            m.insert("finished".to_string(), Json::Num(s.finished as f64));
+            m.insert("lost".to_string(), Json::Num(s.lost as f64));
+            m.insert("win_output_tokens".to_string(), Json::Num(s.win_output_tokens as f64));
+            m.insert(
+                "win_tier_finished".to_string(),
+                Json::Arr(s.win_tier_finished.iter().map(|&c| Json::Num(c as f64)).collect()),
+            );
+            m.insert(
+                "win_tier_attained".to_string(),
+                Json::Arr(s.win_tier_attained.iter().map(|&c| Json::Num(c as f64)).collect()),
+            );
+            m.insert("degraded".to_string(), Json::Bool(s.degraded));
+            m.insert(
+                "brownout_planes".to_string(),
+                Json::Arr(s.brownout_planes.iter().map(|&p| Json::Num(p as f64)).collect()),
+            );
+            out.push_str(&Json::Obj(m).to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+const PID_REQUESTS: f64 = 1.0;
+const PID_INCIDENTS: f64 = 2.0;
+const PID_ELASTIC: f64 = 3.0;
+const TID_RESPLIT: f64 = 1.0;
+const TID_OFFLOAD: f64 = 2.0;
+
+fn base_event(pid: f64, tid: f64, ph: &str, name: &str, ts: Micros) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("pid".to_string(), Json::Num(pid));
+    m.insert("tid".to_string(), Json::Num(tid));
+    m.insert("ph".to_string(), Json::Str(ph.to_string()));
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("ts".to_string(), Json::Num(ts));
+    m
+}
+
+/// Chrome trace "X" (complete) event: a closed interval.
+fn complete(
+    pid: f64,
+    tid: f64,
+    name: &str,
+    ts: Micros,
+    dur: Micros,
+    args: Option<BTreeMap<String, Json>>,
+) -> Json {
+    let mut m = base_event(pid, tid, "X", name, ts);
+    m.insert("dur".to_string(), Json::Num(dur));
+    if let Some(a) = args {
+        m.insert("args".to_string(), Json::Obj(a));
+    }
+    Json::Obj(m)
+}
+
+/// Chrome trace "i" (instant) event, thread-scoped.
+fn instant(pid: f64, tid: f64, name: &str, ts: Micros) -> Json {
+    instant_owned(pid, tid, name.to_string(), ts, None)
+}
+
+fn instant_owned(
+    pid: f64,
+    tid: f64,
+    name: String,
+    ts: Micros,
+    args: Option<BTreeMap<String, Json>>,
+) -> Json {
+    let mut m = base_event(pid, tid, "i", &name, ts);
+    m.insert("s".to_string(), Json::Str("t".to_string()));
+    if let Some(a) = args {
+        m.insert("args".to_string(), Json::Obj(a));
+    }
+    Json::Obj(m)
+}
+
+/// Chrome trace "M" (metadata) event: process/thread naming.
+fn meta(pid: f64, tid: f64, kind: &str, name: &str) -> Json {
+    let mut m = base_event(pid, tid, "M", kind, 0.0);
+    m.remove("ts");
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_state_machine() {
+        let mut t = Telemetry::new(TelemetryOptions::default(), 2);
+        t.phase(7, 10.0, SpanKind::PrefillQueue);
+        t.phase(7, 25.0, SpanKind::Prefill);
+        t.mark(7, 40.0, "first_token");
+        t.phase(7, 40.0, SpanKind::KvTransfer);
+        t.close(7, 55.0, "complete");
+        assert_eq!(t.spans().len(), 3);
+        assert_eq!(t.spans()[0].kind, SpanKind::PrefillQueue);
+        assert_eq!(t.spans()[0].t1, 25.0);
+        assert_eq!(t.spans()[2].t1, 55.0);
+        assert!(t.open.is_empty());
+        assert_eq!(t.marks().len(), 2);
+    }
+
+    #[test]
+    fn sampler_boundaries_and_window_drain() {
+        let mut t = Telemetry::new(TelemetryOptions { sample_period_us: 100.0 }, 1);
+        assert_eq!(t.sample_due(99.0), None);
+        assert_eq!(t.sample_due(100.5), Some(100.0));
+        t.tokens(5);
+        t.request_finished(0, true);
+        t.push_sample(Sample { t_us: 100.0, ..Sample::default() });
+        assert_eq!(t.sample_due(150.0), None);
+        assert_eq!(t.sample_due(201.0), Some(200.0));
+        let s = &t.samples()[0];
+        assert_eq!(s.win_output_tokens, 5);
+        assert_eq!(s.win_tier_finished, vec![1]);
+        assert_eq!(s.win_tier_attained, vec![1]);
+        // window counters drained
+        t.push_sample(Sample { t_us: 200.0, ..Sample::default() });
+        assert_eq!(t.samples()[1].win_output_tokens, 0);
+        assert_eq!(t.samples()[1].win_tier_finished, vec![0]);
+    }
+
+    #[test]
+    fn trace_json_parses_and_has_tracks() {
+        let mut t = Telemetry::new(TelemetryOptions::default(), 1);
+        t.phase(0, 0.0, SpanKind::PrefillQueue);
+        t.phase(0, 10.0, SpanKind::Prefill);
+        t.close(0, 30.0, "complete");
+        t.phase(1, 5.0, SpanKind::PrefillQueue); // left open: closes at horizon
+        let report = ServingReport { duration_us: 100.0, ..ServingReport::default() };
+        let doc = Json::parse(&t.trace_json(&report)).expect("trace must be valid JSON");
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 process_name metas + 2 resplit/offload lane metas + 2 closed
+        // spans + 1 horizon-closed span + 1 mark
+        assert_eq!(evs.len(), 9);
+        let horizon = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str().ok()) == Some("X"))
+            .find(|e| e.get("tid").unwrap().as_f64().unwrap() == 1.0)
+            .expect("open span exported");
+        assert_eq!(horizon.get("dur").unwrap().as_f64().unwrap(), 95.0);
+    }
+
+    #[test]
+    fn metrics_jsonl_parses_per_line() {
+        let mut t = Telemetry::new(TelemetryOptions { sample_period_us: 50.0 }, 2);
+        for i in 1..=3 {
+            t.push_sample(Sample {
+                t_us: 50.0 * i as f64,
+                degraded: i == 2,
+                brownout_planes: vec![0, 3],
+                ..Sample::default()
+            });
+        }
+        let jsonl = t.metrics_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for l in &lines {
+            let v = Json::parse(l).expect("each JSONL line parses");
+            assert!(v.get("t_us").is_some());
+            assert_eq!(v.get("brownout_planes").unwrap().as_arr().unwrap().len(), 2);
+        }
+        assert!(lines[1].contains("\"degraded\":true"));
+    }
+}

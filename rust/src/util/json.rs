@@ -99,7 +99,11 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity token — degrade to null
+                    // rather than emit output no parser accepts
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -269,8 +273,12 @@ impl<'a> Parser<'a> {
                         b'r' => s.push('\r'),
                         b't' => s.push('\t'),
                         b'u' => {
-                            let hex = std::str::from_utf8(
-                                &self.bytes[self.pos..self.pos + 4])?;
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .ok_or_else(|| anyhow!(
+                                    "truncated \\u escape at byte {}", self.pos))?;
+                            let hex = std::str::from_utf8(hex)?;
                             let code = u32::from_str_radix(hex, 16)?;
                             self.pos += 4;
                             s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
@@ -280,13 +288,22 @@ impl<'a> Parser<'a> {
                 }
                 b if b < 0x80 => s.push(b as char),
                 _ => {
-                    // multi-byte UTF-8: re-decode from the original slice
+                    // multi-byte UTF-8: re-decode from the original slice.
+                    // The 4-byte probe window may truncate the *following*
+                    // character (e.g. `"é€"`), which is fine as long as the
+                    // first character decodes — `valid_up_to` recovers it.
                     let start = self.pos - 1;
                     let rest = &self.bytes[start..];
-                    let ch = std::str::from_utf8(&rest[..rest.len().min(4)])
-                        .ok()
-                        .and_then(|s| s.chars().next())
-                        .ok_or_else(|| anyhow!("bad UTF-8 at {}", start))?;
+                    let probe = &rest[..rest.len().min(4)];
+                    let valid = match std::str::from_utf8(probe) {
+                        Ok(s) => s,
+                        Err(e) if e.valid_up_to() > 0 => {
+                            std::str::from_utf8(&probe[..e.valid_up_to()])
+                                .expect("validated prefix")
+                        }
+                        Err(_) => bail!("bad UTF-8 at {}", start),
+                    };
+                    let ch = valid.chars().next().expect("non-empty valid prefix");
                     s.push(ch);
                     self.pos = start + ch.len_utf8();
                 }
@@ -353,5 +370,42 @@ mod tests {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("\"\\u00\"").is_err()); // truncated \u escape
+    }
+
+    #[test]
+    fn escapes_quotes_backslashes_and_control_chars() {
+        let s = "say \"hi\"\\now\n\tbell:\u{7}";
+        let out = Json::Str(s.into()).to_string();
+        assert_eq!(out, "\"say \\\"hi\\\"\\\\now\\n\\tbell:\\u0007\"");
+        // and the parser reads our own escaping back verbatim
+        assert_eq!(Json::parse(&out).unwrap(), Json::Str(s.into()));
+    }
+
+    #[test]
+    fn escape_roundtrip_all_control_chars() {
+        for c in (0u32..0x20).filter_map(char::from_u32) {
+            let v = Json::Str(format!("a{c}b"));
+            assert_eq!(Json::parse(&v.to_string()).unwrap(), v, "control {:#x}", c as u32);
+        }
+    }
+
+    #[test]
+    fn adjacent_multibyte_chars_parse() {
+        // regression: the 4-byte re-decode window used to cut the second
+        // character mid-sequence and reject the whole string
+        assert_eq!(Json::parse("\"é€\"").unwrap(), Json::Str("é€".into()));
+        assert_eq!(Json::parse("\"日本語\"").unwrap(), Json::Str("日本語".into()));
+        let v = Json::Str("héllo wörld — 完了 🎉".into());
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        let doc = Json::Arr(vec![Json::Num(1.0), Json::Num(f64::NEG_INFINITY)]);
+        assert_eq!(Json::parse(&doc.to_string()).unwrap(),
+                   Json::Arr(vec![Json::Num(1.0), Json::Null]));
     }
 }

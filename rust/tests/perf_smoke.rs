@@ -12,6 +12,11 @@
 //!    baseline in place for committing. The gate only compares runs from
 //!    the same build profile (a debug measurement never gates a release
 //!    one, and vice versa).
+//!
+//! The run keeps `telemetry: None` (explicitly — the disabled hooks stay
+//! on the dispatch hot path), so the gate also bounds the telemetry-off
+//! overhead: if the null-check branches ever cost real throughput, this
+//! test is what fails.
 
 use std::time::Instant;
 
@@ -60,6 +65,9 @@ fn run_once(trace: &[cm_infer::workload::Request], cfg: &Config) -> (usize, u64,
         seed: SEED,
         decode_instances: 8,
         max_events: usize::MAX,
+        // pinned off: the throughput gate below doubles as the
+        // telemetry-disabled overhead bound (hooks present, branch cold)
+        telemetry: None,
         ..SimOptions::default()
     };
     let mut sim = ServeSim::new(cfg.clone(), opts, trace.to_vec());

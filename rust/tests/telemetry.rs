@@ -1,0 +1,158 @@
+//! Telemetry acceptance: the observability layer must be *free* when
+//! off and *faithful* when on.
+//!
+//! 1. Determinism (the key contract): a same-seed chaos run with
+//!    telemetry enabled dispatches the identical number of events and
+//!    produces a bit-identical report digest vs the telemetry-off run —
+//!    recording never touches the heap, the RNG, or accounted state.
+//! 2. Export validity: the Chrome trace parses as JSON, carries the
+//!    request / incidents / elastic tracks, and every fault annotation's
+//!    interval overlaps the re-home marks of the requests it stranded.
+//! 3. The JSONL time series parses per line and its rolling per-tier
+//!    window counts sum to exactly the report's completed requests.
+
+use cm_infer::config::Config;
+use cm_infer::coordinator::sim::{ServeSim, SimOptions};
+use cm_infer::faults::{FaultEvent, FaultKind, FaultOptions, FaultPlan};
+use cm_infer::metrics::ServingReport;
+use cm_infer::telemetry::{Telemetry, TelemetryOptions};
+use cm_infer::util::json::Json;
+use cm_infer::workload::{generate_scenario, ScenarioSpec};
+
+const N: usize = 1200;
+const SEED: u64 = 7;
+
+/// Same mid-day crash plan as `integration_chaos`: strands real in-flight
+/// work, so re-home marks and recovery sub-spans are guaranteed to exist.
+fn crash_plan() -> FaultPlan {
+    FaultPlan::new(vec![
+        FaultEvent { t_us: 3e6, kind: FaultKind::DecodeCrash { instance: 0 } },
+        FaultEvent { t_us: 4e6, kind: FaultKind::PoolServerFail { server: 0 } },
+        FaultEvent { t_us: 5e6, kind: FaultKind::PrefillCrash { instance: 2 } },
+        FaultEvent { t_us: 7e6, kind: FaultKind::DecodeCrash { instance: 1 } },
+        FaultEvent { t_us: 9e6, kind: FaultKind::PoolServerFail { server: 1 } },
+    ])
+}
+
+/// Same FNV-1a scalar fold as `perf_smoke` / `bench_sim_core`.
+fn report_digest(r: &ServingReport) -> u64 {
+    let scalars = [
+        r.duration_us,
+        r.requests_completed as f64,
+        r.prompt_tokens as f64,
+        r.output_tokens as f64,
+        r.goodput_tokens as f64,
+        r.ttft_us.p50,
+        r.ttft_us.p99,
+        r.tpot_us.p50,
+        r.tpot_us.p99,
+        r.requests_lost as f64,
+    ];
+    scalars.iter().fold(0xcbf2_9ce4_8422_2325u64, |h, v| {
+        (h ^ v.to_bits()).wrapping_mul(0x0000_0100_0000_01b3)
+    })
+}
+
+fn chaos_run(telemetry: bool) -> (ServingReport, usize, Option<Box<Telemetry>>) {
+    let sc = ScenarioSpec::diurnal(SEED);
+    let trace = generate_scenario(&sc, N);
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    let opts = SimOptions {
+        seed: SEED,
+        decode_instances: 4,
+        faults: Some(FaultOptions {
+            plan: crash_plan(),
+            heartbeat_us: 250_000.0,
+            recovery: true,
+            recovery_latency_us: 2e6,
+        }),
+        telemetry: telemetry.then(|| TelemetryOptions { sample_period_us: 500_000.0 }),
+        ..SimOptions::default()
+    };
+    let mut sim = ServeSim::new(cfg, opts, trace);
+    let report = sim.run();
+    let events = sim.events_processed();
+    (report, events, sim.take_telemetry())
+}
+
+#[test]
+fn telemetry_is_bit_exactly_free_and_exports_are_valid() {
+    let (r_off, e_off, t_off) = chaos_run(false);
+    let (r_on, e_on, t_on) = chaos_run(true);
+    assert!(t_off.is_none(), "disabled run must not carry a recorder");
+    let tel = t_on.expect("enabled run must return the recorder");
+
+    // 1. the zero-cost contract, bit-exact
+    assert_eq!(
+        e_off, e_on,
+        "telemetry changed the dispatched event count: it touched the heap"
+    );
+    assert_eq!(
+        report_digest(&r_off),
+        report_digest(&r_on),
+        "telemetry changed the report digest: recording perturbed the sim"
+    );
+
+    // the run recorded real structure to validate against
+    assert!(!tel.spans().is_empty(), "chaos run produced no spans");
+    assert!(!tel.samples().is_empty(), "chaos run produced no samples");
+
+    // 2. the Chrome trace parses and carries all three tracks
+    let trace = tel.trace_json(&r_on);
+    let doc = Json::parse(&trace).expect("trace must be valid JSON");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str().ok()) == Some("M"))
+        .filter_map(|e| e.get("args")?.get("name")?.as_str().ok())
+        .collect();
+    for track in ["requests", "incidents", "elastic"] {
+        assert!(names.contains(&track), "missing {track} track in {names:?}");
+    }
+    // every injected fault is annotated on the incidents track
+    let fault_events = events
+        .iter()
+        .filter(|e| e.get("pid").and_then(|p| p.as_f64().ok()) == Some(2.0))
+        .filter(|e| e.get("ph").and_then(|p| p.as_str().ok()) != Some("M"))
+        .count();
+    assert_eq!(fault_events, r_on.faults.len(), "one annotation per fault");
+
+    // fault windows overlap the re-home marks of the requests they
+    // stranded (re-homing happens at the detection heartbeat, which lies
+    // inside [injection, recovery])
+    let rehomes: Vec<f64> = tel
+        .marks()
+        .iter()
+        .filter(|m| m.label == "rehome")
+        .map(|m| m.t)
+        .collect();
+    assert!(!rehomes.is_empty(), "mid-day crashes must strand in-flight work");
+    for f in r_on.faults.iter().filter(|f| f.requests_rehomed > 0) {
+        let end = f.recovered_us.unwrap_or(r_on.duration_us);
+        assert!(
+            rehomes.iter().any(|&t| t >= f.t_us && t <= end),
+            "no rehome mark inside fault window [{}, {end}] of {:?}",
+            f.t_us,
+            f.kind
+        );
+    }
+
+    // 3. JSONL: every line parses; the rolling per-tier windows sum to
+    // the report's completed count (nothing dropped, nothing doubled)
+    let jsonl = tel.metrics_jsonl();
+    let mut win_finished = 0u64;
+    let mut lines = 0usize;
+    for line in jsonl.lines() {
+        let v = Json::parse(line).expect("each JSONL line parses");
+        for tier in v.get("win_tier_finished").unwrap().as_arr().unwrap() {
+            win_finished += tier.as_u64().unwrap();
+        }
+        lines += 1;
+    }
+    assert_eq!(lines, tel.samples().len());
+    assert_eq!(
+        win_finished, r_on.requests_completed,
+        "rolling SLO windows must account every completed request exactly once"
+    );
+}
