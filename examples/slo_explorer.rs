@@ -25,6 +25,9 @@
 //! independent per-fault recovery — plus the packed-vs-spread *placement*
 //! comparison: rack anti-affinity bounds the incident's blast radius at a
 //! priced healthy-run locality cost (the placement-planner experiment).
+//! The session presets (`session_chat`, `agentic_loop`) compare the full
+//! hot loop against the `--no-cache-affinity` and `--no-mtp` ablations —
+//! decode throughput and TTFT hinge on the prefix-cache hit rate.
 
 use cm_infer::config::{Ascend910cDie, Config, DeepSeekDims, PlacementObjective, SloConfig};
 use cm_infer::coordinator::batcher::plan_for_slo;
@@ -62,6 +65,8 @@ fn explore_scenario(name: &str, trace_base: Option<&str>) {
         chaos: Option<bool>,
         resilience: ResiliencePolicy,
         placement: PlacementObjective,
+        cache_affinity: bool,
+        mtp: bool,
     }
     let leg = |label, autoscale, offload, chaos, resilience| Leg {
         label,
@@ -70,9 +75,22 @@ fn explore_scenario(name: &str, trace_base: Option<&str>) {
         chaos,
         resilience,
         placement: PlacementObjective::Packed,
+        cache_affinity: true,
+        mtp: true,
     };
     let ind = ResiliencePolicy::independent();
-    let legs: Vec<Leg> = if sc.correlated.is_some() {
+    let legs: Vec<Leg> = if sc.base.materialize_tokens {
+        // session presets: the full hot loop vs the two ablations —
+        // throughput and TTFT visibly hinge on prefix reuse
+        vec![
+            leg("sessions (cache affinity + MTP)", false, true, None, ind),
+            Leg {
+                cache_affinity: false,
+                ..leg("sessions (--no-cache-affinity)", false, true, None, ind)
+            },
+            Leg { mtp: false, ..leg("sessions (--no-mtp)", false, true, None, ind) },
+        ]
+    } else if sc.correlated.is_some() {
         vec![
             leg("healthy (no faults, packed)", false, true, None, ind),
             Leg {
@@ -113,11 +131,14 @@ fn explore_scenario(name: &str, trace_base: Option<&str>) {
         ]
     };
     println!("== scenario `{}` ({n} requests) ==\n", sc.name);
-    for (li, Leg { label, autoscale, offload, chaos, resilience, placement }) in
-        legs.into_iter().enumerate()
+    for (
+        li,
+        Leg { label, autoscale, offload, chaos, resilience, placement, cache_affinity, mtp },
+    ) in legs.into_iter().enumerate()
     {
         let mut cfg = cfg.clone();
         cfg.serving.placement = placement;
+        cfg.serving.mtp = mtp;
         let faults = match (chaos, sc.fault_profile, sc.correlated) {
             (Some(recovery), profile, correlated)
                 if profile.is_some() || correlated.is_some() =>
@@ -152,6 +173,7 @@ fn explore_scenario(name: &str, trace_base: Option<&str>) {
                 .then(|| AutoscaleOptions { offload, ..AutoscaleOptions::default() }),
             faults,
             resilience,
+            cache_affinity,
             telemetry: trace_base.is_some().then(cm_infer::telemetry::TelemetryOptions::default),
             ..SimOptions::default()
         };
@@ -186,6 +208,13 @@ fn explore_scenario(name: &str, trace_base: Option<&str>) {
             "  decode throughput {:.0} tok/s/NPU",
             r.decode_tokens_per_s_per_npu()
         );
+        if sim.session_turn_tokens > 0 {
+            println!(
+                "  sessions: cache hit rate {:.2}  re-prefill frac {:.2}  \
+                 affinity local hits {}  MTP acceptance (measured) {:.2}",
+                r.cache_hit_rate, r.reprefill_frac, sim.affinity_local_hits, r.mtp_acceptance
+            );
+        }
         if let Some(summary) = r.offload_summary() {
             println!("{summary}");
         }

@@ -57,40 +57,48 @@ impl ContextCache {
         self.block_tokens as u64 * self.kv_bytes_per_token
     }
 
+    /// Walk the chain-hashed keys of `tokens`' full blocks without
+    /// materializing them: `chunks_exact` drops the partial final block
+    /// (only full blocks are cached) and the scan threads the parent key
+    /// through the chain hash — one `Key` at a time, allocation-free.
+    /// The hot-path `lookup`/`store` iterate this directly, so per-turn
+    /// cache probes no longer allocate proportionally to prompt length
+    /// (pinned by the `tests/perf_smoke.rs` throughput gate).
+    fn block_key_iter<'a>(&self, tokens: &'a [i32]) -> impl Iterator<Item = Key> + 'a {
+        let block = self.block_tokens;
+        tokens.chunks_exact(block).scan(Key(0), |parent, chunk| {
+            // allocation-free word-wise hash (Perf pass, EXPERIMENTS §Perf)
+            *parent = Key::chain(*parent, Key::of_tokens(chunk));
+            Some(*parent)
+        })
+    }
+
     /// Chain-hashed keys for a token prefix, one per full block.
     pub fn block_keys(&self, tokens: &[i32]) -> Vec<Key> {
-        let mut keys = Vec::with_capacity(tokens.len() / self.block_tokens);
-        let mut parent = Key(0);
-        for chunk in tokens.chunks(self.block_tokens) {
-            if chunk.len() < self.block_tokens {
-                break; // only full blocks are cached
-            }
-            // allocation-free word-wise hash (Perf pass, EXPERIMENTS §Perf)
-            let content = Key::of_tokens(chunk);
-            parent = Key::chain(parent, content);
-            keys.push(parent);
-        }
-        keys
+        self.block_key_iter(tokens).collect()
     }
 
     /// Longest-prefix lookup: walk blocks until the first miss (§4.4.2
     /// "prefill engine queries EMS with a hash of the input prefix").
     pub fn lookup(&mut self, pool: &mut MemPool, tokens: &[i32]) -> LookupResult {
         self.lookups += 1;
-        let keys = self.block_keys(tokens);
+        let (ns, over_ub) = (self.ns, self.over_ub);
+        let (mut hits, mut misses) = (0u64, 0u64);
         let mut hit_keys = Vec::new();
         let mut fetch_us = 0.0;
-        for key in keys {
-            let got = pool.get(self.ns, key, self.over_ub);
+        for key in self.block_key_iter(tokens) {
+            let got = pool.get(ns, key, over_ub);
             if got.hit {
-                self.block_hits += 1;
+                hits += 1;
                 hit_keys.push(key);
                 fetch_us += got.latency_us;
             } else {
-                self.block_misses += 1;
+                misses += 1;
                 break;
             }
         }
+        self.block_hits += hits;
+        self.block_misses += misses;
         LookupResult { reused_tokens: hit_keys.len() * self.block_tokens, hit_keys, fetch_us }
     }
 
@@ -98,9 +106,10 @@ impl ContextCache {
     /// real system — cost is charged but does not stall prefill).
     /// Returns the modeled store time.
     pub fn store(&mut self, pool: &mut MemPool, tokens: &[i32]) -> Micros {
+        let (ns, bytes) = (self.ns, self.block_bytes());
         let mut total = 0.0;
-        for key in self.block_keys(tokens) {
-            total += pool.put(self.ns, key, self.block_bytes()).latency_us;
+        for key in self.block_key_iter(tokens) {
+            total += pool.put(ns, key, bytes).latency_us;
         }
         total
     }
@@ -173,6 +182,65 @@ mod tests {
         cc.store(&mut pool, &prompt);
         let hit = cc.lookup(&mut pool, &prompt);
         assert_eq!(hit.reused_tokens, 0);
+    }
+
+    #[test]
+    fn partial_final_block_rounds_down() {
+        let (mut pool, mut cc) = setup();
+        let prompt = toks(300, 0); // 2 full blocks + a 44-token tail
+        cc.store(&mut pool, &prompt);
+        let hit = cc.lookup(&mut pool, &prompt);
+        assert_eq!(hit.reused_tokens, 256, "only full blocks count");
+        assert_eq!(hit.hit_keys.len(), 2);
+        assert_eq!(cc.block_keys(&prompt).len(), 2);
+        // growing the tail into a full block makes it cacheable
+        let grown = toks(384, 0);
+        cc.store(&mut pool, &grown);
+        assert_eq!(cc.lookup(&mut pool, &grown).reused_tokens, 384);
+    }
+
+    #[test]
+    fn sub_block_prompt_probes_nothing() {
+        let (mut pool, mut cc) = setup();
+        let tiny = toks(100, 2); // shorter than one block
+        cc.store(&mut pool, &tiny);
+        let hit = cc.lookup(&mut pool, &tiny);
+        assert_eq!(hit.reused_tokens, 0);
+        assert!(hit.hit_keys.is_empty());
+        assert_eq!(hit.fetch_us, 0.0);
+        // the lookup counts, but no block was walked: no hit, no miss
+        assert_eq!(cc.lookups, 1);
+        assert_eq!(cc.block_hits + cc.block_misses, 0);
+        assert_eq!(cc.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn eviction_under_pool_pressure_breaks_reuse() {
+        // one tiny server: 2 blocks of DRAM + 2 of SSD (block = 64 KiB)
+        let mut pool = MemPool::new(1, 128 << 10, 128 << 10);
+        let mut cc = ContextCache::new(&mut pool, 128, 512, true);
+        let first = toks(256, 0);
+        cc.store(&mut pool, &first);
+        assert_eq!(cc.lookup(&mut pool, &first).reused_tokens, 256);
+        // flood the pool far past DRAM+SSD capacity
+        for salt in 1..=8 {
+            cc.store(&mut pool, &toks(256, salt * 100));
+        }
+        let st = pool.stats();
+        assert!(st.evictions_to_ssd > 0, "pressure must tier: {st:?}");
+        assert!(st.evictions_dropped > 0, "pressure must drop: {st:?}");
+        // the earliest prompt's blocks were dropped: reuse collapses, and
+        // the walk stops cleanly at the first missing block
+        let hit = cc.lookup(&mut pool, &first);
+        assert!(hit.reused_tokens < 256, "evicted prefix still fully reused");
+        assert_eq!(hit.reused_tokens % cc.block_tokens, 0);
+    }
+
+    #[test]
+    fn hit_rate_with_zero_lookups_is_zero() {
+        let (_pool, cc) = setup();
+        assert_eq!(cc.lookups, 0);
+        assert_eq!(cc.hit_rate(), 0.0);
     }
 
     #[test]

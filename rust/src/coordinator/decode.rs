@@ -25,6 +25,11 @@ pub struct DecodeInstance {
     pub max_concurrent: usize,
     pub steps: u64,
     pub tokens_emitted: u64,
+    /// Slot-step opportunities: one per active slot per step. With MTP on,
+    /// `(tokens_emitted - slot_steps) / slot_steps` is the *measured*
+    /// speculative acceptance rate (report: `mtp_acceptance`); with MTP
+    /// off it is exactly zero.
+    pub slot_steps: u64,
     rng: Rng,
 }
 
@@ -44,6 +49,7 @@ impl DecodeInstance {
             max_concurrent,
             steps: 0,
             tokens_emitted: 0,
+            slot_steps: 0,
             rng: Rng::new(seed),
         }
     }
@@ -140,6 +146,7 @@ impl DecodeInstance {
         let mut emits = Vec::with_capacity(self.slots.len());
         let mut i = 0;
         while i < self.slots.len() {
+            self.slot_steps += 1;
             let slot = &mut self.slots[i];
             let mut produced = 1usize;
             if serving.mtp
@@ -214,6 +221,10 @@ mod tests {
         }
         let per_step = total as f64 / 20.0 / 500.0;
         assert!((per_step - 1.7).abs() < 0.05, "tokens/slot/step {per_step}");
+        // the slot-step counter yields the measured acceptance rate
+        assert_eq!(d.slot_steps, 20 * 500);
+        let measured = (d.tokens_emitted - d.slot_steps) as f64 / d.slot_steps as f64;
+        assert!((measured - 0.7).abs() < 0.05, "measured acceptance {measured}");
     }
 
     #[test]

@@ -70,6 +70,14 @@ pub struct Router {
     /// session → home instance (KV-centric affinity state; the P2P router
     /// keeps NO such state — that is the point).
     home: BTreeMap<u64, usize>,
+    /// session → the instance that last prefilled it (SGLang-style
+    /// cache-affinity hint for P2P serving). Unlike `home`, this is a
+    /// *soft latency* hint, not a correctness dependency: the prefix KV
+    /// lives in the shared pool either way, so a non-affine placement
+    /// pays the UB pool fetch, never a recompute. Only
+    /// [`Router::route_affinity`] reads or writes it — plain
+    /// [`Router::route`] stays stateless, bit-for-bit.
+    affinity: BTreeMap<u64, usize>,
 }
 
 impl Router {
@@ -79,6 +87,7 @@ impl Router {
             queued_tokens: vec![0; n_instances],
             state: vec![InstanceState::Active; n_instances],
             home: BTreeMap::new(),
+            affinity: BTreeMap::new(),
         }
     }
 
@@ -201,6 +210,41 @@ impl Router {
             }
             None => self.route(session, tokens),
         }
+    }
+
+    /// Cache-affinity routing for P2P serving (SGLang-style): prefer the
+    /// instance that last prefilled this session — its prefix KV blocks
+    /// are still resident in local HBM, so a hit there skips even the UB
+    /// pool fetch — unless that instance is gone or overloaded past
+    /// `overload_factor` (the same queue-ratio test the KV-centric
+    /// baseline uses), in which case the request falls back to the
+    /// least-loaded instance and pays the pool fetch for whatever prefix
+    /// is still cached. Returns the decision plus whether the affine
+    /// (local-HBM) placement was taken. `cache_usable` is always true:
+    /// the shared pool survives any placement — that is the §4.1
+    /// difference from the KV-centric `home` map.
+    pub fn route_affinity(
+        &mut self,
+        session: u64,
+        tokens: u64,
+        overload_factor: f64,
+    ) -> (RouteDecision, bool) {
+        let least = self.least_loaded();
+        let (pick, local) = match self.affinity.get(&session) {
+            Some(&aff) if self.is_active(aff) => {
+                let aff_q = self.queued_tokens[aff] as f64;
+                let least_q = self.queued_tokens[least] as f64;
+                if aff_q <= (least_q + tokens as f64) * overload_factor {
+                    (aff, true)
+                } else {
+                    (least, false)
+                }
+            }
+            _ => (least, false),
+        };
+        self.affinity.insert(session, pick);
+        self.queued_tokens[pick] += tokens;
+        (RouteDecision { instance: pick, cache_usable: true }, local)
     }
 
     /// Route a request; caller charges `tokens` of prefill work.
@@ -486,6 +530,62 @@ mod tests {
         assert_eq!(r.state(0), InstanceState::Drained);
         r.set_active(0, true);
         assert_eq!(r.state(0), InstanceState::Active);
+    }
+
+    #[test]
+    fn affinity_routing_sticks_to_the_last_prefill_instance() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 4);
+        let (first, local) = r.route_affinity(7, 100, 4.0);
+        assert!(!local, "a session's first turn has no affine instance");
+        for _ in 0..5 {
+            let (d, local) = r.route_affinity(7, 100, 4.0);
+            assert_eq!(d.instance, first.instance);
+            assert!(local, "follow-up turns must land on the affine instance");
+            assert!(d.cache_usable, "shared pool survives any placement");
+        }
+    }
+
+    #[test]
+    fn affinity_overload_falls_back_without_losing_the_pool() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 2);
+        let (first, _) = r.route_affinity(7, 1_000_000, 1.0);
+        // the other instance is empty → the queue-ratio test reroutes
+        let (again, local) = r.route_affinity(7, 100, 1.0);
+        assert_ne!(again.instance, first.instance);
+        assert!(!local, "overloaded affine instance must be abandoned");
+        assert!(again.cache_usable, "pool-held prefix stays fetchable");
+        // the affinity hint follows the reroute
+        let (third, local) = r.route_affinity(7, 100, 1.0);
+        assert_eq!(third.instance, again.instance);
+        assert!(local);
+    }
+
+    #[test]
+    fn affinity_skips_drained_and_failed_instances() {
+        let mut r = Router::new(RouterKind::PeerToPeer, 3);
+        let (first, _) = r.route_affinity(5, 100, 8.0);
+        r.set_failed(first.instance, true);
+        let (again, local) = r.route_affinity(5, 100, 8.0);
+        assert_ne!(again.instance, first.instance);
+        assert!(!local, "a dead affine instance holds no local blocks");
+        assert!(again.cache_usable);
+    }
+
+    #[test]
+    fn plain_route_ignores_affinity_state() {
+        // route() must stay stateless even after affinity traffic: the
+        // existing-scenario bit-exactness contract depends on it.
+        let mut r = Router::new(RouterKind::PeerToPeer, 2);
+        r.route_affinity(1, 10_000, 4.0);
+        let side = Router::new(RouterKind::PeerToPeer, 2);
+        let mut expect = Router {
+            kind: side.kind,
+            queued_tokens: r.queued_tokens.clone(),
+            state: vec![InstanceState::Active; 2],
+            home: BTreeMap::new(),
+            affinity: BTreeMap::new(),
+        };
+        assert_eq!(r.route(1, 100), expect.route(1, 100));
     }
 
     #[test]

@@ -173,6 +173,9 @@ impl ServeSim {
             plane_exposure_us: self.plane_exposure_us.clone(),
             placement_objective: self.cfg.serving.placement,
             placement_score: self.placement.placement_score,
+            cache_hit_rate: self.cache_hit_rate(),
+            mtp_acceptance: self.mtp_acceptance(),
+            reprefill_frac: self.reprefill_frac(),
         }
     }
 
@@ -222,6 +225,32 @@ impl ServeSim {
     /// Context-cache hit rate observed during the run.
     pub fn cache_hit_rate(&self) -> f64 {
         self.context_cache.as_ref().map(|c| c.hit_rate()).unwrap_or(0.0)
+    }
+
+    /// Measured MTP acceptance: extra tokens per slot-step across the
+    /// decode pool (exactly 0.0 with MTP off).
+    pub fn mtp_acceptance(&self) -> f64 {
+        let (mut tokens, mut slot_steps) = (0u64, 0u64);
+        for d in &self.decodes {
+            tokens += d.tokens_emitted;
+            slot_steps += d.slot_steps;
+        }
+        if slot_steps == 0 {
+            0.0
+        } else {
+            (tokens - slot_steps) as f64 / slot_steps as f64
+        }
+    }
+
+    /// Fraction of materialized follow-up-turn prompt tokens that were
+    /// re-prefilled instead of served from cached blocks (0.0 when no
+    /// session turns arrived).
+    pub fn reprefill_frac(&self) -> f64 {
+        if self.session_turn_tokens == 0 {
+            0.0
+        } else {
+            1.0 - self.session_reused_tokens as f64 / self.session_turn_tokens as f64
+        }
     }
 
     /// Router queue imbalance at end of run.

@@ -47,12 +47,35 @@ impl ServeSim {
         }
 
         let compute = prompt_tokens - reused;
-        let decision = self.router.route(session, compute as u64);
+        // session cache-affinity (SGLang-style): materialized-prompt
+        // requests under the P2P router prefer the instance that last
+        // prefilled their session — a hit there reads the prefix straight
+        // from local HBM, skipping even the UB pool fetch. Length-only
+        // traces (every pre-session scenario) never reach this branch, so
+        // their routing stays bit-identical with the flag on or off.
+        let use_affinity = self.opts.cache_affinity
+            && self.opts.router == RouterKind::PeerToPeer
+            && !prompt.is_empty();
+        let decision = if use_affinity {
+            let (decision, local) =
+                self.router.route_affinity(session, compute as u64, AFFINITY_OVERLOAD_FACTOR);
+            if local && reused > 0 {
+                self.affinity_local_hits += 1;
+                fetch_us = 0.0;
+            }
+            decision
+        } else {
+            self.router.route(session, compute as u64)
+        };
         if !decision.cache_usable {
             // KV-centric reroute: the local cache is on the wrong node
             self.recomputed_tokens += reused as u64;
             reused = 0;
             fetch_us = 0.0;
+        }
+        if !prompt.is_empty() && self.requests[idx].spec.turn > 0 {
+            self.session_turn_tokens += prompt_tokens as u64;
+            self.session_reused_tokens += reused as u64;
         }
         // a degraded fabric stretches pool fetches (chaos LinkDegrade /
         // rack-loss cascades), at the worst multiplier on the pool plane;
@@ -118,14 +141,27 @@ impl ServeSim {
             st.phase = RequestPhase::Prefilling;
             st.t_prefill_start = Some(self.now);
             let recovering = st.recovering;
-            self.tel_phase(
-                rid,
-                if recovering {
-                    crate::telemetry::SpanKind::Reprefill
+            // materialized-prompt requests annotate their prefill span with
+            // the arrival-time cache outcome (recovery re-prefills are a
+            // crash artifact, not a cache probe — left unannotated)
+            let cache_arg = (!recovering && !st.spec.prompt.is_empty()).then(|| {
+                if st.reused_tokens > 0 {
+                    crate::telemetry::SpanArg::CacheHit {
+                        reused_tokens: st.reused_tokens as u32,
+                    }
                 } else {
-                    crate::telemetry::SpanKind::Prefill
-                },
-            );
+                    crate::telemetry::SpanArg::CacheMiss
+                }
+            });
+            let kind = if recovering {
+                crate::telemetry::SpanKind::Reprefill
+            } else {
+                crate::telemetry::SpanKind::Prefill
+            };
+            match cache_arg {
+                Some(arg) => self.tel_phase_arg(rid, kind, arg),
+                None => self.tel_phase(rid, kind),
+            }
         }
         self.inflight_batches[inst] = Some(batch);
         self.prefills[inst].busy_until = self.now + lat;

@@ -127,7 +127,17 @@ impl ServeSim {
                 remaining,
                 tier,
             );
-            self.tel_phase(rid, crate::telemetry::SpanKind::Decode);
+            // annotate decode spans with the speculative-decode mode so a
+            // trace shows at a glance which runs stepped multi-token
+            if self.cfg.serving.mtp {
+                self.tel_phase_arg(
+                    rid,
+                    crate::telemetry::SpanKind::Decode,
+                    crate::telemetry::SpanArg::Mtp,
+                );
+            } else {
+                self.tel_phase(rid, crate::telemetry::SpanKind::Decode);
+            }
         }
         if self.decodes[inst].slots.is_empty() {
             self.decode_step_pending[inst] = false;

@@ -241,7 +241,21 @@ pub struct SimOptions {
     /// `None` (the default) compiles every hook down to a null check —
     /// same-seed reports are bit-identical with telemetry on or off.
     pub telemetry: Option<TelemetryOptions>,
+    /// Session cache-affinity routing (SGLang-style): under the P2P
+    /// router, follow-up turns of a session with materialized prompts
+    /// prefer the instance that last prefilled them — a hit there reads
+    /// the prefix KV from local HBM and skips the UB pool fetch. Only
+    /// engages for requests carrying real prompt tokens (the session
+    /// scenarios), so every length-only scenario is bit-identical with
+    /// the flag on or off. `--no-cache-affinity` runs the ablation:
+    /// every follow-up turn pays the pool fetch for its cached prefix.
+    pub cache_affinity: bool,
 }
+
+/// Queue-ratio bound for abandoning the affine instance (same comparison
+/// the KV-centric baseline uses): a session leaves its home when the home
+/// queue exceeds `least_loaded + tokens` by this factor.
+pub const AFFINITY_OVERLOAD_FACTOR: f64 = 2.0;
 
 impl Default for SimOptions {
     fn default() -> Self {
@@ -256,6 +270,7 @@ impl Default for SimOptions {
             faults: None,
             resilience: ResiliencePolicy::independent(),
             telemetry: None,
+            cache_affinity: true,
         }
     }
 }
@@ -470,6 +485,16 @@ pub struct ServeSim {
     /// Prompt tokens recomputed because a KV-centric reroute forfeited
     /// the locally-cached prefix.
     pub recomputed_tokens: u64,
+    // --- session / cache-affinity accounting ---
+    /// Prompt tokens of materialized follow-up turns (session scenarios).
+    pub session_turn_tokens: u64,
+    /// Of those, the tokens served from cached prefix blocks — the
+    /// complement is what had to be re-prefilled (report:
+    /// `reprefill_frac`).
+    pub session_reused_tokens: u64,
+    /// Follow-up turns routed to their affine instance with a warm prefix
+    /// (the zero-fetch local-HBM path).
+    pub affinity_local_hits: u64,
 }
 
 /// One prefill NPU group on loan to the decode pool (domain-aware
@@ -725,6 +750,9 @@ impl ServeSim {
             finished: 0,
             peak_router_imbalance: 1.0,
             recomputed_tokens: 0,
+            session_turn_tokens: 0,
+            session_reused_tokens: 0,
+            affinity_local_hits: 0,
             requests: trace.into_iter().map(RequestState::new).collect(),
             cfg,
             opts,

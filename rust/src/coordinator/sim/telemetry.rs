@@ -14,7 +14,7 @@
 //! determinism contract freezes.
 
 use super::*;
-use crate::telemetry::{Sample, SpanKind};
+use crate::telemetry::{Sample, SpanArg, SpanKind};
 
 impl ServeSim {
     /// Transition request `rid` into phase `kind` at the current virtual
@@ -23,6 +23,15 @@ impl ServeSim {
         let now = self.now;
         if let Some(tel) = self.telemetry.as_mut() {
             tel.phase(rid, now, kind);
+        }
+    }
+
+    /// [`ServeSim::tel_phase`] carrying a [`SpanArg`] annotation
+    /// (cache hit/miss on prefill spans, MTP on decode spans).
+    pub(super) fn tel_phase_arg(&mut self, rid: u64, kind: SpanKind, arg: SpanArg) {
+        let now = self.now;
+        if let Some(tel) = self.telemetry.as_mut() {
+            tel.phase_with(rid, now, kind, Some(arg));
         }
     }
 

@@ -32,7 +32,7 @@
 //! ([`metrics::ServingReport`]).
 //!
 //! Time-varying workloads come from the scenario layer
-//! ([`workload::ScenarioSpec`]) with five named presets:
+//! ([`workload::ScenarioSpec`]) with named presets:
 //!
 //! * `diurnal` — sinusoidal arrival wave; prompt-heavy "day" flips to
 //!   output-heavy "night" (drives resplits in both directions),
@@ -42,7 +42,10 @@
 //! * `mixed_slo` — interleaved 50 ms / 15 ms TPOT tiers, enforced by
 //!   per-tier concurrency quotas in [`coordinator::batcher`],
 //! * `memory_bound_decode` — long-context, decode-heavy, low-variance
-//!   traffic: the §6.2.1 attention-offload regime.
+//!   traffic: the §6.2.1 attention-offload regime,
+//! * `session_chat` / `agentic_loop` — multi-turn sessions with
+//!   materialized, growing prefixes: the context-caching + cache-affinity
+//!   regime (see **Sessions** below).
 //!
 //! ## Elastic actions and §6.2.1 attention offloading
 //!
@@ -135,6 +138,32 @@
 //! `simulate --placement spread_racks --scenario correlated_rack_loss`
 //! and the `slo_explorer` packed-vs-spread legs run the experiment;
 //! `integration_placement` holds the strict goodput/availability win.
+//!
+//! ## Sessions (prefix-cache affinity + MTP in the hot loop)
+//!
+//! The `session_chat` / `agentic_loop` scenario presets emit multi-turn
+//! chat and agentic tool-loop sessions whose follow-up turns carry
+//! *materialized* token prefixes — the full history plus a short new
+//! turn. The serving loop turns the shared prefix into throughput three
+//! ways: [`cache::ContextCache`] prices each arrival's longest cached
+//! block-prefix as a UB pool fetch instead of re-prefill (misses and
+//! [`mempool::MemPool`]-evicted blocks pay full prefill, Fig 23);
+//! SGLang-style cache-affinity routing
+//! ([`coordinator::router::Router::route_affinity`]) prefers the prefill
+//! instance that served the session's previous turn — a local hit skips
+//! even the pool fetch — yielding to the least-loaded instance when the
+//! affine queue exceeds
+//! [`coordinator::sim::AFFINITY_OVERLOAD_FACTOR`]; and decode runs the
+//! paper's MTP speculative step (Fig 22b), emitting a second token per
+//! slot-step at the configured acceptance rate, bit-exactly single-token
+//! when disabled. `simulate --scenario session_chat
+//! [--no-cache-affinity] [--no-mtp]` runs the ablations; the report adds
+//! [`metrics::ServingReport::cache_hit_rate`] /
+//! [`metrics::ServingReport::mtp_acceptance`] /
+//! [`metrics::ServingReport::reprefill_frac`]; prefill/decode telemetry
+//! spans carry `cache_hit`/`cache_miss`/`mtp` args; length-only presets
+//! never engage any of it and stay bit-identical
+//! (`tests/integration_session.rs`, `BENCH_session.json`).
 //!
 //! ## Observability (span traces, samplers, incident annotations)
 //!

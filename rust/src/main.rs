@@ -39,10 +39,11 @@ fn print_help() {
          \x20                           real prefill+decode through PJRT\n\
          \x20 simulate [--npus N] [--requests N] [--seed N]\n\
          \x20          [--scenario diurnal|burst_storm|long_context_drift|mixed_slo\n\
-         \x20                      |memory_bound_decode|chaos_crashes|chaos_degraded\n\
-         \x20                      |correlated_rack_loss]\n\
+         \x20                      |memory_bound_decode|session_chat|agentic_loop\n\
+         \x20                      |chaos_crashes|chaos_degraded|correlated_rack_loss]\n\
          \x20          [--placement packed|spread_racks|spread_planes]\n\
          \x20          [--autoscale] [--no-offload] [--no-recovery] [--no-resilience]\n\
+         \x20          [--no-cache-affinity] [--no-mtp]\n\
          \x20          [--trace-out PATH] [--metrics-out PATH] [--sample-period-us N]\n\
          \x20                           PDC serving simulation (CloudMatrix384);\n\
          \x20                           --autoscale wires the elastic PD controller\n\
@@ -65,7 +66,12 @@ fn print_help() {
          \x20                           Chrome trace (request spans + fault/resplit/\n\
          \x20                           offload annotations), --metrics-out a JSONL time\n\
          \x20                           series sampled every --sample-period-us of\n\
-         \x20                           virtual time (default 250000)\n\
+         \x20                           virtual time (default 250000); session_chat /\n\
+         \x20                           agentic_loop emit multi-turn sessions with\n\
+         \x20                           materialized token prefixes — follow-up turns\n\
+         \x20                           reuse cached prefix KV and route with cache\n\
+         \x20                           affinity (--no-cache-affinity and --no-mtp are\n\
+         \x20                           the fig22/fig23 ablation switches)\n\
          \n\
          Run `make artifacts` first; benches: `cargo bench` (paper tables)."
     );
@@ -284,6 +290,7 @@ fn simulate(args: &[String]) -> Result<()> {
         },
         telemetry: (trace_out.is_some() || metrics_out.is_some())
             .then(|| cm_infer::telemetry::TelemetryOptions { sample_period_us }),
+        cache_affinity: !has_flag(args, "--no-cache-affinity"),
         ..SimOptions::default()
     };
     let mut sim = ServeSim::new(cfg, opts, trace);
@@ -316,6 +323,16 @@ fn simulate(args: &[String]) -> Result<()> {
         sim.peak_router_imbalance,
         sim.eplb_imbalance()
     );
+    if sim.session_turn_tokens > 0 {
+        println!(
+            "  sessions: cache hit rate {:.2}  re-prefill frac {:.2}  affinity local hits {}  \
+             MTP acceptance (measured) {:.2}",
+            r.cache_hit_rate,
+            r.reprefill_frac,
+            sim.affinity_local_hits,
+            r.mtp_acceptance
+        );
+    }
     let pr = sim.placement_report();
     println!(
         "  placement {}: score {:.2} (locality {:.2}, blast {:.2}; max blast radius {}, \

@@ -274,6 +274,18 @@ pub struct ServingReport {
     /// Blended locality-vs-blast-radius score of the planned layout
     /// ([`crate::domains::PlacementReport::placement_score`], in [0, 1]).
     pub placement_score: f64,
+    /// Context-cache block hit rate over the run (0.0 when the cache was
+    /// off or never probed) — the knob the session scenarios' throughput
+    /// and TTFT attainment visibly hinge on (Fig 23).
+    pub cache_hit_rate: f64,
+    /// *Measured* MTP speculative acceptance: extra tokens emitted per
+    /// slot-step across the decode pool (0.0 with MTP off — every step
+    /// emits exactly one token per slot).
+    pub mtp_acceptance: f64,
+    /// Of the prompt tokens arriving on materialized follow-up turns, the
+    /// fraction that had to be re-prefilled rather than served from
+    /// cached prefix blocks (0.0 when no session turns arrived).
+    pub reprefill_frac: f64,
 }
 
 /// Cheap copyable histogram summary.

@@ -85,6 +85,38 @@ impl SpanKind {
     }
 }
 
+/// Optional structured annotation carried by a span: how the prefill
+/// interacted with the context cache, or that the decode phase ran with
+/// MTP speculation. Rendered into the Chrome trace event's `args`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanArg {
+    /// Prefill reused a cached prefix of `reused_tokens` tokens.
+    CacheHit { reused_tokens: u32 },
+    /// Prefill probed the context cache and found nothing reusable.
+    CacheMiss,
+    /// Decode steps run with MTP speculative multi-token emission.
+    Mtp,
+}
+
+impl SpanArg {
+    fn render(self) -> BTreeMap<String, Json> {
+        let mut m = BTreeMap::new();
+        match self {
+            SpanArg::CacheHit { reused_tokens } => {
+                m.insert("cache_hit".to_string(), Json::Bool(true));
+                m.insert("reused_tokens".to_string(), Json::Num(reused_tokens as f64));
+            }
+            SpanArg::CacheMiss => {
+                m.insert("cache_miss".to_string(), Json::Bool(true));
+            }
+            SpanArg::Mtp => {
+                m.insert("mtp".to_string(), Json::Bool(true));
+            }
+        }
+        m
+    }
+}
+
 /// One closed request-phase span.
 #[derive(Debug, Clone, Copy)]
 pub struct Span {
@@ -92,6 +124,8 @@ pub struct Span {
     pub kind: SpanKind,
     pub t0: Micros,
     pub t1: Micros,
+    /// Structured annotation attached when the span was opened.
+    pub arg: Option<SpanArg>,
 }
 
 /// An instant mark on a request's track (`first_token`, `rehome`,
@@ -153,7 +187,7 @@ pub struct Telemetry {
     spans: Vec<Span>,
     /// Currently open span per request (closed at export against the
     /// report duration if the run ends with the request in flight).
-    open: BTreeMap<u64, (SpanKind, Micros)>,
+    open: BTreeMap<u64, (SpanKind, Micros, Option<SpanArg>)>,
     marks: Vec<Mark>,
     samples: Vec<Sample>,
     /// Next sample boundary, µs of virtual time.
@@ -183,16 +217,22 @@ impl Telemetry {
     /// Transition request `rid` into phase `kind` at `now`: closes any
     /// open span and opens the new one.
     pub fn phase(&mut self, rid: u64, now: Micros, kind: SpanKind) {
-        if let Some((prev, t0)) = self.open.insert(rid, (kind, now)) {
-            self.spans.push(Span { rid, kind: prev, t0, t1: now });
+        self.phase_with(rid, now, kind, None);
+    }
+
+    /// [`Telemetry::phase`] carrying a structured [`SpanArg`] annotation
+    /// (cache hit/miss on prefill, MTP on decode).
+    pub fn phase_with(&mut self, rid: u64, now: Micros, kind: SpanKind, arg: Option<SpanArg>) {
+        if let Some((prev, t0, prev_arg)) = self.open.insert(rid, (kind, now, arg)) {
+            self.spans.push(Span { rid, kind: prev, t0, t1: now, arg: prev_arg });
         }
     }
 
     /// Terminal transition: close the open span and drop the mark
     /// (`"complete"` / `"lost"`).
     pub fn close(&mut self, rid: u64, now: Micros, outcome: &'static str) {
-        if let Some((prev, t0)) = self.open.remove(&rid) {
-            self.spans.push(Span { rid, kind: prev, t0, t1: now });
+        if let Some((prev, t0, prev_arg)) = self.open.remove(&rid) {
+            self.spans.push(Span { rid, kind: prev, t0, t1: now, arg: prev_arg });
         }
         self.marks.push(Mark { rid, t: now, label: outcome });
     }
@@ -266,14 +306,21 @@ impl Telemetry {
                 s.kind.tag(),
                 s.t0,
                 s.t1 - s.t0,
-                None,
+                s.arg.map(SpanArg::render),
             ));
         }
         // requests still in flight when the run ended (event cap, lost
         // heartbeats): close their open span at the report horizon
-        for (&rid, &(kind, t0)) in &self.open {
+        for (&rid, &(kind, t0, arg)) in &self.open {
             let t1 = report.duration_us.max(t0);
-            events.push(complete(PID_REQUESTS, rid as f64, kind.tag(), t0, t1 - t0, None));
+            events.push(complete(
+                PID_REQUESTS,
+                rid as f64,
+                kind.tag(),
+                t0,
+                t1 - t0,
+                arg.map(SpanArg::render),
+            ));
         }
         for m in &self.marks {
             events.push(instant(PID_REQUESTS, m.rid as f64, m.label, m.t));
@@ -527,6 +574,41 @@ mod tests {
             .find(|e| e.get("tid").unwrap().as_f64().unwrap() == 1.0)
             .expect("open span exported");
         assert_eq!(horizon.get("dur").unwrap().as_f64().unwrap(), 95.0);
+    }
+
+    #[test]
+    fn span_args_survive_to_trace_json() {
+        let mut t = Telemetry::new(TelemetryOptions::default(), 1);
+        t.phase_with(
+            3,
+            0.0,
+            SpanKind::Prefill,
+            Some(SpanArg::CacheHit { reused_tokens: 512 }),
+        );
+        t.phase_with(3, 10.0, SpanKind::Decode, Some(SpanArg::Mtp));
+        t.close(3, 30.0, "complete");
+        t.phase_with(4, 5.0, SpanKind::Prefill, Some(SpanArg::CacheMiss));
+        assert_eq!(t.spans()[0].arg, Some(SpanArg::CacheHit { reused_tokens: 512 }));
+        let report = ServingReport { duration_us: 100.0, ..ServingReport::default() };
+        let doc = Json::parse(&t.trace_json(&report)).expect("valid JSON");
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let args_of = |name: &str| {
+            evs.iter()
+                .find(|e| e.get("name").and_then(|n| n.as_str().ok()) == Some(name))
+                .and_then(|e| e.get("args").cloned())
+                .expect("span exported with args")
+        };
+        let pf = args_of("prefill");
+        assert!(pf.get("cache_hit").unwrap().as_bool().unwrap());
+        assert_eq!(pf.get("reused_tokens").unwrap().as_f64().unwrap(), 512.0);
+        assert!(args_of("decode").get("mtp").unwrap().as_bool().unwrap());
+        // the horizon-closed open span keeps its annotation too
+        let miss = evs
+            .iter()
+            .filter(|e| e.get("name").and_then(|n| n.as_str().ok()) == Some("prefill"))
+            .find(|e| e.get("tid").unwrap().as_f64().unwrap() == 4.0)
+            .unwrap();
+        assert!(miss.get("args").unwrap().get("cache_miss").is_some());
     }
 
     #[test]

@@ -313,12 +313,14 @@ fn ln_mean(target: f64, sigma: f64) -> f64 {
 
 impl ScenarioSpec {
     /// All preset names accepted by [`ScenarioSpec::by_name`].
-    pub const PRESETS: [&'static str; 8] = [
+    pub const PRESETS: [&'static str; 10] = [
         "diurnal",
         "burst_storm",
         "long_context_drift",
         "mixed_slo",
         "memory_bound_decode",
+        "session_chat",
+        "agentic_loop",
         "chaos_crashes",
         "chaos_degraded",
         "correlated_rack_loss",
@@ -331,6 +333,8 @@ impl ScenarioSpec {
             "long_context_drift" => Some(Self::long_context_drift(seed)),
             "mixed_slo" => Some(Self::mixed_slo(seed)),
             "memory_bound_decode" => Some(Self::memory_bound_decode(seed)),
+            "session_chat" => Some(Self::session_chat(seed)),
+            "agentic_loop" => Some(Self::agentic_loop(seed)),
             "chaos_crashes" => Some(Self::chaos_crashes(seed)),
             "chaos_degraded" => Some(Self::chaos_degraded(seed)),
             "correlated_rack_loss" => Some(Self::correlated_rack_loss(seed)),
@@ -481,6 +485,75 @@ impl ScenarioSpec {
         base.max_output = 4096;
         ScenarioSpec {
             name: "memory_bound_decode",
+            base,
+            phases: Vec::new(),
+            wave: None,
+            tier_mix: Vec::new(),
+            tier_slos_ms: Vec::new(),
+            fault_profile: None,
+            correlated: None,
+        }
+    }
+
+    /// Multi-turn chat sessions (the Fig 23 production story): most
+    /// arrivals continue an existing conversation whose prompt is the
+    /// full history plus a short new user turn, so follow-up turns share
+    /// a long, growing prefix with their predecessors. Tokens are
+    /// materialized — the serving loop's [`crate::cache::ContextCache`]
+    /// probes real chain-hashed block keys — and session popularity is
+    /// Zipf-skewed, which is what makes cache-affinity routing hotspot.
+    pub fn session_chat(seed: u64) -> ScenarioSpec {
+        let mut base = WorkloadSpec::paper_default(seed);
+        base.mean_interarrival_us = 5_000.0;
+        base.burst_prob = 0.05;
+        base.burst_mean = 4.0;
+        base.prompt_mu = ln_mean(1536.0, 0.5);
+        base.prompt_sigma = 0.5;
+        base.min_prompt = 128;
+        base.max_prompt = 8_192;
+        base.output_mu = ln_mean(192.0, 0.35);
+        base.output_sigma = 0.35;
+        base.min_output = 16;
+        base.max_output = 768;
+        base.multi_turn_prob = 0.75;
+        base.session_skew = 1.1;
+        base.materialize_tokens = true;
+        ScenarioSpec {
+            name: "session_chat",
+            base,
+            phases: Vec::new(),
+            wave: None,
+            tier_mix: Vec::new(),
+            tier_slos_ms: Vec::new(),
+            fault_profile: None,
+            correlated: None,
+        }
+    }
+
+    /// Agentic tool loops: interleaved think/act turns against a shared
+    /// scratchpad. Nearly every arrival continues a session, the freshly
+    /// appended tool result is small relative to the accumulated context,
+    /// and outputs are terse tool calls — so the prefix-cached share of
+    /// each prefill is even higher than `session_chat` and decode turns
+    /// are short and latency-critical.
+    pub fn agentic_loop(seed: u64) -> ScenarioSpec {
+        let mut base = WorkloadSpec::paper_default(seed);
+        base.mean_interarrival_us = 3_500.0;
+        base.burst_prob = 0.10;
+        base.burst_mean = 5.0;
+        base.prompt_mu = ln_mean(768.0, 0.45);
+        base.prompt_sigma = 0.45;
+        base.min_prompt = 64;
+        base.max_prompt = 8_192;
+        base.output_mu = ln_mean(64.0, 0.3);
+        base.output_sigma = 0.3;
+        base.min_output = 8;
+        base.max_output = 256;
+        base.multi_turn_prob = 0.9;
+        base.session_skew = 0.9;
+        base.materialize_tokens = true;
+        ScenarioSpec {
+            name: "agentic_loop",
             base,
             phases: Vec::new(),
             wave: None,
@@ -759,9 +832,15 @@ mod tests {
         let cp = cr.correlated.expect("correlated preset must carry a profile");
         assert!(cp.rack_incidents > 0);
         // healthy presets carry none
-        for name in
-            ["diurnal", "burst_storm", "long_context_drift", "mixed_slo", "memory_bound_decode"]
-        {
+        for name in [
+            "diurnal",
+            "burst_storm",
+            "long_context_drift",
+            "mixed_slo",
+            "memory_bound_decode",
+            "session_chat",
+            "agentic_loop",
+        ] {
             let sc = ScenarioSpec::by_name(name, 3).unwrap();
             assert!(sc.fault_profile.is_none(), "{name}");
             assert!(sc.correlated.is_none(), "{name}");
@@ -803,6 +882,46 @@ mod tests {
         let smu = sgaps.iter().sum::<f64>() / sgaps.len() as f64;
         let svar = sgaps.iter().map(|g| (g - smu) * (g - smu)).sum::<f64>() / sgaps.len() as f64;
         assert!(svar / (smu * smu) > cv2, "burst_storm must be burstier");
+    }
+
+    #[test]
+    fn session_presets_materialize_growing_prefixes() {
+        for name in ["session_chat", "agentic_loop"] {
+            let sc = ScenarioSpec::by_name(name, 11).unwrap();
+            assert!(sc.base.materialize_tokens, "{name} must materialize tokens");
+            let trace = generate_scenario(&sc, 800);
+            // every request carries real token ids
+            assert!(trace.iter().all(|r| !r.prompt.is_empty()), "{name}: empty prompt");
+            // the workload is dominated by follow-up turns
+            let turns = trace.iter().filter(|r| r.turn > 0).count();
+            assert!(turns * 2 > trace.len(), "{name}: only {turns} follow-up turns");
+            // a follow-up turn's prompt extends its parent's prompt exactly
+            let mut checked = 0;
+            for r in trace.iter().filter(|r| r.turn > 0) {
+                let parent =
+                    trace.iter().rfind(|p| p.session == r.session && p.turn + 1 == r.turn);
+                if let Some(p) = parent {
+                    assert!(
+                        r.prompt.len() > p.prompt.len() && r.prompt.starts_with(&p.prompt),
+                        "{name}: turn {} does not extend its parent prefix",
+                        r.turn
+                    );
+                    checked += 1;
+                }
+            }
+            assert!(checked > 50, "{name}: too few parent/child pairs ({checked})");
+        }
+        // the agentic loop is turnier and terser than chat
+        let chat = generate_scenario(&ScenarioSpec::session_chat(11), 800);
+        let agent = generate_scenario(&ScenarioSpec::agentic_loop(11), 800);
+        let frac = |t: &[Request]| {
+            t.iter().filter(|r| r.turn > 0).count() as f64 / t.len() as f64
+        };
+        assert!(frac(&agent) > frac(&chat), "agentic_loop must be turnier");
+        let mean_out = |t: &[Request]| {
+            t.iter().map(|r| r.output_tokens as f64).sum::<f64>() / t.len() as f64
+        };
+        assert!(mean_out(&agent) < mean_out(&chat), "agentic turns must be terse");
     }
 
     #[test]

@@ -37,7 +37,7 @@ struct Case {
     placement: PlacementObjective,
 }
 
-const CASES: [Case; 7] = [
+const CASES: [Case; 8] = [
     Case {
         preset: "diurnal",
         seed: 3,
@@ -115,6 +115,19 @@ const CASES: [Case; 7] = [
         decode_instances: 4,
         domain_aware: true,
         placement: PlacementObjective::SpreadRacks,
+    },
+    // sessions: multi-turn chat with materialized token prefixes — pins
+    // the prefix-cache hit rate, the measured MTP acceptance, and the
+    // re-prefill fraction on top of the usual latency scalars
+    Case {
+        preset: "session_chat",
+        seed: 14,
+        n: 500,
+        autoscale: false,
+        decode_npus: 0,
+        decode_instances: 1,
+        domain_aware: false,
+        placement: PlacementObjective::Packed,
     },
 ];
 
@@ -207,6 +220,11 @@ fn run_case(c: &Case) -> Vec<(String, f64)> {
         // and the layout's locality-vs-blast-radius score
         (format!("{tag} plane_exposure_us"), r.plane_exposure_us.iter().sum()),
         (format!("{tag} placement_score"), r.placement_score),
+        // sessions: prefix-cache reuse, measured speculative acceptance,
+        // and the fraction of follow-up-turn tokens that re-prefilled
+        (format!("{tag} cache_hit_rate"), r.cache_hit_rate),
+        (format!("{tag} mtp_acceptance"), r.mtp_acceptance),
+        (format!("{tag} reprefill_frac"), r.reprefill_frac),
     ]
 }
 

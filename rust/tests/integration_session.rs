@@ -1,0 +1,179 @@
+//! End-to-end tests of session-aware serving: on the `session_chat`
+//! scenario (multi-turn conversations with materialized, growing token
+//! prefixes) the full serving loop — prefix-cache reuse + SGLang-style
+//! cache-affinity routing + MTP speculative decode — must strictly beat
+//! the `--no-cache-affinity` and `--no-mtp` ablations on decode tok/s
+//! per NPU and on TTFT SLO attainment; the session scenarios must rerun
+//! bit-exactly; and on length-only scenarios the compiled-in-but-idle
+//! feature must leave reports bit-identical.
+
+use cm_infer::config::Config;
+use cm_infer::coordinator::sim::{ServeSim, SimOptions};
+use cm_infer::metrics::ServingReport;
+use cm_infer::workload::{generate_scenario, ScenarioSpec};
+
+const N: usize = 1500;
+const SEED: u64 = 21;
+
+struct Leg {
+    report: ServingReport,
+    affinity_local_hits: u64,
+    session_turn_tokens: u64,
+}
+
+fn run_leg(preset: &str, affinity: bool, mtp: bool) -> Leg {
+    let sc = ScenarioSpec::by_name(preset, SEED).unwrap();
+    let trace = generate_scenario(&sc, N);
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    cfg.serving.mtp = mtp;
+    let opts = SimOptions { seed: SEED, cache_affinity: affinity, ..SimOptions::default() };
+    let mut sim = ServeSim::new(cfg, opts, trace);
+    let report = sim.run();
+    Leg {
+        report,
+        affinity_local_hits: sim.affinity_local_hits,
+        session_turn_tokens: sim.session_turn_tokens,
+    }
+}
+
+/// (a) The full session loop strictly beats both ablations on decode
+/// throughput per NPU, with identical work served on every leg.
+#[test]
+fn session_serving_beats_both_ablations_on_decode_throughput() {
+    let full = run_leg("session_chat", true, true);
+    let no_aff = run_leg("session_chat", false, true);
+    let no_mtp = run_leg("session_chat", true, false);
+
+    // every leg serves the identical trace to completion
+    for (name, leg) in [("full", &full), ("no-affinity", &no_aff), ("no-mtp", &no_mtp)] {
+        assert_eq!(leg.report.requests_completed, N as u64, "{name} leg dropped requests");
+        assert_eq!(leg.report.requests_lost, 0, "{name} leg lost requests");
+    }
+    assert_eq!(full.report.output_tokens, no_aff.report.output_tokens);
+    assert_eq!(full.report.output_tokens, no_mtp.report.output_tokens);
+
+    // the session machinery visibly engaged on the full leg
+    assert!(
+        full.report.cache_hit_rate > 0.3,
+        "prefix cache must carry the multi-turn workload: hit rate {}",
+        full.report.cache_hit_rate
+    );
+    assert!(
+        full.report.reprefill_frac < 0.7,
+        "most follow-up-turn tokens must come from cache: reprefill {}",
+        full.report.reprefill_frac
+    );
+    assert!(full.session_turn_tokens > 0);
+    assert!(
+        full.affinity_local_hits > 0,
+        "affinity routing must land warm local-HBM hits"
+    );
+    assert_eq!(no_aff.affinity_local_hits, 0, "the ablation must never take the local path");
+    // measured speculative acceptance tracks the configured rate (0.70);
+    // the MTP-off leg is exactly zero
+    assert!(
+        (full.report.mtp_acceptance - 0.70).abs() < 0.05,
+        "measured acceptance {}",
+        full.report.mtp_acceptance
+    );
+    assert_eq!(no_mtp.report.mtp_acceptance, 0.0);
+
+    // acceptance: strictly better decode tok/s/NPU than either ablation
+    let (f, a, m) = (
+        full.report.decode_tokens_per_s_per_npu(),
+        no_aff.report.decode_tokens_per_s_per_npu(),
+        no_mtp.report.decode_tokens_per_s_per_npu(),
+    );
+    assert!(f > a, "cache affinity must strictly lift decode tok/s/NPU: {f:.1} vs {a:.1}");
+    assert!(f > m, "MTP must strictly lift decode tok/s/NPU: {f:.1} vs {m:.1}");
+}
+
+/// (b) TTFT attainment hinges on the warm-prefix path: with the TTFT SLO
+/// pinned at the ablation leg's median TTFT, the affinity leg attains
+/// strictly more. The SLO only enters the end-of-run attainment
+/// bookkeeping, so both legs' dynamics are untouched by the choice.
+#[test]
+fn cache_affinity_strictly_lifts_ttft_attainment() {
+    let full = run_leg("session_chat", true, true);
+    let no_aff = run_leg("session_chat", false, true);
+
+    // follow-up turns skip the UB pool fetch on the affinity leg, so the
+    // TTFT distribution shifts left in aggregate
+    let (fmean, amean) = (full.report.ttft_us.mean, no_aff.report.ttft_us.mean);
+    assert!(
+        fmean < amean,
+        "affinity must shift mean TTFT left: {fmean:.0} vs {amean:.0} µs"
+    );
+    // the headline SLO statement: pin the TTFT SLO at the ablation's own
+    // median, so the threshold sits mid-distribution and the affinity
+    // leg's left shift shows up as strictly higher attainment
+    let slo_us = no_aff.report.ttft_us.p50;
+    let frac_under = |leg: &Leg, affinity: bool| {
+        // re-run with the SLO set: the SLO is read only by the report's
+        // attainment bookkeeping, never by the hot loop, so the dynamics
+        // must be bit-identical to the original leg — asserted below
+        let sc = ScenarioSpec::by_name("session_chat", SEED).unwrap();
+        let trace = generate_scenario(&sc, N);
+        let mut cfg = Config::default();
+        cfg.serving.tier_slos = sc.tier_slo_configs();
+        cfg.serving.slo.ttft_ms = slo_us / 1e3;
+        let opts = SimOptions { seed: SEED, cache_affinity: affinity, ..SimOptions::default() };
+        let r = ServeSim::new(cfg, opts, trace).run();
+        assert_eq!(r.duration_us.to_bits(), leg.report.duration_us.to_bits());
+        r.tier_attainment[0].ttft_attained
+    };
+    let f_att = frac_under(&full, true);
+    let a_att = frac_under(&no_aff, false);
+    assert!(
+        a_att > 0.05 && a_att < 0.999,
+        "threshold must sit inside the ablation's TTFT distribution: {a_att}"
+    );
+    assert!(
+        f_att > a_att,
+        "cache affinity must strictly lift TTFT attainment: {f_att:.3} vs {a_att:.3}"
+    );
+}
+
+/// (c) Bit-exact rerun determinism of both session scenarios, including
+/// the three new report scalars.
+#[test]
+fn session_scenarios_rerun_bit_exact() {
+    for preset in ["session_chat", "agentic_loop"] {
+        let a = run_leg(preset, true, true);
+        let b = run_leg(preset, true, true);
+        let (x, y) = (&a.report, &b.report);
+        assert_eq!(x.duration_us.to_bits(), y.duration_us.to_bits(), "{preset}");
+        assert_eq!(x.output_tokens, y.output_tokens, "{preset}");
+        assert_eq!(x.ttft_us.p99.to_bits(), y.ttft_us.p99.to_bits(), "{preset}");
+        assert_eq!(x.tpot_us.p99.to_bits(), y.tpot_us.p99.to_bits(), "{preset}");
+        assert_eq!(x.cache_hit_rate.to_bits(), y.cache_hit_rate.to_bits(), "{preset}");
+        assert_eq!(x.mtp_acceptance.to_bits(), y.mtp_acceptance.to_bits(), "{preset}");
+        assert_eq!(x.reprefill_frac.to_bits(), y.reprefill_frac.to_bits(), "{preset}");
+        assert_eq!(a.affinity_local_hits, b.affinity_local_hits, "{preset}");
+        assert_eq!(a.session_turn_tokens, b.session_turn_tokens, "{preset}");
+    }
+}
+
+/// (d) Compiled in but idle: on a length-only scenario (no materialized
+/// prompts) the affinity flag must not move a single bit of the report —
+/// the branch never engages, so pre-session scenarios stay frozen.
+#[test]
+fn length_only_scenarios_are_bit_identical_with_affinity_on_or_off() {
+    for preset in ["diurnal", "mixed_slo"] {
+        let on = run_leg(preset, true, true);
+        let off = run_leg(preset, false, true);
+        let (x, y) = (&on.report, &off.report);
+        assert_eq!(x.duration_us.to_bits(), y.duration_us.to_bits(), "{preset}");
+        assert_eq!(x.output_tokens, y.output_tokens, "{preset}");
+        assert_eq!(x.prompt_tokens, y.prompt_tokens, "{preset}");
+        assert_eq!(x.ttft_us.p50.to_bits(), y.ttft_us.p50.to_bits(), "{preset}");
+        assert_eq!(x.ttft_us.p99.to_bits(), y.ttft_us.p99.to_bits(), "{preset}");
+        assert_eq!(x.tpot_us.p50.to_bits(), y.tpot_us.p50.to_bits(), "{preset}");
+        assert_eq!(x.tpot_us.p99.to_bits(), y.tpot_us.p99.to_bits(), "{preset}");
+        assert_eq!(x.cache_hit_rate.to_bits(), y.cache_hit_rate.to_bits(), "{preset}");
+        // neither leg ever touched the session path
+        assert_eq!(on.affinity_local_hits, 0, "{preset}");
+        assert_eq!(on.session_turn_tokens, 0, "{preset}");
+    }
+}

@@ -17,6 +17,15 @@
 //! on the dispatch hot path), so the gate also bounds the telemetry-off
 //! overhead: if the null-check branches ever cost real throughput, this
 //! test is what fails.
+//!
+//! Hot-path allocation note: [`cm_infer::cache::ContextCache::lookup`]
+//! streams chain-hashed block keys through `block_key_iter` instead of
+//! collecting a fresh `block_keys` Vec per probe — session scenarios
+//! call it once per arrival, so a per-lookup allocation would be arrival-
+//! rate noise on this gate's metric. This scenario's prompts are
+//! length-only (the lookup path never engages), which is deliberate: the
+//! gate pins the *feature-idle* cost of the session machinery at exactly
+//! zero, while `BENCH_session.json` tracks the engaged path.
 
 use std::time::Instant;
 
