@@ -5,9 +5,11 @@
 //!   cargo run --release --offline --example slo_explorer [--kv N]
 //!
 //! `--trace-out BASE` (scenario mode) records telemetry for every leg and
-//! writes `BASE.leg<i>.trace.json` (Perfetto-loadable Chrome trace) plus
-//! `BASE.leg<i>.metrics.jsonl` — compare the frozen vs elastic legs side
-//! by side on the same timeline.
+//! writes `BASE.leg<i>.trace.json` (Perfetto-loadable Chrome trace),
+//! `BASE.leg<i>.metrics.jsonl`, and `BASE.leg<i>.attrib.json` (the
+//! latency-attribution artifact) — compare the frozen vs elastic legs
+//! side by side on the same timeline, or feed two legs' attrib artifacts
+//! to `cm-infer attrib diff` to name the component that moved.
 //!
 //! With `--scenario NAME` (diurnal, burst_storm, long_context_drift,
 //! mixed_slo, memory_bound_decode) it instead runs the full serving
@@ -235,11 +237,19 @@ fn explore_scenario(name: &str, trace_base: Option<&str>) {
         if let (Some(base), Some(tel)) = (trace_base, sim.take_telemetry()) {
             let tpath = format!("{base}.leg{li}.trace.json");
             let mpath = format!("{base}.leg{li}.metrics.jsonl");
+            let apath = format!("{base}.leg{li}.attrib.json");
+            let a = cm_infer::telemetry::attrib::Attribution::analyze(&tel, &r);
             match std::fs::write(&tpath, tel.trace_json(&r))
                 .and_then(|()| std::fs::write(&mpath, tel.metrics_jsonl()))
+                .and_then(|()| std::fs::write(&apath, a.to_json()))
             {
-                Ok(()) => println!("  telemetry → {tpath}, {mpath}"),
-                Err(e) => eprintln!("  telemetry export failed: {e}"),
+                Ok(()) => println!("  telemetry → {tpath}, {mpath}, {apath}"),
+                Err(e) => {
+                    // a missing artifact is an error for anything consuming
+                    // the exports (CI, attrib diff) — fail loudly, not half
+                    eprintln!("  telemetry export failed under `{base}.leg{li}.*`: {e}");
+                    std::process::exit(1);
+                }
             }
         }
         println!();

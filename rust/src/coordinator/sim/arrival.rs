@@ -92,7 +92,19 @@ impl ServeSim {
         let ct = st.compute_tokens();
         let pl = st.spec.prompt_tokens;
         self.prefills[decision.instance].enqueue(idx as u64, ct, pl);
-        self.tel_phase(idx as u64, crate::telemetry::SpanKind::PrefillQueue);
+        if fetch_us > 0.0 {
+            // annotate the admission span with the embedded pool fetch so
+            // attribution can carve it out as its own waterfall component
+            self.tel_phase_arg(
+                idx as u64,
+                crate::telemetry::SpanKind::PrefillQueue,
+                crate::telemetry::SpanArg::PoolFetch {
+                    fetch_ns: (fetch_us * 1000.0).round() as u64,
+                },
+            );
+        } else {
+            self.tel_phase(idx as u64, crate::telemetry::SpanKind::PrefillQueue);
+        }
         self.push(self.now + fetch_us, Event::PrefillKick(decision.instance));
     }
 

@@ -45,12 +45,17 @@ impl ServeSim {
     }
 
     /// Terminal: the request was dropped by a fault (recovery-disabled
-    /// baseline). Closes its open span with a `"lost"` mark.
+    /// baseline). Closes its open span with a `"lost"` mark and records
+    /// the tiered terminal the attribution engine keys off.
     pub(super) fn tel_lost(&mut self, rid: u64) {
-        let now = self.now;
-        if let Some(tel) = self.telemetry.as_mut() {
-            tel.close(rid, now, "lost");
+        if self.telemetry.is_none() {
+            return;
         }
+        let now = self.now;
+        let n_tiers = self.cfg.serving.n_tiers();
+        let tier = self.requests[rid as usize].spec.slo_tier.min(n_tiers - 1);
+        let tel = self.telemetry.as_mut().expect("checked above");
+        tel.close_tiered(rid, now, "lost", tier);
     }
 
     /// Terminal: the request completed. Closes its open span at the
@@ -75,7 +80,7 @@ impl ServeSim {
             true
         };
         let tel = self.telemetry.as_mut().expect("checked above");
-        tel.close(rid, t_end, "complete");
+        tel.close_tiered(rid, t_end, "complete", tier);
         tel.request_finished(tier, ttft_ok && tpot_ok);
     }
 

@@ -180,6 +180,38 @@
 //! dispatch loop instead of the event heap, and same-seed runs are
 //! bit-identical with telemetry on or off (`tests/telemetry.rs`).
 //!
+//! ## Attribution (turning telemetry into answers)
+//!
+//! The analysis layer over those streams — all export-time, so the
+//! zero-cost contract is untouched. [`telemetry::attrib`] decomposes
+//! every terminal request's wall time into named waterfall components
+//! (admission queue, pool fetch, prefill, KV transfer, decode queue,
+//! decode, and the recovery sub-phases) with a **bit-exact conservation
+//! guarantee**: span boundaries are quantized to integer nanoseconds so
+//! the components telescope to exactly the end-to-end latency, and any
+//! gap would land in an explicit `unattributed` residual pinned to zero
+//! by `tests/attrib.rs`. The same artifact reconciles the NPU-time
+//! ledger (`busy + idle == assigned` per role, `prefill + decode +
+//! unassigned == deployed` overall, tied to the accounting integrals).
+//! [`telemetry::burn`] turns the rolling per-tier attainment windows
+//! into SRE-style error-budget burn rates (fast/slow multi-window
+//! alerting), exported per line in the metrics JSONL. [`telemetry::diff`]
+//! compares two artifacts and names the component that moved.
+//!
+//! Worked example — "what did turning MTP off cost?":
+//!
+//! ```text
+//! $ cm-infer simulate --scenario session_chat --requests 300 --attrib-out a.json
+//! $ cm-infer simulate --scenario session_chat --requests 300 --no-mtp --attrib-out b.json
+//! $ cm-infer attrib diff a.json b.json
+//! top mover: decode (tier 0): mean 9421873.2 → 16017184.9 µs/request (+6595311.7), share 91.2% → 94.6%
+//! ```
+//!
+//! The decode component moved; everything else is flat — the ablation's
+//! cost is named, not inferred. CLI: `simulate --attrib-out PATH`,
+//! `attrib diff A B`; per-leg artifacts from `slo_explorer --scenario …
+//! --trace-out BASE` land at `BASE.leg<i>.attrib.json`.
+//!
 //! See DESIGN.md for the full system inventory and the per-experiment index
 //! mapping every paper table/figure to a module and bench target.
 

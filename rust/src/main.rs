@@ -5,12 +5,14 @@
 //!   generate [--int8] [--prompt-len N] [--steps N]
 //!                                — run real prefill+decode through PJRT
 //!   simulate [--preset NAME]     — run the PDC serving simulation
+//!   attrib diff A B              — compare two --attrib-out artifacts and
+//!                                  name the latency component that moved
 //!   tables                       — regenerate all paper tables (also via
 //!                                  `cargo bench`)
 
 use cm_infer::bail;
 use cm_infer::runtime::{DecodeState, ModelRuntime, Variant};
-use cm_infer::util::Result;
+use cm_infer::util::{Context, Result};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -19,6 +21,7 @@ fn main() -> Result<()> {
         "info" => info(&args[1..]),
         "generate" => generate(&args[1..]),
         "simulate" => simulate(&args[1..]),
+        "attrib" => attrib(&args[1..]),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -44,7 +47,8 @@ fn print_help() {
          \x20          [--placement packed|spread_racks|spread_planes]\n\
          \x20          [--autoscale] [--no-offload] [--no-recovery] [--no-resilience]\n\
          \x20          [--no-cache-affinity] [--no-mtp]\n\
-         \x20          [--trace-out PATH] [--metrics-out PATH] [--sample-period-us N]\n\
+         \x20          [--trace-out PATH] [--metrics-out PATH] [--attrib-out PATH]\n\
+         \x20          [--sample-period-us N]\n\
          \x20                           PDC serving simulation (CloudMatrix384);\n\
          \x20                           --autoscale wires the elastic PD controller\n\
          \x20                           (resplits + the §6.2.1 attention-offload\n\
@@ -66,12 +70,20 @@ fn print_help() {
          \x20                           Chrome trace (request spans + fault/resplit/\n\
          \x20                           offload annotations), --metrics-out a JSONL time\n\
          \x20                           series sampled every --sample-period-us of\n\
-         \x20                           virtual time (default 250000); session_chat /\n\
+         \x20                           virtual time (default 250000) with per-tier SLO\n\
+         \x20                           burn-rate columns, --attrib-out the post-run\n\
+         \x20                           latency-attribution artifact (per-tier waterfall\n\
+         \x20                           components + the NPU-time ledger; feed two of\n\
+         \x20                           them to `attrib diff`); session_chat /\n\
          \x20                           agentic_loop emit multi-turn sessions with\n\
          \x20                           materialized token prefixes — follow-up turns\n\
          \x20                           reuse cached prefix KV and route with cache\n\
          \x20                           affinity (--no-cache-affinity and --no-mtp are\n\
          \x20                           the fig22/fig23 ablation switches)\n\
+         \x20 attrib diff A B           compare two --attrib-out artifacts: rank the\n\
+         \x20                           per-tier waterfall components by how much their\n\
+         \x20                           mean per-request time moved and name the top\n\
+         \x20                           mover (what ate the budget between the runs)\n\
          \n\
          Run `make artifacts` first; benches: `cargo bench` (paper tables)."
     );
@@ -173,6 +185,7 @@ fn simulate(args: &[String]) -> Result<()> {
     let seed: u64 = flag_val(args, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let trace_out = flag_val(args, "--trace-out");
     let metrics_out = flag_val(args, "--metrics-out");
+    let attrib_out = flag_val(args, "--attrib-out");
     let sample_period_us: f64 = flag_val(args, "--sample-period-us")
         .map(|s| s.parse())
         .transpose()?
@@ -288,7 +301,7 @@ fn simulate(args: &[String]) -> Result<()> {
         } else {
             ResiliencePolicy::independent()
         },
-        telemetry: (trace_out.is_some() || metrics_out.is_some())
+        telemetry: (trace_out.is_some() || metrics_out.is_some() || attrib_out.is_some())
             .then(|| cm_infer::telemetry::TelemetryOptions { sample_period_us }),
         cache_affinity: !has_flag(args, "--no-cache-affinity"),
         ..SimOptions::default()
@@ -383,7 +396,7 @@ fn simulate(args: &[String]) -> Result<()> {
     }
     if let Some(tel) = sim.take_telemetry() {
         if let Some(path) = &trace_out {
-            std::fs::write(path, tel.trace_json(&r))?;
+            write_export(path, &tel.trace_json(&r), "trace")?;
             println!(
                 "  trace: {} spans, {} marks → {path} (open in ui.perfetto.dev)",
                 tel.spans().len(),
@@ -391,11 +404,68 @@ fn simulate(args: &[String]) -> Result<()> {
             );
         }
         if let Some(path) = &metrics_out {
-            std::fs::write(path, tel.metrics_jsonl())?;
+            write_export(path, &tel.metrics_jsonl(), "metrics")?;
             println!("  metrics: {} samples → {path}", tel.samples().len());
+        }
+        if let Some(path) = &attrib_out {
+            use cm_infer::telemetry::attrib::Attribution;
+            let a = Attribution::analyze(&tel, &r);
+            write_export(path, &a.to_json(), "attribution")?;
+            println!(
+                "  attribution: {} waterfalls ({} lost), {} conservation violations → {path}",
+                a.waterfalls.len(),
+                a.waterfalls.iter().filter(|w| w.lost).count(),
+                a.conservation_violations
+            );
+            for t in &a.tiers {
+                if t.requests > 0 {
+                    let top = t.top_component();
+                    println!(
+                        "    tier {}: top component {} ({:.1}% of wall time)",
+                        t.tier,
+                        top.tag(),
+                        t.share(top) * 100.0
+                    );
+                }
+            }
         }
     }
     Ok(())
+}
+
+/// Write an export artifact, turning an I/O failure into a clear error
+/// naming the artifact and path (`main` returns it → nonzero exit).
+fn write_export(path: &str, content: &str, what: &str) -> Result<()> {
+    std::fs::write(path, content)
+        .with_context(|| format!("failed to write {what} artifact to `{path}`"))
+}
+
+/// `attrib diff A B`: load two `--attrib-out` artifacts and report which
+/// waterfall component moved between the runs.
+fn attrib(args: &[String]) -> Result<()> {
+    use cm_infer::telemetry::diff;
+    use cm_infer::util::Json;
+
+    match args.first().map(String::as_str) {
+        Some("diff") => {
+            let [a_path, b_path] = &args[1..] else {
+                bail!("usage: attrib diff <A.json> <B.json>");
+            };
+            let load = |path: &str| -> Result<Json> {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("failed to read attribution artifact `{path}`"))?;
+                Json::parse(&text)
+                    .with_context(|| format!("`{path}` is not valid JSON"))
+            };
+            let a = load(a_path)?;
+            let b = load(b_path)?;
+            let d = diff::diff(&a, &b)
+                .with_context(|| format!("cannot diff `{a_path}` vs `{b_path}`"))?;
+            print!("{}", d.render());
+            Ok(())
+        }
+        _ => bail!("usage: attrib diff <A.json> <B.json>"),
+    }
 }
 
 fn argmax(xs: &[f32]) -> i32 {

@@ -104,6 +104,10 @@ impl Histogram {
         self.quantile(0.50)
     }
 
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
     pub fn p99(&self) -> f64 {
         self.quantile(0.99)
     }
@@ -294,6 +298,7 @@ pub struct HistogramSnapshot {
     pub count: u64,
     pub mean: f64,
     pub p50: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -304,6 +309,7 @@ impl From<&Histogram> for HistogramSnapshot {
             count: h.count(),
             mean: h.mean(),
             p50: h.p50(),
+            p95: h.p95(),
             p99: h.p99(),
             max: h.max(),
         }
@@ -739,6 +745,11 @@ mod tests {
             last = v;
         }
         assert!(h.quantile(1.0) <= h.max());
+        // the named percentiles the attribution waterfalls export sit in
+        // order too (q1 ≤ q2 ⇒ quantile(q1) ≤ quantile(q2))
+        assert!(h.p50() <= h.p95(), "p50 {} > p95 {}", h.p50(), h.p95());
+        assert!(h.p95() <= h.p99(), "p95 {} > p99 {}", h.p95(), h.p99());
+        assert!(h.p99() <= h.max());
     }
 
     #[test]

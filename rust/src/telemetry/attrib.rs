@@ -1,0 +1,633 @@
+//! Post-run latency attribution: turn the recorded span timelines into
+//! *answers* — which component of end-to-end latency ate the SLO budget,
+//! and where every assigned NPU-second went.
+//!
+//! [`Attribution::analyze`] consumes a finished [`Telemetry`] recorder
+//! plus the run's [`ServingReport`] (analysis is export-time only, so
+//! the PR 7 zero-cost contract is untouched) and produces:
+//!
+//! * **Per-request waterfalls** — every completed/lost request's wall
+//!   time decomposed into named components (admission queue, cache-hit
+//!   pool fetch, prefill compute, UB KV transfer, decode queue, decode
+//!   steps, and the re-prefill / KV-re-fetch recovery sub-spans).
+//! * **Per-tier aggregation** — component totals, shares, and
+//!   [`Histogram`] percentiles (p50/p95/p99) per SLO tier.
+//! * **An NPU-time ledger** — every assigned NPU-second reconciled into
+//!   busy/idle buckets per role, plus the dark (role-switch + recovery)
+//!   time outside either role's assignment, tied to the busy-vs-assigned
+//!   integrals of `coordinator/sim/accounting.rs`.
+//!
+//! ## The conservation guarantee (and why it is *bit-exact*)
+//!
+//! Float µs durations do not telescope: summing `t1 − t0` over a
+//! contiguous span chain need not reproduce `t_end − t_start` in IEEE
+//! arithmetic. The engine therefore quantizes span *boundaries* — never
+//! durations — to integer nanoseconds ([`q_ns`]). A request's spans form
+//! a contiguous chain (each phase transition closes the previous span at
+//! the new span's open time), so the integer component durations
+//! telescope exactly: their sum equals `q_ns(t_end) − q_ns(t_arrival)`
+//! with no rounding residue. Any structural gap (there are none today)
+//! would land in the explicit [`Component::Unattributed`] bucket, which
+//! is computed as an integer residual — so `Σ components ==
+//! end_to_end_ns` holds *by construction*, and
+//! `tests/attrib.rs` + `prop_attrib_conservation` additionally pin
+//! `Unattributed == 0` (the chain really is contiguous). The NPU ledger
+//! reconciles the same way: bucket values are quantized to integer
+//! NPU-nanoseconds and `idle` / `unassigned` are exact residuals.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::{Histogram, ServingReport};
+use crate::util::json::Json;
+use crate::Micros;
+
+use super::{SpanArg, SpanKind, Telemetry};
+
+/// Quantize a virtual-time instant (µs, f64) to integer nanoseconds.
+/// Attribution quantizes *boundaries*, never durations — see the module
+/// docs for why that makes conservation exact.
+pub fn q_ns(t_us: Micros) -> i64 {
+    (t_us * 1000.0).round() as i64
+}
+
+/// Quantize an NPU-seconds integral to integer NPU-nanoseconds.
+pub fn q_npu_ns(npu_seconds: f64) -> i128 {
+    (npu_seconds * 1e9).round() as i128
+}
+
+/// Named waterfall component. The order is the artifact/export order and
+/// the index into [`RequestWaterfall::components`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Component {
+    /// Time queued for prefill batch formation (minus the pool-fetch
+    /// carve-out below).
+    AdmissionQueue,
+    /// Cache-hit KV fetch from the UB memory pool, carved out of the
+    /// admission-queue span (a local-HBM affinity hit pays zero).
+    PoolFetch,
+    /// Prefill batch compute (includes any donor-tax / brown-out stretch
+    /// the batch actually paid — see [`Overlays`]).
+    Prefill,
+    /// Prefill → decode KV transfer over UB.
+    KvTransfer,
+    /// Parked in a decode admission queue.
+    DecodeQueue,
+    /// Decode slot-steps to completion (MTP savings are an overlay: with
+    /// speculation on, this component is *smaller*; the estimate of how
+    /// much lands in [`Overlays::mtp_savings_est_us`]).
+    Decode,
+    /// Recovery: re-queued for prefill after a crash stranded the request.
+    ReprefillQueue,
+    /// Recovery: prompt re-prefilled (KV was lost with the instance).
+    Reprefill,
+    /// Recovery: KV re-fetched from the pool onto the re-homed instance.
+    KvRefetch,
+    /// Integer residual `end_to_end − Σ named`. Structurally zero (the
+    /// span chain is contiguous); kept explicit so conservation holds by
+    /// construction and any future gap is *visible*, not absorbed.
+    Unattributed,
+}
+
+impl Component {
+    pub const N: usize = 10;
+    pub const ALL: [Component; Component::N] = [
+        Component::AdmissionQueue,
+        Component::PoolFetch,
+        Component::Prefill,
+        Component::KvTransfer,
+        Component::DecodeQueue,
+        Component::Decode,
+        Component::ReprefillQueue,
+        Component::Reprefill,
+        Component::KvRefetch,
+        Component::Unattributed,
+    ];
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Component::AdmissionQueue => "admission_queue",
+            Component::PoolFetch => "pool_fetch",
+            Component::Prefill => "prefill",
+            Component::KvTransfer => "kv_transfer",
+            Component::DecodeQueue => "decode_queue",
+            Component::Decode => "decode",
+            Component::ReprefillQueue => "reprefill_queue",
+            Component::Reprefill => "reprefill",
+            Component::KvRefetch => "kv_refetch",
+            Component::Unattributed => "unattributed",
+        }
+    }
+
+    fn idx(self) -> usize {
+        Component::ALL.iter().position(|&c| c == self).expect("component in ALL")
+    }
+
+    fn from_span(kind: SpanKind) -> Component {
+        match kind {
+            SpanKind::PrefillQueue => Component::AdmissionQueue,
+            SpanKind::Prefill => Component::Prefill,
+            SpanKind::ReprefillQueue => Component::ReprefillQueue,
+            SpanKind::Reprefill => Component::Reprefill,
+            SpanKind::KvTransfer => Component::KvTransfer,
+            SpanKind::KvRefetch => Component::KvRefetch,
+            SpanKind::DecodeQueue => Component::DecodeQueue,
+            SpanKind::Decode => Component::Decode,
+        }
+    }
+}
+
+/// One terminal request's wall time, exactly partitioned.
+#[derive(Debug, Clone)]
+pub struct RequestWaterfall {
+    pub rid: u64,
+    pub tier: usize,
+    /// Dropped by a fault (recovery-disabled baseline) vs completed.
+    pub lost: bool,
+    /// Arrival instant (first span open), quantized ns.
+    pub t_arrival_ns: i64,
+    /// `q_ns(t_terminal) − q_ns(t_arrival)`; equals the component sum
+    /// bit-exactly.
+    pub end_to_end_ns: i64,
+    /// Integer-ns durations indexed by [`Component::ALL`] order.
+    pub components: [i64; Component::N],
+}
+
+impl RequestWaterfall {
+    /// The conservation invariant: integer component sum vs end-to-end.
+    pub fn conserves(&self) -> bool {
+        self.components.iter().sum::<i64>() == self.end_to_end_ns
+    }
+}
+
+/// Per-tier aggregate: component totals (exact integer ns) + percentile
+/// histograms (µs) over the tier's terminal requests.
+pub struct TierWaterfall {
+    pub tier: usize,
+    pub requests: u64,
+    pub lost: u64,
+    /// Σ end-to-end over the tier's requests, ns (== Σ component totals).
+    pub end_to_end_total_ns: i64,
+    pub end_to_end_us: Histogram,
+    pub component_total_ns: [i64; Component::N],
+    /// Per-request component durations, µs (p50/p95/p99 come from here).
+    pub component_us: [Histogram; Component::N],
+}
+
+impl TierWaterfall {
+    fn new(tier: usize) -> TierWaterfall {
+        TierWaterfall {
+            tier,
+            requests: 0,
+            lost: 0,
+            end_to_end_total_ns: 0,
+            end_to_end_us: Histogram::new(),
+            component_total_ns: [0; Component::N],
+            component_us: std::array::from_fn(|_| Histogram::new()),
+        }
+    }
+
+    /// The component holding the largest share of the tier's total wall
+    /// time (ties broken by [`Component::ALL`] order).
+    pub fn top_component(&self) -> Component {
+        let mut best = Component::AdmissionQueue;
+        let mut best_ns = i64::MIN;
+        for c in Component::ALL {
+            let ns = self.component_total_ns[c.idx()];
+            if ns > best_ns {
+                best = c;
+                best_ns = ns;
+            }
+        }
+        best
+    }
+
+    /// `component total / end-to-end total` in [0, 1] (0 on an empty tier).
+    pub fn share(&self, c: Component) -> f64 {
+        if self.end_to_end_total_ns <= 0 {
+            return 0.0;
+        }
+        self.component_total_ns[c.idx()] as f64 / self.end_to_end_total_ns as f64
+    }
+}
+
+/// One role's slice of the NPU-time ledger, integer NPU-ns.
+///
+/// `assigned` is the role's integrated assignment
+/// (`accounting::integrate_npu_time`: mid-switch and failed NPUs count
+/// to neither role), `busy` the integrated batch/step execution time
+/// (donor tax and brown-out stretch ride *inside* busy — the donor
+/// really spent that time), and `idle = assigned − busy` is the exact
+/// integer residual: the headroom the §6.2.1 offload controller borrows
+/// against.
+#[derive(Debug, Clone, Copy)]
+pub struct RoleLedger {
+    pub assigned_npu_ns: i128,
+    pub busy_npu_ns: i128,
+    pub idle_npu_ns: i128,
+}
+
+impl RoleLedger {
+    fn new(assigned_s: f64, busy_s: f64) -> RoleLedger {
+        let assigned_npu_ns = q_npu_ns(assigned_s);
+        let busy_npu_ns = q_npu_ns(busy_s);
+        RoleLedger { assigned_npu_ns, busy_npu_ns, idle_npu_ns: assigned_npu_ns - busy_npu_ns }
+    }
+
+    pub fn reconciles(&self) -> bool {
+        self.busy_npu_ns + self.idle_npu_ns == self.assigned_npu_ns
+    }
+}
+
+/// The full NPU-time ledger: every deployed NPU-nanosecond reconciled.
+///
+/// `total = duration × (prefill_npus + decode_npus)`; what neither
+/// role's assignment integral covers — NPUs mid role-switch, crashed /
+/// recovering components, plus quantization dust — is the exact
+/// `unassigned` residual.
+#[derive(Debug, Clone, Copy)]
+pub struct NpuLedger {
+    pub prefill: RoleLedger,
+    pub decode: RoleLedger,
+    /// Role-switch + recovery dark time (exact residual, see above).
+    pub unassigned_npu_ns: i128,
+    pub total_npu_ns: i128,
+}
+
+impl NpuLedger {
+    fn from_report(report: &ServingReport) -> NpuLedger {
+        let prefill = RoleLedger::new(report.prefill_npu_seconds, report.prefill_busy_npu_seconds);
+        let decode = RoleLedger::new(report.decode_npu_seconds, report.decode_busy_npu_seconds);
+        let total_npu_ns =
+            q_ns(report.duration_us) as i128 * (report.prefill_npus + report.decode_npus) as i128;
+        NpuLedger {
+            prefill,
+            decode,
+            unassigned_npu_ns: total_npu_ns - prefill.assigned_npu_ns - decode.assigned_npu_ns,
+            total_npu_ns,
+        }
+    }
+
+    pub fn reconciles(&self) -> bool {
+        self.prefill.reconciles()
+            && self.decode.reconciles()
+            && self.prefill.assigned_npu_ns + self.decode.assigned_npu_ns + self.unassigned_npu_ns
+                == self.total_npu_ns
+    }
+}
+
+/// Non-partitioning attributions: quantities that *explain* waterfall
+/// components without being time segments of their own (MTP savings make
+/// the decode component smaller; donor tax and brown-out stretch ride
+/// inside prefill/decode compute; the placement tax inside prefill).
+#[derive(Debug, Clone, Default)]
+pub struct Overlays {
+    /// Estimated decode µs saved by MTP speculation: with acceptance `a`,
+    /// each slot-step emits `1 + a` tokens, so the observed MTP decode
+    /// time is `1/(1+a)` of the single-token counterfactual — the saving
+    /// is `mtp_decode_us × a`.
+    pub mtp_savings_est_us: f64,
+    /// Observed decode-span µs that ran with MTP speculation on.
+    pub mtp_decode_us: f64,
+    /// Donor-tax µs (extra prefill batch latency, inside `Prefill`).
+    pub donor_tax_us: f64,
+    /// Post-recall TPOT spike µs (inside `Decode`).
+    pub recall_spike_us: f64,
+    /// Σ per-plane UB brown-out exposure µs (inside the stretched flows).
+    pub brownout_exposure_us: f64,
+    /// Cache-hit prefill spans / probed prefill spans, plus total reused
+    /// prefix tokens — the re-prefill cost of a miss shows up as a larger
+    /// `Prefill` component instead of a `PoolFetch` one.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub reused_tokens: u64,
+}
+
+/// The full post-run attribution artifact.
+pub struct Attribution {
+    /// One waterfall per terminal (completed or lost) request, rid order.
+    pub waterfalls: Vec<RequestWaterfall>,
+    /// Per-tier aggregation, tier order (every configured tier present).
+    pub tiers: Vec<TierWaterfall>,
+    pub ledger: NpuLedger,
+    pub overlays: Overlays,
+    /// Waterfalls whose components failed to sum to end-to-end. Always 0
+    /// by construction; exported so downstream validation is one lookup.
+    pub conservation_violations: u64,
+    pub duration_us: Micros,
+}
+
+impl Attribution {
+    /// Run the analysis. Export-time only: reads the recorder and the
+    /// report, never the sim — the zero-cost contract is untouched.
+    pub fn analyze(tel: &Telemetry, report: &ServingReport) -> Attribution {
+        // group spans by request (spans are pushed in close order, so
+        // each group is already chronological)
+        let mut by_rid: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+        for (i, s) in tel.spans().iter().enumerate() {
+            by_rid.entry(s.rid).or_default().push(i);
+        }
+
+        let n_tiers = report.tier_attainment.len().max(1);
+        let mut tiers: Vec<TierWaterfall> = (0..n_tiers).map(TierWaterfall::new).collect();
+        let mut waterfalls = Vec::with_capacity(tel.terminals().len());
+        let mut conservation_violations = 0u64;
+        let mut overlays = Overlays {
+            donor_tax_us: report.donor_tax_us,
+            recall_spike_us: report.recall_spike_us,
+            brownout_exposure_us: report.plane_exposure_us.iter().sum(),
+            ..Overlays::default()
+        };
+
+        for term in tel.terminals() {
+            let Some(span_ids) = by_rid.get(&term.rid) else { continue };
+            let spans = span_ids.iter().map(|&i| &tel.spans()[i]);
+            let t_arrival_ns =
+                spans.clone().map(|s| q_ns(s.t0)).min().unwrap_or_else(|| q_ns(term.t));
+            let end_to_end_ns = q_ns(term.t) - t_arrival_ns;
+            let mut components = [0i64; Component::N];
+            for s in spans {
+                let dur_ns = q_ns(s.t1) - q_ns(s.t0);
+                match (Component::from_span(s.kind), s.arg) {
+                    // cache-hit pool fetch: carved out of the arrival
+                    // admission-queue span (the fetch delays the prefill
+                    // kick; an earlier batch formation can still absorb
+                    // the request, hence the clamp)
+                    (Component::AdmissionQueue, Some(SpanArg::PoolFetch { fetch_ns })) => {
+                        let fetch = (fetch_ns as i64).min(dur_ns).max(0);
+                        components[Component::PoolFetch.idx()] += fetch;
+                        components[Component::AdmissionQueue.idx()] += dur_ns - fetch;
+                    }
+                    (c, arg) => {
+                        components[c.idx()] += dur_ns;
+                        match arg {
+                            Some(SpanArg::CacheHit { reused_tokens }) => {
+                                overlays.cache_hits += 1;
+                                overlays.reused_tokens += reused_tokens as u64;
+                            }
+                            Some(SpanArg::CacheMiss) => overlays.cache_misses += 1,
+                            Some(SpanArg::Mtp) => {
+                                overlays.mtp_decode_us += dur_ns as f64 / 1000.0;
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+            }
+            let named: i64 = components.iter().take(Component::N - 1).sum();
+            components[Component::Unattributed.idx()] = end_to_end_ns - named;
+
+            let wf = RequestWaterfall {
+                rid: term.rid,
+                tier: term.tier.min(n_tiers - 1),
+                lost: term.lost,
+                t_arrival_ns,
+                end_to_end_ns,
+                components,
+            };
+            conservation_violations += u64::from(!wf.conserves());
+
+            let agg = &mut tiers[wf.tier];
+            agg.requests += 1;
+            agg.lost += u64::from(wf.lost);
+            agg.end_to_end_total_ns += wf.end_to_end_ns;
+            agg.end_to_end_us.record(wf.end_to_end_ns as f64 / 1000.0);
+            for c in Component::ALL {
+                let ns = wf.components[c.idx()];
+                agg.component_total_ns[c.idx()] += ns;
+                agg.component_us[c.idx()].record(ns as f64 / 1000.0);
+            }
+            waterfalls.push(wf);
+        }
+
+        // MTP savings estimate from the measured acceptance (see Overlays)
+        overlays.mtp_savings_est_us = overlays.mtp_decode_us * report.mtp_acceptance;
+
+        Attribution {
+            waterfalls,
+            tiers,
+            ledger: NpuLedger::from_report(report),
+            overlays,
+            conservation_violations,
+            duration_us: report.duration_us,
+        }
+    }
+
+    /// Serialize the attribution artifact (`--attrib-out`). All integer
+    /// fields fit f64 exactly for any realistic run (< 2⁵³ ns).
+    pub fn to_json(&self) -> String {
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".to_string(), Json::Str("cm-infer.attrib.v1".to_string()));
+        doc.insert("duration_us".to_string(), Json::Num(self.duration_us));
+        doc.insert("requests".to_string(), Json::Num(self.waterfalls.len() as f64));
+        doc.insert(
+            "lost".to_string(),
+            Json::Num(self.waterfalls.iter().filter(|w| w.lost).count() as f64),
+        );
+        doc.insert(
+            "conservation_violations".to_string(),
+            Json::Num(self.conservation_violations as f64),
+        );
+
+        let tiers: Vec<Json> = self
+            .tiers
+            .iter()
+            .map(|t| {
+                let mut m = BTreeMap::new();
+                m.insert("tier".to_string(), Json::Num(t.tier as f64));
+                m.insert("requests".to_string(), Json::Num(t.requests as f64));
+                m.insert("lost".to_string(), Json::Num(t.lost as f64));
+                m.insert(
+                    "end_to_end_total_ns".to_string(),
+                    Json::Num(t.end_to_end_total_ns as f64),
+                );
+                m.insert("end_to_end".to_string(), hist_json(&t.end_to_end_us));
+                let mut comps = BTreeMap::new();
+                for c in Component::ALL {
+                    let mut cm = BTreeMap::new();
+                    cm.insert(
+                        "total_ns".to_string(),
+                        Json::Num(t.component_total_ns[c.idx()] as f64),
+                    );
+                    cm.insert("share".to_string(), Json::Num(t.share(c)));
+                    let h = &t.component_us[c.idx()];
+                    cm.insert("p50_us".to_string(), Json::Num(h.p50()));
+                    cm.insert("p95_us".to_string(), Json::Num(h.p95()));
+                    cm.insert("p99_us".to_string(), Json::Num(h.p99()));
+                    comps.insert(c.tag().to_string(), Json::Obj(cm));
+                }
+                m.insert("components".to_string(), Json::Obj(comps));
+                m.insert(
+                    "top_component".to_string(),
+                    Json::Str(t.top_component().tag().to_string()),
+                );
+                m.insert("top_share".to_string(), Json::Num(t.share(t.top_component())));
+                Json::Obj(m)
+            })
+            .collect();
+        doc.insert("tiers".to_string(), Json::Arr(tiers));
+
+        let role = |r: &RoleLedger| {
+            let mut m = BTreeMap::new();
+            m.insert("assigned_npu_ns".to_string(), Json::Num(r.assigned_npu_ns as f64));
+            m.insert("busy_npu_ns".to_string(), Json::Num(r.busy_npu_ns as f64));
+            m.insert("idle_npu_ns".to_string(), Json::Num(r.idle_npu_ns as f64));
+            Json::Obj(m)
+        };
+        let mut led = BTreeMap::new();
+        led.insert("prefill".to_string(), role(&self.ledger.prefill));
+        led.insert("decode".to_string(), role(&self.ledger.decode));
+        led.insert(
+            "unassigned_npu_ns".to_string(),
+            Json::Num(self.ledger.unassigned_npu_ns as f64),
+        );
+        led.insert("total_npu_ns".to_string(), Json::Num(self.ledger.total_npu_ns as f64));
+        doc.insert("ledger".to_string(), Json::Obj(led));
+
+        let o = &self.overlays;
+        let mut ov = BTreeMap::new();
+        ov.insert("mtp_savings_est_us".to_string(), Json::Num(o.mtp_savings_est_us));
+        ov.insert("mtp_decode_us".to_string(), Json::Num(o.mtp_decode_us));
+        ov.insert("donor_tax_us".to_string(), Json::Num(o.donor_tax_us));
+        ov.insert("recall_spike_us".to_string(), Json::Num(o.recall_spike_us));
+        ov.insert("brownout_exposure_us".to_string(), Json::Num(o.brownout_exposure_us));
+        ov.insert("cache_hits".to_string(), Json::Num(o.cache_hits as f64));
+        ov.insert("cache_misses".to_string(), Json::Num(o.cache_misses as f64));
+        ov.insert("reused_tokens".to_string(), Json::Num(o.reused_tokens as f64));
+        doc.insert("overlays".to_string(), Json::Obj(ov));
+
+        Json::Obj(doc).to_string()
+    }
+}
+
+fn hist_json(h: &Histogram) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("count".to_string(), Json::Num(h.count() as f64));
+    m.insert("mean_us".to_string(), Json::Num(if h.count() > 0 { h.mean() } else { 0.0 }));
+    m.insert("p50_us".to_string(), Json::Num(h.p50()));
+    m.insert("p95_us".to_string(), Json::Num(h.p95()));
+    m.insert("p99_us".to_string(), Json::Num(h.p99()));
+    m.insert("max_us".to_string(), Json::Num(if h.count() > 0 { h.max() } else { 0.0 }));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::TelemetryOptions;
+
+    fn report(n_tiers: usize) -> ServingReport {
+        ServingReport {
+            duration_us: 1000.0,
+            prefill_npus: 2,
+            decode_npus: 2,
+            prefill_npu_seconds: 0.0015,
+            prefill_busy_npu_seconds: 0.0010,
+            decode_npu_seconds: 0.0020,
+            decode_busy_npu_seconds: 0.0005,
+            tier_attainment: (0..n_tiers)
+                .map(|tier| crate::metrics::TierAttainment {
+                    tier,
+                    tpot_slo_ms: 50.0,
+                    ttft_slo_ms: 2000.0,
+                    requests: 0,
+                    ttft_attained: 0.0,
+                    tpot_attained: 0.0,
+                    attained: 0.0,
+                })
+                .collect(),
+            ..ServingReport::default()
+        }
+    }
+
+    #[test]
+    fn waterfall_conserves_and_carves_pool_fetch() {
+        let mut t = Telemetry::new(TelemetryOptions::default(), 2);
+        // arrival at 10µs with a 5µs pool fetch inside the queue span
+        t.phase_with(1, 10.0, SpanKind::PrefillQueue, Some(SpanArg::PoolFetch { fetch_ns: 5000 }));
+        t.phase(1, 30.0, SpanKind::Prefill);
+        t.phase(1, 70.0, SpanKind::KvTransfer);
+        t.phase(1, 75.0, SpanKind::DecodeQueue);
+        t.phase_with(1, 90.0, SpanKind::Decode, Some(SpanArg::Mtp));
+        t.close_tiered(1, 250.0, "complete", 1);
+        let a = Attribution::analyze(&t, &report(2));
+        assert_eq!(a.waterfalls.len(), 1);
+        let w = &a.waterfalls[0];
+        assert_eq!(w.tier, 1);
+        assert!(!w.lost);
+        assert_eq!(w.end_to_end_ns, 240_000);
+        assert!(w.conserves());
+        assert_eq!(w.components[Component::PoolFetch.idx()], 5_000);
+        assert_eq!(w.components[Component::AdmissionQueue.idx()], 15_000);
+        assert_eq!(w.components[Component::Prefill.idx()], 40_000);
+        assert_eq!(w.components[Component::Decode.idx()], 160_000);
+        assert_eq!(w.components[Component::Unattributed.idx()], 0);
+        assert_eq!(a.conservation_violations, 0);
+        // the MTP overlay saw the decode span
+        assert_eq!(a.overlays.mtp_decode_us, 160.0);
+        // tier aggregation: decode dominates tier 1
+        assert_eq!(a.tiers[1].top_component(), Component::Decode);
+        assert!(a.tiers[1].share(Component::Decode) > 0.5);
+        assert_eq!(a.tiers[0].requests, 0);
+    }
+
+    #[test]
+    fn pool_fetch_carve_clamps_to_span() {
+        let mut t = Telemetry::new(TelemetryOptions::default(), 1);
+        // fetch longer than the queue span (an earlier batch formation
+        // absorbed the request): carve clamps, conservation holds
+        t.phase_with(2, 0.0, SpanKind::PrefillQueue, Some(SpanArg::PoolFetch { fetch_ns: 9000 }));
+        t.phase(2, 4.0, SpanKind::Prefill);
+        t.close_tiered(2, 10.0, "complete", 0);
+        let a = Attribution::analyze(&t, &report(1));
+        let w = &a.waterfalls[0];
+        assert!(w.conserves());
+        assert_eq!(w.components[Component::PoolFetch.idx()], 4_000);
+        assert_eq!(w.components[Component::AdmissionQueue.idx()], 0);
+    }
+
+    #[test]
+    fn lost_requests_and_recovery_spans_attribute() {
+        let mut t = Telemetry::new(TelemetryOptions::default(), 1);
+        t.phase(3, 0.0, SpanKind::PrefillQueue);
+        t.phase(3, 8.0, SpanKind::Prefill);
+        t.phase(3, 20.0, SpanKind::ReprefillQueue);
+        t.phase(3, 26.0, SpanKind::Reprefill);
+        t.close_tiered(3, 40.0, "lost", 0);
+        let a = Attribution::analyze(&t, &report(1));
+        let w = &a.waterfalls[0];
+        assert!(w.lost);
+        assert!(w.conserves());
+        assert_eq!(w.components[Component::ReprefillQueue.idx()], 6_000);
+        assert_eq!(w.components[Component::Reprefill.idx()], 14_000);
+        assert_eq!(a.tiers[0].lost, 1);
+    }
+
+    #[test]
+    fn ledger_reconciles_exactly() {
+        let t = Telemetry::new(TelemetryOptions::default(), 1);
+        let a = Attribution::analyze(&t, &report(1));
+        assert!(a.ledger.reconciles());
+        assert_eq!(a.ledger.prefill.assigned_npu_ns, 1_500_000);
+        assert_eq!(a.ledger.prefill.idle_npu_ns, 500_000);
+        assert_eq!(a.ledger.total_npu_ns, 4_000_000);
+        assert_eq!(a.ledger.unassigned_npu_ns, 4_000_000 - 1_500_000 - 2_000_000);
+    }
+
+    #[test]
+    fn artifact_json_parses_and_conserves() {
+        let mut t = Telemetry::new(TelemetryOptions::default(), 1);
+        t.phase(5, 0.0, SpanKind::PrefillQueue);
+        t.phase(5, 10.0, SpanKind::Prefill);
+        t.close_tiered(5, 50.0, "complete", 0);
+        let a = Attribution::analyze(&t, &report(1));
+        let doc = Json::parse(&a.to_json()).expect("artifact parses");
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "cm-infer.attrib.v1");
+        assert_eq!(doc.get("conservation_violations").unwrap().as_f64().unwrap(), 0.0);
+        let tier0 = &doc.get("tiers").unwrap().as_arr().unwrap()[0];
+        let comps = tier0.get("components").unwrap().as_obj().unwrap();
+        let total: f64 =
+            comps.values().map(|c| c.get("total_ns").unwrap().as_f64().unwrap()).sum();
+        assert_eq!(total, tier0.get("end_to_end_total_ns").unwrap().as_f64().unwrap());
+        assert_eq!(tier0.get("top_component").unwrap().as_str().unwrap(), "prefill");
+    }
+}

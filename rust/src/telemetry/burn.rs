@@ -1,0 +1,172 @@
+//! SLO burn-rate analytics over the interval-sampler windows.
+//!
+//! Each [`Sample`] carries per-tier rolling attainment counters
+//! (`win_tier_finished` / `win_tier_attained`); this module turns them
+//! into the SRE-style error-budget *burn rate*: with an attainment
+//! target `T`, a window that misses a fraction `m` of its requests burns
+//! budget at rate `m / (1 − T)` — rate 1.0 consumes the budget exactly
+//! at the sustainable pace, rate 14.4 exhausts a 30-day budget in ~2
+//! days. The classic multi-window alert fires only when a *fast* window
+//! (reacts quickly) and a *slow* window (filters blips) both burn hot.
+//!
+//! Computed at export time from recorded samples — the recorder's
+//! zero-cost contract is untouched — and exported per line in
+//! [`super::Telemetry::metrics_jsonl`].
+
+use super::Sample;
+use crate::Micros;
+
+/// Burn-rate configuration: the attainment target and the two rolling
+/// alert windows, in sampler periods.
+#[derive(Debug, Clone)]
+pub struct BurnConfig {
+    /// SLO attainment target in (0, 1): the error budget is `1 − target`.
+    pub slo_target: f64,
+    /// Fast window length, in samples (reacts to spikes).
+    pub fast_windows: usize,
+    /// Slow window length, in samples (filters blips).
+    pub slow_windows: usize,
+    /// Alert thresholds: fire when `fast ≥ fast_alert && slow ≥
+    /// slow_alert` (Google SRE workbook's 14.4×/6× pairing).
+    pub fast_alert: f64,
+    pub slow_alert: f64,
+}
+
+impl Default for BurnConfig {
+    fn default() -> Self {
+        BurnConfig {
+            slo_target: 0.99,
+            fast_windows: 1,
+            slow_windows: 8,
+            fast_alert: 14.4,
+            slow_alert: 6.0,
+        }
+    }
+}
+
+/// One tier's burn state at one sample instant.
+#[derive(Debug, Clone, Copy)]
+pub struct BurnPoint {
+    pub t_us: Micros,
+    pub tier: usize,
+    /// Requests finished / attained inside the fast window.
+    pub fast_finished: u64,
+    pub fast_attained: u64,
+    /// Error-budget burn rates (0.0 over empty windows: no traffic
+    /// burns no budget).
+    pub fast_burn: f64,
+    pub slow_burn: f64,
+    /// Multi-window alert: both windows burning above threshold.
+    pub alert: bool,
+}
+
+/// Compute the per-tier burn-rate series: `result[tier][i]` corresponds
+/// to `samples[i]`. Timestamps are the sample instants, so each tier's
+/// series is monotone in time by construction.
+pub fn burn_series(samples: &[Sample], cfg: &BurnConfig) -> Vec<Vec<BurnPoint>> {
+    let n_tiers = samples.iter().map(|s| s.win_tier_finished.len()).max().unwrap_or(0);
+    let budget = (1.0 - cfg.slo_target).max(f64::EPSILON);
+    let fast_w = cfg.fast_windows.max(1);
+    let slow_w = cfg.slow_windows.max(1);
+    let mut out: Vec<Vec<BurnPoint>> = vec![Vec::with_capacity(samples.len()); n_tiers];
+    for tier in 0..n_tiers {
+        let win = |s: &Sample| -> (u64, u64) {
+            (
+                s.win_tier_finished.get(tier).copied().unwrap_or(0),
+                s.win_tier_attained.get(tier).copied().unwrap_or(0),
+            )
+        };
+        for (i, s) in samples.iter().enumerate() {
+            let rate_over = |w: usize| -> f64 {
+                let lo = (i + 1).saturating_sub(w);
+                let (mut fin, mut att) = (0u64, 0u64);
+                for s in &samples[lo..=i] {
+                    let (f, a) = win(s);
+                    fin += f;
+                    att += a;
+                }
+                if fin == 0 {
+                    return 0.0;
+                }
+                let miss = 1.0 - att as f64 / fin as f64;
+                miss / budget
+            };
+            let (fast_finished, fast_attained) = {
+                let lo = (i + 1).saturating_sub(fast_w);
+                samples[lo..=i].iter().map(&win).fold((0, 0), |(f, a), (df, da)| {
+                    (f + df, a + da)
+                })
+            };
+            let fast_burn = rate_over(fast_w);
+            let slow_burn = rate_over(slow_w);
+            out[tier].push(BurnPoint {
+                t_us: s.t_us,
+                tier,
+                fast_finished,
+                fast_attained,
+                fast_burn,
+                slow_burn,
+                alert: fast_burn >= cfg.fast_alert && slow_burn >= cfg.slow_alert,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t_us: Micros, finished: &[u64], attained: &[u64]) -> Sample {
+        Sample {
+            t_us,
+            win_tier_finished: finished.to_vec(),
+            win_tier_attained: attained.to_vec(),
+            ..Sample::default()
+        }
+    }
+
+    #[test]
+    fn burn_rates_and_alerts() {
+        let cfg = BurnConfig {
+            slo_target: 0.9,
+            fast_windows: 1,
+            slow_windows: 2,
+            fast_alert: 5.0,
+            slow_alert: 2.5,
+        };
+        let samples = vec![
+            sample(100.0, &[10], &[10]), // perfect: burn 0
+            sample(200.0, &[10], &[2]),  // miss 0.8 → fast burn 8
+            sample(300.0, &[10], &[9]),  // miss 0.1 → fast burn 1
+        ];
+        let series = burn_series(&samples, &cfg);
+        assert_eq!(series.len(), 1);
+        let s = &series[0];
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0].fast_burn, 0.0);
+        assert!(!s[0].alert);
+        assert!((s[1].fast_burn - 8.0).abs() < 1e-9);
+        // slow window over samples 0–1: 20 finished, 12 attained → miss
+        // 0.4 → burn 4.0; both above threshold → alert
+        assert!((s[1].slow_burn - 4.0).abs() < 1e-9);
+        assert!(s[1].alert);
+        // fast recovered: no alert even though slow is still warm
+        assert!(!s[2].alert);
+        // monotone in time by construction
+        assert!(s.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+    }
+
+    #[test]
+    fn empty_windows_burn_nothing() {
+        let cfg = BurnConfig::default();
+        let samples =
+            vec![sample(100.0, &[0, 0], &[0, 0]), sample(200.0, &[0, 5], &[0, 0])];
+        let series = burn_series(&samples, &cfg);
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0][0].fast_burn, 0.0);
+        assert_eq!(series[0][1].fast_burn, 0.0);
+        // tier 1 missed everything: burn = 1.0 / 0.01 = 100
+        assert!((series[1][1].fast_burn - 100.0).abs() < 1e-9);
+    }
+}

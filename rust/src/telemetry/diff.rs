@@ -1,0 +1,190 @@
+//! `attrib diff`: compare two attribution artifacts and say which
+//! waterfall component *moved* — turning a pair of `--attrib-out` JSONs
+//! (or CI `BENCH_*.json`-adjacent runs) into an explanation instead of
+//! two numbers.
+//!
+//! The comparison is per (tier, component) on the **mean per-request
+//! component time** (`total_ns / requests`), which is robust to the two
+//! runs completing different request counts, with the share-of-wall
+//! movement reported alongside. Movers are ranked by absolute mean
+//! delta; the top mover is the answer to "what ate the budget".
+
+use crate::util::{json::Json, Result};
+use crate::{anyhow, bail};
+
+/// One (tier, component) movement between artifact A and artifact B.
+#[derive(Debug, Clone)]
+pub struct ComponentDelta {
+    pub tier: usize,
+    pub component: String,
+    /// Mean per-request component time, µs, in each artifact.
+    pub a_mean_us: f64,
+    pub b_mean_us: f64,
+    /// `b − a`, µs (positive: B spends more here).
+    pub delta_mean_us: f64,
+    /// Share of the tier's total wall time in each artifact.
+    pub a_share: f64,
+    pub b_share: f64,
+}
+
+/// Ranked diff of two attribution artifacts.
+#[derive(Debug, Clone)]
+pub struct AttribDiff {
+    /// Every compared (tier, component), ranked by `|delta_mean_us|`
+    /// descending.
+    pub movers: Vec<ComponentDelta>,
+}
+
+impl AttribDiff {
+    /// The largest absolute mover, if any tier was comparable.
+    pub fn top(&self) -> Option<&ComponentDelta> {
+        self.movers.first()
+    }
+
+    /// Human-readable report (the CI self-test greps its first line).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        match self.top() {
+            Some(top) => out.push_str(&format!(
+                "top mover: {} (tier {}): mean {:.1} → {:.1} µs/request ({:+.1}), \
+                 share {:.1}% → {:.1}%\n",
+                top.component,
+                top.tier,
+                top.a_mean_us,
+                top.b_mean_us,
+                top.delta_mean_us,
+                top.a_share * 100.0,
+                top.b_share * 100.0
+            )),
+            None => out.push_str("no comparable tiers (empty artifacts?)\n"),
+        }
+        for d in &self.movers {
+            out.push_str(&format!(
+                "  tier {} {:<16} mean {:>10.1} → {:>10.1} µs ({:+10.1})   \
+                 share {:>5.1}% → {:>5.1}%\n",
+                d.tier,
+                d.component,
+                d.a_mean_us,
+                d.b_mean_us,
+                d.delta_mean_us,
+                d.a_share * 100.0,
+                d.b_share * 100.0
+            ));
+        }
+        out
+    }
+}
+
+/// Compare two parsed attribution artifacts (see
+/// [`super::attrib::Attribution::to_json`] for the schema).
+pub fn diff(a: &Json, b: &Json) -> Result<AttribDiff> {
+    for doc in [a, b] {
+        let schema = doc
+            .get("schema")
+            .and_then(|s| s.as_str().ok().map(str::to_string))
+            .ok_or_else(|| anyhow!("not an attribution artifact: missing `schema`"))?;
+        if schema != "cm-infer.attrib.v1" {
+            bail!("unsupported attribution schema `{schema}` (want cm-infer.attrib.v1)");
+        }
+    }
+    let tiers_of = |doc: &Json| -> Result<Vec<Json>> {
+        match doc.get("tiers").map(Json::as_arr) {
+            Some(Ok(arr)) => Ok(arr.to_vec()),
+            _ => bail!("attribution artifact has no `tiers` array"),
+        }
+    };
+    let a_tiers = tiers_of(a)?;
+    let b_tiers = tiers_of(b)?;
+
+    let mut movers = Vec::new();
+    for (ta, tb) in a_tiers.iter().zip(&b_tiers) {
+        let tier = ta.get("tier").and_then(|t| t.as_f64().ok()).unwrap_or(0.0) as usize;
+        let (a_req, b_req) = (
+            ta.get("requests").and_then(|r| r.as_f64().ok()).unwrap_or(0.0),
+            tb.get("requests").and_then(|r| r.as_f64().ok()).unwrap_or(0.0),
+        );
+        if a_req <= 0.0 || b_req <= 0.0 {
+            continue; // nothing terminal in this tier on one side
+        }
+        let (Some(ca), Some(cb)) = (
+            ta.get("components").and_then(|c| c.as_obj().ok()),
+            tb.get("components").and_then(|c| c.as_obj().ok()),
+        ) else {
+            continue;
+        };
+        for (name, va) in ca {
+            let Some(vb) = cb.get(name) else { continue };
+            let total = |v: &Json| v.get("total_ns").and_then(|t| t.as_f64().ok()).unwrap_or(0.0);
+            let share = |v: &Json| v.get("share").and_then(|s| s.as_f64().ok()).unwrap_or(0.0);
+            let a_mean_us = total(va) / a_req / 1000.0;
+            let b_mean_us = total(vb) / b_req / 1000.0;
+            movers.push(ComponentDelta {
+                tier,
+                component: name.clone(),
+                a_mean_us,
+                b_mean_us,
+                delta_mean_us: b_mean_us - a_mean_us,
+                a_share: share(va),
+                b_share: share(vb),
+            });
+        }
+    }
+    movers.sort_by(|x, y| {
+        y.delta_mean_us
+            .abs()
+            .total_cmp(&x.delta_mean_us.abs())
+            .then(x.tier.cmp(&y.tier))
+            .then(x.component.cmp(&y.component))
+    });
+    Ok(AttribDiff { movers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact(decode_total_ns: f64, requests: f64) -> Json {
+        let e2e = decode_total_ns + 40_000.0;
+        Json::parse(&format!(
+            r#"{{"schema":"cm-infer.attrib.v1","tiers":[{{"tier":0,"requests":{requests},
+                "end_to_end_total_ns":{e2e},
+                "components":{{
+                  "prefill":{{"total_ns":40000,"share":{}}},
+                  "decode":{{"total_ns":{decode_total_ns},"share":{}}}}}}}]}}"#,
+            40_000.0 / e2e,
+            decode_total_ns / e2e
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn flags_the_moved_component() {
+        let a = artifact(100_000.0, 10.0);
+        let b = artifact(300_000.0, 10.0); // decode tripled, prefill flat
+        let d = diff(&a, &b).unwrap();
+        let top = d.top().unwrap();
+        assert_eq!(top.component, "decode");
+        assert_eq!(top.tier, 0);
+        assert!((top.delta_mean_us - 20.0).abs() < 1e-9);
+        assert!(top.b_share > top.a_share);
+        assert!(d.render().starts_with("top mover: decode (tier 0)"));
+    }
+
+    #[test]
+    fn self_diff_is_flat_and_request_count_normalizes() {
+        // same per-request behavior at double the request count: every
+        // mean delta is zero
+        let a = artifact(100_000.0, 10.0);
+        let b = artifact(200_000.0, 20.0);
+        let d = diff(&a, &b).unwrap();
+        assert!(d.movers.iter().all(|m| m.delta_mean_us.abs() < 1e-9));
+    }
+
+    #[test]
+    fn rejects_non_artifacts() {
+        let bogus = Json::parse(r#"{"schema":"other"}"#).unwrap();
+        assert!(diff(&bogus, &bogus).is_err());
+        let empty = Json::parse("{}").unwrap();
+        assert!(diff(&empty, &empty).is_err());
+    }
+}

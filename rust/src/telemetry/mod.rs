@@ -35,6 +35,22 @@
 //! so a same-seed run produces a bit-identical [`ServingReport`] and
 //! event count with telemetry on or off (`tests/telemetry.rs` pins
 //! this; `tests/perf_smoke.rs` gates the disabled-branch overhead).
+//!
+//! ## Attribution (turning the streams into answers)
+//!
+//! The [`attrib`] / [`burn`] / [`diff`] submodules are the *analysis*
+//! layer over these streams — all export-time, so the contract above is
+//! untouched: [`attrib::Attribution::analyze`] decomposes every
+//! terminal request's wall time into named components with a bit-exact
+//! conservation guarantee and reconciles the NPU-time ledger,
+//! [`burn::burn_series`] turns the rolling per-tier attainment windows
+//! into SRE-style error-budget burn rates (exported per line in
+//! [`Telemetry::metrics_jsonl`]), and [`diff::diff`] compares two
+//! attribution artifacts and names the component that moved.
+
+pub mod attrib;
+pub mod burn;
+pub mod diff;
 
 use std::collections::BTreeMap;
 
@@ -96,6 +112,10 @@ pub enum SpanArg {
     CacheMiss,
     /// Decode steps run with MTP speculative multi-token emission.
     Mtp,
+    /// The arrival admission-queue span embeds a UB pool fetch of the
+    /// cached prefix KV (`fetch_ns` of it, quantized) — the attribution
+    /// engine carves this out as its own waterfall component.
+    PoolFetch { fetch_ns: u64 },
 }
 
 impl SpanArg {
@@ -111,6 +131,9 @@ impl SpanArg {
             }
             SpanArg::Mtp => {
                 m.insert("mtp".to_string(), Json::Bool(true));
+            }
+            SpanArg::PoolFetch { fetch_ns } => {
+                m.insert("pool_fetch_us".to_string(), Json::Num(fetch_ns as f64 / 1000.0));
             }
         }
         m
@@ -135,6 +158,22 @@ pub struct Mark {
     pub rid: u64,
     pub t: Micros,
     pub label: &'static str,
+}
+
+/// A request's terminal record, written by [`Telemetry::close_tiered`]:
+/// everything the attribution engine needs to key the waterfall (the
+/// span chain itself carries the times).
+#[derive(Debug, Clone, Copy)]
+pub struct Terminal {
+    pub rid: u64,
+    /// Terminal instant: the recorded finish time for completions (may
+    /// be ahead of dispatch `now` — decode finishes at step end), the
+    /// drop time for losses.
+    pub t: Micros,
+    /// SLO tier the request was admitted under (pre-clamped by the sim).
+    pub tier: usize,
+    /// Dropped by a fault (recovery-disabled baseline) vs completed.
+    pub lost: bool,
 }
 
 /// One interval-sampler snapshot of the serving system.
@@ -189,6 +228,8 @@ pub struct Telemetry {
     /// report duration if the run ends with the request in flight).
     open: BTreeMap<u64, (SpanKind, Micros, Option<SpanArg>)>,
     marks: Vec<Mark>,
+    /// Terminal records in close order (attribution keys off these).
+    terminals: Vec<Terminal>,
     samples: Vec<Sample>,
     /// Next sample boundary, µs of virtual time.
     next_sample_us: Micros,
@@ -206,6 +247,7 @@ impl Telemetry {
             spans: Vec::new(),
             open: BTreeMap::new(),
             marks: Vec::new(),
+            terminals: Vec::new(),
             samples: Vec::new(),
             next_sample_us: period,
             win_tokens: 0,
@@ -235,6 +277,13 @@ impl Telemetry {
             self.spans.push(Span { rid, kind: prev, t0, t1: now, arg: prev_arg });
         }
         self.marks.push(Mark { rid, t: now, label: outcome });
+    }
+
+    /// [`Telemetry::close`] plus a [`Terminal`] record carrying the
+    /// request's SLO tier — the attribution engine's per-request key.
+    pub fn close_tiered(&mut self, rid: u64, now: Micros, outcome: &'static str, tier: usize) {
+        self.close(rid, now, outcome);
+        self.terminals.push(Terminal { rid, t: now, tier, lost: outcome == "lost" });
     }
 
     /// Instant mark on a request's track.
@@ -281,6 +330,10 @@ impl Telemetry {
 
     pub fn marks(&self) -> &[Mark] {
         &self.marks
+    }
+
+    pub fn terminals(&self) -> &[Terminal] {
+        &self.terminals
     }
 
     pub fn samples(&self) -> &[Sample] {
@@ -409,10 +462,15 @@ impl Telemetry {
     }
 
     /// Export the interval samples as JSONL: one JSON object per line,
-    /// ascending `t_us`.
+    /// ascending `t_us`. Each line additionally carries the per-tier SLO
+    /// burn-rate stream ([`burn::burn_series`] at the default
+    /// [`burn::BurnConfig`]): `tier_burn_fast` / `tier_burn_slow` /
+    /// `tier_burn_alert` arrays aligned with `win_tier_finished`.
     pub fn metrics_jsonl(&self) -> String {
+        let burn_cfg = burn::BurnConfig::default();
+        let burn = burn::burn_series(&self.samples, &burn_cfg);
         let mut out = String::new();
-        for s in &self.samples {
+        for (i, s) in self.samples.iter().enumerate() {
             let mut m = BTreeMap::new();
             m.insert("t_us".to_string(), Json::Num(s.t_us));
             m.insert("prefill_queued_reqs".to_string(), Json::Num(s.prefill_queued_reqs as f64));
@@ -444,6 +502,18 @@ impl Telemetry {
             m.insert(
                 "brownout_planes".to_string(),
                 Json::Arr(s.brownout_planes.iter().map(|&p| Json::Num(p as f64)).collect()),
+            );
+            m.insert(
+                "tier_burn_fast".to_string(),
+                Json::Arr(burn.iter().map(|tier| Json::Num(tier[i].fast_burn)).collect()),
+            );
+            m.insert(
+                "tier_burn_slow".to_string(),
+                Json::Arr(burn.iter().map(|tier| Json::Num(tier[i].slow_burn)).collect()),
+            );
+            m.insert(
+                "tier_burn_alert".to_string(),
+                Json::Arr(burn.iter().map(|tier| Json::Bool(tier[i].alert)).collect()),
             );
             out.push_str(&Json::Obj(m).to_string());
             out.push('\n');

@@ -1,0 +1,212 @@
+//! Attribution acceptance: the analysis layer must be *exact* on real
+//! runs, not just on the unit fixtures.
+//!
+//! 1. Conservation, bit-exact: on a same-seed chaos run every terminal
+//!    request's waterfall components sum to its end-to-end latency in
+//!    integer nanoseconds, with a zero `Unattributed` residual (the span
+//!    chain really is contiguous), and the NPU-time ledger reconciles
+//!    every deployed NPU-nanosecond against the report's accounting
+//!    integrals.
+//! 2. The exported artifact agrees with itself: per-tier component
+//!    totals sum to the tier's end-to-end total after the JSON
+//!    round-trip, and a self-diff is flat.
+//! 3. The burn-rate stream in `metrics_jsonl` is monotone in time and
+//!    finite.
+//! 4. `attrib diff` names the right mover: session_chat with MTP on vs
+//!    off must flag `decode` as the component that moved.
+
+use cm_infer::config::Config;
+use cm_infer::coordinator::sim::{ServeSim, SimOptions};
+use cm_infer::faults::{FaultEvent, FaultKind, FaultOptions, FaultPlan};
+use cm_infer::metrics::ServingReport;
+use cm_infer::telemetry::attrib::{q_npu_ns, q_ns, Attribution, Component};
+use cm_infer::telemetry::{diff, Telemetry, TelemetryOptions};
+use cm_infer::util::json::Json;
+use cm_infer::workload::{generate_scenario, ScenarioSpec};
+
+const N: usize = 1200;
+const SEED: u64 = 7;
+
+/// Same mid-day crash plan as `tests/telemetry.rs`: strands real
+/// in-flight work so recovery sub-spans show up in the waterfalls.
+fn crash_plan() -> FaultPlan {
+    FaultPlan::new(vec![
+        FaultEvent { t_us: 3e6, kind: FaultKind::DecodeCrash { instance: 0 } },
+        FaultEvent { t_us: 4e6, kind: FaultKind::PoolServerFail { server: 0 } },
+        FaultEvent { t_us: 5e6, kind: FaultKind::PrefillCrash { instance: 2 } },
+        FaultEvent { t_us: 7e6, kind: FaultKind::DecodeCrash { instance: 1 } },
+        FaultEvent { t_us: 9e6, kind: FaultKind::PoolServerFail { server: 1 } },
+    ])
+}
+
+fn chaos_run() -> (ServingReport, Box<Telemetry>) {
+    let sc = ScenarioSpec::diurnal(SEED);
+    let trace = generate_scenario(&sc, N);
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    let opts = SimOptions {
+        seed: SEED,
+        decode_instances: 4,
+        faults: Some(FaultOptions {
+            plan: crash_plan(),
+            heartbeat_us: 250_000.0,
+            recovery: true,
+            recovery_latency_us: 2e6,
+        }),
+        telemetry: Some(TelemetryOptions { sample_period_us: 500_000.0 }),
+        ..SimOptions::default()
+    };
+    let mut sim = ServeSim::new(cfg, opts, trace);
+    let report = sim.run();
+    let tel = sim.take_telemetry().expect("telemetry was enabled");
+    (report, tel)
+}
+
+fn session_run(mtp: bool) -> (ServingReport, Box<Telemetry>) {
+    let sc = ScenarioSpec::by_name("session_chat", 14).unwrap();
+    let trace = generate_scenario(&sc, 300);
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    cfg.serving.mtp = mtp;
+    let opts = SimOptions {
+        seed: 14,
+        telemetry: Some(TelemetryOptions::default()),
+        ..SimOptions::default()
+    };
+    let mut sim = ServeSim::new(cfg, opts, trace);
+    let report = sim.run();
+    let tel = sim.take_telemetry().expect("telemetry was enabled");
+    (report, tel)
+}
+
+#[test]
+fn attribution_conserves_exactly_on_a_chaos_run() {
+    let (r, tel) = chaos_run();
+    let a = Attribution::analyze(&tel, &r);
+
+    // every terminal request got a waterfall, exactly once
+    assert_eq!(
+        a.waterfalls.len() as u64,
+        r.requests_completed + r.requests_lost,
+        "one waterfall per terminal request"
+    );
+    assert_eq!(
+        a.waterfalls.iter().filter(|w| w.lost).count() as u64,
+        r.requests_lost
+    );
+
+    // 1. conservation, bit-exact, with a structurally-zero residual
+    assert_eq!(a.conservation_violations, 0);
+    for w in &a.waterfalls {
+        assert!(w.conserves(), "rid {} components do not sum to end-to-end", w.rid);
+        assert_eq!(
+            w.components[Component::N - 1],
+            0,
+            "rid {} has unattributed time: the span chain has a gap",
+            w.rid
+        );
+        assert!(w.end_to_end_ns >= 0, "rid {} negative end-to-end", w.rid);
+    }
+    // the chaos run exercised the recovery components
+    assert!(
+        a.waterfalls.iter().any(|w| {
+            w.components.iter().sum::<i64>() > 0
+                && (w.components[6] > 0 || w.components[7] > 0 || w.components[8] > 0)
+        }),
+        "mid-day crashes must put recovery time into some waterfall"
+    );
+
+    // per-tier aggregation re-conserves: component totals vs e2e total
+    let mut seen = 0u64;
+    for t in &a.tiers {
+        let total: i64 = t.component_total_ns.iter().sum();
+        assert_eq!(total, t.end_to_end_total_ns, "tier {} aggregate drifted", t.tier);
+        seen += t.requests;
+    }
+    assert_eq!(seen as usize, a.waterfalls.len());
+
+    // NPU-time ledger reconciles against the report's own integrals
+    assert!(a.ledger.reconciles());
+    assert_eq!(a.ledger.prefill.assigned_npu_ns, q_npu_ns(r.prefill_npu_seconds));
+    assert_eq!(a.ledger.prefill.busy_npu_ns, q_npu_ns(r.prefill_busy_npu_seconds));
+    assert_eq!(a.ledger.decode.assigned_npu_ns, q_npu_ns(r.decode_npu_seconds));
+    assert_eq!(a.ledger.decode.busy_npu_ns, q_npu_ns(r.decode_busy_npu_seconds));
+    assert_eq!(
+        a.ledger.total_npu_ns,
+        q_ns(r.duration_us) as i128 * (r.prefill_npus + r.decode_npus) as i128
+    );
+
+    // 2. the artifact round-trips: totals still conserve after JSON
+    let doc = Json::parse(&a.to_json()).expect("artifact parses");
+    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "cm-infer.attrib.v1");
+    assert_eq!(
+        doc.get("requests").unwrap().as_f64().unwrap() as usize,
+        a.waterfalls.len()
+    );
+    assert_eq!(doc.get("conservation_violations").unwrap().as_f64().unwrap(), 0.0);
+    for tier in doc.get("tiers").unwrap().as_arr().unwrap() {
+        let comps = tier.get("components").unwrap().as_obj().unwrap();
+        assert_eq!(comps.len(), Component::N);
+        let total: f64 =
+            comps.values().map(|c| c.get("total_ns").unwrap().as_f64().unwrap()).sum();
+        assert_eq!(
+            total,
+            tier.get("end_to_end_total_ns").unwrap().as_f64().unwrap(),
+            "tier totals drifted through JSON"
+        );
+    }
+
+    // a self-diff is flat: nothing moved between a run and itself
+    let d = diff::diff(&doc, &doc).expect("self-diff");
+    assert!(d.movers.iter().all(|m| m.delta_mean_us == 0.0));
+
+    // 3. the burn-rate stream: per line, monotone t_us, finite burns
+    let jsonl = tel.metrics_jsonl();
+    let mut last_t = f64::NEG_INFINITY;
+    let mut lines = 0usize;
+    for line in jsonl.lines() {
+        let v = Json::parse(line).expect("each JSONL line parses");
+        let t = v.get("t_us").unwrap().as_f64().unwrap();
+        assert!(t >= last_t, "burn stream went back in time: {t} after {last_t}");
+        last_t = t;
+        for key in ["tier_burn_fast", "tier_burn_slow"] {
+            for b in v.get(key).unwrap().as_arr().unwrap() {
+                let burn = b.as_f64().unwrap();
+                assert!(burn.is_finite() && burn >= 0.0, "{key} = {burn}");
+            }
+        }
+        assert!(v.get("tier_burn_alert").is_some());
+        lines += 1;
+    }
+    assert_eq!(lines, tel.samples().len());
+}
+
+#[test]
+fn attrib_diff_names_decode_for_the_mtp_ablation() {
+    let (r_on, tel_on) = session_run(true);
+    let (r_off, tel_off) = session_run(false);
+    let a = Attribution::analyze(&tel_on, &r_on);
+    let b = Attribution::analyze(&tel_off, &r_off);
+    assert_eq!(a.conservation_violations, 0);
+    assert_eq!(b.conservation_violations, 0);
+    // the MTP overlay only sees speculative decode spans
+    assert!(a.overlays.mtp_decode_us > 0.0, "MTP run recorded no speculative decode");
+    assert!(a.overlays.mtp_savings_est_us > 0.0);
+    assert_eq!(b.overlays.mtp_decode_us, 0.0, "--no-mtp run must not record MTP spans");
+
+    let doc_a = Json::parse(&a.to_json()).unwrap();
+    let doc_b = Json::parse(&b.to_json()).unwrap();
+    let d = diff::diff(&doc_a, &doc_b).expect("diff");
+    let top = d.top().expect("movers exist");
+    assert_eq!(
+        top.component, "decode",
+        "MTP ablation must move the decode component, got {}",
+        top.component
+    );
+    assert!(
+        top.delta_mean_us > 0.0,
+        "decode must be slower without MTP (delta {})",
+        top.delta_mean_us
+    );
+    assert!(d.render().starts_with("top mover: decode"));
+}

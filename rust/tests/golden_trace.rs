@@ -13,6 +13,8 @@ use cm_infer::config::{Config, PlacementObjective};
 use cm_infer::coordinator::sim::{AutoscaleOptions, ServeSim, SimOptions};
 use cm_infer::domains::{FailureDomainMap, ResiliencePolicy};
 use cm_infer::faults::{FaultOptions, FaultPlan};
+use cm_infer::telemetry::attrib::{Attribution, Component};
+use cm_infer::telemetry::TelemetryOptions;
 use cm_infer::workload::{generate_scenario, ScenarioSpec};
 
 const FIXTURE: &str =
@@ -190,16 +192,23 @@ fn run_case(c: &Case) -> Vec<(String, f64)> {
         } else {
             ResiliencePolicy::independent()
         },
+        // telemetry rides along for the attribution scalars below; the
+        // zero-cost contract (tests/telemetry.rs) keeps every report
+        // scalar bit-identical to a recorder-free run
+        telemetry: Some(TelemetryOptions::default()),
         ..SimOptions::default()
     };
-    let r = ServeSim::new(cfg, opts, trace).run();
+    let mut sim = ServeSim::new(cfg, opts, trace);
+    let r = sim.run();
+    let tel = sim.take_telemetry().expect("telemetry was enabled");
+    let attrib = Attribution::analyze(&tel, &r);
     let tag = match c.placement {
         PlacementObjective::Packed => format!("{}-{}", c.preset, c.seed),
         other => format!("{}-{}-{}", c.preset, c.seed, other.name()),
     };
     // per-domain MTTR scalar: sum of domain mean-MTTRs (order-free)
     let domain_mttr_us: f64 = r.domain_stats().iter().filter_map(|d| d.mean_mttr_us).sum();
-    vec![
+    let mut rows = vec![
         (format!("{tag} duration_us"), r.duration_us),
         (format!("{tag} requests_completed"), r.requests_completed as f64),
         (format!("{tag} output_tokens"), r.output_tokens as f64),
@@ -225,7 +234,17 @@ fn run_case(c: &Case) -> Vec<(String, f64)> {
         (format!("{tag} cache_hit_rate"), r.cache_hit_rate),
         (format!("{tag} mtp_acceptance"), r.mtp_acceptance),
         (format!("{tag} reprefill_frac"), r.reprefill_frac),
-    ]
+    ];
+    // latency attribution: the top waterfall component per tier (index
+    // into Component::ALL) and its share of the tier's wall time — pins
+    // the *explanation* of each case's latency, not just the numbers
+    for t in &attrib.tiers {
+        let top = t.top_component();
+        let top_idx = Component::ALL.iter().position(|&c| c == top).unwrap() as f64;
+        rows.push((format!("{tag} attrib_top_t{}", t.tier), top_idx));
+        rows.push((format!("{tag} attrib_top_share_t{}", t.tier), t.share(top)));
+    }
+    rows
 }
 
 fn render(rows: &[(String, f64)]) -> String {

@@ -313,6 +313,94 @@ fn prop_chaos_conservation_exactly_once() {
 }
 
 #[test]
+fn prop_attrib_conservation() {
+    // Over random scenario (incl. chaos and materialized-prompt session)
+    // × fault-plan × recovery combinations with telemetry enabled, the
+    // attribution engine's invariants hold EXACTLY: every terminal
+    // request's integer-ns waterfall components sum to its end-to-end
+    // latency with a zero unattributed residual, there is exactly one
+    // waterfall per completed-or-lost request, per-tier aggregates
+    // re-conserve, and the NPU-time ledger reconciles every deployed
+    // NPU-nanosecond.
+    check("attrib-conservation", 8, |g| {
+        use cm_infer::telemetry::attrib::{Attribution, Component};
+        use cm_infer::telemetry::TelemetryOptions;
+
+        let preset =
+            *g.rng().choose(&["diurnal", "mixed_slo", "chaos_crashes", "session_chat"]);
+        let mut sc = ScenarioSpec::by_name(preset, g.u64(0..=1_000)).unwrap();
+        let slow = g.f64(5.0, 20.0);
+        sc.base.mean_interarrival_us *= slow;
+        sc.base.max_prompt = 4096;
+        sc.base.max_output = 256;
+        for p in &mut sc.phases {
+            p.mean_interarrival_us *= slow;
+        }
+        let n = g.usize(20..=50);
+        let trace = generate_scenario(&sc, n);
+        let horizon = trace.last().map(|r| r.arrival_us * 1.5).unwrap_or(1e6).max(1e6);
+        let profile = FaultProfile {
+            horizon_us: horizon,
+            decode_crashes: g.usize(0..=2),
+            prefill_crashes: g.usize(0..=1),
+            pool_failures: g.usize(0..=1),
+            link_degrades: g.usize(0..=1),
+            stragglers: g.usize(0..=1),
+            degrade_factor: g.f64(1.5, 5.0),
+            straggler_factor: g.f64(1.5, 4.0),
+            degrade_duration_us: g.f64(1e5, 2e6),
+        };
+        let mut cfg = Config::default();
+        cfg.serving = ServingConfig::preset(DeploymentPreset::Tiny);
+        cfg.serving.tier_slos = sc.tier_slo_configs();
+        cfg.serving.mtp = g.bool();
+        let opts = SimOptions {
+            seed: g.u64(0..=1_000),
+            decode_instances: g.usize(1..=2),
+            faults: g.bool().then(|| FaultOptions {
+                plan: FaultPlan::generate(g.u64(0..=1_000), &profile),
+                heartbeat_us: g.f64(5e4, 5e5),
+                recovery: g.bool(),
+                recovery_latency_us: g.f64(1e5, 2e6),
+            }),
+            telemetry: Some(TelemetryOptions { sample_period_us: g.f64(1e5, 1e6) }),
+            ..SimOptions::default()
+        };
+        let mut sim = ServeSim::new(cfg, opts, trace);
+        let report = sim.run();
+        let Some(tel) = sim.take_telemetry() else { return false };
+        let a = Attribution::analyze(&tel, &report);
+
+        // exactly one waterfall per terminal request
+        if a.waterfalls.len() as u64 != report.requests_completed + report.requests_lost {
+            return false;
+        }
+        if a.conservation_violations != 0 {
+            return false;
+        }
+        // bit-exact conservation with a structurally-zero residual
+        for w in &a.waterfalls {
+            if !w.conserves() || w.components[Component::N - 1] != 0 || w.end_to_end_ns < 0 {
+                return false;
+            }
+        }
+        // tier aggregates re-conserve and cover every waterfall
+        let mut covered = 0u64;
+        for t in &a.tiers {
+            if t.component_total_ns.iter().sum::<i64>() != t.end_to_end_total_ns {
+                return false;
+            }
+            covered += t.requests;
+        }
+        if covered as usize != a.waterfalls.len() {
+            return false;
+        }
+        // the NPU-time ledger reconciles exactly
+        a.ledger.reconciles()
+    });
+}
+
+#[test]
 fn prop_recommended_offload_fraction_bounded() {
     // Over arbitrary workload stats and §6.2.1 signals, a recommended
     // Offload action always carries a fraction in (0, 1], at least one

@@ -155,4 +155,20 @@ fn telemetry_is_bit_exactly_free_and_exports_are_valid() {
         win_finished, r_on.requests_completed,
         "rolling SLO windows must account every completed request exactly once"
     );
+
+    // 4. attribution is export-time only: running the analysis changes
+    // nothing about the contract above (the digests already matched),
+    // and its conservation invariant holds on this same-seed chaos run
+    let a = cm_infer::telemetry::attrib::Attribution::analyze(&tel, &r_on);
+    assert_eq!(a.conservation_violations, 0, "attribution must conserve exactly");
+    assert_eq!(
+        a.waterfalls.len() as u64,
+        r_on.requests_completed + r_on.requests_lost,
+        "one waterfall per terminal request"
+    );
+    assert_eq!(
+        report_digest(&r_off),
+        report_digest(&r_on),
+        "attribution analysis must not perturb the report"
+    );
 }
