@@ -30,6 +30,11 @@
 //! The session presets (`session_chat`, `agentic_loop`) compare the full
 //! hot loop against the `--no-cache-affinity` and `--no-mtp` ablations —
 //! decode throughput and TTFT hinge on the prefix-cache hit rate.
+//! `fleet_diurnal` runs the multi-supernode experiment instead: a 3-pod
+//! fleet with one pod drained for maintenance at the traffic peak,
+//! prefix-affinity admission routing vs the stateless least-loaded
+//! ablation (cross-pod session moves import their cached prefix over the
+//! inter-supernode RDMA plane — the `rdma_import` attribution component).
 
 use cm_infer::config::{Ascend910cDie, Config, DeepSeekDims, PlacementObjective, SloConfig};
 use cm_infer::coordinator::batcher::plan_for_slo;
@@ -44,6 +49,10 @@ fn explore_scenario(name: &str, trace_base: Option<&str>) {
         eprintln!("unknown scenario `{name}`; presets: {}", ScenarioSpec::PRESETS.join(", "));
         std::process::exit(2);
     };
+    if sc.name == "fleet_diurnal" {
+        explore_fleet(&sc, trace_base);
+        return;
+    }
     let n = 2000;
     let trace = generate_scenario(&sc, n);
     let mut cfg = Config::default();
@@ -250,6 +259,66 @@ fn explore_scenario(name: &str, trace_base: Option<&str>) {
                     eprintln!("  telemetry export failed under `{base}.leg{li}.*`: {e}");
                     std::process::exit(1);
                 }
+            }
+        }
+        println!();
+    }
+}
+
+/// `--scenario fleet_diurnal`: the multi-supernode experiment. A 3-pod
+/// fleet, one pod drained for maintenance at the diurnal traffic peak;
+/// the affinity leg keeps sessions on the pod holding their cached
+/// prefix (cross-pod moves import it over RDMA), the ablation leg
+/// re-prefills every cross-pod move from scratch — the goodput-rate gap
+/// between the legs is the win `tests/integration_fleet.rs` pins.
+fn explore_fleet(sc: &ScenarioSpec, trace_base: Option<&str>) {
+    use cm_infer::faults::PodDrainPlan;
+    use cm_infer::fleet::{FleetOptions, FleetSim};
+
+    let n = 2000;
+    let pods = 3;
+    let trace = generate_scenario(sc, n);
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    let period = sc.wave.as_ref().map(|w| w.period_us).unwrap_or(24e6);
+    let drains = PodDrainPlan::maintenance_at_peak(pods, period);
+    println!("== scenario `{}` ({n} requests, {pods} supernodes) ==\n", sc.name);
+    for d in &drains.drains {
+        println!(
+            "maintenance: pod{} drained {:.2}s – {:.2}s (traffic peak)\n",
+            d.pod,
+            d.start_us / 1e6,
+            d.end_us / 1e6
+        );
+    }
+    for (li, affinity) in [true, false].into_iter().enumerate() {
+        let label = if affinity {
+            "fleet (prefix-affinity admission routing)"
+        } else {
+            "fleet (--no-fleet-affinity — least-loaded ablation)"
+        };
+        let opts = SimOptions {
+            telemetry: trace_base.is_some().then(cm_infer::telemetry::TelemetryOptions::default),
+            ..SimOptions::default()
+        };
+        let fleet = FleetSim::new(
+            cfg.clone(),
+            opts,
+            FleetOptions { supernodes: pods, affinity, drains: drains.clone() },
+        );
+        let run = fleet.run(trace.clone());
+        println!("{label}:");
+        print!("{}", run.report.render());
+        if let Some(base) = trace_base {
+            if let Some(doc) = run.merged_attrib_json() {
+                let apath = format!("{base}.leg{li}.attrib.json");
+                if let Err(e) = std::fs::write(&apath, doc) {
+                    // a missing artifact is an error for anything consuming
+                    // the exports — fail loudly, not half
+                    eprintln!("  attribution export failed at `{apath}`: {e}");
+                    std::process::exit(1);
+                }
+                println!("  attribution (merged over pods) → {apath}");
             }
         }
         println!();

@@ -23,7 +23,7 @@ fn main() {
     let mut s = 0u64;
     let st = bench(1000, iters(1_000_000), || {
         s = s.wrapping_add(1);
-        let d = router.route(s % 512, 4096);
+        let d = router.route(s % 512, 4096).unwrap();
         router.complete(d.instance, 4096);
     });
     t.row(&["router route+complete".into(), format!("{:.3}", st.mean_us),

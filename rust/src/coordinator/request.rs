@@ -105,6 +105,7 @@ mod tests {
             session: 0,
             turn: 0,
             slo_tier: 0,
+            xpod_import_tokens: 0,
         }
     }
 

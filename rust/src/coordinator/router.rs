@@ -124,6 +124,16 @@ impl Router {
             (InstanceState::Failed { drained: false }, false) => InstanceState::Active,
             (other, false) => other,
         };
+        if failed {
+            // the failed instance's HBM-resident prefix blocks are gone, so
+            // the soft affinity hints pointing at it are dead weight — drop
+            // them now rather than letting them pin map growth. (Routing is
+            // unchanged: `route_affinity` already treats a hint at an
+            // inactive instance exactly like no hint.) The KV-centric
+            // `home` map deliberately stays: a stale home is load-bearing
+            // for the cache-forfeit accounting in `decide`.
+            self.affinity.retain(|_, &mut inst| inst != instance);
+        }
     }
 
     /// Mark an `Active` slot as an offload donor (§6.2.1), or return a
@@ -170,26 +180,23 @@ impl Router {
             .map(|(i, _)| i)
     }
 
-    fn least_loaded(&self) -> usize {
-        self.least_loaded_where(|_| true).unwrap_or(0)
-    }
-
     /// Route like [`Router::route`], restricted to active instances the
     /// predicate keeps; falls back to the unrestricted least-loaded choice
     /// when the predicate filters every routable instance out. The general
     /// form behind soft placement preferences — a preference must degrade
-    /// gracefully rather than strand work.
+    /// gracefully rather than strand work. Returns `None` only when ZERO
+    /// instances are routable at all (see [`Router::route`]).
     pub fn route_where(
         &mut self,
         session: u64,
         tokens: u64,
         keep: impl Fn(usize) -> bool,
-    ) -> RouteDecision {
+    ) -> Option<RouteDecision> {
         match self.least_loaded_where(keep) {
             Some(pick) => {
                 let decision = self.decide(session, tokens, pick);
                 self.commit(session, tokens, &decision);
-                decision
+                Some(decision)
             }
             None => self.route(session, tokens),
         }
@@ -200,13 +207,13 @@ impl Router {
     /// here, and a donor is already paying the §6.2.1 bandwidth tax — when
     /// any pure-Active instance exists, the stranded work goes there.
     /// Falls back to the plain least-loaded choice (donors included) when
-    /// every routable instance is donating.
-    pub fn route_avoiding_donors(&mut self, session: u64, tokens: u64) -> RouteDecision {
+    /// every routable instance is donating; `None` when nothing routes.
+    pub fn route_avoiding_donors(&mut self, session: u64, tokens: u64) -> Option<RouteDecision> {
         match self.least_loaded_where(|i| !self.is_donor(i)) {
             Some(pick) => {
                 let decision = self.decide(session, tokens, pick);
                 self.commit(session, tokens, &decision);
-                decision
+                Some(decision)
             }
             None => self.route(session, tokens),
         }
@@ -220,16 +227,18 @@ impl Router {
     /// baseline uses), in which case the request falls back to the
     /// least-loaded instance and pays the pool fetch for whatever prefix
     /// is still cached. Returns the decision plus whether the affine
-    /// (local-HBM) placement was taken. `cache_usable` is always true:
-    /// the shared pool survives any placement — that is the §4.1
-    /// difference from the KV-centric `home` map.
+    /// (local-HBM) placement was taken, or `None` when zero instances are
+    /// routable — no tokens are charged and no affinity is recorded in
+    /// that case; the caller holds the request queued. `cache_usable` is
+    /// always true: the shared pool survives any placement — that is the
+    /// §4.1 difference from the KV-centric `home` map.
     pub fn route_affinity(
         &mut self,
         session: u64,
         tokens: u64,
         overload_factor: f64,
-    ) -> (RouteDecision, bool) {
-        let least = self.least_loaded();
+    ) -> Option<(RouteDecision, bool)> {
+        let least = self.least_loaded_where(|_| true)?;
         let (pick, local) = match self.affinity.get(&session) {
             Some(&aff) if self.is_active(aff) => {
                 let aff_q = self.queued_tokens[aff] as f64;
@@ -244,15 +253,19 @@ impl Router {
         };
         self.affinity.insert(session, pick);
         self.queued_tokens[pick] += tokens;
-        (RouteDecision { instance: pick, cache_usable: true }, local)
+        Some((RouteDecision { instance: pick, cache_usable: true }, local))
     }
 
-    /// Route a request; caller charges `tokens` of prefill work.
-    pub fn route(&mut self, session: u64, tokens: u64) -> RouteDecision {
-        let least = self.least_loaded();
+    /// Route a request; caller charges `tokens` of prefill work. Returns
+    /// `None` when zero instances are routable (mass failure / full drain):
+    /// nothing is charged and the caller must hold the request queued until
+    /// capacity returns — the old behavior of silently charging slot 0
+    /// routed real work onto a `Failed` instance.
+    pub fn route(&mut self, session: u64, tokens: u64) -> Option<RouteDecision> {
+        let least = self.least_loaded_where(|_| true)?;
         let decision = self.decide(session, tokens, least);
         self.commit(session, tokens, &decision);
-        decision
+        Some(decision)
     }
 
     /// The routing decision given the preferred least-loaded pick.
@@ -299,6 +312,22 @@ impl Router {
         self.queued_tokens[instance] = self.queued_tokens[instance].saturating_sub(tokens);
     }
 
+    /// Drop every per-session routing hint for a terminal session: the
+    /// P2P affinity hint AND the KV-centric home. A session that will
+    /// never arrive again can influence no future decision, so eviction is
+    /// behavior-free — it only bounds both maps by the number of sessions
+    /// that still have requests in flight or in the future.
+    pub fn evict_session(&mut self, session: u64) {
+        self.affinity.remove(&session);
+        self.home.remove(&session);
+    }
+
+    /// Sessions currently tracked across the affinity + home maps
+    /// (observability for the bounded-growth regression tests).
+    pub fn tracked_sessions(&self) -> usize {
+        self.affinity.len() + self.home.len()
+    }
+
     /// Load imbalance across *active* instances: max/mean queued tokens.
     pub fn imbalance(&self) -> f64 {
         let active: Vec<u64> = self
@@ -326,7 +355,7 @@ mod tests {
     fn p2p_balances_load() {
         let mut r = Router::new(RouterKind::PeerToPeer, 4);
         for s in 0..100u64 {
-            r.route(s % 5, 1000); // 5 hot sessions
+            r.route(s % 5, 1000).unwrap(); // 5 hot sessions
         }
         assert!(r.imbalance() < 1.1, "imbalance {}", r.imbalance());
     }
@@ -335,7 +364,7 @@ mod tests {
     fn kv_centric_hotspots_on_hot_sessions() {
         let mut r = Router::new(RouterKind::KvCentric { overload_factor: 8.0 }, 4);
         for s in 0..100u64 {
-            r.route(s % 2, 1000); // 2 hot sessions pin 2 instances
+            r.route(s % 2, 1000).unwrap(); // 2 hot sessions pin 2 instances
         }
         assert!(r.imbalance() > 1.5, "imbalance {}", r.imbalance());
     }
@@ -343,9 +372,9 @@ mod tests {
     #[test]
     fn kv_centric_keeps_affinity_when_feasible() {
         let mut r = Router::new(RouterKind::KvCentric { overload_factor: 4.0 }, 2);
-        let first = r.route(7, 100);
+        let first = r.route(7, 100).unwrap();
         assert!(first.cache_usable);
-        let again = r.route(7, 100);
+        let again = r.route(7, 100).unwrap();
         assert_eq!(again.instance, first.instance);
         assert!(again.cache_usable);
     }
@@ -353,9 +382,9 @@ mod tests {
     #[test]
     fn kv_centric_reroute_loses_cache() {
         let mut r = Router::new(RouterKind::KvCentric { overload_factor: 1.0 }, 2);
-        let first = r.route(7, 1_000_000);
+        let first = r.route(7, 1_000_000).unwrap();
         // other instance empty → overload triggers reroute
-        let again = r.route(7, 100);
+        let again = r.route(7, 100).unwrap();
         assert_ne!(again.instance, first.instance);
         assert!(!again.cache_usable, "reroute must forfeit local cache");
     }
@@ -363,8 +392,8 @@ mod tests {
     #[test]
     fn p2p_cache_always_usable() {
         let mut r = Router::new(RouterKind::PeerToPeer, 2);
-        r.route(1, 1_000_000);
-        let d = r.route(1, 100);
+        r.route(1, 1_000_000).unwrap();
+        let d = r.route(1, 100).unwrap();
         assert!(d.cache_usable);
     }
 
@@ -373,22 +402,22 @@ mod tests {
         let mut r = Router::new(RouterKind::PeerToPeer, 3);
         r.set_active(1, false);
         for s in 0..30u64 {
-            let d = r.route(s, 100);
+            let d = r.route(s, 100).unwrap();
             assert_ne!(d.instance, 1, "drained instance must not be routed to");
         }
         assert_eq!(r.queued_tokens[1], 0);
         assert_eq!(r.active_instances(), 2);
         // reactivation brings it back as the least-loaded target
         r.set_active(1, true);
-        assert_eq!(r.route(99, 1).instance, 1);
+        assert_eq!(r.route(99, 1).unwrap().instance, 1);
     }
 
     #[test]
     fn kv_centric_drained_home_forfeits_cache() {
         let mut r = Router::new(RouterKind::KvCentric { overload_factor: 100.0 }, 2);
-        let first = r.route(7, 100);
+        let first = r.route(7, 100).unwrap();
         r.set_active(first.instance, false);
-        let again = r.route(7, 100);
+        let again = r.route(7, 100).unwrap();
         assert_ne!(again.instance, first.instance);
         assert!(!again.cache_usable, "cache on a drained instance is gone");
     }
@@ -401,14 +430,14 @@ mod tests {
         assert!(!r.is_active(1), "failed slot must not be routable");
         assert_eq!(r.active_instances(), 2);
         for s in 0..30u64 {
-            let d = r.route(s, 100);
+            let d = r.route(s, 100).unwrap();
             assert_ne!(d.instance, 1, "failed instance must not be routed to");
         }
         assert_eq!(r.queued_tokens[1], 0);
         // recovery restores routing: the recovered slot is least-loaded
         r.set_failed(1, false);
         assert!(r.is_active(1));
-        assert_eq!(r.route(99, 1).instance, 1);
+        assert_eq!(r.route(99, 1).unwrap().instance, 1);
     }
 
     #[test]
@@ -417,16 +446,16 @@ mod tests {
         // must forfeit KV-centric affinity — the local cache died with the
         // instance.
         let mut r = Router::new(RouterKind::KvCentric { overload_factor: 100.0 }, 2);
-        let first = r.route(7, 100);
+        let first = r.route(7, 100).unwrap();
         assert!(first.cache_usable);
         r.set_failed(first.instance, true);
-        let again = r.route(7, 100);
+        let again = r.route(7, 100).unwrap();
         assert_ne!(again.instance, first.instance);
         assert!(!again.cache_usable, "cache on a failed instance is gone");
         // the home moved to the live instance; recovery of the dead one
         // must not pull the session back
         r.set_failed(first.instance, false);
-        let third = r.route(7, 100);
+        let third = r.route(7, 100).unwrap();
         assert_eq!(third.instance, again.instance);
         assert!(third.cache_usable);
     }
@@ -453,7 +482,7 @@ mod tests {
         assert_eq!(r.active_instances(), 2);
         // least-loaded routing still reaches the donor
         r.queued_tokens[1] = 10_000;
-        assert_eq!(r.route(1, 100).instance, 0);
+        assert_eq!(r.route(1, 100).unwrap().instance, 0);
         r.set_donor(0, false);
         assert_eq!(r.state(0), InstanceState::Active);
     }
@@ -465,10 +494,10 @@ mod tests {
         r.queued_tokens[1] = 5_000;
         r.queued_tokens[2] = 6_000;
         // least-loaded is 0, but the predicate excludes it
-        let d = r.route_where(1, 100, |i| i != 0);
+        let d = r.route_where(1, 100, |i| i != 0).unwrap();
         assert_eq!(d.instance, 1);
         // a predicate that excludes everything degrades to plain routing
-        let d = r.route_where(2, 100, |_| false);
+        let d = r.route_where(2, 100, |_| false).unwrap();
         assert_eq!(d.instance, 0);
     }
 
@@ -479,10 +508,10 @@ mod tests {
         // donor 0 is by far the least loaded, but re-homing avoids it
         r.queued_tokens[1] = 5_000;
         r.queued_tokens[2] = 6_000;
-        let d = r.route_avoiding_donors(9, 100);
+        let d = r.route_avoiding_donors(9, 100).unwrap();
         assert_eq!(d.instance, 1, "stranded work must land on a non-donor");
         // plain routing still honors pure least-loaded
-        assert_eq!(r.route(9, 100).instance, 0);
+        assert_eq!(r.route(9, 100).unwrap().instance, 0);
     }
 
     #[test]
@@ -491,7 +520,7 @@ mod tests {
         r.set_donor(0, true);
         r.set_donor(1, true);
         r.queued_tokens[1] = 50;
-        let d = r.route_avoiding_donors(3, 10);
+        let d = r.route_avoiding_donors(3, 10).unwrap();
         assert_eq!(d.instance, 0, "all-donor pool falls back to least-loaded");
     }
 
@@ -535,10 +564,10 @@ mod tests {
     #[test]
     fn affinity_routing_sticks_to_the_last_prefill_instance() {
         let mut r = Router::new(RouterKind::PeerToPeer, 4);
-        let (first, local) = r.route_affinity(7, 100, 4.0);
+        let (first, local) = r.route_affinity(7, 100, 4.0).unwrap();
         assert!(!local, "a session's first turn has no affine instance");
         for _ in 0..5 {
-            let (d, local) = r.route_affinity(7, 100, 4.0);
+            let (d, local) = r.route_affinity(7, 100, 4.0).unwrap();
             assert_eq!(d.instance, first.instance);
             assert!(local, "follow-up turns must land on the affine instance");
             assert!(d.cache_usable, "shared pool survives any placement");
@@ -548,14 +577,14 @@ mod tests {
     #[test]
     fn affinity_overload_falls_back_without_losing_the_pool() {
         let mut r = Router::new(RouterKind::PeerToPeer, 2);
-        let (first, _) = r.route_affinity(7, 1_000_000, 1.0);
+        let (first, _) = r.route_affinity(7, 1_000_000, 1.0).unwrap();
         // the other instance is empty → the queue-ratio test reroutes
-        let (again, local) = r.route_affinity(7, 100, 1.0);
+        let (again, local) = r.route_affinity(7, 100, 1.0).unwrap();
         assert_ne!(again.instance, first.instance);
         assert!(!local, "overloaded affine instance must be abandoned");
         assert!(again.cache_usable, "pool-held prefix stays fetchable");
         // the affinity hint follows the reroute
-        let (third, local) = r.route_affinity(7, 100, 1.0);
+        let (third, local) = r.route_affinity(7, 100, 1.0).unwrap();
         assert_eq!(third.instance, again.instance);
         assert!(local);
     }
@@ -563,9 +592,9 @@ mod tests {
     #[test]
     fn affinity_skips_drained_and_failed_instances() {
         let mut r = Router::new(RouterKind::PeerToPeer, 3);
-        let (first, _) = r.route_affinity(5, 100, 8.0);
+        let (first, _) = r.route_affinity(5, 100, 8.0).unwrap();
         r.set_failed(first.instance, true);
-        let (again, local) = r.route_affinity(5, 100, 8.0);
+        let (again, local) = r.route_affinity(5, 100, 8.0).unwrap();
         assert_ne!(again.instance, first.instance);
         assert!(!local, "a dead affine instance holds no local blocks");
         assert!(again.cache_usable);
@@ -576,7 +605,7 @@ mod tests {
         // route() must stay stateless even after affinity traffic: the
         // existing-scenario bit-exactness contract depends on it.
         let mut r = Router::new(RouterKind::PeerToPeer, 2);
-        r.route_affinity(1, 10_000, 4.0);
+        r.route_affinity(1, 10_000, 4.0).unwrap();
         let side = Router::new(RouterKind::PeerToPeer, 2);
         let mut expect = Router {
             kind: side.kind,
@@ -589,9 +618,72 @@ mod tests {
     }
 
     #[test]
+    fn no_routable_capacity_returns_none_and_charges_nothing() {
+        // the mass-failure satellite: zero routable instances must surface
+        // as an explicit no-capacity signal, not a phantom route to slot 0.
+        let mut r = Router::new(RouterKind::PeerToPeer, 3);
+        r.set_failed(0, true);
+        r.set_failed(1, true);
+        r.set_active(2, false);
+        assert_eq!(r.active_instances(), 0);
+        assert_eq!(r.route(7, 100), None);
+        assert_eq!(r.route_affinity(7, 100, 4.0), None);
+        assert_eq!(r.route_where(7, 100, |_| true), None);
+        assert_eq!(r.route_avoiding_donors(7, 100), None);
+        assert!(
+            r.queued_tokens.iter().all(|&q| q == 0),
+            "a failed/drained fleet must accrue no queue charge: {:?}",
+            r.queued_tokens
+        );
+        // capacity back → routing resumes and charges normally
+        r.set_failed(0, false);
+        let d = r.route(7, 100).expect("recovered slot is routable");
+        assert_eq!(d.instance, 0);
+        assert_eq!(r.queued_tokens[0], 100);
+    }
+
+    #[test]
+    fn affinity_map_is_bounded_by_live_sessions() {
+        // the unbounded-growth satellite: hints leave the map at session
+        // terminal and when the affine instance fails.
+        let mut r = Router::new(RouterKind::PeerToPeer, 4);
+        for s in 0..100u64 {
+            r.route_affinity(s, 100, 4.0).unwrap();
+        }
+        assert_eq!(r.tracked_sessions(), 100);
+        // 60 sessions reach a terminal state
+        for s in 0..60u64 {
+            r.evict_session(s);
+        }
+        assert_eq!(r.tracked_sessions(), 40);
+        // terminal eviction is idempotent
+        r.evict_session(0);
+        assert_eq!(r.tracked_sessions(), 40);
+        // an instance failure drops exactly the hints pointing at it
+        let at_0 = (60..100u64)
+            .filter(|s| {
+                let (d, _) = r.route_affinity(*s, 0, 4.0).unwrap();
+                d.instance == 0
+            })
+            .count();
+        assert!(at_0 > 0, "least-loaded over 4 slots must land some sessions on 0");
+        r.set_failed(0, true);
+        assert_eq!(r.tracked_sessions(), 40 - at_0);
+    }
+
+    #[test]
+    fn evict_session_drops_kv_centric_home() {
+        let mut r = Router::new(RouterKind::KvCentric { overload_factor: 4.0 }, 2);
+        r.route(7, 100).unwrap();
+        assert_eq!(r.tracked_sessions(), 1);
+        r.evict_session(7);
+        assert_eq!(r.tracked_sessions(), 0);
+    }
+
+    #[test]
     fn completion_reduces_queue() {
         let mut r = Router::new(RouterKind::PeerToPeer, 2);
-        let d = r.route(0, 500);
+        let d = r.route(0, 500).unwrap();
         r.complete(d.instance, 500);
         assert_eq!(r.queued_tokens[d.instance], 0);
         r.complete(d.instance, 10_000); // saturating

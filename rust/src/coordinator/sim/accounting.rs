@@ -222,6 +222,13 @@ impl ServeSim {
         self.events_processed
     }
 
+    /// Sessions still tracked in the router's per-session maps (P2P
+    /// affinity + KV-centric home) — the bounded-growth regression hook:
+    /// after a fully-drained run this must be zero.
+    pub fn router_tracked_sessions(&self) -> usize {
+        self.router.tracked_sessions()
+    }
+
     /// Context-cache hit rate observed during the run.
     pub fn cache_hit_rate(&self) -> f64 {
         self.context_cache.as_ref().map(|c| c.hit_rate()).unwrap_or(0.0)

@@ -6,6 +6,17 @@ use super::*;
 
 impl ServeSim {
     pub(super) fn on_arrival(&mut self, idx: usize) {
+        if self.router.active_instances() == 0 {
+            // mass failure / full drain: no routable prefill capacity at
+            // all. Hold the request at admission — uncharged, before any
+            // cache probe — and replay the arrival when a slot returns
+            // (`resweep_stranded_prefill`). The pre-fix behavior charged
+            // this work to slot 0 even when slot 0 was `Failed`.
+            self.requests[idx].phase = RequestPhase::QueuedPrefill;
+            self.tel_phase(idx as u64, crate::telemetry::SpanKind::PrefillQueue);
+            self.stalled_arrivals.push(idx);
+            return;
+        }
         // context-cache lookup (prefix reuse) before routing: the P2P
         // architecture lets ANY instance use the shared cache.
         let prompt = self.requests[idx].spec.prompt.clone();
@@ -46,6 +57,23 @@ impl ServeSim {
             }
         }
 
+        // fleet: cross-supernode KV import. The fleet admission router
+        // marks a re-homed session's request with the prefix tokens still
+        // cached on its previous pod; when the local probe recovers less
+        // than that, the prefix rides the RDMA plane instead (§2.2 — the
+        // UB fabric ends at the supernode boundary). Single-supernode
+        // traces always carry 0 here, keeping this branch dead and the
+        // path bit-identical.
+        let mut xpod = false;
+        let import =
+            self.requests[idx].spec.xpod_import_tokens.min(prompt_tokens.saturating_sub(1));
+        if import > reused {
+            reused = import;
+            let bytes = import as u64 * self.cfg.model.kv_bytes_per_token();
+            fetch_us = self.pool.net.xpod_kv_us(bytes);
+            xpod = true;
+        }
+
         let compute = prompt_tokens - reused;
         // session cache-affinity (SGLang-style): materialized-prompt
         // requests under the P2P router prefer the instance that last
@@ -56,22 +84,35 @@ impl ServeSim {
         let use_affinity = self.opts.cache_affinity
             && self.opts.router == RouterKind::PeerToPeer
             && !prompt.is_empty();
+        // the admission guard above proved at least one routable instance,
+        // and nothing since touched the router — routing cannot fail here
         let decision = if use_affinity {
-            let (decision, local) =
-                self.router.route_affinity(session, compute as u64, AFFINITY_OVERLOAD_FACTOR);
-            if local && reused > 0 {
+            let (decision, local) = self
+                .router
+                .route_affinity(session, compute as u64, AFFINITY_OVERLOAD_FACTOR)
+                .expect("guarded: router has routable capacity");
+            if local && reused > 0 && !xpod {
+                // a cross-pod import is never in local HBM — only a
+                // same-pod warm prefix skips the fetch
                 self.affinity_local_hits += 1;
                 fetch_us = 0.0;
             }
             decision
         } else {
-            self.router.route(session, compute as u64)
+            self.router
+                .route(session, compute as u64)
+                .expect("guarded: router has routable capacity")
         };
         if !decision.cache_usable {
             // KV-centric reroute: the local cache is on the wrong node
             self.recomputed_tokens += reused as u64;
             reused = 0;
             fetch_us = 0.0;
+            xpod = false;
+        }
+        if xpod {
+            self.xpod_imports += 1;
+            self.xpod_import_tokens_total += import as u64;
         }
         if !prompt.is_empty() && self.requests[idx].spec.turn > 0 {
             self.session_turn_tokens += prompt_tokens as u64;
@@ -80,8 +121,19 @@ impl ServeSim {
         // a degraded fabric stretches pool fetches (chaos LinkDegrade /
         // rack-loss cascades), at the worst multiplier on the pool plane;
         // a UB-riding fetch is additionally homed on the consuming
-        // instance's sub-plane (scoped brown-outs)
-        fetch_us = self.pool_fetch_cost(fetch_us, decision.instance);
+        // instance's sub-plane (scoped brown-outs). A cross-pod import
+        // rides RDMA end to end, so it takes that plane's degradation at
+        // the consuming instance's node instead of the pool-fetch path.
+        fetch_us = if xpod {
+            fetch_us
+                * self.links.node_multiplier(
+                    Plane::Rdma,
+                    self.pf_node[decision.instance],
+                    self.now,
+                )
+        } else {
+            self.pool_fetch_cost(fetch_us, decision.instance)
+        };
         self.cache_fetch_us_total += fetch_us;
         self.peak_router_imbalance = self.peak_router_imbalance.max(self.router.imbalance());
 
@@ -93,15 +145,16 @@ impl ServeSim {
         let pl = st.spec.prompt_tokens;
         self.prefills[decision.instance].enqueue(idx as u64, ct, pl);
         if fetch_us > 0.0 {
-            // annotate the admission span with the embedded pool fetch so
+            // annotate the admission span with the embedded fetch so
             // attribution can carve it out as its own waterfall component
-            self.tel_phase_arg(
-                idx as u64,
-                crate::telemetry::SpanKind::PrefillQueue,
-                crate::telemetry::SpanArg::PoolFetch {
-                    fetch_ns: (fetch_us * 1000.0).round() as u64,
-                },
-            );
+            // (UB pool fetch vs cross-pod RDMA import — different buckets)
+            let ns = (fetch_us * 1000.0).round() as u64;
+            let arg = if xpod {
+                crate::telemetry::SpanArg::XpodImport { import_ns: ns }
+            } else {
+                crate::telemetry::SpanArg::PoolFetch { fetch_ns: ns }
+            };
+            self.tel_phase_arg(idx as u64, crate::telemetry::SpanKind::PrefillQueue, arg);
         } else {
             self.tel_phase(idx as u64, crate::telemetry::SpanKind::PrefillQueue);
         }
@@ -254,6 +307,7 @@ impl ServeSim {
                 st.t_finished = Some(self.now);
                 self.finished += 1;
                 self.drop_chaos_kv(rid);
+                self.note_request_terminal(rid);
                 self.tel_tokens(1);
                 self.tel_mark(rid, "first_token");
                 self.tel_finished(rid);

@@ -200,6 +200,7 @@ impl ServeSim {
                 st.t_finished = Some(step_end);
                 self.finished += 1;
                 self.drop_chaos_kv(e.request);
+                self.note_request_terminal(e.request);
                 self.tel_finished(e.request);
             }
             self.tel_tokens(e.tokens as u64);

@@ -313,10 +313,19 @@ impl ServeSim {
             let session = self.requests[rid as usize].spec.session;
             // reassignment keeps the already-fetched prefix reuse (the KV
             // blocks live in the shared pool, P2P property §4.1)
-            let d = self.router.route(session, ct as u64);
-            self.requests[rid as usize].prefill_instance = Some(d.instance);
-            self.prefills[d.instance].enqueue(rid, ct, pl);
-            self.push(self.now, Event::PrefillKick(d.instance));
+            match self.router.route(session, ct as u64) {
+                Some(d) => {
+                    self.requests[rid as usize].prefill_instance = Some(d.instance);
+                    self.prefills[d.instance].enqueue(rid, ct, pl);
+                    self.push(self.now, Event::PrefillKick(d.instance));
+                }
+                None => {
+                    // this drain removed the last routable slot: park the
+                    // work back here uncharged; the resweep re-homes it
+                    // when capacity returns
+                    self.prefills[idx].enqueue(rid, ct, pl);
+                }
+            }
         }
         let free_at = self.prefills[idx].busy_until.max(self.now);
         let t = free_at + self.switch_latency_us;

@@ -443,12 +443,24 @@ impl ServeSim {
                 // would land exactly on the (most idle) donors.
                 let ct = st.spec.prompt_tokens + st.generated;
                 let session = st.spec.session;
-                let d = self.router.route_avoiding_donors(session, ct as u64);
-                st.prefill_instance = Some(d.instance);
-                self.prefills[d.instance].enqueue(rid, ct, ct);
-                self.tel_mark(rid, "rehome");
-                self.tel_phase(rid, crate::telemetry::SpanKind::ReprefillQueue);
-                self.push(self.now, Event::PrefillKick(d.instance));
+                match self.router.route_avoiding_donors(session, ct as u64) {
+                    Some(d) => {
+                        st.prefill_instance = Some(d.instance);
+                        self.prefills[d.instance].enqueue(rid, ct, ct);
+                        self.tel_mark(rid, "rehome");
+                        self.tel_phase(rid, crate::telemetry::SpanKind::ReprefillQueue);
+                        self.push(self.now, Event::PrefillKick(d.instance));
+                    }
+                    None => {
+                        // zero routable slots: park uncharged on slot 0's
+                        // queue; `resweep_stranded_prefill` re-homes it the
+                        // moment any slot returns
+                        st.prefill_instance = Some(0);
+                        self.prefills[0].enqueue(rid, ct, ct);
+                        self.tel_mark(rid, "rehome");
+                        self.tel_phase(rid, crate::telemetry::SpanKind::ReprefillQueue);
+                    }
+                }
             }
         }
     }
@@ -512,8 +524,20 @@ impl ServeSim {
         st.t_lost = Some(self.now);
         self.lost += 1;
         self.drop_chaos_kv(rid);
+        self.note_request_terminal(rid);
         self.tel_lost(rid);
         true
+    }
+
+    /// A request reached a terminal state (Finished or Lost): if it was
+    /// its session's final trace request, the router's per-session hints
+    /// can never be consulted again — evict them so the affinity/home
+    /// maps stay bounded by sessions that still have traffic.
+    pub(super) fn note_request_terminal(&mut self, rid: u64) {
+        let session = self.requests[rid as usize].spec.session;
+        if self.session_last.get(&session) == Some(&rid) {
+            self.router.evict_session(session);
+        }
     }
 
     /// Drop a terminal request's chaos-KV residency entry: its prompt KV no
@@ -582,7 +606,18 @@ impl ServeSim {
         // recovery prefers non-donor homes: a donor is already paying the
         // §6.2.1 bandwidth tax, so stranded work lands elsewhere when any
         // pure-Active instance exists
-        let d = self.router.route_avoiding_donors(session, charge as u64);
+        let Some(d) = self.router.route_avoiding_donors(session, charge as u64) else {
+            // zero routable slots: park uncharged right back on `from` —
+            // the next resweep (which only runs with capacity) re-homes it
+            let (ct, pl) = if st.recovering {
+                let t = st.spec.prompt_tokens + st.generated;
+                (t, t)
+            } else {
+                (st.compute_tokens(), st.spec.prompt_tokens)
+            };
+            self.prefills[from].enqueue(rid, ct, pl);
+            return;
+        };
         if !d.cache_usable && st.reused_tokens > 0 {
             self.recomputed_tokens += st.reused_tokens as u64;
             st.reused_tokens = 0;
@@ -609,7 +644,8 @@ impl ServeSim {
     }
 
     /// Re-route queued work stranded on slots that are not currently
-    /// routable (e.g. parked there while every prefill instance was down).
+    /// routable (e.g. parked there while every prefill instance was down),
+    /// and replay arrivals that were held at admission for the same reason.
     pub(super) fn resweep_stranded_prefill(&mut self) {
         if self.router.active_instances() == 0 {
             return;
@@ -622,6 +658,9 @@ impl ServeSim {
             for (rid, _, _) in queued {
                 self.rehome_prefill_request(rid, idx);
             }
+        }
+        for idx in std::mem::take(&mut self.stalled_arrivals) {
+            self.push(self.now, Event::Arrival(idx));
         }
     }
 

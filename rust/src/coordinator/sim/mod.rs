@@ -495,6 +495,23 @@ pub struct ServeSim {
     /// Follow-up turns routed to their affine instance with a warm prefix
     /// (the zero-fetch local-HBM path).
     pub affinity_local_hits: u64,
+    /// Arrivals held at admission because ZERO prefill slots were routable
+    /// (mass failure / full drain): the router now refuses to charge work
+    /// to a dead slot, so these wait uncharged and are replayed by
+    /// `resweep_stranded_prefill` the moment any slot returns.
+    stalled_arrivals: Vec<usize>,
+    /// session → rid of its final trace request (by arrival order). When
+    /// that request reaches a terminal state the router's per-session
+    /// hints (P2P affinity, KV-centric home) can never be read again and
+    /// are evicted — bounding both maps by the live-session count.
+    session_last: BTreeMap<u64, u64>,
+    // --- fleet (multi-supernode) accounting ---
+    /// Requests whose cached prefix was imported from another supernode's
+    /// pool over the RDMA plane (`Request::xpod_import_tokens` set by the
+    /// fleet admission router; always 0 on single-supernode runs).
+    pub xpod_imports: u64,
+    /// Total prefix tokens imported cross-pod.
+    pub xpod_import_tokens_total: u64,
 }
 
 /// One prefill NPU group on loan to the decode pool (domain-aware
@@ -674,6 +691,19 @@ impl ServeSim {
 
         let telemetry = opts.telemetry.clone().map(|o| Box::new(Telemetry::new(o, s.n_tiers())));
 
+        // session-terminal map: the event loop pops arrivals by
+        // (arrival_us, push order == trace index), so the session's last
+        // request under that order marks when its routing hints die
+        let mut session_last: BTreeMap<u64, (Micros, u64)> = BTreeMap::new();
+        for (i, r) in trace.iter().enumerate() {
+            let e = session_last.entry(r.session).or_insert((r.arrival_us, i as u64));
+            if r.arrival_us >= e.0 {
+                *e = (r.arrival_us, i as u64);
+            }
+        }
+        let session_last: BTreeMap<u64, u64> =
+            session_last.into_iter().map(|(s, (_, rid))| (s, rid)).collect();
+
         let target_prefill_npus = n_pf_initial * quantum;
         let mut sim = ServeSim {
             router,
@@ -753,6 +783,10 @@ impl ServeSim {
             session_turn_tokens: 0,
             session_reused_tokens: 0,
             affinity_local_hits: 0,
+            stalled_arrivals: Vec::new(),
+            session_last,
+            xpod_imports: 0,
+            xpod_import_tokens_total: 0,
             requests: trace.into_iter().map(RequestState::new).collect(),
             cfg,
             opts,

@@ -120,6 +120,15 @@ impl ServeSim {
         self.telemetry.take()
     }
 
+    /// Tag the run's recorder with its supernode id (fleet runs): exports
+    /// then name the request process `requests pod<p>`. No-op when
+    /// telemetry is disabled.
+    pub fn set_telemetry_pod(&mut self, pod: usize) {
+        if let Some(tel) = self.telemetry.as_mut() {
+            tel.set_pod(pod);
+        }
+    }
+
     /// Snapshot the serving system at virtual time `t`. Read-only: every
     /// query here is a `&self` accessor (pool stats, degradation windows,
     /// router queues), so sampling cannot perturb the simulation.

@@ -193,6 +193,67 @@ impl FailureDomainMap {
     }
 }
 
+/// Fleet-level failure domains: one tier above [`FailureDomainMap`]'s
+/// node → rack/PSU → UB-plane nesting sits the *supernode* itself. A pod
+/// drain (planned maintenance, §2.2 fleet operations) is a whole-pod
+/// blast radius: every prefill slot, decode instance and pool server of
+/// that supernode goes away together, its pooled KV is flushed, and every
+/// session homed there must re-home to another pod — paying cross-pod
+/// re-prefill rather than an intra-pod pool fetch. Pods are homogeneous:
+/// one per-pod [`FailureDomainMap`] describes them all, and fleet-global
+/// rack ids are `pod * racks_per_pod + local_rack` (the same offsetting
+/// the fleet attribution merge applies to tier ids).
+#[derive(Debug, Clone)]
+pub struct FleetDomainMap {
+    pods: usize,
+    pod_map: FailureDomainMap,
+}
+
+impl FleetDomainMap {
+    pub fn new(pods: usize, pod_map: FailureDomainMap) -> FleetDomainMap {
+        FleetDomainMap { pods: pods.max(1), pod_map }
+    }
+
+    /// Supernode count — the number of top-tier failure domains.
+    pub fn pods(&self) -> usize {
+        self.pods
+    }
+
+    /// The (shared) within-pod domain layout.
+    pub fn pod_map(&self) -> &FailureDomainMap {
+        &self.pod_map
+    }
+
+    /// Fleet-global rack (PSU-domain) count.
+    pub fn racks(&self) -> usize {
+        self.pods * self.pod_map.racks()
+    }
+
+    /// Fleet-global rack id of a within-pod rack.
+    pub fn global_rack(&self, pod: usize, rack: usize) -> usize {
+        pod * self.pod_map.racks() + rack
+    }
+
+    /// Pod owning a fleet-global rack id.
+    pub fn pod_of_rack(&self, global_rack: usize) -> usize {
+        global_rack / self.pod_map.racks().max(1)
+    }
+
+    /// Components (prefill slots + decode instances + pool servers) a
+    /// whole-pod drain takes out — the supernode blast radius. Identical
+    /// for every pod by homogeneity.
+    pub fn pod_population(&self) -> usize {
+        (0..self.pod_map.racks()).map(|r| self.pod_map.rack_population(r)).sum()
+    }
+
+    /// True iff two fleet-global racks belong to the same supernode —
+    /// i.e. a transfer between components homed there stays on the UB
+    /// plane; across pods it must ride RDMA.
+    pub fn same_pod(&self, rack_a: usize, rack_b: usize) -> bool {
+        self.pod_of_rack(rack_a) == self.pod_of_rack(rack_b)
+    }
+}
+
 /// Clustered-incident generator: the correlated counterpart of
 /// [`crate::faults::FaultProfile`]. Where `FaultPlan::generate` draws
 /// independent fault times, this samples a failure *domain* per incident
@@ -504,6 +565,25 @@ mod tests {
         let fo = p.fault_options(9, &map);
         assert_eq!(fo.recovery_latency_us, p.replacement_latency_us);
         assert!(fo.recovery);
+    }
+
+    #[test]
+    fn fleet_map_nests_pods_above_racks() {
+        let fleet = FleetDomainMap::new(3, paper_map(4));
+        assert_eq!(fleet.pods(), 3);
+        assert_eq!(fleet.racks(), 24); // 3 pods x 8 racks
+        // global rack ids partition by pod
+        assert_eq!(fleet.global_rack(0, 7), 7);
+        assert_eq!(fleet.global_rack(1, 0), 8);
+        assert_eq!(fleet.pod_of_rack(7), 0);
+        assert_eq!(fleet.pod_of_rack(8), 1);
+        assert!(fleet.same_pod(0, 7));
+        assert!(!fleet.same_pod(7, 8));
+        // a pod drain blasts every component of the supernode
+        let per_pod: usize =
+            (0..fleet.pod_map().racks()).map(|r| fleet.pod_map().rack_population(r)).sum();
+        assert_eq!(fleet.pod_population(), per_pod);
+        assert!(fleet.pod_population() > 0);
     }
 
     #[test]

@@ -188,6 +188,68 @@ impl FaultPlan {
     }
 }
 
+/// A planned whole-supernode maintenance drain: pod `pod` is out of
+/// service over `[start_us, end_us)`. Deliberately *not* a [`FaultKind`]
+/// variant — a drain is scheduled fleet operations, enacted by the fleet
+/// admission router ([`crate::fleet::FleetRouter`]) at routing time, not
+/// an injected fault the per-pod simulator detects and recovers from.
+/// While drained, the pod admits nothing and its pooled KV is flushed:
+/// sessions homed there re-home to another pod and pay a full cross-pod
+/// re-prefill (there is no surviving prefix to import).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PodDrain {
+    pub pod: usize,
+    pub start_us: Micros,
+    pub end_us: Micros,
+}
+
+impl PodDrain {
+    /// True iff the pod is out of service at virtual time `t`.
+    pub fn active_at(&self, t: Micros) -> bool {
+        t >= self.start_us && t < self.end_us
+    }
+}
+
+/// A fleet maintenance schedule: pod-drain windows in start order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PodDrainPlan {
+    pub drains: Vec<PodDrain>,
+}
+
+impl PodDrainPlan {
+    pub fn new(mut drains: Vec<PodDrain>) -> PodDrainPlan {
+        drains.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+        PodDrainPlan { drains }
+    }
+
+    /// The `fleet_diurnal` acceptance schedule: drain the last pod across
+    /// the diurnal wave's peak (t = period/4), window one eighth of the
+    /// period wide — maintenance landing at the worst possible moment.
+    /// Deterministic by construction (no sampling); with a single pod
+    /// there is nowhere to re-home, so the plan is empty.
+    pub fn maintenance_at_peak(pods: usize, period_us: Micros) -> PodDrainPlan {
+        if pods < 2 {
+            return PodDrainPlan::default();
+        }
+        let peak = period_us / 4.0;
+        let half_window = period_us / 16.0;
+        PodDrainPlan::new(vec![PodDrain {
+            pod: pods - 1,
+            start_us: peak - half_window,
+            end_us: peak + half_window,
+        }])
+    }
+
+    /// Pods drained at virtual time `t`.
+    pub fn drained_at(&self, t: Micros) -> Vec<usize> {
+        self.drains.iter().filter(|d| d.active_at(t)).map(|d| d.pod).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.drains.is_empty()
+    }
+}
+
 /// Generator spec for [`FaultPlan::generate`]: how many faults of each
 /// class to inject over a virtual-time horizon.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -378,6 +440,23 @@ mod tests {
             !FaultKind::Straggler { instance: 0, factor: 2.0, duration_us: 1e6 }
                 .needs_detection()
         );
+    }
+
+    #[test]
+    fn pod_drain_plan_targets_the_wave_peak() {
+        let plan = PodDrainPlan::maintenance_at_peak(3, 24e6);
+        assert_eq!(plan.drains.len(), 1);
+        let d = plan.drains[0];
+        assert_eq!(d.pod, 2);
+        // window straddles t = period/4 = 6e6
+        assert!(d.start_us < 6e6 && d.end_us > 6e6, "{d:?}");
+        assert!(d.active_at(6e6) && !d.active_at(0.0) && !d.active_at(12e6));
+        assert_eq!(plan.drained_at(6e6), vec![2]);
+        assert!(plan.drained_at(0.0).is_empty());
+        // deterministic: same inputs, same plan
+        assert_eq!(plan, PodDrainPlan::maintenance_at_peak(3, 24e6));
+        // a single pod has nowhere to re-home — no drain is scheduled
+        assert!(PodDrainPlan::maintenance_at_peak(1, 24e6).is_empty());
     }
 
     #[test]

@@ -165,6 +165,28 @@
 //! never engage any of it and stay bit-identical
 //! (`tests/integration_session.rs`, `BENCH_session.json`).
 //!
+//! ## Fleet (multi-supernode serving)
+//!
+//! One CloudMatrix384 is the unit the UB fabric scales to; a production
+//! region runs *many*. The [`fleet`] layer models N supernodes behind a
+//! global admission router: each pod wraps the full
+//! [`coordinator::sim::ServeSim`], and [`fleet::FleetRouter`] places
+//! *sessions* across pods with the same queue-ratio affinity test the
+//! instance router applies — a session stays on the pod holding its
+//! cached prefix unless that pod's backlog exceeds the least-loaded
+//! pod's by [`fleet::FLEET_OVERLOAD_FACTOR`]. When a session does
+//! re-home across pods, its prefix is imported over the inter-supernode
+//! RDMA plane ([`netsim::NetSim::xpod_kv_us`] — *not* the UB fabric)
+//! and attribution carves the cost out as the `rdma_import` component;
+//! a pod drained for maintenance ([`faults::PodDrainPlan`], the
+//! supernode-granularity failure domain above
+//! [`domains::FleetDomainMap`]) admits nothing and its sessions pay a
+//! full cross-pod re-prefill instead. The `fleet_diurnal` scenario
+//! (session chat under a diurnal wave) plus `simulate --supernodes N
+//! [--no-fleet-affinity]` run the experiment; `--supernodes 1` is
+//! bit-exact with the single-supernode path
+//! (`tests/integration_fleet.rs`, `BENCH_fleet.json`).
+//!
 //! ## Observability (span traces, samplers, incident annotations)
 //!
 //! The [`telemetry`] subsystem keeps the *timeline* the end-of-run
@@ -221,6 +243,7 @@ pub mod config;
 pub mod coordinator;
 pub mod domains;
 pub mod faults;
+pub mod fleet;
 pub mod mempool;
 pub mod metrics;
 pub mod netsim;

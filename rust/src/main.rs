@@ -43,10 +43,12 @@ fn print_help() {
          \x20 simulate [--npus N] [--requests N] [--seed N]\n\
          \x20          [--scenario diurnal|burst_storm|long_context_drift|mixed_slo\n\
          \x20                      |memory_bound_decode|session_chat|agentic_loop\n\
-         \x20                      |chaos_crashes|chaos_degraded|correlated_rack_loss]\n\
+         \x20                      |chaos_crashes|chaos_degraded|correlated_rack_loss\n\
+         \x20                      |fleet_diurnal]\n\
          \x20          [--placement packed|spread_racks|spread_planes]\n\
          \x20          [--autoscale] [--no-offload] [--no-recovery] [--no-resilience]\n\
          \x20          [--no-cache-affinity] [--no-mtp]\n\
+         \x20          [--supernodes N] [--no-fleet-affinity]\n\
          \x20          [--trace-out PATH] [--metrics-out PATH] [--attrib-out PATH]\n\
          \x20          [--sample-period-us N]\n\
          \x20                           PDC serving simulation (CloudMatrix384);\n\
@@ -79,7 +81,17 @@ fn print_help() {
          \x20                           materialized token prefixes — follow-up turns\n\
          \x20                           reuse cached prefix KV and route with cache\n\
          \x20                           affinity (--no-cache-affinity and --no-mtp are\n\
-         \x20                           the fig22/fig23 ablation switches)\n\
+         \x20                           the fig22/fig23 ablation switches); --supernodes N\n\
+         \x20                           runs a *fleet* of N CloudMatrix384 pods behind a\n\
+         \x20                           global admission router — sessions stick to the\n\
+         \x20                           pod holding their cached prefix, cross-pod moves\n\
+         \x20                           import the prefix over the inter-supernode RDMA\n\
+         \x20                           plane (the rdma_import attribution component),\n\
+         \x20                           and fleet_diurnal drains one pod for maintenance\n\
+         \x20                           at the traffic peak (--no-fleet-affinity is the\n\
+         \x20                           stateless least-loaded ablation; per-pod exports\n\
+         \x20                           land at PATH.pod<p>, --attrib-out stays one\n\
+         \x20                           merged artifact)\n\
          \x20 attrib diff A B           compare two --attrib-out artifacts: rank the\n\
          \x20                           per-tier waterfall components by how much their\n\
          \x20                           mean per-request time moved and name the top\n\
@@ -230,6 +242,7 @@ fn simulate(args: &[String]) -> Result<()> {
     );
     let mut fault_profile = None;
     let mut correlated = None;
+    let mut fleet_wave_period = None;
     let trace = match flag_val(args, "--scenario") {
         Some(name) => {
             let Some(sc) = ScenarioSpec::by_name(&name, seed) else {
@@ -241,6 +254,11 @@ fn simulate(args: &[String]) -> Result<()> {
             cfg.serving.tier_slos = sc.tier_slo_configs();
             fault_profile = sc.fault_profile;
             correlated = sc.correlated;
+            if sc.name == "fleet_diurnal" {
+                // fleet runs schedule the maintenance drain at this
+                // wave's traffic peak
+                fleet_wave_period = sc.wave.as_ref().map(|w| w.period_us);
+            }
             println!("[simulate] scenario preset: {}", sc.name);
             generate_scenario(&sc, n)
         }
@@ -306,6 +324,13 @@ fn simulate(args: &[String]) -> Result<()> {
         cache_affinity: !has_flag(args, "--no-cache-affinity"),
         ..SimOptions::default()
     };
+    let supernodes: usize =
+        flag_val(args, "--supernodes").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    if supernodes > 1 {
+        // the fleet path; --supernodes 1 (the default) falls through to
+        // the plain single-supernode run below, bit-exactly
+        return simulate_fleet(args, cfg, opts, trace, supernodes, fleet_wave_period);
+    }
     let mut sim = ServeSim::new(cfg, opts, trace);
     let r = sim.run();
     println!("[simulate] {} requests in {:.2} s virtual", r.requests_completed, r.duration_us / 1e6);
@@ -428,6 +453,67 @@ fn simulate(args: &[String]) -> Result<()> {
                     );
                 }
             }
+        }
+    }
+    Ok(())
+}
+
+/// `simulate --supernodes N`: run the fleet of N pods behind the global
+/// admission router. Per-pod trace/metrics exports land at
+/// `PATH.pod<p>`; `--attrib-out` writes one merged artifact (tier ids
+/// offset per pod so `attrib diff` pairs pod-for-pod).
+fn simulate_fleet(
+    args: &[String],
+    cfg: cm_infer::config::Config,
+    opts: cm_infer::coordinator::sim::SimOptions,
+    trace: Vec<cm_infer::workload::Request>,
+    supernodes: usize,
+    drain_period_us: Option<f64>,
+) -> Result<()> {
+    use cm_infer::faults::PodDrainPlan;
+    use cm_infer::fleet::{FleetOptions, FleetSim};
+
+    let drains = match drain_period_us {
+        Some(period) => PodDrainPlan::maintenance_at_peak(supernodes, period),
+        None => PodDrainPlan::default(),
+    };
+    for d in &drains.drains {
+        println!(
+            "[simulate] fleet maintenance: pod{} drained {:.2}s – {:.2}s (traffic peak)",
+            d.pod,
+            d.start_us / 1e6,
+            d.end_us / 1e6
+        );
+    }
+    let affinity = !has_flag(args, "--no-fleet-affinity");
+    println!(
+        "[simulate] fleet: {supernodes} supernodes, affinity routing {}",
+        if affinity { "ON" } else { "OFF (least-loaded ablation)" }
+    );
+    let fleet = FleetSim::new(cfg, opts, FleetOptions { supernodes, affinity, drains });
+    let run = fleet.run(trace);
+    print!("{}", run.report.render());
+
+    let trace_out = flag_val(args, "--trace-out");
+    let metrics_out = flag_val(args, "--metrics-out");
+    for (pod, tel) in run.telemetry.iter().enumerate() {
+        let Some(tel) = tel.as_ref() else { continue };
+        let r = &run.report.pods[pod];
+        if let Some(base) = &trace_out {
+            let path = format!("{base}.pod{pod}");
+            write_export(&path, &tel.trace_json(r), "trace")?;
+            println!("  trace pod{pod}: {} spans → {path}", tel.spans().len());
+        }
+        if let Some(base) = &metrics_out {
+            let path = format!("{base}.pod{pod}");
+            write_export(&path, &tel.metrics_jsonl(), "metrics")?;
+            println!("  metrics pod{pod}: {} samples → {path}", tel.samples().len());
+        }
+    }
+    if let Some(path) = flag_val(args, "--attrib-out") {
+        if let Some(doc) = run.merged_attrib_json() {
+            write_export(&path, &doc, "attribution")?;
+            println!("  attribution: merged artifact over {supernodes} pods → {path}");
         }
     }
     Ok(())

@@ -110,6 +110,14 @@ impl NetSim {
         }
     }
 
+    /// Cross-supernode KV import cost, µs: a pod pulling a session's
+    /// cached prefix out of another pod's memory pool rides the RDMA
+    /// plane (§2.2 — the UB fabric ends at the supernode boundary), as an
+    /// inter-node NPU↔CPU read of the KV bytes.
+    pub fn xpod_kv_us(&self, bytes: u64) -> Micros {
+        self.transfer_us(Plane::Rdma, PathKind::NpuToCpu, OpKind::Read, Locality::InterNode, bytes)
+    }
+
     /// Inter/intra degradation ratio for a UB path (Table 1's headline:
     /// bandwidth within 3%, latency +<1 µs).
     pub fn ub_degradation(&self, path: PathKind, op: OpKind) -> (f64, f64) {
@@ -505,6 +513,23 @@ mod tests {
         // doubling payload roughly doubles the bandwidth-dominated total
         // (base latency dilutes the ratio slightly)
         assert!(t2 > t1 * 1.6 && t2 < t1 * 2.2, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn xpod_import_rides_rdma_and_costs_more_than_ub() {
+        let n = NetSim::default();
+        let bytes = 8u64 << 20; // a ~4K-token fp16 KV prefix, order of magnitude
+        let xpod = n.xpod_kv_us(bytes);
+        assert!(
+            (xpod
+                - n.transfer_us(Plane::Rdma, PathKind::NpuToCpu, OpKind::Read, Locality::InterNode, bytes))
+            .abs()
+                < 1e-9
+        );
+        // crossing the supernode boundary is strictly worse than the
+        // intra-pod UB pool fetch it replaces
+        let ub = n.transfer_us(Plane::Ub, PathKind::NpuToCpu, OpKind::Read, Locality::InterNode, bytes);
+        assert!(xpod > 3.0 * ub, "xpod={xpod} ub={ub}");
     }
 
     #[test]

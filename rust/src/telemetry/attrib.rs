@@ -82,6 +82,11 @@ pub enum Component {
     Reprefill,
     /// Recovery: KV re-fetched from the pool onto the re-homed instance.
     KvRefetch,
+    /// Cross-supernode KV import over the RDMA plane (fleet runs: a
+    /// session re-homed across pods and pulled its prefix from its old
+    /// pod's pool), carved out of the admission-queue span exactly like
+    /// [`Component::PoolFetch`].
+    RdmaImport,
     /// Integer residual `end_to_end − Σ named`. Structurally zero (the
     /// span chain is contiguous); kept explicit so conservation holds by
     /// construction and any future gap is *visible*, not absorbed.
@@ -89,7 +94,7 @@ pub enum Component {
 }
 
 impl Component {
-    pub const N: usize = 10;
+    pub const N: usize = 11;
     pub const ALL: [Component; Component::N] = [
         Component::AdmissionQueue,
         Component::PoolFetch,
@@ -100,6 +105,7 @@ impl Component {
         Component::ReprefillQueue,
         Component::Reprefill,
         Component::KvRefetch,
+        Component::RdmaImport,
         Component::Unattributed,
     ];
 
@@ -114,6 +120,7 @@ impl Component {
             Component::ReprefillQueue => "reprefill_queue",
             Component::Reprefill => "reprefill",
             Component::KvRefetch => "kv_refetch",
+            Component::RdmaImport => "rdma_import",
             Component::Unattributed => "unattributed",
         }
     }
@@ -357,6 +364,13 @@ impl Attribution {
                         components[Component::PoolFetch.idx()] += fetch;
                         components[Component::AdmissionQueue.idx()] += dur_ns - fetch;
                     }
+                    // cross-pod RDMA import: same carve, different plane
+                    // (fleet runs only — see `SpanArg::XpodImport`)
+                    (Component::AdmissionQueue, Some(SpanArg::XpodImport { import_ns })) => {
+                        let imp = (import_ns as i64).min(dur_ns).max(0);
+                        components[Component::RdmaImport.idx()] += imp;
+                        components[Component::AdmissionQueue.idx()] += dur_ns - imp;
+                    }
                     (c, arg) => {
                         components[c.idx()] += dur_ns;
                         match arg {
@@ -583,6 +597,36 @@ mod tests {
         assert!(w.conserves());
         assert_eq!(w.components[Component::PoolFetch.idx()], 4_000);
         assert_eq!(w.components[Component::AdmissionQueue.idx()], 0);
+    }
+
+    #[test]
+    fn xpod_import_carves_onto_the_rdma_component() {
+        let mut t = Telemetry::new(TelemetryOptions::default(), 1);
+        // a fleet re-home: 12µs of the 20µs admission span is the RDMA
+        // prefix import from the session's old pod
+        t.phase_with(
+            7,
+            0.0,
+            SpanKind::PrefillQueue,
+            Some(SpanArg::XpodImport { import_ns: 12_000 }),
+        );
+        t.phase(7, 20.0, SpanKind::Prefill);
+        t.close_tiered(7, 60.0, "complete", 0);
+        let a = Attribution::analyze(&t, &report(1));
+        let w = &a.waterfalls[0];
+        assert!(w.conserves());
+        assert_eq!(w.components[Component::RdmaImport.idx()], 12_000);
+        assert_eq!(w.components[Component::AdmissionQueue.idx()], 8_000);
+        // the UB pool-fetch bucket stays empty — different plane
+        assert_eq!(w.components[Component::PoolFetch.idx()], 0);
+        // and the artifact names it
+        let doc = Json::parse(&a.to_json()).unwrap();
+        let comps =
+            doc.get("tiers").unwrap().as_arr().unwrap()[0].get("components").unwrap().clone();
+        assert_eq!(
+            comps.get("rdma_import").unwrap().get("total_ns").unwrap().as_f64().unwrap(),
+            12_000.0
+        );
     }
 
     #[test]

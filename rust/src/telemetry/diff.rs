@@ -96,9 +96,20 @@ pub fn diff(a: &Json, b: &Json) -> Result<AttribDiff> {
     let a_tiers = tiers_of(a)?;
     let b_tiers = tiers_of(b)?;
 
+    // pair tiers by their `tier` id, not positionally: artifacts with
+    // differing tier sets (one run drained a tier, a fleet merge offset
+    // the ids) must compare tier N against tier N, never tier N against
+    // whatever happened to share its array index
+    let tier_id = |t: &Json| t.get("tier").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as usize;
+    let b_by_id: std::collections::BTreeMap<usize, &Json> =
+        b_tiers.iter().map(|t| (tier_id(t), t)).collect();
+
     let mut movers = Vec::new();
-    for (ta, tb) in a_tiers.iter().zip(&b_tiers) {
-        let tier = ta.get("tier").and_then(|t| t.as_f64().ok()).unwrap_or(0.0) as usize;
+    for ta in a_tiers.iter() {
+        let tier = tier_id(ta);
+        let Some(&tb) = b_by_id.get(&tier) else {
+            continue; // tier absent on side B: nothing comparable
+        };
         let (a_req, b_req) = (
             ta.get("requests").and_then(|r| r.as_f64().ok()).unwrap_or(0.0),
             tb.get("requests").and_then(|r| r.as_f64().ok()).unwrap_or(0.0),
@@ -178,6 +189,56 @@ mod tests {
         let b = artifact(200_000.0, 20.0);
         let d = diff(&a, &b).unwrap();
         assert!(d.movers.iter().all(|m| m.delta_mean_us.abs() < 1e-9));
+    }
+
+    fn tiered_artifact(tiers: &[(usize, f64)]) -> Json {
+        // per tier: requests=10, prefill flat 40 µs total, decode varies
+        let body = tiers
+            .iter()
+            .map(|&(tier, decode_total_ns)| {
+                let e2e = decode_total_ns + 40_000.0;
+                format!(
+                    r#"{{"tier":{tier},"requests":10,
+                        "end_to_end_total_ns":{e2e},
+                        "components":{{
+                          "prefill":{{"total_ns":40000,"share":{}}},
+                          "decode":{{"total_ns":{decode_total_ns},"share":{}}}}}}}"#,
+                    40_000.0 / e2e,
+                    decode_total_ns / e2e
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        Json::parse(&format!(r#"{{"schema":"cm-infer.attrib.v1","tiers":[{body}]}}"#)).unwrap()
+    }
+
+    #[test]
+    fn pairs_tiers_by_id_not_position() {
+        // A has tiers {0, 2}; B has tiers {1, 2}. Positional zip would
+        // compare A.tier0 against B.tier1 — id matching must compare only
+        // the shared tier 2 and see exactly the decode movement there.
+        let a = tiered_artifact(&[(0, 100_000.0), (2, 100_000.0)]);
+        let b = tiered_artifact(&[(1, 900_000.0), (2, 300_000.0)]);
+        let d = diff(&a, &b).unwrap();
+        assert!(
+            d.movers.iter().all(|m| m.tier == 2),
+            "only the shared tier id is comparable: {:?}",
+            d.movers.iter().map(|m| m.tier).collect::<Vec<_>>()
+        );
+        let top = d.top().unwrap();
+        assert_eq!((top.tier, top.component.as_str()), (2, "decode"));
+        // mean decode went 10 µs → 30 µs per request on tier 2 — NOT the
+        // 80 µs jump a positional mispairing against B.tier1 would report
+        assert!((top.delta_mean_us - 20.0).abs() < 1e-9, "{}", top.delta_mean_us);
+    }
+
+    #[test]
+    fn disjoint_tier_sets_compare_nothing() {
+        let a = tiered_artifact(&[(0, 100_000.0)]);
+        let b = tiered_artifact(&[(1, 300_000.0)]);
+        let d = diff(&a, &b).unwrap();
+        assert!(d.movers.is_empty());
+        assert!(d.render().starts_with("no comparable tiers"));
     }
 
     #[test]

@@ -116,6 +116,11 @@ pub enum SpanArg {
     /// cached prefix KV (`fetch_ns` of it, quantized) — the attribution
     /// engine carves this out as its own waterfall component.
     PoolFetch { fetch_ns: u64 },
+    /// The admission-queue span embeds a *cross-supernode* KV import over
+    /// the RDMA plane (`import_ns` of it): a session re-homed across pods
+    /// and pulled its cached prefix from its old pod's pool. Carved out
+    /// as the `rdma_import` waterfall component.
+    XpodImport { import_ns: u64 },
 }
 
 impl SpanArg {
@@ -134,6 +139,9 @@ impl SpanArg {
             }
             SpanArg::PoolFetch { fetch_ns } => {
                 m.insert("pool_fetch_us".to_string(), Json::Num(fetch_ns as f64 / 1000.0));
+            }
+            SpanArg::XpodImport { import_ns } => {
+                m.insert("xpod_import_us".to_string(), Json::Num(import_ns as f64 / 1000.0));
             }
         }
         m
@@ -237,6 +245,9 @@ pub struct Telemetry {
     win_tokens: u64,
     win_tier_finished: Vec<u64>,
     win_tier_attained: Vec<u64>,
+    /// Supernode this recorder belongs to in a fleet run (`None` for the
+    /// single-supernode path — exports stay byte-identical then).
+    pod: Option<usize>,
 }
 
 impl Telemetry {
@@ -253,7 +264,20 @@ impl Telemetry {
             win_tokens: 0,
             win_tier_finished: vec![0; n_tiers.max(1)],
             win_tier_attained: vec![0; n_tiers.max(1)],
+            pod: None,
         }
+    }
+
+    /// Tag this recorder with its supernode id (fleet runs): the trace
+    /// export names the request process `requests pod<p>` so merged
+    /// per-pod traces stay distinguishable in Perfetto.
+    pub fn set_pod(&mut self, pod: usize) {
+        self.pod = Some(pod);
+    }
+
+    /// The supernode this recorder was tagged with, if any.
+    pub fn pod(&self) -> Option<usize> {
+        self.pod
     }
 
     /// Transition request `rid` into phase `kind` at `now`: closes any
@@ -347,10 +371,16 @@ impl Telemetry {
     /// they always agree with the scalars the report prints.
     pub fn trace_json(&self, report: &ServingReport) -> String {
         let mut events: Vec<Json> = Vec::new();
-        for (pid, name) in
-            [(PID_REQUESTS, "requests"), (PID_INCIDENTS, "incidents"), (PID_ELASTIC, "elastic")]
-        {
-            events.push(meta(pid, 0, "process_name", name));
+        let requests_name = match self.pod {
+            Some(p) => format!("requests pod{p}"),
+            None => "requests".to_string(),
+        };
+        for (pid, name) in [
+            (PID_REQUESTS, requests_name.as_str()),
+            (PID_INCIDENTS, "incidents"),
+            (PID_ELASTIC, "elastic"),
+        ] {
+            events.push(meta(pid, 0.0, "process_name", name));
         }
         for s in &self.spans {
             events.push(complete(

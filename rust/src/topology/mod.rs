@@ -101,6 +101,58 @@ impl Supernode {
     }
 }
 
+/// Physical address of one NPU die inside a *fleet* of supernodes: the
+/// pod (supernode) index plus the within-pod die address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FleetDieId {
+    pub pod: usize,
+    pub die: DieId,
+}
+
+/// A fleet of identical supernodes behind a global admission router
+/// (§2.2: the UB plane is a *supernode-scope* fabric — everything
+/// pod-to-pod rides the RDMA plane). Pods are homogeneous by
+/// construction: one [`CloudMatrixTopo`] describes them all, and fleet
+/// die indices are `pod * dies_per_pod + local_die`.
+#[derive(Debug, Clone)]
+pub struct FleetTopo {
+    pub supernodes: usize,
+    pub pod: Supernode,
+}
+
+impl FleetTopo {
+    pub fn new(supernodes: usize, topo: CloudMatrixTopo) -> Self {
+        assert!(supernodes >= 1, "a fleet has at least one supernode");
+        FleetTopo { supernodes, pod: Supernode::new(topo) }
+    }
+
+    /// `n` CloudMatrix384 pods.
+    pub fn cloudmatrix384(supernodes: usize) -> Self {
+        Self::new(supernodes, CloudMatrixTopo::default())
+    }
+
+    pub fn n_dies(&self) -> usize {
+        self.supernodes * self.pod.n_dies()
+    }
+
+    /// Fleet-global die index → (pod, within-pod address).
+    pub fn die(&self, idx: usize) -> FleetDieId {
+        let per_pod = self.pod.n_dies();
+        FleetDieId { pod: idx / per_pod, die: self.pod.die(idx % per_pod) }
+    }
+
+    /// (pod, within-pod address) → fleet-global die index.
+    pub fn die_index(&self, id: FleetDieId) -> usize {
+        id.pod * self.pod.n_dies() + self.pod.die_index(id.die)
+    }
+
+    /// True iff a transfer between the two dies must leave the UB fabric
+    /// and ride the RDMA plane (see [`crate::netsim::NetSim::xpod_kv_us`]).
+    pub fn cross_pod(&self, a: FleetDieId, b: FleetDieId) -> bool {
+        a.pod != b.pod
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,6 +191,23 @@ mod tests {
         assert_eq!(sn.rack(a), 0);
         assert_eq!(sn.rack(c), 1);
         assert_eq!(sn.rack(sn.die(767)), 11);
+    }
+
+    #[test]
+    fn fleet_addressing_roundtrip_and_pod_boundary() {
+        let fleet = FleetTopo::cloudmatrix384(3);
+        assert_eq!(fleet.n_dies(), 3 * 768);
+        for idx in [0, 767, 768, 1535, 2303] {
+            assert_eq!(fleet.die_index(fleet.die(idx)), idx);
+        }
+        let a = fleet.die(0);
+        let b = fleet.die(767); // last die, same pod
+        let c = fleet.die(768); // first die, next pod
+        assert_eq!((a.pod, c.pod), (0, 1));
+        assert!(!fleet.cross_pod(a, b));
+        assert!(fleet.cross_pod(a, c));
+        // the within-pod address of pod 1's first die equals pod 0's
+        assert_eq!(c.die, a.die);
     }
 
     #[test]

@@ -29,6 +29,11 @@ pub struct Request {
     /// `ServingConfig::tier_slos`). Mixed-SLO scenarios thread this through
     /// the batcher's per-tier concurrency caps.
     pub slo_tier: usize,
+    /// Prefix tokens importable from another supernode's pool over the
+    /// RDMA plane. Set only by the fleet admission router
+    /// ([`crate::fleet::FleetRouter`]) when a session re-homes across
+    /// pods; the trace generator always emits 0.
+    pub xpod_import_tokens: usize,
 }
 
 /// Workload shape parameters.
@@ -246,6 +251,7 @@ fn generate_impl(spec: &WorkloadSpec, scenario: Option<&ScenarioSpec>, n: usize)
             session,
             turn,
             slo_tier,
+            xpod_import_tokens: 0,
         });
     }
     out
@@ -313,7 +319,7 @@ fn ln_mean(target: f64, sigma: f64) -> f64 {
 
 impl ScenarioSpec {
     /// All preset names accepted by [`ScenarioSpec::by_name`].
-    pub const PRESETS: [&'static str; 10] = [
+    pub const PRESETS: [&'static str; 11] = [
         "diurnal",
         "burst_storm",
         "long_context_drift",
@@ -324,6 +330,7 @@ impl ScenarioSpec {
         "chaos_crashes",
         "chaos_degraded",
         "correlated_rack_loss",
+        "fleet_diurnal",
     ];
 
     pub fn by_name(name: &str, seed: u64) -> Option<ScenarioSpec> {
@@ -338,6 +345,7 @@ impl ScenarioSpec {
             "chaos_crashes" => Some(Self::chaos_crashes(seed)),
             "chaos_degraded" => Some(Self::chaos_degraded(seed)),
             "correlated_rack_loss" => Some(Self::correlated_rack_loss(seed)),
+            "fleet_diurnal" => Some(Self::fleet_diurnal(seed)),
             _ => None,
         }
     }
@@ -528,6 +536,20 @@ impl ScenarioSpec {
             fault_profile: None,
             correlated: None,
         }
+    }
+
+    /// Fleet-scale diurnal chat: the `session_chat` session structure
+    /// (materialized tokens, Zipf-hot sessions, long shared prefixes)
+    /// under a sinusoidal diurnal arrival wave. Region skew emerges from
+    /// the session skew itself — hot sessions concentrate on their home
+    /// pod under affinity routing — and the wave's peak (t = period/4) is
+    /// where the fleet maintenance drain of one pod lands, forcing
+    /// sessions to re-home across supernodes at the worst moment.
+    pub fn fleet_diurnal(seed: u64) -> ScenarioSpec {
+        let mut sc = Self::session_chat(seed);
+        sc.name = "fleet_diurnal";
+        sc.wave = Some(RateWave { period_us: 24e6, amplitude: 0.45 });
+        sc
     }
 
     /// Agentic tool loops: interleaved think/act turns against a shared
@@ -840,6 +862,7 @@ mod tests {
             "memory_bound_decode",
             "session_chat",
             "agentic_loop",
+            "fleet_diurnal",
         ] {
             let sc = ScenarioSpec::by_name(name, 3).unwrap();
             assert!(sc.fault_profile.is_none(), "{name}");
@@ -853,6 +876,31 @@ mod tests {
             assert_eq!(x.arrival_us, y.arrival_us);
             assert_eq!(x.prompt_tokens, y.prompt_tokens);
         }
+    }
+
+    #[test]
+    fn fleet_diurnal_is_session_chat_under_a_wave() {
+        let sc = ScenarioSpec::by_name("fleet_diurnal", 9).unwrap();
+        assert!(sc.base.materialize_tokens, "fleet routing needs real prefixes");
+        let wave = sc.wave.expect("fleet preset must carry a diurnal wave");
+        assert_eq!(wave.period_us, 24e6);
+        let trace = generate_scenario(&sc, 4000);
+        // sessions dominate (re-homing has something to move)…
+        let turns = trace.iter().filter(|r| r.turn > 0).count();
+        assert!(turns * 2 > trace.len(), "only {turns} follow-up turns");
+        // …and the wave shows: arrivals around the peak (t ≈ period/4)
+        // clearly outnumber arrivals around the trough (t ≈ 3·period/4)
+        let count_in = |lo: f64, hi: f64| {
+            trace.iter().filter(|r| (lo..hi).contains(&r.arrival_us)).count()
+        };
+        let peak = count_in(4e6, 8e6);
+        let trough = count_in(16e6, 20e6);
+        assert!(
+            peak as f64 > 1.5 * trough.max(1) as f64,
+            "peak {peak} vs trough {trough}"
+        );
+        // the generator itself never marks cross-pod imports
+        assert!(trace.iter().all(|r| r.xpod_import_tokens == 0));
     }
 
     #[test]

@@ -1,0 +1,168 @@
+//! End-to-end tests of fleet-scale (multi-supernode) serving: on the
+//! `fleet_diurnal` scenario — session chat under a diurnal wave, with
+//! one pod drained for maintenance at the traffic peak — prefix-affinity
+//! admission routing must strictly beat the stateless least-loaded
+//! ablation on fleet goodput rate; cross-pod session moves must show up
+//! as RDMA-priced `rdma_import` components in the merged attribution
+//! artifact; a 1-supernode fleet must be bit-exact with the plain
+//! single-supernode path; and fleet runs must rerun bit-exactly.
+
+use cm_infer::config::Config;
+use cm_infer::coordinator::sim::{ServeSim, SimOptions};
+use cm_infer::faults::PodDrainPlan;
+use cm_infer::fleet::{FleetOptions, FleetRun, FleetSim};
+use cm_infer::telemetry::TelemetryOptions;
+use cm_infer::util::Json;
+use cm_infer::workload::{generate_scenario, Request, ScenarioSpec};
+
+const N: usize = 2000;
+const SEED: u64 = 21;
+const PODS: usize = 3;
+
+fn scenario() -> (ScenarioSpec, Vec<Request>) {
+    let sc = ScenarioSpec::by_name("fleet_diurnal", SEED).unwrap();
+    let trace = generate_scenario(&sc, N);
+    (sc, trace)
+}
+
+fn run_fleet(pods: usize, affinity: bool, telemetry: bool) -> FleetRun {
+    let (sc, trace) = scenario();
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    let opts = SimOptions {
+        seed: SEED,
+        telemetry: telemetry.then(TelemetryOptions::default),
+        ..SimOptions::default()
+    };
+    // the acceptance scenario: one pod drained at the diurnal peak
+    let period = sc.wave.as_ref().map(|w| w.period_us).unwrap();
+    let drains = PodDrainPlan::maintenance_at_peak(pods, period);
+    FleetSim::new(cfg, opts, FleetOptions { supernodes: pods, affinity, drains }).run(trace)
+}
+
+/// (a) The acceptance criterion: with one pod drained at the traffic
+/// peak, fleet affinity routing strictly beats the least-loaded ablation
+/// on goodput rate. Both legs complete the identical trace (same useful
+/// tokens), so the win is the makespan: affinity's prefix reuse — pod
+/// cache hits plus RDMA imports on re-homes — cuts prefill compute.
+#[test]
+fn fleet_affinity_strictly_beats_least_loaded_on_goodput_under_peak_drain() {
+    let aff = run_fleet(PODS, true, false);
+    let abl = run_fleet(PODS, false, false);
+
+    // every leg serves the identical trace to completion
+    for (name, run) in [("affinity", &aff), ("ablation", &abl)] {
+        assert_eq!(
+            run.report.requests_completed(),
+            N as u64,
+            "{name} leg dropped requests"
+        );
+        for (p, r) in run.report.pods.iter().enumerate() {
+            assert_eq!(r.requests_lost, 0, "{name} leg lost requests on pod{p}");
+        }
+    }
+    assert_eq!(
+        aff.report.goodput_tokens(),
+        abl.report.goodput_tokens(),
+        "same trace completed => same useful tokens on both legs"
+    );
+
+    // the fleet machinery visibly engaged on the affinity leg...
+    assert!(aff.report.moved_sessions > 0, "overload/drain must re-home some sessions");
+    assert!(aff.report.xpod_imports > 0, "re-homed sessions must import prefix over RDMA");
+    assert!(aff.report.xpod_import_tokens > 0);
+    assert!(
+        aff.report.forced_reprefills > 0,
+        "sessions fleeing the drained pod must pay the full re-prefill"
+    );
+    assert_eq!(aff.report.uncharged_fallbacks, 0, "only one pod drains at a time");
+    // ...and never on the ablation, which tracks no sessions at all
+    assert_eq!(abl.report.imports_marked, 0);
+    assert_eq!(abl.report.xpod_imports, 0);
+    assert_eq!(abl.report.forced_reprefills, 0);
+
+    // acceptance: strictly higher fleet goodput rate
+    let (f, a) = (aff.report.goodput_tokens_per_s(), abl.report.goodput_tokens_per_s());
+    assert!(
+        f > a,
+        "fleet affinity must strictly lift goodput: {f:.0} vs {a:.0} tok/s"
+    );
+}
+
+/// (b) Cross-pod prefix imports appear as RDMA-priced components in the
+/// merged attribution artifact: some tier carries `rdma_import` time,
+/// every tier names its pod, and the pod-offset tier ids are unique (so
+/// `attrib diff` pairs them pod-for-pod by id).
+#[test]
+fn cross_pod_imports_land_on_the_rdma_component_in_the_merged_artifact() {
+    let run = run_fleet(PODS, true, true);
+    assert!(run.report.xpod_imports > 0, "the scenario must exercise imports");
+
+    let doc = Json::parse(&run.merged_attrib_json().expect("telemetry was on")).unwrap();
+    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "cm-infer.attrib.v1");
+    assert_eq!(doc.get("supernodes").unwrap().as_f64().unwrap(), PODS as f64);
+
+    let tiers = doc.get("tiers").unwrap().as_arr().unwrap();
+    assert!(!tiers.is_empty());
+    let mut ids = std::collections::BTreeSet::new();
+    let mut rdma_total_ns = 0.0;
+    let mut pods_seen = std::collections::BTreeSet::new();
+    for t in tiers {
+        let id = t.get("tier").unwrap().as_f64().unwrap() as i64;
+        assert!(ids.insert(id), "pod-offset tier ids must be unique: {id}");
+        pods_seen.insert(t.get("pod").unwrap().as_f64().unwrap() as i64);
+        let comps = t.get("components").unwrap().as_obj().unwrap();
+        let rdma = comps.get("rdma_import").expect("every tier names the component");
+        rdma_total_ns += rdma.get("total_ns").unwrap().as_f64().unwrap();
+    }
+    assert!(
+        rdma_total_ns > 0.0,
+        "priced imports must attribute time to rdma_import"
+    );
+    assert_eq!(pods_seen.len(), PODS, "every pod contributes tiers");
+}
+
+/// (c) `--supernodes 1` is the single-supernode path, bit for bit: the
+/// admission walk is the identity, the pod seed is the run seed, and the
+/// one pod's report matches a plain [`ServeSim`] run exactly.
+#[test]
+fn single_supernode_fleet_is_bit_exact_with_the_plain_path() {
+    let (sc, trace) = scenario();
+    let mut cfg = Config::default();
+    cfg.serving.tier_slos = sc.tier_slo_configs();
+    let opts = SimOptions { seed: SEED, ..SimOptions::default() };
+
+    let plain = ServeSim::new(cfg.clone(), opts.clone(), trace.clone()).run();
+    let fleet = FleetSim::new(cfg, opts, FleetOptions::default()).run(trace);
+
+    assert_eq!(fleet.report.pods.len(), 1);
+    assert_eq!(fleet.report.moved_sessions, 0);
+    assert_eq!(fleet.report.xpod_imports, 0);
+    let r = &fleet.report.pods[0];
+    assert_eq!(r.duration_us.to_bits(), plain.duration_us.to_bits());
+    assert_eq!(r.requests_completed, plain.requests_completed);
+    assert_eq!(r.output_tokens, plain.output_tokens);
+    assert_eq!(r.goodput_tokens, plain.goodput_tokens);
+    assert_eq!(r.ttft_us.p99.to_bits(), plain.ttft_us.p99.to_bits());
+    assert_eq!(r.tpot_us.p99.to_bits(), plain.tpot_us.p99.to_bits());
+    assert_eq!(r.cache_hit_rate.to_bits(), plain.cache_hit_rate.to_bits());
+}
+
+/// (d) Bit-exact rerun determinism of the full fleet run, drain and all.
+#[test]
+fn fleet_runs_rerun_bit_exact() {
+    let a = run_fleet(PODS, true, false);
+    let b = run_fleet(PODS, true, false);
+    assert_eq!(a.report.makespan_us().to_bits(), b.report.makespan_us().to_bits());
+    assert_eq!(a.report.goodput_tokens(), b.report.goodput_tokens());
+    assert_eq!(a.report.moved_sessions, b.report.moved_sessions);
+    assert_eq!(a.report.xpod_imports, b.report.xpod_imports);
+    assert_eq!(a.report.xpod_import_tokens, b.report.xpod_import_tokens);
+    assert_eq!(a.report.forced_reprefills, b.report.forced_reprefills);
+    for (x, y) in a.report.pods.iter().zip(&b.report.pods) {
+        assert_eq!(x.duration_us.to_bits(), y.duration_us.to_bits());
+        assert_eq!(x.output_tokens, y.output_tokens);
+        assert_eq!(x.ttft_us.p99.to_bits(), y.ttft_us.p99.to_bits());
+        assert_eq!(x.tpot_us.p99.to_bits(), y.tpot_us.p99.to_bits());
+    }
+}

@@ -73,7 +73,7 @@ fn prop_router_token_conservation() {
         for _ in 0..g.usize(1..=200) {
             if g.bool() || outstanding == 0 {
                 let tokens = g.u64(1..=10_000);
-                let d = router.route(g.u64(0..=20), tokens);
+                let d = router.route(g.u64(0..=20), tokens).unwrap();
                 per_instance[d.instance] += tokens as i64;
                 outstanding += tokens as i64;
             } else {
@@ -107,8 +107,74 @@ fn prop_p2p_routes_to_least_loaded() {
             }
         }
         let min_before = *router.queued_tokens.iter().min().unwrap();
-        let d = router.route(g.u64(0..=100), 1);
+        let d = router.route(g.u64(0..=100), 1).unwrap();
         router.queued_tokens[d.instance] - 1 == min_before
+    });
+}
+
+#[test]
+fn prop_routes_never_land_on_inactive_instances_under_churn() {
+    // arbitrary interleavings of fail/drain/donor/recover transitions and
+    // route calls: every decision must name an `is_active` instance, and
+    // `None` may be returned only when zero instances are routable (in
+    // which case nothing is charged).
+    check("router-churn-active-only", 200, |g| {
+        let n = g.usize(1..=6);
+        let kind = if g.bool() {
+            RouterKind::PeerToPeer
+        } else {
+            RouterKind::KvCentric { overload_factor: g.f64(1.0, 10.0) }
+        };
+        let mut router = Router::new(kind, n);
+        for _ in 0..g.usize(1..=300) {
+            let i = g.usize(0..=n - 1);
+            match g.usize(0..=7) {
+                0 => router.set_failed(i, true),
+                1 => router.set_failed(i, false),
+                2 => router.set_active(i, false),
+                3 => router.set_active(i, true),
+                4 => {
+                    // set_donor asserts Active-only; churn through the
+                    // legal transition exactly like the sim does
+                    if router.state(i) == cm_infer::coordinator::router::InstanceState::Active {
+                        router.set_donor(i, true);
+                    }
+                }
+                5 => router.set_donor(i, false),
+                _ => {
+                    let session = g.u64(0..=30);
+                    let tokens = g.u64(1..=10_000);
+                    let before: u64 = router.queued_tokens.iter().sum();
+                    let decision = match g.usize(0..=3) {
+                        0 => router.route(session, tokens),
+                        1 => router
+                            .route_affinity(session, tokens, g.f64(1.0, 8.0))
+                            .map(|(d, _)| d),
+                        2 => {
+                            let avoid = g.usize(0..=n - 1);
+                            router.route_where(session, tokens, |j| j != avoid)
+                        }
+                        _ => router.route_avoiding_donors(session, tokens),
+                    };
+                    match decision {
+                        Some(d) => {
+                            if !router.is_active(d.instance) {
+                                return false;
+                            }
+                        }
+                        None => {
+                            // a refusal is legal only with zero routable
+                            // instances, and must charge nothing
+                            let after: u64 = router.queued_tokens.iter().sum();
+                            if router.active_instances() != 0 || after != before {
+                                return false;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        true
     });
 }
 
